@@ -1,0 +1,24 @@
+//! Batch-size schedule case study (paper Section 5.2, Fig. 9): train the
+//! same model with a fixed batch and with a GNS-motivated linear ramp at a
+//! matched token budget, and report the tokens saved to reach equal loss.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example batch_size_schedule [model] [steps] [seeds]
+//! ```
+
+use anyhow::Result;
+use nanogns::figures;
+use nanogns::runtime::{Manifest, Runtime};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "micro".to_string());
+    let steps: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(80);
+    let seeds: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    figures::training::fig9(&rt, &manifest, &model, steps, seeds)?;
+    figures::training::fig15(&rt, &manifest, &model, steps)?;
+    Ok(())
+}

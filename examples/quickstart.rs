@@ -1,0 +1,40 @@
+//! Quickstart: load the AOT artifacts, train the nano model for a handful
+//! of steps on synthetic text, and print loss + GNS per step.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::Trainer;
+use nanogns::runtime::{Manifest, Runtime};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+
+    let cfg = TrainConfig::quickstart("nano", 20);
+    let entry = manifest.config(&cfg.model)?;
+    println!(
+        "model {}: {:.2}M params, microbatch {} x seq {}",
+        cfg.model,
+        entry.n_params as f64 / 1e6,
+        entry.microbatch,
+        entry.seq_len
+    );
+
+    let mut trainer = Trainer::new(&rt, &manifest, cfg)?;
+    println!("{:>5} {:>9} {:>9} {:>9} {:>8}", "step", "loss", "gns_tot", "gns_ln", "ms");
+    for _ in 0..20 {
+        let r = trainer.step()?;
+        println!(
+            "{:>5} {:>9.4} {:>9.2} {:>9.2} {:>8.0}",
+            r.step, r.loss, r.gns_total, r.gns_layernorm, r.step_ms
+        );
+    }
+    let eval = trainer.eval(4)?;
+    println!("held-out loss after 20 steps: {eval:.4}");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): train a language model for a
+//! few hundred optimizer steps on the synthetic corpus, with online GNS
+//! tracking and a GNS-informed linear batch-size ramp, logging the loss
+//! curve and GNS series to CSV.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example train_e2e                 # small (~3M), 300 steps
+//! cargo run --release --example train_e2e -- gpt111m 5    # ~113M smoke (needs `make artifacts FULL=1`)
+//! ```
+
+use anyhow::Result;
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::Trainer;
+use nanogns::runtime::{Manifest, Runtime};
+use nanogns::schedule::{BatchSizeSchedule, LrSchedule};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "small".to_string());
+    let steps: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let entry = manifest.config(&model)?;
+    let tokens_per_accum = (entry.microbatch * entry.seq_len) as u64;
+
+    let cfg = TrainConfig {
+        model: model.clone(),
+        artifacts: "artifacts".into(),
+        steps,
+        seed: 0,
+        ranks: 1,
+        lr: LrSchedule {
+            max_lr: 1e-3,
+            min_lr: 1e-4,
+            warmup_steps: steps / 20 + 1,
+            decay_steps: steps,
+        },
+        batch_size: BatchSizeSchedule::Linear {
+            min_accum: 1,
+            max_accum: 4,
+            ramp_tokens: steps * 2 * tokens_per_accum,
+        },
+        gns_alpha: 0.05,
+        corpus_bytes: 1 << 20,
+        eval_every: 0,
+        metrics_path: format!("results/e2e_{model}.csv"),
+    };
+
+    println!(
+        "e2e: training {model} ({:.2}M params) for {steps} steps on {}",
+        entry.n_params as f64 / 1e6,
+        rt.platform()
+    );
+    let mut trainer = Trainer::new(&rt, &manifest, cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut out_records = Vec::new();
+    let report_every = (steps / 20).max(1);
+    for _ in 0..steps {
+        let r = trainer.step()?;
+        if r.step % report_every == 0 || r.step == 1 {
+            println!(
+                "step {:>5} | tokens {:>9} | loss {:>7.4} | batch {:>3} | gns_tot {:>7.2} | gns_ln {:>7.2} | {:>6.0} ms",
+                r.step, r.tokens, r.loss, r.b_big as u64, r.gns_total, r.gns_layernorm, r.step_ms
+            );
+        }
+        out_records.push(r);
+    }
+    // write CSV (the trainer would do this in run(); we looped manually)
+    let mut csv = nanogns::telemetry::CsvLogger::to_file(
+        format!("results/e2e_{model}.csv"),
+        nanogns::telemetry::TRAIN_HEADER,
+    )?;
+    for r in &out_records {
+        csv.row(&nanogns::coordinator::trainer::record_row(r))?;
+    }
+    csv.flush()?;
+
+    let wall = t0.elapsed().as_secs_f64();
+    let eval = trainer.eval(8)?;
+    let first = out_records.first().unwrap().loss;
+    let last = out_records.last().unwrap().loss;
+    println!("---");
+    println!("trained {} tokens in {wall:.1}s ({:.0} tok/s)", trainer.tokens(), trainer.tokens() as f64 / wall);
+    println!("loss: {first:.4} -> {last:.4}; held-out {eval:.4} (ln 256 = {:.4} at random)", (256f64).ln());
+    println!("final GNS: total {:.2}, layernorm {:.2}",
+             out_records.last().unwrap().gns_total,
+             out_records.last().unwrap().gns_layernorm);
+    println!("series -> results/e2e_{model}.csv");
+    Ok(())
+}

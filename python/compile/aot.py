@@ -1,0 +1,270 @@
+"""AOT lowering: JAX -> HLO text + manifest.json (the L2 -> L3 contract).
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts per model config <name> (under artifacts/<name>/):
+  init.hlo.txt         (seed:i32[])                         -> params...
+  grad_step.hlo.txt    (params..., ids, targets)            -> (loss, grads..., stats[5])
+  grad_sqnorms.hlo.txt (grads...)                           -> stats[5]
+  accumulate.hlo.txt   (acc..., grads...)                   -> acc...
+  adamw_update.hlo.txt (params..., m..., v..., grads...,
+                        step, lr, grad_scale)               -> (params..., m..., v...)
+  eval_step.hlo.txt    (params..., ids, targets)            -> loss
+
+Plus the Fig. 8 LayerNorm kernel-benchmark artifacts under artifacts/ln_bench/.
+Everything a Rust consumer must know (parameter order/shapes/types, stats
+layout, microbatch size) is written to artifacts/manifest.json — Rust never
+parses HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, model
+from .kernels import layernorm as ln_k
+from .kernels import ref
+
+SCHEMA_VERSION = 2
+
+#: Microbatch size baked into each config's grad/eval artifacts.
+MICROBATCH = {
+    "nano": 4,
+    "micro": 4,
+    "small": 4,
+    "sweep70": 4,
+    "sweep161": 4,
+    "gpt111m": 2,
+}
+
+ADAM_HYPERS = {"beta1": 0.9, "beta2": 0.95, "eps": 1e-8, "wd": 0.1}
+
+LN_BENCH_SIZES = [(8, 256, 256), (8, 256, 768), (8, 256, 2048)]  # (B, T, K)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: Path, lowered) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    path.write_text(to_hlo_text(lowered))
+    print(f"  wrote {path} ({path.stat().st_size / 1e6:.2f} MB, {time.time() - t0:.1f}s)")
+
+
+def export_config(cfg: model.GPTConfig, out: Path) -> dict:
+    b = MICROBATCH[cfg.name]
+    t = cfg.seq_len
+    spec = model.param_spec(cfg)
+    p_types = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _, _ in spec]
+    ids_t = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    d = out / cfg.name
+    print(f"config {cfg.name}: {model.n_params(cfg) / 1e6:.2f}M params, microbatch {b}")
+
+    _write(d / "init.hlo.txt",
+           jax.jit(lambda seed: tuple(model.init_params(cfg, seed))).lower(i32))
+    def gs(*a):
+        loss, grads, stats = model.grad_step(cfg, list(a[:-2]), a[-2], a[-1])
+        return (loss, *grads, stats)
+
+    _write(d / "grad_step.hlo.txt", jax.jit(gs).lower(*p_types, ids_t, ids_t))
+
+    def gsp(*a):
+        loss, grads = model.grad_step_plain(cfg, list(a[:-2]), a[-2], a[-1])
+        return (loss, *grads)
+
+    _write(d / "grad_step_plain.hlo.txt", jax.jit(gsp).lower(*p_types, ids_t, ids_t))
+    _write(d / "grad_sqnorms.hlo.txt",
+           jax.jit(lambda *g: (model.grad_sqnorms(cfg, list(g)),)).lower(*p_types))
+    n = len(spec)
+    _write(d / "accumulate.hlo.txt",
+           jax.jit(lambda *a: tuple(model.accumulate(list(a[:n]), list(a[n:])))
+           ).lower(*p_types, *p_types))
+
+    def adam(*a):
+        fp, m, v, g = a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n:4 * n]
+        step, lr, scale = a[4 * n], a[4 * n + 1], a[4 * n + 2]
+        np_, nm, nv = model.adamw_update(
+            cfg, list(fp), list(m), list(v), list(g), step, lr, scale,
+            ADAM_HYPERS["beta1"], ADAM_HYPERS["beta2"], ADAM_HYPERS["eps"],
+            ADAM_HYPERS["wd"])
+        return (*np_, *nm, *nv)
+
+    _write(d / "adamw_update.hlo.txt",
+           jax.jit(adam).lower(*p_types, *p_types, *p_types, *p_types, f32, f32, f32))
+    _write(d / "eval_step.hlo.txt",
+           jax.jit(lambda *a: (model.eval_step(cfg, list(a[:-2]), a[-2], a[-1]),)
+           ).lower(*p_types, ids_t, ids_t))
+
+    return {
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "microbatch": b,
+        "n_params": model.n_params(cfg),
+        "pallas_ln": cfg.pallas_ln,
+        "adam": ADAM_HYPERS,
+        "params": [
+            {"name": nm, "shape": list(s), "dtype": "f32", "ltype": lt, "decay": dc}
+            for nm, s, lt, dc in spec
+        ],
+        "artifacts": {
+            k: f"{cfg.name}/{k}.hlo.txt"
+            for k in ("init", "grad_step", "grad_step_plain", "grad_sqnorms",
+                      "accumulate", "adamw_update", "eval_step")
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 LayerNorm kernel benchmark artifacts
+# ---------------------------------------------------------------------------
+
+
+def _ln_xla(with_norms: bool):
+    def f(x, gamma, beta, g):
+        y, mean, rstd = ref.layernorm_fwd(x, gamma, beta)
+        if with_norms:
+            dx, dg, db, ng, nb = ref.layernorm_bwd_with_norms(x, gamma, mean, rstd, g)
+            return (y, dx, dg, db, ng, nb)
+        dx, dgb, dbb = ref.layernorm_bwd(x, gamma, mean, rstd, g)
+        return (y, dx, dgb.sum(0), dbb.sum(0))
+
+    return f
+
+
+def _ln_pallas(with_norms: bool):
+    def f(x, gamma, beta, g):
+        y, mean, rstd = ln_k.layernorm_fwd(x, gamma, beta)
+        if with_norms:
+            dx, dgb, dbb, ng, nb = ln_k.layernorm_bwd_gnorm(x, gamma, mean, rstd, g)
+            return (y, dx, dgb.sum(0), dbb.sum(0), ng, nb)
+        dx, dgb, dbb = ln_k.layernorm_bwd_plain(x, gamma, mean, rstd, g)
+        return (y, dx, dgb.sum(0), dbb.sum(0))
+
+    return f
+
+
+def export_ln_bench(out: Path) -> list[dict]:
+    entries = []
+    for b, t, k in LN_BENCH_SIZES:
+        x_t = jax.ShapeDtypeStruct((b, t, k), jnp.float32)
+        v_t = jax.ShapeDtypeStruct((k,), jnp.float32)
+        variants = {}
+        for name, fn in (
+            ("xla_plain", _ln_xla(False)),
+            ("xla_gnorm", _ln_xla(True)),
+            ("pallas_plain", _ln_pallas(False)),
+            ("pallas_gnorm", _ln_pallas(True)),
+        ):
+            rel = f"ln_bench/{name}_k{k}.hlo.txt"
+            _write(out / rel, jax.jit(fn).lower(x_t, v_t, v_t, x_t))
+            variants[name] = rel
+        entries.append({
+            "b": b, "t": t, "k": k, "variants": variants,
+            "vmem_fused": ln_k.vmem_bytes(b, t, k, fused=True),
+            "vmem_plain": ln_k.vmem_bytes(b, t, k, fused=False),
+        })
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Appendix C.2 teacher–student instability artifacts (Figs. 11–13)
+# ---------------------------------------------------------------------------
+
+TS_SHAPE = {"b": 8, "t": 32, "d": 64, "n_heads": 4, "bias_noise": 0.02}
+
+
+def export_instability(out: Path) -> dict:
+    from . import instability as ins
+
+    d = TS_SHAPE["d"]
+    b, t, h = TS_SHAPE["b"], TS_SHAPE["t"], TS_SHAPE["n_heads"]
+    p_types = [jax.ShapeDtypeStruct(s, jnp.float32) for s in ins.param_shapes(d)]
+    n = len(p_types)
+    x_t = jax.ShapeDtypeStruct((b, t, d), jnp.float32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def ts_init(seed):
+        teacher = ins.init_block(d, 0, bias_noise=0.0)
+        student = ins.init_block(d, 0, bias_noise=TS_SHAPE["bias_noise"])
+        # seed folds into the student's noise so Rust can vary it
+        key = jax.random.fold_in(jax.random.PRNGKey(1), seed)
+        student[3] = ins.init_block(d, 0)[3] + TS_SHAPE["bias_noise"] * jax.random.normal(
+            key, (3 * d,), jnp.float32)
+        return (*teacher, *student)
+
+    artifacts = {"ts_init": "instability/ts_init.hlo.txt"}
+    _write(out / artifacts["ts_init"], jax.jit(ts_init).lower(i32))
+
+    for variant in ("exact", "lowprec", "cosine"):
+        def step(*a, _v=variant):
+            teacher, student = list(a[:n]), list(a[n:2 * n])
+            x, lr = a[2 * n], a[2 * n + 1]
+            return ins.ts_step(teacher, student, x, lr, h, _v)
+
+        rel = f"instability/ts_step_{variant}.hlo.txt"
+        _write(out / rel, jax.jit(step).lower(*p_types, *p_types, x_t, f32))
+        artifacts[f"ts_step_{variant}"] = rel
+
+    return {
+        **TS_SHAPE,
+        "param_names": ins.PARAM_NAMES,
+        "param_shapes": [list(s) for s in ins.param_shapes(d)],
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="nano,micro,small,sweep70,sweep161")
+    ap.add_argument("--full", action="store_true",
+                    help="also export the ~113M-param gpt111m config")
+    ap.add_argument("--skip-ln-bench", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    names = [c for c in args.configs.split(",") if c]
+    if args.full and "gpt111m" not in names:
+        names.append("gpt111m")
+
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "stats_order": list(layers.STATS_ORDER),
+        "configs": {},
+        "ln_bench": [],
+    }
+    for name in names:
+        manifest["configs"][name] = export_config(model.CONFIGS[name], out)
+    if not args.skip_ln_bench:
+        manifest["ln_bench"] = export_ln_bench(out)
+    manifest["instability"] = export_instability(out)
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Appendix C.2 harness: attention numerical-instability teacher–student
+experiment (Figs. 11–13), adapted per DESIGN.md §Substitutions.
+
+The paper isolates a flash-attention bf16 divergence by training a
+"student" to match a "teacher" (identical weights + small noise on the QKV
+bias) and watching the student diverge under the low-precision kernel.
+We reproduce the *mechanism* — unbounded q·k magnitudes under reduced-
+precision attention arithmetic — by computing the attention scores and
+weighted sum in bfloat16 for the "lowprec" student while the "exact"
+student stays in float32. Mitigations (cosine attention; the paper's
+other option, spectral normalisation, bounds the same quantity) are
+exported as their own step variants.
+
+Model: a single pre-LN attention block over continuous inputs (B, T, D).
+Training: SGD on MSE(student(x), teacher(x)).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+#: Flat parameter order for the attention block.
+PARAM_NAMES = ["ln.g", "ln.b", "qkv.w", "qkv.b", "proj.w", "proj.b"]
+
+
+def param_shapes(d: int) -> list[tuple[int, ...]]:
+    return [(d,), (d,), (d, 3 * d), (3 * d,), (d, d), (d,)]
+
+
+def init_block(d: int, seed, bias_noise: float = 0.0):
+    """Returns the flat parameter list; optionally perturbs the QKV bias
+    (the paper's student = teacher + noise on the QKV projection bias)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = [
+        jnp.ones((d,), jnp.float32),
+        jnp.zeros((d,), jnp.float32),
+        0.5 / math.sqrt(d) * jax.random.normal(k1, (d, 3 * d), jnp.float32),
+        jnp.zeros((3 * d,), jnp.float32),
+        0.5 / math.sqrt(d) * jax.random.normal(k2, (d, d), jnp.float32),
+        jnp.zeros((d,), jnp.float32),
+    ]
+    if bias_noise > 0.0:
+        params[3] = params[3] + bias_noise * jax.random.normal(k3, (3 * d,), jnp.float32)
+    return params
+
+
+def block_forward(params, x, n_heads: int, variant: str):
+    """One pre-LN attention block.
+
+    variant: 'exact' (f32), 'lowprec' (bf16 attention arithmetic — the
+    flash-kernel numerics proxy), 'cosine' (normalised q/k, f32).
+    """
+    g, b, qkv_w, qkv_b, proj_w, proj_b = params
+    bs, t, d = x.shape
+    dh = d // n_heads
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + 1e-5) * g + b
+    qkv = xn @ qkv_w + qkv_b
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(bs, t, n_heads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(bs, t, n_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(bs, t, n_heads, dh).transpose(0, 2, 1, 3)
+    if variant == "cosine":
+        q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+        k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+        scale = math.sqrt(dh)
+    else:
+        scale = 1.0 / math.sqrt(dh)
+    if variant == "lowprec":
+        q, k, v = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    att = jnp.einsum("bhtd,bhud->bhtu", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    neg = jnp.asarray(-1e9 if variant == "lowprec" else -jnp.inf, att.dtype)
+    att = jnp.where(mask, att, neg)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhtu,bhud->bhtd", att, v).astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(bs, t, d)
+    return x + (y @ proj_w + proj_b)
+
+
+def ts_step(teacher, student, x, lr, n_heads: int, variant: str):
+    """One SGD step of student-matches-teacher; returns
+    (student', loss, dist_to_teacher, qkv_w_norm, qkv_b_norm)."""
+    target = block_forward(teacher, x, n_heads, "exact")
+
+    def loss_fn(params):
+        out = block_forward(params, x, n_heads, variant)
+        return jnp.mean(jnp.square(out - target))
+
+    loss, grads = jax.value_and_grad(loss_fn)(student)
+    new_student = [p - lr * gr for p, gr in zip(student, grads)]
+    dist = jnp.sqrt(
+        sum(jnp.sum(jnp.square(s - t)) for s, t in zip(new_student, teacher))
+    )
+    qkv_w_norm = jnp.sqrt(jnp.sum(jnp.square(new_student[2])))
+    qkv_b_norm = jnp.sqrt(jnp.sum(jnp.square(new_student[3])))
+    return (*new_student, loss, dist, qkv_w_norm, qkv_b_norm)

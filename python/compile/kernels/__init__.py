@@ -1,0 +1,4 @@
+"""L1: Pallas kernels + einsum algorithms for simultaneous per-example
+gradient norms (paper Section 3 + Section 5.1), validated against ref.py."""
+
+from . import embedding, layernorm, linear, ref  # noqa: F401

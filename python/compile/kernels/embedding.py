@@ -1,0 +1,46 @@
+"""Per-example gradient norms for embedding layers (paper Alg. 3).
+
+Algorithm 3 materialises a (B, V, D) one-hot contraction — fine as an
+oracle, hopeless for a real vocabulary. The production path here uses the
+Gram identity
+
+    n_b^2 = || sum_t onehot(x_bt) g_bt ||^2
+          = sum_{t,u} 1[x_bt == x_bu] <g_bt, g_bu>,
+
+which needs O(B T^2) memory instead of O(B V D) and lowers to two batched
+matmuls. The weight gradient itself is the ordinary scatter-add that
+``jax.grad`` already produces for a gather, so only the norm is computed
+here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_perex_sqnorm(ids, g):
+    """(B,) per-example squared grad norms of an embedding table.
+
+    ids: (B, T) int32 token ids; g: (B, T, D) cotangent of gathered rows.
+    """
+    same = (ids[:, :, None] == ids[:, None, :]).astype(g.dtype)
+    gram = jnp.einsum("btd,bud->btu", g, g)
+    return jnp.einsum("btu,btu->b", same, gram)
+
+
+def embedding_grad(ids, g, vocab: int):
+    """(V, D) embedding gradient via scatter-add (segment sum over ids)."""
+    d = g.shape[-1]
+    return jax.ops.segment_sum(
+        g.reshape(-1, d), ids.reshape(-1), num_segments=vocab
+    )
+
+
+def position_perex_sqnorm(g):
+    """Per-example sq-norm for a positional-embedding table wpe (T, D).
+
+    Each position row is hit exactly once per example, so the per-example
+    gradient is just g_b and its squared norm a plain reduction.
+    """
+    return jnp.sum(jnp.square(g), axis=(1, 2))

@@ -1,0 +1,247 @@
+"""Pallas fused LayerNorm kernels with simultaneous per-example grad norms.
+
+This is the TPU/Pallas adaptation of the paper's Section 5.1 CUDA kernel
+("normgnorm"): a LayerNorm backward pass that *also* emits the per-example
+squared gradient norms of gamma and beta at zero additional memory traffic.
+
+CUDA -> Pallas mapping (DESIGN.md §Hardware-Adaptation):
+
+* threadblock per row-group        -> grid = (B, T // block_t); one program
+  owns a (block_t, K) tile of one example, resident in VMEM.
+* warp reduce + shared-mem atomics -> vector-unit reductions over the lane
+  (K) and sublane (T) axes of the VMEM tile; no atomics are needed because
+  TPU grids execute sequentially over the last axis, so cross-tile
+  accumulation uses block revisiting on the (B, K) output.
+* "free" per-example norm          -> the rows g and g*xhat are already in
+  registers/VMEM for dgamma/dbeta; squaring the (B, K) accumulator on the
+  final sequence tile adds zero HBM traffic.
+
+All entry points run with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); on a real TPU the same BlockSpecs express the
+HBM<->VMEM schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_block(t: int, preferred: int = 128) -> int:
+    """Largest divisor of ``t`` no bigger than ``preferred``."""
+    b = min(t, preferred)
+    while t % b:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _ln_fwd_kernel(x_ref, gamma_ref, beta_ref, y_ref, mean_ref, rstd_ref, *, eps):
+    x = x_ref[0]  # (block_t, K)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * rstd
+    y_ref[0] = xhat * gamma_ref[...] + beta_ref[...]
+    mean_ref[0] = mean[:, 0]
+    rstd_ref[0] = rstd[:, 0]
+
+
+def layernorm_fwd(x, gamma, beta, eps: float = 1e-5, block_t: int | None = None):
+    """Fused LayerNorm forward. Returns (y, mean, rstd).
+
+    x: (B, T, K); gamma, beta: (K,). mean/rstd: (B, T), saved for backward —
+    a single HBM pass over x, emitting 2 extra scalars per row.
+    """
+    b, t, k = x.shape
+    bt = block_t or _round_block(t)
+    grid = (b, t // bt)
+    return pl.pallas_call(
+        functools.partial(_ln_fwd_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, k), x.dtype),
+            jax.ShapeDtypeStruct((b, t), x.dtype),
+            jax.ShapeDtypeStruct((b, t), x.dtype),
+        ],
+        interpret=True,
+    )(x, gamma, beta)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward + per-example gradient norms (the paper's kernel)
+# ---------------------------------------------------------------------------
+
+
+def _ln_bwd_kernel(
+    x_ref, gamma_ref, mean_ref, rstd_ref, g_ref,
+    dx_ref, dgamma_b_ref, dbeta_b_ref, ngamma_ref, nbeta_ref,
+    *, nt: int,
+):
+    j = pl.program_id(1)  # sequence-tile index; axis is sequential on TPU
+
+    x = x_ref[0]          # (block_t, K)
+    g = g_ref[0]
+    mean = mean_ref[0][:, None]
+    rstd = rstd_ref[0][:, None]
+    gamma = gamma_ref[...]
+
+    xhat = (x - mean) * rstd
+    ggam = g * gamma
+    c1 = jnp.mean(ggam, axis=-1, keepdims=True)
+    c2 = jnp.mean(ggam * xhat, axis=-1, keepdims=True)
+    dx_ref[0] = (ggam - c1 - xhat * c2) * rstd
+
+    # Partial per-example parameter grads for this sequence tile: the rows
+    # g and g*xhat are already live — the reduction over the tile is free.
+    pg = jnp.sum(g * xhat, axis=0)  # (K,) partial dgamma_b
+    pb = jnp.sum(g, axis=0)         # (K,) partial dbeta_b
+
+    # Accumulate across sequence tiles by revisiting the (1, K) block.
+    @pl.when(j == 0)
+    def _init():
+        dgamma_b_ref[0] = pg
+        dbeta_b_ref[0] = pb
+
+    @pl.when(j > 0)
+    def _acc():
+        dgamma_b_ref[0] += pg
+        dbeta_b_ref[0] += pb
+
+    # On the final tile the full per-example K-vectors are resident in
+    # VMEM; the squared norm is a lane reduction — zero extra HBM traffic.
+    @pl.when(j == nt - 1)
+    def _norms():
+        ngamma_ref[0] = jnp.sum(jnp.square(dgamma_b_ref[0]))
+        nbeta_ref[0] = jnp.sum(jnp.square(dbeta_b_ref[0]))
+
+
+def layernorm_bwd_gnorm(x, gamma, mean, rstd, g, block_t: int | None = None):
+    """Fused LayerNorm backward emitting per-example grad sq-norms (Alg. 2).
+
+    Args match ref.layernorm_bwd. Returns
+    ``(dx, dgamma_b, dbeta_b, ngamma_sq, nbeta_sq)`` with shapes
+    ``(B,T,K), (B,K), (B,K), (B,), (B,)``. The total dgamma/dbeta are the
+    (cheap) batch-sums of the per-example tensors.
+    """
+    b, t, k = x.shape
+    bt = block_t or _round_block(t)
+    nt = t // bt
+    grid = (b, nt)
+    return pl.pallas_call(
+        functools.partial(_ln_bwd_kernel, nt=nt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, k), x.dtype),
+            jax.ShapeDtypeStruct((b, k), x.dtype),
+            jax.ShapeDtypeStruct((b, k), x.dtype),
+            jax.ShapeDtypeStruct((b,), x.dtype),
+            jax.ShapeDtypeStruct((b,), x.dtype),
+        ],
+        interpret=True,
+    )(x, gamma, mean, rstd, g)
+
+
+def _ln_bwd_plain_kernel(
+    x_ref, gamma_ref, mean_ref, rstd_ref, g_ref,
+    dx_ref, dgamma_b_ref, dbeta_b_ref,
+):
+    """Baseline backward without the norm fusion — the Fig. 8 comparator."""
+    j = pl.program_id(1)
+    x = x_ref[0]
+    g = g_ref[0]
+    mean = mean_ref[0][:, None]
+    rstd = rstd_ref[0][:, None]
+    gamma = gamma_ref[...]
+    xhat = (x - mean) * rstd
+    ggam = g * gamma
+    c1 = jnp.mean(ggam, axis=-1, keepdims=True)
+    c2 = jnp.mean(ggam * xhat, axis=-1, keepdims=True)
+    dx_ref[0] = (ggam - c1 - xhat * c2) * rstd
+    pg = jnp.sum(g * xhat, axis=0)
+    pb = jnp.sum(g, axis=0)
+
+    @pl.when(j == 0)
+    def _init():
+        dgamma_b_ref[0] = pg
+        dbeta_b_ref[0] = pb
+
+    @pl.when(j > 0)
+    def _acc():
+        dgamma_b_ref[0] += pg
+        dbeta_b_ref[0] += pb
+
+
+def layernorm_bwd_plain(x, gamma, mean, rstd, g, block_t: int | None = None):
+    """LayerNorm backward without per-example norms (baseline for Fig. 8)."""
+    b, t, k = x.shape
+    bt = block_t or _round_block(t)
+    grid = (b, t // bt)
+    return pl.pallas_call(
+        _ln_bwd_plain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, k), x.dtype),
+            jax.ShapeDtypeStruct((b, k), x.dtype),
+            jax.ShapeDtypeStruct((b, k), x.dtype),
+        ],
+        interpret=True,
+    )(x, gamma, mean, rstd, g)
+
+
+def vmem_bytes(b: int, t: int, k: int, block_t: int | None = None,
+               dtype_bytes: int = 4, fused: bool = True) -> int:
+    """Estimated peak VMEM residency per grid step of the backward kernel.
+
+    Used by the §Perf analysis: inputs x, g tiles + saved stats + gamma +
+    dx tile + the (1, K) accumulators (norm fusion adds only two scalars).
+    """
+    bt = block_t or _round_block(t)
+    tile = bt * k * dtype_bytes
+    stats = 2 * bt * dtype_bytes
+    acc = 2 * k * dtype_bytes
+    scalars = 2 * dtype_bytes if fused else 0
+    return 3 * tile + stats + k * dtype_bytes + acc + scalars

@@ -1,0 +1,158 @@
+"""Pure-jnp correctness oracles for the GNS kernels.
+
+Every Pallas kernel and every einsum "simultaneous per-example gradient
+norm" algorithm in this package is validated against the functions here.
+Two kinds of oracle are provided:
+
+1. Analytic closed forms (LayerNorm forward/backward written out by hand).
+2. The *gold standard*: per-example gradients materialised explicitly with
+   ``jax.vmap(jax.grad(...))``, the definitionally-correct but expensive
+   route (Goodfellow [26]'s motivation).
+
+Shapes follow the paper (Section 3): activations are ``(B, T, K)`` with
+batch B, sequence T, feature K; linear weights are ``(K, L)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+def layernorm_fwd(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm forward. Returns (y, mean, rstd) with mean/rstd saved for bwd.
+
+    x: (..., K); gamma, beta: (K,).
+    """
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * rstd
+    return xhat * gamma + beta, mean[..., 0], rstd[..., 0]
+
+
+def layernorm_bwd(x, gamma, mean, rstd, g):
+    """Hand-derived LayerNorm backward.
+
+    Args:
+      x: (B, T, K) input activations.
+      gamma: (K,) scale.
+      mean, rstd: (B, T) statistics saved from the forward pass.
+      g: (B, T, K) cotangent of the output.
+
+    Returns:
+      dx: (B, T, K)
+      dgamma_b: (B, K) per-example gamma gradients (sum over T only)
+      dbeta_b:  (B, K) per-example beta gradients
+    """
+    xhat = (x - mean[..., None]) * rstd[..., None]
+    ggam = g * gamma
+    c1 = jnp.mean(ggam, axis=-1, keepdims=True)
+    c2 = jnp.mean(ggam * xhat, axis=-1, keepdims=True)
+    dx = (ggam - c1 - xhat * c2) * rstd[..., None]
+    dgamma_b = jnp.einsum("btk,btk->bk", g, xhat)
+    dbeta_b = jnp.einsum("btk->bk", g)
+    return dx, dgamma_b, dbeta_b
+
+
+def layernorm_bwd_with_norms(x, gamma, mean, rstd, g):
+    """Backward plus the paper's per-example squared gradient norms (Alg. 2).
+
+    Returns (dx, dgamma, dbeta, ngamma_sq, nbeta_sq) where the n*_sq are
+    (B,) vectors of per-example squared norms *without* the B^2 correction
+    (the caller owns loss-scaling conventions).
+    """
+    dx, dgamma_b, dbeta_b = layernorm_bwd(x, gamma, mean, rstd, g)
+    ngamma_sq = jnp.sum(jnp.square(dgamma_b), axis=-1)
+    nbeta_sq = jnp.sum(jnp.square(dbeta_b), axis=-1)
+    return dx, dgamma_b.sum(0), dbeta_b.sum(0), ngamma_sq, nbeta_sq
+
+
+# ---------------------------------------------------------------------------
+# Linear layer per-example gradient norms
+# ---------------------------------------------------------------------------
+
+
+def linear_perex_sqnorm_simultaneous(x, g):
+    """Paper Algorithm 1: materialise w'_b, reduce. O(B*K*L) memory.
+
+    x: (B, T, K) activations into the linear layer.
+    g: (B, T, L) cotangents of the output.
+    Returns (w', n_sq) with w' = (K, L) weight gradient and n_sq = (B,)
+    per-example squared norms.
+    """
+    wb = jnp.einsum("btk,btl->bkl", x, g)
+    n_sq = jnp.einsum("bkl,bkl->b", wb, wb)
+    w = jnp.einsum("bkl->kl", wb)
+    return w, n_sq
+
+
+def linear_perex_sqnorm_li(x, g):
+    """Li et al. [36] O(T^2) trick: <X X^T, G G^T>_F per example.
+
+    Same contract as :func:`linear_perex_sqnorm_simultaneous`; used as the
+    baseline comparator in the cost-model figures and as a second oracle.
+    """
+    xxt = jnp.einsum("btk,buk->btu", x, x)
+    ggt = jnp.einsum("btl,bul->btu", g, g)
+    n_sq = jnp.einsum("btu,btu->b", xxt, ggt)
+    w = jnp.einsum("btk,btl->kl", x, g)
+    return w, n_sq
+
+
+def linear_perex_sqnorm_vmap(x, g):
+    """Gold standard: explicit per-example outer products via vmap."""
+    wb = jax.vmap(lambda xb, gb: xb.T @ gb)(x, g)
+    n_sq = jax.vmap(lambda w: jnp.sum(w * w))(wb)
+    return wb.sum(0), n_sq
+
+
+# ---------------------------------------------------------------------------
+# Embedding per-example gradient norms
+# ---------------------------------------------------------------------------
+
+
+def embedding_perex_sqnorm_onehot(ids, g, vocab: int):
+    """Paper Algorithm 3: one-hot einsum. O(B*V*D) memory — oracle only.
+
+    ids: (B, T) int32 token ids; g: (B, T, D) cotangents of the gathered rows.
+    Returns (w', n_sq): (V, D) embedding gradient and (B,) per-example
+    squared norms.
+    """
+    o = jax.nn.one_hot(ids, vocab, dtype=g.dtype)
+    wb = jnp.einsum("btv,btd->bvd", o, g)
+    n_sq = jnp.einsum("bvd,bvd->b", wb, wb)
+    return wb.sum(0), n_sq
+
+
+def embedding_perex_sqnorm_pairwise(ids, g):
+    """Memory-lean equivalent used in the model: the norm only needs the
+    Gram structure, n_b^2 = sum_{t,u} 1[x_bt == x_bu] <g_bt, g_bu>.
+
+    O(B*T^2*D) FLOPs but O(B*T^2) memory — no V-sized intermediate.
+    """
+    same = (ids[:, :, None] == ids[:, None, :]).astype(g.dtype)
+    gram = jnp.einsum("btd,bud->btu", g, g)
+    return jnp.einsum("btu,btu->b", same, gram)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer oracle
+# ---------------------------------------------------------------------------
+
+
+def adamw_step(p, m, v, grad, step, lr, beta1=0.9, beta2=0.95, eps=1e-8, wd=0.1):
+    """Reference AdamW (decoupled weight decay), bias-corrected.
+
+    ``step`` is the 1-based step index *after* this update.
+    """
+    m = beta1 * m + (1.0 - beta1) * grad
+    v = beta2 * v + (1.0 - beta2) * jnp.square(grad)
+    mhat = m / (1.0 - beta1**step)
+    vhat = v / (1.0 - beta2**step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v

@@ -1,0 +1,166 @@
+"""GNS-instrumented layers: parameter gradients + per-example norms in one
+backward pass.
+
+The per-example squared-norm statistics ride out of ``jax.grad`` through
+*probe* scalars: each instrumented layer takes an extra scalar input that
+does not affect the forward value; its custom_vjp backward returns
+``sum_b ||w'_b||^2`` as the probe's "gradient". Probes of the same layer
+type are shared, so ``jax.grad`` delivers per-type aggregates for free —
+no extra outputs, no host round-trips, exactly one backward pass
+(Section 3's "simultaneous" property).
+
+Scaling convention: all norms are of gradients of the *mean-over-batch*
+loss, i.e. ``w'_b = (1/B) dL_b/dw``. The B^2 correction of Algorithm 1
+step 4 is applied downstream by the Rust coordinator, which knows the
+microbatch size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import embedding as emb_k
+from .kernels import layernorm as ln_k
+from .kernels import linear as lin_k
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def gns_linear(x, w, b, probe):
+    """y = x @ w + b with per-example grad sq-norms routed to ``probe``."""
+    del probe
+    return x @ w + b
+
+
+def _lin_fwd(x, w, b, probe):
+    del probe
+    return x @ w + b, (x, w)
+
+
+def _lin_bwd(res, gy):
+    x, w = res
+    dx = gy @ w.T
+    dw, n_w = lin_k.linear_gnorm(x, gy)
+    gy3 = gy.reshape(gy.shape[0], -1, gy.shape[-1])
+    db_b = jnp.sum(gy3, axis=1)                       # (B, L) per-example
+    db = jnp.sum(db_b, axis=0)
+    n_b = jnp.sum(jnp.square(db_b), axis=-1)
+    dprobe = jnp.sum(n_w + n_b)
+    return dx, dw, db, dprobe
+
+
+gns_linear.defvjp(_lin_fwd, _lin_bwd)
+
+
+@jax.custom_vjp
+def gns_matmul(x, w, probe):
+    """Bias-free variant (lm_head)."""
+    del probe
+    return x @ w
+
+
+def _mm_fwd(x, w, probe):
+    del probe
+    return x @ w, (x, w)
+
+
+def _mm_bwd(res, gy):
+    x, w = res
+    dx = gy @ w.T
+    dw, n_w = lin_k.linear_gnorm(x, gy)
+    return dx, dw, jnp.sum(n_w)
+
+
+gns_matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+def _make_gns_layernorm(use_pallas: bool):
+    @jax.custom_vjp
+    def f(x, gamma, beta, probe):
+        del probe
+        y, _, _ = ref.layernorm_fwd(x, gamma, beta)
+        return y
+
+    def fwd(x, gamma, beta, probe):
+        del probe
+        if use_pallas:
+            y, mean, rstd = ln_k.layernorm_fwd(x, gamma, beta)
+        else:
+            y, mean, rstd = ref.layernorm_fwd(x, gamma, beta)
+        return y, (x, gamma, mean, rstd)
+
+    def bwd(res, gy):
+        x, gamma, mean, rstd = res
+        if use_pallas:
+            dx, dgb, dbb, ng, nb = ln_k.layernorm_bwd_gnorm(x, gamma, mean, rstd, gy)
+        else:
+            dx, dgb, dbb = ref.layernorm_bwd(x, gamma, mean, rstd, gy)
+            ng = jnp.sum(jnp.square(dgb), axis=-1)
+            nb = jnp.sum(jnp.square(dbb), axis=-1)
+        dprobe = jnp.sum(ng + nb)
+        return dx, dgb.sum(0), dbb.sum(0), dprobe
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+#: Fused-Pallas LayerNorm (the paper's Section 5.1 kernel, interpret mode).
+gns_layernorm_pallas = _make_gns_layernorm(use_pallas=True)
+#: Pure-XLA LayerNorm with the same instrumented backward (Alg. 2 einsums).
+gns_layernorm_xla = _make_gns_layernorm(use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (token + learned position)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def gns_embedding(ids, wte, wpe, probe):
+    """wte[ids] + wpe with per-example norms of *both* tables on ``probe``."""
+    del probe
+    return wte[ids] + wpe[None, : ids.shape[1]]
+
+
+def _emb_fwd(ids, wte, wpe, probe):
+    del probe
+    return wte[ids] + wpe[None, : ids.shape[1]], (ids, wte.shape[0], wpe.shape[0])
+
+
+def _emb_bwd(res, gy):
+    ids, vocab, t_max = res
+    dwte = emb_k.embedding_grad(ids, gy, vocab)
+    n_wte = emb_k.embedding_perex_sqnorm(ids, gy)
+    t = ids.shape[1]
+    dwpe = jnp.zeros((t_max, gy.shape[-1]), gy.dtype).at[:t].set(gy.sum(axis=0))
+    n_wpe = emb_k.position_perex_sqnorm(gy)
+    dprobe = jnp.sum(n_wte + n_wpe)
+    return None, dwte, dwpe, dprobe
+
+
+gns_embedding.defvjp(_emb_fwd, _emb_bwd)
+
+
+def zero_probes():
+    """One probe scalar per layer-type, in the canonical stats order."""
+    return {
+        "embedding": jnp.zeros(()),
+        "layernorm": jnp.zeros(()),
+        "attention": jnp.zeros(()),
+        "mlp": jnp.zeros(()),
+        "lm_head": jnp.zeros(()),
+    }
+
+
+#: Canonical order of the stats vector crossing the L2->L3 boundary.
+STATS_ORDER = ("embedding", "layernorm", "attention", "mlp", "lm_head")

@@ -1,0 +1,310 @@
+"""L2: GNS-instrumented GPT (nanoGPT-style decoder) in JAX.
+
+Every parameterised sub-layer goes through the instrumented layers of
+``layers.py``, so a single backward pass yields the parameter gradients
+*and* the per-layer-type per-example gradient-norm statistics (paper
+Section 3). The module also defines the AdamW update, init, and eval
+functions that ``aot.py`` lowers to HLO text for the Rust coordinator.
+
+Model family follows Cerebras-GPT / nanoGPT: pre-LN blocks, GELU MLP with
+4x expansion, learned positional embeddings, untied byte-level LM head.
+Optional stability variants from Appendix C.2: cosine attention and
+spectrally-normalised QKV projections (per-block flags).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import ref
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GPTConfig:
+    name: str = "nano"
+    vocab: int = 256
+    seq_len: int = 64
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    eps: float = 1e-5
+    # Use the Pallas fused LayerNorm inside the model (numerically identical
+    # to the XLA path; interpret-mode loops make it slow on CPU, so large
+    # configs default to the XLA einsum form of Alg. 2).
+    pallas_ln: bool = False
+    # Appendix C.2 mitigations, applied to every block when set.
+    cosine_attention: bool = False
+    qk_scale: float | None = None  # temperature for cosine attention
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+#: Named configs. "gpt111m" mirrors the paper's hidden size 768 family,
+#: with layers chosen so the byte-vocab model lands at ~113M parameters.
+CONFIGS = {
+    "nano": GPTConfig(name="nano", vocab=256, seq_len=64, d_model=64, n_layers=2, n_heads=2, pallas_ln=True),
+    "micro": GPTConfig(name="micro", vocab=256, seq_len=128, d_model=128, n_layers=4, n_heads=4),
+    "small": GPTConfig(name="small", vocab=256, seq_len=128, d_model=192, n_layers=6, n_heads=6),
+    # Fig. 10 Chinchilla sweep companions to "small" (hidden-size varied).
+    "sweep70": GPTConfig(name="sweep70", vocab=256, seq_len=128, d_model=144, n_layers=6, n_heads=6),
+    "sweep161": GPTConfig(name="sweep161", vocab=256, seq_len=128, d_model=240, n_layers=6, n_heads=6),
+    "gpt111m": GPTConfig(name="gpt111m", vocab=256, seq_len=256, d_model=768, n_layers=16, n_heads=12),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: GPTConfig) -> list[tuple[str, tuple[int, ...], str, bool]]:
+    """Flat parameter layout: (name, shape, layer_type, weight_decay).
+
+    This exact order is the artifact calling convention; it is serialised
+    into manifest.json and must never be reordered silently.
+    """
+    d, v, t, f = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_ff
+    spec: list[tuple[str, tuple[int, ...], str, bool]] = [
+        ("wte", (v, d), "embedding", True),
+        ("wpe", (t, d), "embedding", True),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        spec += [
+            (p + "ln1.g", (d,), "layernorm", False),
+            (p + "ln1.b", (d,), "layernorm", False),
+            (p + "attn.qkv.w", (d, 3 * d), "attention", True),
+            (p + "attn.qkv.b", (3 * d,), "attention", False),
+            (p + "attn.proj.w", (d, d), "attention", True),
+            (p + "attn.proj.b", (d,), "attention", False),
+            (p + "ln2.g", (d,), "layernorm", False),
+            (p + "ln2.b", (d,), "layernorm", False),
+            (p + "mlp.fc.w", (d, f), "mlp", True),
+            (p + "mlp.fc.b", (f,), "mlp", False),
+            (p + "mlp.proj.w", (f, d), "mlp", True),
+            (p + "mlp.proj.b", (d,), "mlp", False),
+        ]
+    spec += [
+        ("lnf.g", (d,), "layernorm", False),
+        ("lnf.b", (d,), "layernorm", False),
+        ("lm_head.w", (d, v), "lm_head", True),
+    ]
+    return spec
+
+
+def n_params(cfg: GPTConfig) -> int:
+    return sum(math.prod(s) for _, s, _, _ in param_spec(cfg))
+
+
+def init_params(cfg: GPTConfig, seed) -> list[jnp.ndarray]:
+    """GPT-2 init: N(0, 0.02), residual projections scaled by 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    out = []
+    resid_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    for k, (name, shape, _, _) in zip(keys, spec):
+        if name.endswith((".g",)):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b",)) and len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith("proj.w"):
+            out.append(resid_scale * jax.random.normal(k, shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(k, shape, jnp.float32))
+    return out
+
+
+def params_dict(cfg: GPTConfig, flat: list[jnp.ndarray]) -> Params:
+    return {name: p for (name, _, _, _), p in zip(param_spec(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attention(cfg: GPTConfig, pd: Params, probes, x, prefix: str):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = layers.gns_linear(
+        x, pd[prefix + "attn.qkv.w"], pd[prefix + "attn.qkv.b"], probes["attention"]
+    )
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    if cfg.cosine_attention:
+        # App. C.2 mitigation: normalise q/k head vectors before attention.
+        q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+        k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+        scale = cfg.qk_scale if cfg.qk_scale is not None else math.sqrt(dh)
+    else:
+        scale = 1.0 / math.sqrt(dh)
+    att = jnp.einsum("bhtd,bhud->bhtu", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -jnp.inf)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhtu,bhud->bhtd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return layers.gns_linear(
+        y, pd[prefix + "attn.proj.w"], pd[prefix + "attn.proj.b"], probes["attention"]
+    )
+
+
+def forward(cfg: GPTConfig, flat_params, probes, ids):
+    """Logits for token ids (B, T) -> (B, T, V)."""
+    pd = params_dict(cfg, flat_params)
+    ln = layers.gns_layernorm_pallas if cfg.pallas_ln else layers.gns_layernorm_xla
+    x = layers.gns_embedding(ids, pd["wte"], pd["wpe"], probes["embedding"])
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        xn = ln(x, pd[p + "ln1.g"], pd[p + "ln1.b"], probes["layernorm"])
+        x = x + _attention(cfg, pd, probes, xn, p)
+        xn = ln(x, pd[p + "ln2.g"], pd[p + "ln2.b"], probes["layernorm"])
+        hdn = layers.gns_linear(xn, pd[p + "mlp.fc.w"], pd[p + "mlp.fc.b"], probes["mlp"])
+        hdn = jax.nn.gelu(hdn, approximate=True)
+        x = x + layers.gns_linear(
+            hdn, pd[p + "mlp.proj.w"], pd[p + "mlp.proj.b"], probes["mlp"]
+        )
+    x = ln(x, pd["lnf.g"], pd["lnf.b"], probes["layernorm"])
+    return layers.gns_matmul(x, pd["lm_head.w"], probes["lm_head"])
+
+
+def loss_fn(cfg: GPTConfig, flat_params, probes, ids, targets):
+    """Mean cross-entropy over (B, T)."""
+    logits = forward(cfg, flat_params, probes, ids)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# Train-step functions (lowered to HLO by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def grad_step(cfg: GPTConfig, flat_params, ids, targets):
+    """One microbatch fwd+bwd.
+
+    Returns (loss, grads, stats) where stats is a (5,) f32 vector of
+    ``sum_b ||w'_b||^2`` per layer type in layers.STATS_ORDER — the
+    per-example component of the GNS estimators. The B^2/B correction and
+    EMA smoothing happen in the Rust coordinator.
+    """
+    probes = layers.zero_probes()
+
+    def f(fp, pr):
+        return loss_fn(cfg, fp, pr, ids, targets)
+
+    loss, (grads, probe_grads) = jax.value_and_grad(f, argnums=(0, 1))(
+        flat_params, probes
+    )
+    stats = jnp.stack([probe_grads[k] for k in layers.STATS_ORDER])
+    return loss, grads, stats
+
+
+def grad_step_plain(cfg: GPTConfig, flat_params, ids, targets):
+    """Ablation baseline for Section 5.1: the same fwd+bwd *without* any
+    per-example instrumentation (plain jnp layers, no probes). Used by the
+    instrumentation bench to measure the true cost of GNS tracking."""
+
+    def plain_forward(fp):
+        pd = params_dict(cfg, fp)
+        from .kernels import ref as _ref
+
+        def ln(x, g, b):
+            y, _, _ = _ref.layernorm_fwd(x, g, b)
+            return y
+
+        x = pd["wte"][ids] + pd["wpe"][None, : ids.shape[1]]
+        for i in range(cfg.n_layers):
+            p = f"h{i}."
+            xn = ln(x, pd[p + "ln1.g"], pd[p + "ln1.b"])
+            b, t, d = xn.shape
+            h, dh = cfg.n_heads, cfg.d_head
+            qkv = xn @ pd[p + "attn.qkv.w"] + pd[p + "attn.qkv.b"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+            k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+            v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhtd,bhud->bhtu", q, k) / math.sqrt(dh)
+            mask = jnp.tril(jnp.ones((t, t), bool))
+            att = jax.nn.softmax(jnp.where(mask, att, -jnp.inf), axis=-1)
+            y = jnp.einsum("bhtu,bhud->bhtd", att, v)
+            y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+            x = x + (y @ pd[p + "attn.proj.w"] + pd[p + "attn.proj.b"])
+            xn = ln(x, pd[p + "ln2.g"], pd[p + "ln2.b"])
+            hdn = jax.nn.gelu(xn @ pd[p + "mlp.fc.w"] + pd[p + "mlp.fc.b"], approximate=True)
+            x = x + (hdn @ pd[p + "mlp.proj.w"] + pd[p + "mlp.proj.b"])
+        x = ln(x, pd["lnf.g"], pd["lnf.b"])
+        return x @ pd["lm_head.w"]
+
+    def f(fp):
+        logits = plain_forward(fp)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    loss, grads = jax.value_and_grad(f)(flat_params)
+    return loss, grads
+
+
+def grad_sqnorms(cfg: GPTConfig, flat_grads):
+    """Per-layer-type squared norms of an (accumulated) gradient.
+
+    Applied by the coordinator to the big-batch gradient to obtain the
+    ||G_Bbig||^2 component of Eqs. 4/5, per type, plus the total.
+    """
+    spec = param_spec(cfg)
+    sums = {k: jnp.zeros(()) for k in layers.STATS_ORDER}
+    for (name, _, ltype, _), g in zip(spec, flat_grads):
+        sums[ltype] = sums[ltype] + jnp.sum(jnp.square(g))
+    return jnp.stack([sums[k] for k in layers.STATS_ORDER])
+
+
+def accumulate(flat_acc, flat_grads):
+    return [a + g for a, g in zip(flat_acc, flat_grads)]
+
+
+def adamw_update(cfg: GPTConfig, flat_params, flat_m, flat_v, flat_grads,
+                 step, lr, grad_scale,
+                 beta1=0.9, beta2=0.95, eps=1e-8, wd=0.1):
+    """AdamW with decoupled weight decay on matrix params only (nanoGPT).
+
+    ``grad_scale`` divides the accumulated gradient sum by the number of
+    accumulation steps, folding the mean into the update (saves a pass).
+    """
+    spec = param_spec(cfg)
+    new_p, new_m, new_v = [], [], []
+    for (name, _, _, decay), p, m, v, g in zip(
+        spec, flat_params, flat_m, flat_v, flat_grads
+    ):
+        g = g * grad_scale
+        p2, m2, v2 = ref.adamw_step(
+            p, m, v, g, step, lr, beta1, beta2, eps, wd if decay else 0.0
+        )
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v
+
+
+def eval_step(cfg: GPTConfig, flat_params, ids, targets):
+    probes = layers.zero_probes()
+    return loss_fn(cfg, flat_params, probes, ids, targets)

@@ -1,0 +1,72 @@
+"""AOT exporter: HLO-text lowering and manifest contract."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, layers, model
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = jax.jit(lambda x, y: (x @ y + 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:40]
+    assert "dot(" in text or "dot " in text
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.export_config(model.CONFIGS["nano"], out)
+    return out, entry
+
+
+def test_export_writes_all_artifacts(exported):
+    out, entry = exported
+    for rel in entry["artifacts"].values():
+        p = out / rel
+        assert p.exists() and p.stat().st_size > 100, rel
+        assert p.read_text().startswith("HloModule")
+
+
+def test_manifest_entry_contract(exported):
+    _, entry = exported
+    cfg = model.CONFIGS["nano"]
+    assert entry["n_params"] == model.n_params(cfg)
+    assert entry["microbatch"] == aot.MICROBATCH["nano"]
+    spec = model.param_spec(cfg)
+    assert len(entry["params"]) == len(spec)
+    for e, (name, shape, ltype, decay) in zip(entry["params"], spec):
+        assert e["name"] == name
+        assert tuple(e["shape"]) == shape
+        assert e["ltype"] == ltype
+        assert e["decay"] == decay
+        assert e["ltype"] in layers.STATS_ORDER
+
+
+def test_manifest_json_is_valid(exported):
+    out, entry = exported
+    manifest = {
+        "schema_version": aot.SCHEMA_VERSION,
+        "stats_order": list(layers.STATS_ORDER),
+        "configs": {"nano": entry},
+        "ln_bench": [],
+    }
+    text = json.dumps(manifest)
+    back = json.loads(text)
+    assert back["schema_version"] == 2
+    assert back["stats_order"][1] == "layernorm"
+
+
+def test_stats_order_matches_rust():
+    """The canonical order is duplicated in rust/src/lib.rs — keep in sync."""
+    lib_rs = Path(__file__).resolve().parents[2] / "rust" / "src" / "lib.rs"
+    src = lib_rs.read_text()
+    want = ", ".join(f'"{t}"' for t in layers.STATS_ORDER)
+    assert want in src, f"rust STATS_ORDER drifted from python: {want}"

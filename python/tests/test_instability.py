@@ -1,0 +1,72 @@
+"""Appendix C.2 teacher–student harness: variants, shapes, step mechanics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import instability as ins
+
+D, H = 16, 2
+
+
+def _x(seed, b=2, t=8):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, t, D))
+
+
+def test_init_shapes_and_noise():
+    p = ins.init_block(D, 0)
+    for got, want in zip(p, ins.param_shapes(D)):
+        assert got.shape == want
+    noisy = ins.init_block(D, 0, bias_noise=0.05)
+    assert not np.allclose(p[3], noisy[3])
+    np.testing.assert_allclose(p[2], noisy[2])  # only the bias is perturbed
+
+
+@pytest.mark.parametrize("variant", ["exact", "lowprec", "cosine"])
+def test_forward_shapes(variant):
+    p = ins.init_block(D, 1)
+    y = ins.block_forward(p, _x(1), H, variant)
+    assert y.shape == (2, 8, D)
+    assert np.all(np.isfinite(y))
+
+
+def test_lowprec_differs_from_exact():
+    p = ins.init_block(D, 2)
+    x = 3.0 * _x(2)  # larger inputs -> visible bf16 rounding
+    y_exact = ins.block_forward(p, x, H, "exact")
+    y_low = ins.block_forward(p, x, H, "lowprec")
+    assert not np.allclose(y_exact, y_low, rtol=1e-6), "bf16 path identical to f32?"
+    # but close in absolute terms
+    np.testing.assert_allclose(y_exact, y_low, rtol=0.2, atol=0.2)
+
+
+def test_cosine_bounds_attention_scores():
+    p = ins.init_block(D, 3)
+    # blow up the qkv weights: cosine attention must stay finite
+    p[2] = p[2] * 100.0
+    y = ins.block_forward(p, _x(3), H, "cosine")
+    assert np.all(np.isfinite(y))
+
+
+def test_ts_step_reduces_loss():
+    teacher = ins.init_block(D, 4)
+    student = ins.init_block(D, 4, bias_noise=0.1)
+    x = _x(4)
+    losses = []
+    for _ in range(20):
+        out = ins.ts_step(teacher, student, x, jnp.float32(0.5), H, "exact")
+        student = list(out[:6])
+        losses.append(float(out[6]))
+    assert losses[-1] < losses[0] * 0.5, losses[:3] + losses[-3:]
+
+
+def test_ts_step_metrics():
+    teacher = ins.init_block(D, 5)
+    student = ins.init_block(D, 5, bias_noise=0.1)
+    out = ins.ts_step(teacher, student, _x(5), jnp.float32(0.0), H, "exact")
+    # lr=0: student unchanged; dist == initial perturbation norm
+    dist = float(out[7])
+    want = np.sqrt(sum(np.sum((np.asarray(s) - np.asarray(t)) ** 2)
+                       for s, t in zip(student, teacher)))
+    np.testing.assert_allclose(dist, want, rtol=1e-5)

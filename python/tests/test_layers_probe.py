@@ -1,0 +1,125 @@
+"""Probe-gradient mechanics: each instrumented layer's probe gradient must
+equal the sum of per-example squared gradient norms (vmap gold standard)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import layers
+
+
+def test_linear_probe_carries_perexample_norms():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (3, 5, 4))
+    w = jax.random.normal(k2, (4, 6))
+    b = jax.random.normal(k3, (6,))
+    g = jax.random.normal(k4, (3, 5, 6))
+
+    def f(w, b, probe):
+        return jnp.sum(layers.gns_linear(x, w, b, probe) * g)
+
+    dw, db, dprobe = jax.grad(f, argnums=(0, 1, 2))(w, b, jnp.zeros(()))
+
+    # gold standard: per-example grads via vmap
+    def per_example(xb, gb):
+        def fb(w, b):
+            return jnp.sum((xb[None] @ w + b) * gb[None])
+
+        return jax.grad(fb, argnums=(0, 1))(w, b)
+
+    dws, dbs = jax.vmap(per_example)(x, g)
+    want = float(jnp.sum(dws**2) + jnp.sum(dbs**2))
+    np.testing.assert_allclose(float(dprobe), want, rtol=1e-4)
+    np.testing.assert_allclose(dw, dws.sum(0), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(db, dbs.sum(0), rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_probe():
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (2, 4, 8))
+    w = jax.random.normal(k2, (8, 3))
+    g = jax.random.normal(k3, (2, 4, 3))
+
+    def f(w, probe):
+        return jnp.sum(layers.gns_matmul(x, w, probe) * g)
+
+    _, dprobe = jax.grad(f, argnums=(0, 1))(w, jnp.zeros(()))
+    wb = jnp.einsum("btk,btl->bkl", x, g)
+    want = float(jnp.sum(wb**2))
+    np.testing.assert_allclose(float(dprobe), want, rtol=1e-4)
+
+
+def test_layernorm_probe_variants_agree():
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (2, 8, 16))
+    gamma = 1.0 + 0.1 * jax.random.normal(k2, (16,))
+    beta = 0.1 * jax.random.normal(k3, (16,))
+    g = jax.random.normal(k4, (2, 8, 16))
+
+    outs = []
+    for ln in (layers.gns_layernorm_xla, layers.gns_layernorm_pallas):
+        def f(gamma, beta, probe, ln=ln):
+            return jnp.sum(ln(x, gamma, beta, probe) * g)
+
+        grads = jax.grad(f, argnums=(0, 1, 2))(gamma, beta, jnp.zeros(()))
+        outs.append(grads)
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    assert float(outs[0][2]) > 0.0
+
+
+def test_embedding_probe():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    ids = jax.random.randint(k1, (2, 6), 0, 11)
+    wte = jax.random.normal(k2, (11, 4))
+    wpe = jax.random.normal(k2, (6, 4))
+    g = jax.random.normal(k1, (2, 6, 4))
+
+    def f(wte, wpe, probe):
+        return jnp.sum(layers.gns_embedding(ids, wte, wpe, probe) * g)
+
+    _, _, dprobe = jax.grad(f, argnums=(0, 1, 2))(wte, wpe, jnp.zeros(()))
+
+    def per_example(idb, gb):
+        def fb(wte, wpe):
+            return jnp.sum((wte[idb[None]] + wpe[None, : idb.shape[0]]) * gb[None])
+
+        return jax.grad(fb, argnums=(0, 1))(wte, wpe)
+
+    dwtes, dwpes = jax.vmap(per_example)(ids, g)
+    want = float(jnp.sum(dwtes**2) + jnp.sum(dwpes**2))
+    np.testing.assert_allclose(float(dprobe), want, rtol=1e-4)
+
+
+def test_shared_probe_sums_across_layers():
+    """Two layers sharing one probe: grads add (per-type aggregation)."""
+    key = jax.random.PRNGKey(4)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (2, 3, 4))
+    w1 = jax.random.normal(k2, (4, 4))
+    w2 = jax.random.normal(k3, (4, 4))
+
+    def f(probe):
+        h = layers.gns_matmul(x, w1, probe)
+        y = layers.gns_matmul(h, w2, probe)
+        return jnp.sum(y**2)
+
+    d_shared = jax.grad(f)(jnp.zeros(()))
+
+    def f2(p1, p2):
+        h = layers.gns_matmul(x, w1, p1)
+        y = layers.gns_matmul(h, w2, p2)
+        return jnp.sum(y**2)
+
+    d1, d2 = jax.grad(f2, argnums=(0, 1))(jnp.zeros(()), jnp.zeros(()))
+    np.testing.assert_allclose(float(d_shared), float(d1) + float(d2), rtol=1e-5)
+
+
+def test_zero_probes_order_matches_stats_order():
+    assert set(layers.zero_probes()) == set(layers.STATS_ORDER)
+    for v in layers.zero_probes().values():
+        assert v.shape == ()

@@ -1,0 +1,97 @@
+"""Linear-layer simultaneous per-example gradient norms vs all oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear, ref
+
+
+def _case(seed, b, t, k, l):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (b, t, k), dtype=jnp.float32)
+    g = jax.random.normal(ks[1], (b, t, l), dtype=jnp.float32)
+    return x, g
+
+
+@pytest.mark.parametrize("b,t,k,l", [(2, 4, 8, 8), (3, 8, 16, 8), (1, 2, 4, 12)])
+def test_alg1_matches_vmap(b, t, k, l):
+    x, g = _case(0, b, t, k, l)
+    w, n = linear.linear_gnorm(x, g)
+    wr, nr = ref.linear_perex_sqnorm_vmap(x, g)
+    np.testing.assert_allclose(w, wr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(n, nr, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,t,k,l", [(2, 4, 8, 8), (2, 8, 16, 16)])
+def test_alg1_matches_li_etal(b, t, k, l):
+    """The simultaneous method and the O(T^2) trick compute the same norm."""
+    x, g = _case(1, b, t, k, l)
+    w0, n0 = linear.linear_gnorm(x, g)
+    w1, n1 = ref.linear_perex_sqnorm_li(x, g)
+    np.testing.assert_allclose(w0, w1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(n0, n1, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "b,t,k,l,bk,bl",
+    [(2, 4, 8, 8, 8, 8), (3, 4, 16, 8, 8, 8), (2, 4, 16, 16, 8, 16)],
+)
+def test_pallas_kernel_matches_einsum(b, t, k, l, bk, bl):
+    x, g = _case(2, b, t, k, l)
+    w0, n0 = linear.linear_gnorm(x, g)
+    w1, n1 = linear.linear_gnorm_pallas(x, g, block_k=bk, block_l=bl)
+    np.testing.assert_allclose(w0, w1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(n0, n1, rtol=1e-4, atol=1e-4)
+
+
+def test_4d_input_flattened():
+    """Extra middle dims (e.g. heads) fold into the contraction."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 3, 4, 8))
+    g = jax.random.normal(key, (2, 3, 4, 8))
+    w, n = linear.linear_gnorm(x, g)
+    wr, nr = ref.linear_perex_sqnorm_vmap(
+        x.reshape(2, 12, 8), g.reshape(2, 12, 8)
+    )
+    np.testing.assert_allclose(w, wr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(n, nr, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    t=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([4, 8, 16]),
+    l=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_all_three_agree(b, t, k, l, seed):
+    x, g = _case(seed, b, t, k, l)
+    w0, n0 = linear.linear_gnorm(x, g)
+    _, n1 = ref.linear_perex_sqnorm_li(x, g)
+    wr, nr = ref.linear_perex_sqnorm_vmap(x, g)
+    np.testing.assert_allclose(w0, wr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(n0, nr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(n1, nr, rtol=1e-3, atol=1e-4)
+
+
+def test_flop_formula_crossover():
+    """App. E: Li et al. is cheaper only below T = sqrt((2KL-1)/(2K+2L-1))."""
+    k = l = 512
+    t_star = np.sqrt((2 * k * l - 1) / (2 * k + 2 * l - 1))
+    for t, li_cheaper in [(int(t_star * 0.5), True), (int(t_star * 2), False)]:
+        f = linear.flops(1, t, k, l)
+        assert (f["li_norm"] < f["simultaneous_norm"]) == li_cheaper
+
+
+def test_io_formula_crossover():
+    """App. E: I/O crossover at T = sqrt(2 KL)/2 = sqrt(KL/2)."""
+    k = l = 256
+    t_star = np.sqrt(k * l / 2.0)
+    lo = linear.io_bytes(4, int(t_star * 0.5), k, l)
+    hi = linear.io_bytes(4, int(t_star * 2.0), k, l)
+    assert lo["li"] < lo["simultaneous"]
+    assert hi["li"] > hi["simultaneous"]

@@ -1,0 +1,175 @@
+"""L2 model: shapes, loss sanity, and the gold-standard GNS-stats check."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers, model
+
+
+CFG = model.GPTConfig(name="t", vocab=17, seq_len=8, d_model=16, n_layers=2, n_heads=2)
+
+
+def _batch(cfg, b, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    ids = jax.random.randint(k1, (b, cfg.seq_len), 0, cfg.vocab)
+    tg = jax.random.randint(k2, (b, cfg.seq_len), 0, cfg.vocab)
+    return ids, tg
+
+
+def test_param_spec_counts():
+    spec = model.param_spec(CFG)
+    # 2 embeddings + 12/block + final ln (2) + lm_head
+    assert len(spec) == 2 + 12 * CFG.n_layers + 3
+    assert model.n_params(CFG) == sum(int(np.prod(s)) for _, s, _, _ in spec)
+
+
+def test_init_shapes_and_stats():
+    flat = model.init_params(CFG, 0)
+    for (name, shape, _, _), p in zip(model.param_spec(CFG), flat):
+        assert p.shape == shape, name
+    pd = model.params_dict(CFG, flat)
+    assert jnp.all(pd["h0.ln1.g"] == 1.0)
+    assert jnp.all(pd["h0.attn.qkv.b"] == 0.0)
+    # residual projections use the scaled init
+    assert pd["h0.attn.proj.w"].std() < pd["h0.attn.qkv.w"].std()
+
+
+def test_forward_shapes_and_loss():
+    flat = model.init_params(CFG, 0)
+    ids, tg = _batch(CFG, 3)
+    logits = model.forward(CFG, flat, layers.zero_probes(), ids)
+    assert logits.shape == (3, CFG.seq_len, CFG.vocab)
+    loss = model.loss_fn(CFG, flat, layers.zero_probes(), ids, tg)
+    # random init => loss near ln(vocab)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    flat = model.init_params(CFG, 1)
+    ids, _ = _batch(CFG, 1)
+    l0 = model.forward(CFG, flat, layers.zero_probes(), ids)
+    ids2 = ids.at[0, -1].set((ids[0, -1] + 1) % CFG.vocab)
+    l1 = model.forward(CFG, flat, layers.zero_probes(), ids2)
+    np.testing.assert_allclose(l0[0, :-1], l1[0, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(l0[0, -1], l1[0, -1])
+
+
+def test_grad_step_stats_match_vmap_gold_standard():
+    """The (5,) stats vector == sum_b ||w'_b||^2 per layer type, with w'_b
+    the vmap-materialised per-example gradient of the mean-batch loss."""
+    cfg = CFG
+    b = 3
+    flat = model.init_params(cfg, 2)
+    ids, tg = _batch(cfg, b, seed=3)
+    loss, grads, stats = model.grad_step(cfg, flat, ids, tg)
+
+    def per_example(idb, tgb):
+        def f(fp):
+            # mean-batch loss restricted to one example, scaled by 1/b to
+            # match w'_b = (1/B) dL_b/dw
+            return model.loss_fn(cfg, fp, layers.zero_probes(),
+                                 idb[None], tgb[None]) / b
+
+        return jax.grad(f)(flat)
+
+    pex = jax.vmap(per_example)(ids, tg)  # list of (B, *shape)
+    want = {k: 0.0 for k in layers.STATS_ORDER}
+    for (name, _, ltype, _), gb in zip(model.param_spec(cfg), pex):
+        want[ltype] += float(jnp.sum(jnp.square(gb)))
+    got = {k: float(s) for k, s in zip(layers.STATS_ORDER, stats)}
+    for k in layers.STATS_ORDER:
+        np.testing.assert_allclose(got[k], want[k], rtol=2e-3, err_msg=k)
+
+    # and the full gradients agree with the vmap sum
+    for (name, _, _, _), g, gb in zip(model.param_spec(cfg), grads, pex):
+        np.testing.assert_allclose(g, gb.sum(0), rtol=2e-3, atol=1e-6, err_msg=name)
+
+
+def test_grad_sqnorms_partition():
+    cfg = CFG
+    flat = model.init_params(cfg, 4)
+    ids, tg = _batch(cfg, 2, seed=5)
+    _, grads, _ = model.grad_step(cfg, flat, ids, tg)
+    stats = model.grad_sqnorms(cfg, grads)
+    total = sum(float(jnp.sum(jnp.square(g))) for g in grads)
+    np.testing.assert_allclose(float(stats.sum()), total, rtol=1e-5)
+
+
+def test_accumulate_and_scale_equals_big_batch():
+    """mean of microbatch grads == grad of the concatenated batch."""
+    cfg = CFG
+    flat = model.init_params(cfg, 6)
+    ids, tg = _batch(cfg, 4, seed=7)
+    _, g_all, _ = model.grad_step(cfg, flat, ids, tg)
+    _, g0, _ = model.grad_step(cfg, flat, ids[:2], tg[:2])
+    _, g1, _ = model.grad_step(cfg, flat, ids[2:], tg[2:])
+    acc = model.accumulate(g0, g1)
+    for a, g in zip(acc, g_all):
+        np.testing.assert_allclose(a / 2.0, g, rtol=1e-4, atol=1e-6)
+
+
+def test_adamw_matches_reference_loop():
+    cfg = CFG
+    flat = model.init_params(cfg, 8)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    ids, tg = _batch(cfg, 2, seed=9)
+    _, grads, _ = model.grad_step(cfg, flat, ids, tg)
+    p2, m2, v2 = model.adamw_update(cfg, flat, m, v, grads,
+                                    jnp.float32(1.0), jnp.float32(1e-3),
+                                    jnp.float32(1.0))
+    # loss decreases after a step on the same batch
+    l0 = model.eval_step(cfg, flat, ids, tg)
+    l1 = model.eval_step(cfg, p2, ids, tg)
+    assert float(l1) < float(l0)
+    # weight decay applied only to decayed params
+    spec = model.param_spec(cfg)
+    iw = [i for i, s in enumerate(spec) if s[0] == "h0.ln1.g"][0]
+    # gamma (no decay): update must equal adam step with wd=0
+    from compile.kernels import ref
+    pg, _, _ = ref.adamw_step(flat[iw], m[iw], v[iw], grads[iw], 1.0, 1e-3, wd=0.0)
+    np.testing.assert_allclose(p2[iw], pg, rtol=1e-6)
+
+
+def test_pallas_and_xla_ln_models_agree():
+    cfg_x = CFG
+    cfg_p = model.GPTConfig(**{**cfg_x.__dict__, "pallas_ln": True})
+    flat = model.init_params(cfg_x, 10)
+    ids, tg = _batch(cfg_x, 2, seed=11)
+    lx, gx, sx = model.grad_step(cfg_x, flat, ids, tg)
+    lp, gp, sp = model.grad_step(cfg_p, flat, ids, tg)
+    np.testing.assert_allclose(float(lx), float(lp), rtol=1e-5)
+    np.testing.assert_allclose(sx, sp, rtol=1e-4)
+    for a, b_ in zip(gx, gp):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-6)
+
+
+def test_cosine_attention_variant_runs():
+    cfg = model.GPTConfig(**{**CFG.__dict__, "cosine_attention": True})
+    flat = model.init_params(cfg, 12)
+    ids, tg = _batch(cfg, 2, seed=13)
+    loss, grads, stats = model.grad_step(cfg, flat, ids, tg)
+    assert np.isfinite(float(loss))
+    assert all(np.all(np.isfinite(g)) for g in grads)
+
+
+@pytest.mark.parametrize("name", ["nano", "micro", "small"])
+def test_named_configs_consistent(name):
+    cfg = model.CONFIGS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert model.n_params(cfg) > 0
+
+
+def test_grad_step_plain_matches_instrumented():
+    """The ablation baseline must compute identical loss and gradients."""
+    cfg = CFG
+    flat = model.init_params(cfg, 14)
+    ids, tg = _batch(cfg, 2, seed=15)
+    l0, g0, _ = model.grad_step(cfg, flat, ids, tg)
+    l1, g1 = model.grad_step_plain(cfg, flat, ids, tg)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    for a, b in zip(g0, g1):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)

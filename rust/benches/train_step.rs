@@ -1,0 +1,53 @@
+//! End-to-end step benchmarks: grad_step dispatch, accumulate, adam
+//! update, grad_sqnorms — the coordinator's hot path per Section 5's
+//! requirement that GNS tracking adds no training-time overhead.
+//!
+//! Run: `cargo bench --bench train_step`.
+
+use nanogns::coordinator::ModelRunner;
+use nanogns::data::{CorpusGenerator, Loader};
+use nanogns::runtime::{Manifest, Runtime};
+use nanogns::util::benchkit::Bench;
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping train_step bench: {e}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    for model in ["nano", "micro", "small"] {
+        if manifest.config(model).is_err() {
+            continue;
+        }
+        let mut runner = ModelRunner::new(&rt, &manifest, model).unwrap();
+        runner.init(0).unwrap();
+        let text = CorpusGenerator::new(0).generate(1 << 17);
+        let mut loader = Loader::new(&text, runner.entry.seq_len, 0);
+        let batch = loader.next_batch(runner.entry.microbatch);
+
+        let mut bench = Bench::new(&format!("step_{model}")).with_samples(5).with_target_ms(300);
+        bench.run("grad_microbatch", || {
+            runner.grad_microbatch(&batch).unwrap();
+        });
+        let out = runner.grad_microbatch(&batch).unwrap();
+        bench.run("grad_sqnorms", || {
+            runner.grad_sqnorms(&out.grads).unwrap();
+        });
+        bench.run("accumulate", || {
+            let acc = runner.zero_grads().unwrap();
+            runner.accumulate(acc, &out.grads).unwrap();
+        });
+        bench.run("adamw_update", || {
+            runner.adamw_update(&out.grads, 1e-3, 1.0).unwrap();
+        });
+        bench.run("eval_step", || {
+            runner.eval(&batch).unwrap();
+        });
+        bench.run("zero_grads_alloc", || {
+            runner.zero_grads().unwrap();
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Training-run configuration (JSON), the launcher's contract.
+//!
+//! Model *shape* lives in the artifact manifest (baked into the HLO); this
+//! config selects a model by name and sets everything the coordinator
+//! owns: schedules, seeds, ranks, telemetry paths. Example configs live in
+//! `configs/*.json`. Parsed by the in-tree JSON substrate (no serde in
+//! this offline build).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::schedule::{BatchSizeSchedule, LrSchedule};
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model config name in artifacts/manifest.json.
+    pub model: String,
+    /// Directory holding the AOT artifacts.
+    pub artifacts: String,
+    pub steps: u64,
+    pub seed: u64,
+    /// Simulated DDP ranks (1 = single worker).
+    pub ranks: usize,
+    pub lr: LrSchedule,
+    pub batch_size: BatchSizeSchedule,
+    /// EMA alpha for GNS component smoothing.
+    pub gns_alpha: f64,
+    /// Corpus size in bytes (generated deterministically from `seed`).
+    pub corpus_bytes: usize,
+    /// Evaluate every N optimizer steps (0 = never).
+    pub eval_every: u64,
+    /// Metrics CSV path ("" = stdout summary only).
+    pub metrics_path: String,
+}
+
+impl TrainConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json_text(&text).context("parsing train config JSON")
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let lr = parse_lr(v.get("lr")?)?;
+        let batch_size = parse_batch_size(v.get("batch_size")?)?;
+        Ok(Self {
+            model: v.get("model")?.as_str()?.to_string(),
+            artifacts: match v.opt("artifacts") {
+                Some(a) => a.as_str()?.to_string(),
+                None => "artifacts".into(),
+            },
+            steps: v.get("steps")?.as_u64()?,
+            seed: v.get("seed")?.as_u64()?,
+            ranks: match v.opt("ranks") {
+                Some(r) => r.as_usize()?,
+                None => 1,
+            },
+            lr,
+            batch_size,
+            gns_alpha: match v.opt("gns_alpha") {
+                Some(a) => a.as_f64()?,
+                None => 0.05,
+            },
+            corpus_bytes: match v.opt("corpus_bytes") {
+                Some(c) => c.as_usize()?,
+                None => 1 << 20,
+            },
+            eval_every: match v.opt("eval_every") {
+                Some(e) => e.as_u64()?,
+                None => 0,
+            },
+            metrics_path: match v.opt("metrics_path") {
+                Some(m) => m.as_str()?.to_string(),
+                None => String::new(),
+            },
+        })
+    }
+
+    /// A small default used by tests and the quickstart example.
+    pub fn quickstart(model: &str, steps: u64) -> Self {
+        Self {
+            model: model.to_string(),
+            artifacts: "artifacts".into(),
+            steps,
+            seed: 0,
+            ranks: 1,
+            lr: LrSchedule { max_lr: 1e-3, min_lr: 1e-4, warmup_steps: 10, decay_steps: steps },
+            batch_size: BatchSizeSchedule::Fixed { accum: 2 },
+            gns_alpha: 0.05,
+            corpus_bytes: 1 << 18,
+            eval_every: 0,
+            metrics_path: String::new(),
+        }
+    }
+}
+
+fn parse_lr(v: &Value) -> Result<LrSchedule> {
+    Ok(LrSchedule {
+        max_lr: v.get("max_lr")?.as_f64()?,
+        min_lr: v.get("min_lr")?.as_f64()?,
+        warmup_steps: v.get("warmup_steps")?.as_u64()?,
+        decay_steps: v.get("decay_steps")?.as_u64()?,
+    })
+}
+
+/// `{"kind": "fixed", "accum": 4}` |
+/// `{"kind": "linear", "min_accum": 1, "max_accum": 8, "ramp_tokens": 1e6}` |
+/// `{"kind": "adaptive", "min_accum": 1, "max_accum": 8, "gain": 0.5}`
+fn parse_batch_size(v: &Value) -> Result<BatchSizeSchedule> {
+    match v.get("kind")?.as_str()? {
+        "fixed" => Ok(BatchSizeSchedule::Fixed { accum: v.get("accum")?.as_usize()? }),
+        "linear" => Ok(BatchSizeSchedule::Linear {
+            min_accum: v.get("min_accum")?.as_usize()?,
+            max_accum: v.get("max_accum")?.as_usize()?,
+            ramp_tokens: v.get("ramp_tokens")?.as_u64()?,
+        }),
+        "adaptive" => Ok(BatchSizeSchedule::Adaptive {
+            min_accum: v.get("min_accum")?.as_usize()?,
+            max_accum: v.get("max_accum")?.as_usize()?,
+            gain: v.get("gain")?.as_f64()?,
+        }),
+        k => bail!("unknown batch_size kind {k:?} (fixed|linear|adaptive)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"{
+            "model": "small",
+            "steps": 100,
+            "seed": 1,
+            "ranks": 2,
+            "lr": {"max_lr": 6e-4, "min_lr": 6e-5, "warmup_steps": 10, "decay_steps": 90},
+            "batch_size": {"kind": "linear", "min_accum": 1, "max_accum": 8, "ramp_tokens": 100000},
+            "gns_alpha": 0.02,
+            "metrics_path": "results/run.csv"
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.model, "small");
+        assert_eq!(cfg.ranks, 2);
+        assert!((cfg.gns_alpha - 0.02).abs() < 1e-12);
+        assert!(matches!(cfg.batch_size, BatchSizeSchedule::Linear { max_accum: 8, .. }));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.ranks, 1);
+        assert_eq!(cfg.corpus_bytes, 1 << 20);
+        assert_eq!(cfg.metrics_path, "");
+    }
+
+    #[test]
+    fn rejects_unknown_schedule() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "exponential", "accum": 2}
+        }"#;
+        assert!(TrainConfig::from_json_text(text).is_err());
+    }
+
+    #[test]
+    fn adaptive_schedule_parses() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "adaptive", "min_accum": 1, "max_accum": 16, "gain": 0.5}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert!(matches!(cfg.batch_size, BatchSizeSchedule::Adaptive { .. }));
+    }
+}

@@ -1,0 +1,83 @@
+//! Binary parameter checkpoints.
+//!
+//! Format: magic, schema version, param count, then per param
+//! (name-len, name, rank, dims..., f32 data). Self-describing enough to
+//! verify against a manifest on load; little-endian throughout.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+use xla::Literal;
+
+use crate::runtime::tensor::Tensor;
+use crate::runtime::ModelEntry;
+
+const MAGIC: &[u8; 8] = b"NANOGNS1";
+
+pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Literal]) -> Result<()> {
+    ensure!(params.len() == entry.params.len(), "param count mismatch");
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (spec, lit) in entry.params.iter().zip(params) {
+        let t = Tensor::from_literal(lit)?;
+        ensure!(t.shape == spec.shape, "{}: shape drift", spec.name);
+        let name = spec.name.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        for v in &t.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<Vec<Literal>> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad checkpoint magic");
+    let mut buf4 = [0u8; 4];
+    r.read_exact(&mut buf4)?;
+    let n = u32::from_le_bytes(buf4) as usize;
+    ensure!(n == entry.params.len(), "checkpoint has {n} params, manifest {}", entry.params.len());
+    let mut out = Vec::with_capacity(n);
+    for spec in &entry.params {
+        r.read_exact(&mut buf4)?;
+        let name_len = u32::from_le_bytes(buf4) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        ensure!(
+            name == spec.name.as_bytes(),
+            "checkpoint param {:?} != manifest {:?}",
+            String::from_utf8_lossy(&name),
+            spec.name
+        );
+        r.read_exact(&mut buf4)?;
+        let rank = u32::from_le_bytes(buf4) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        let mut buf8 = [0u8; 8];
+        for _ in 0..rank {
+            r.read_exact(&mut buf8)?;
+            shape.push(u64::from_le_bytes(buf8) as usize);
+        }
+        ensure!(shape == spec.shape, "{}: checkpoint shape {:?}", spec.name, shape);
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        for v in &mut data {
+            r.read_exact(&mut buf4)?;
+            *v = f32::from_le_bytes(buf4);
+        }
+        out.push(Tensor::new(shape, data)?.to_literal()?);
+    }
+    Ok(out)
+}

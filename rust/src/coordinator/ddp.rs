@@ -1,0 +1,112 @@
+//! Simulated distributed-data-parallel GNS estimation (taxonomy: "DDP").
+//!
+//! In real DDP, each rank's gradient (over its local batch) is visible
+//! just before all-reduce; its norm gives a `||G_Bsmall||` observation
+//! with `B_small = local batch`. We reproduce those statistics exactly by
+//! running each rank's microbatches sequentially and taking per-rank
+//! gradient norms before averaging across ranks — the estimator sees the
+//! same random variables a real cluster would produce (DESIGN.md
+//! §Substitutions). Used by the Fig. 16 harness to cross-check the
+//! per-example LayerNorm estimator against the DDP method.
+
+use anyhow::Result;
+
+use crate::data::Loader;
+use crate::gns::{gns_components, GnsComponents};
+use crate::N_TYPES;
+
+use super::runner::ModelRunner;
+
+/// One DDP-style observation across `ranks` simulated workers.
+pub struct DdpObservation {
+    /// per-layer-type components from the DDP estimator
+    pub per_type: Vec<GnsComponents>,
+    pub total: GnsComponents,
+    /// mean loss across all microbatches
+    pub loss: f64,
+    /// the all-reduced (mean) gradient, for the optimizer to consume
+    pub mean_grads: Vec<xla::Literal>,
+    pub b_big: f64,
+    pub b_small: f64,
+}
+
+/// Run one step of simulated DDP: `ranks` workers, each accumulating
+/// `accum` microbatches, then "all-reduce" (average). Gradient norms are
+/// measured per-rank (B_small = microbatch * accum) and on the averaged
+/// gradient (B_big = B_small * ranks).
+pub fn ddp_step(
+    runner: &ModelRunner,
+    loaders: &mut [Loader],
+    accum: usize,
+) -> Result<DdpObservation> {
+    let mut sink = crate::gns::GnsAccumulator::new(N_TYPES, runner.entry.microbatch);
+    ddp_step_with_stats(runner, loaders, accum, &mut sink)
+}
+
+/// [`ddp_step`] that also folds each microbatch's per-example stats vector
+/// into `gns_acc`, so the per-example and DDP estimators can be compared
+/// on identical sampled gradients (Fig. 16).
+pub fn ddp_step_with_stats(
+    runner: &ModelRunner,
+    loaders: &mut [Loader],
+    accum: usize,
+    gns_acc: &mut crate::gns::GnsAccumulator,
+) -> Result<DdpObservation> {
+    let ranks = loaders.len();
+    assert!(ranks >= 2, "DDP estimator needs >= 2 ranks");
+    let mb = runner.entry.microbatch;
+
+    let mut rank_sqnorms: Vec<[f64; N_TYPES]> = Vec::with_capacity(ranks);
+    let mut all_acc: Option<Vec<xla::Literal>> = None;
+    let mut loss_sum = 0f64;
+
+    for loader in loaders.iter_mut() {
+        let mut acc = runner.zero_grads()?;
+        for _ in 0..accum {
+            let batch = loader.next_batch(mb);
+            let out = runner.grad_microbatch(&batch)?;
+            loss_sum += out.loss as f64;
+            gns_acc.add_microbatch(&out.stats);
+            acc = runner.accumulate(acc, &out.grads)?;
+        }
+        // per-rank mean gradient norm: ||sum/accum||^2 = ||sum||^2/accum^2
+        let sums = runner.grad_sqnorms(&acc)?;
+        let scale = 1.0 / (accum as f64 * accum as f64);
+        let mut sq = [0f64; N_TYPES];
+        for (d, s) in sq.iter_mut().zip(sums) {
+            *d = s * scale;
+        }
+        rank_sqnorms.push(sq);
+        all_acc = Some(match all_acc {
+            None => acc,
+            Some(prev) => runner.accumulate(prev, &acc)?,
+        });
+    }
+
+    let n_micro = (ranks * accum) as f64;
+    let mean_grads = all_acc.unwrap();
+    let total_sums = runner.grad_sqnorms(&mean_grads)?;
+    let b_small = (mb * accum) as f64;
+    let b_big = b_small * ranks as f64;
+
+    let mut per_type = Vec::with_capacity(N_TYPES);
+    let mut tot_big = 0f64;
+    let mut tot_small = 0f64;
+    for t in 0..N_TYPES {
+        let big = total_sums[t] / (n_micro * n_micro); // norm of the mean grad
+        let small = rank_sqnorms.iter().map(|r| r[t]).sum::<f64>() / ranks as f64;
+        per_type.push(gns_components(b_big, big, b_small, small));
+        tot_big += big;
+        tot_small += small;
+    }
+    let total = gns_components(b_big, tot_big, b_small, tot_small);
+
+    Ok(DdpObservation {
+        per_type,
+        total,
+        loss: loss_sum / n_micro,
+        mean_grads,
+        b_big,
+        b_small,
+    })
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the training orchestration layer.
+//!
+//! * [`runner`] — owns a model's device state (params, Adam moments) and
+//!   dispatches the AOT artifacts (init / grad_step / accumulate /
+//!   adamw_update / grad_sqnorms / eval_step);
+//! * [`trainer`] — the optimizer-step loop: microbatch gradient
+//!   accumulation, online GNS tracking, LR + batch-size schedules,
+//!   telemetry, checkpoints;
+//! * [`ddp`] — simulated distributed-data-parallel ranks, providing the
+//!   taxonomy's *DDP* small-batch gradient-norm estimator to compare
+//!   against the per-example method (Fig. 16);
+//! * [`checkpoint`] — binary param snapshots.
+//!
+//! Python never appears here: artifacts are loaded from disk and executed
+//! through PJRT.
+
+pub mod checkpoint;
+pub mod ddp;
+pub mod runner;
+pub mod trainer;
+
+pub use runner::ModelRunner;
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,233 @@
+//! The optimizer-step loop: gradient accumulation, GNS tracking,
+//! schedule-driven batch sizing, telemetry.
+//!
+//! One optimizer step (paper Sections 3–5):
+//! 1. Decide accumulation steps A from the batch-size schedule (possibly
+//!    GNS-adaptive).
+//! 2. Run A * ranks microbatches through `grad_step`, accumulating the
+//!    gradients on device and folding each stats vector into a
+//!    [`GnsAccumulator`] (the per-example ||G_Bsmall||^2 component).
+//! 3. Compute per-layer-type ||G_Bbig||^2 on the accumulated gradient via
+//!    `grad_sqnorms` (one cheap artifact call).
+//! 4. Update the [`GnsTracker`] (EMA of Eqs. 4/5 per layer type).
+//! 5. AdamW with grad_scale = 1/(A * ranks).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::{CorpusGenerator, Loader};
+use crate::gns::{GnsAccumulator, GnsTracker};
+use crate::runtime::{Manifest, Runtime};
+use crate::schedule::GnsController;
+use crate::telemetry::{CsvLogger, TRAIN_HEADER};
+use crate::{N_TYPES, STATS_ORDER};
+
+use super::runner::ModelRunner;
+
+/// Per-step record kept in memory (mirrors the CSV schema).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub tokens: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub accum: usize,
+    pub b_big: f64,
+    /// Raw (unsmoothed) per-type (g_sq, s) component pairs + total.
+    pub raw_g_sq: [f64; N_TYPES],
+    pub raw_s: [f64; N_TYPES],
+    pub raw_g_sq_total: f64,
+    pub raw_s_total: f64,
+    pub gns_layernorm: f64,
+    pub gns_total: f64,
+    pub step_ms: f64,
+}
+
+pub struct TrainOutcome {
+    pub records: Vec<StepRecord>,
+    pub final_loss: f64,
+    pub tokens: u64,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub runner: ModelRunner,
+    loaders: Vec<Loader>,
+    controller: GnsController,
+    pub tracker: GnsTracker,
+    tokens: u64,
+    /// Multiplier on the scheduled LR (Fig. 6 temperature interventions).
+    pub lr_scale: f64,
+}
+
+/// Deep copy of everything a [`Trainer`] mutates, for run forking (Fig. 6
+/// restarts mid-training runs with varied LR / batch size).
+#[derive(Clone)]
+pub struct TrainerSnapshot {
+    runner: crate::coordinator::runner::RunnerSnapshot,
+    loaders: Vec<Loader>,
+    controller: GnsController,
+    tracker: GnsTracker,
+    tokens: u64,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
+        let mut runner = ModelRunner::new(rt, manifest, &cfg.model)?;
+        runner.init(cfg.seed as i32)?;
+        let text = CorpusGenerator::new(cfg.seed).generate(cfg.corpus_bytes);
+        let base = Loader::new(&text, runner.entry.seq_len, cfg.seed);
+        let loaders: Vec<Loader> = (0..cfg.ranks.max(1) as u64).map(|r| base.for_rank(r)).collect();
+        let controller = GnsController::new(cfg.batch_size.clone());
+        let tracker = GnsTracker::new(&STATS_ORDER, cfg.gns_alpha);
+        Ok(Self { cfg, runner, loaders, controller, tracker, tokens: 0, lr_scale: 1.0 })
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn snapshot(&self) -> TrainerSnapshot {
+        TrainerSnapshot {
+            runner: self.runner.snapshot(),
+            loaders: self.loaders.clone(),
+            controller: self.controller.clone(),
+            tracker: self.tracker.clone(),
+            tokens: self.tokens,
+        }
+    }
+
+    pub fn restore(&mut self, s: TrainerSnapshot) {
+        self.runner.restore(s.runner);
+        self.loaders = s.loaders;
+        self.controller = s.controller;
+        self.tracker = s.tracker;
+        self.tokens = s.tokens;
+    }
+
+    /// Replace the batch-size schedule mid-run (Fig. 6 interventions),
+    /// seeding the controller's hysteresis at `start_accum`.
+    pub fn set_batch_schedule(&mut self, s: crate::schedule::BatchSizeSchedule, start_accum: usize) {
+        self.controller = GnsController::with_start(s, start_accum);
+    }
+
+    /// Run one optimizer step; returns its record.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let t0 = Instant::now();
+        let mb = self.runner.entry.microbatch;
+        let seq = self.runner.entry.seq_len;
+        let accum = self.controller.decide(self.tokens, self.tracker.gns_total(), mb);
+        let ranks = self.cfg.ranks.max(1);
+
+        let mut acc = self.runner.zero_grads()?;
+        let mut gns_acc = GnsAccumulator::new(N_TYPES, mb);
+        let mut loss_sum = 0f64;
+        let mut n_micro = 0usize;
+        for rank in 0..ranks {
+            for _ in 0..accum {
+                let batch = self.loaders[rank].next_batch(mb);
+                let out = self.runner.grad_microbatch(&batch)?;
+                gns_acc.add_microbatch(&out.stats);
+                acc = self.runner.accumulate(acc, &out.grads)?;
+                loss_sum += out.loss as f64;
+                n_micro += 1;
+            }
+        }
+        let scale = 1.0 / n_micro as f64;
+
+        // Big-batch component: norms of the *mean* gradient = norms of the
+        // sum scaled by 1/n_micro (norms scale quadratically).
+        let sums = self.runner.grad_sqnorms(&acc)?;
+        let mut big_sq = [0f64; N_TYPES];
+        for (d, s) in big_sq.iter_mut().zip(sums) {
+            *d = s * scale * scale;
+        }
+        let (small_sq, _) = gns_acc.finish();
+        let b_big = (mb * accum * ranks) as f64;
+        self.tracker.observe(b_big, &big_sq, &small_sq);
+
+        let lr = self.cfg.lr.at(self.runner.step) * self.lr_scale;
+        self.runner.adamw_update(&acc, lr, scale)?;
+        self.tokens += (n_micro * mb * seq) as u64;
+
+        let mut raw_g_sq = [0f64; N_TYPES];
+        let mut raw_s = [0f64; N_TYPES];
+        for (i, c) in self.tracker.last_raw.iter().enumerate() {
+            raw_g_sq[i] = c.g_sq;
+            raw_s[i] = c.s;
+        }
+        let ct = self.tracker.last_raw_total.unwrap();
+        Ok(StepRecord {
+            step: self.runner.step,
+            tokens: self.tokens,
+            loss: loss_sum / n_micro as f64,
+            lr,
+            accum,
+            b_big,
+            raw_g_sq,
+            raw_s,
+            raw_g_sq_total: ct.g_sq,
+            raw_s_total: ct.s,
+            gns_layernorm: self.tracker.gns_of("layernorm").unwrap_or(f64::NAN),
+            gns_total: self.tracker.gns_total().unwrap_or(f64::NAN),
+            step_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Evaluation loss averaged over `n` held-out batches.
+    pub fn eval(&mut self, n: usize) -> Result<f64> {
+        let mb = self.runner.entry.microbatch;
+        let mut loader = self.loaders[0].for_rank(u64::MAX); // held-out stream
+        let mut sum = 0f64;
+        for _ in 0..n {
+            sum += self.runner.eval(&loader.next_batch(mb))? as f64;
+        }
+        Ok(sum / n as f64)
+    }
+
+    /// Full run per the config; logs CSV if configured.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        let mut logger = if self.cfg.metrics_path.is_empty() {
+            None
+        } else {
+            Some(CsvLogger::to_file(&self.cfg.metrics_path, TRAIN_HEADER)?)
+        };
+        let mut records = Vec::with_capacity(self.cfg.steps as usize);
+        for _ in 0..self.cfg.steps {
+            let rec = self.step()?;
+            if let Some(log) = logger.as_mut() {
+                log.row(&record_row(&rec))?;
+            }
+            records.push(rec);
+        }
+        if let Some(log) = logger.as_mut() {
+            log.flush()?;
+        }
+        let final_loss = records.last().map(|r| r.loss).unwrap_or(f64::NAN);
+        Ok(TrainOutcome { final_loss, tokens: self.tokens, records })
+    }
+}
+
+/// CSV row in `TRAIN_HEADER` order.
+pub fn record_row(r: &StepRecord) -> Vec<f64> {
+    let mut row = vec![
+        r.step as f64,
+        r.tokens as f64,
+        r.loss,
+        r.lr,
+        r.accum as f64,
+        r.b_big,
+    ];
+    for i in 0..N_TYPES {
+        row.push(r.raw_g_sq[i]);
+        row.push(r.raw_s[i]);
+    }
+    row.push(r.raw_g_sq_total);
+    row.push(r.raw_s_total);
+    row.push(r.gns_layernorm);
+    row.push(r.gns_total);
+    row.push(r.step_ms);
+    row
+}

@@ -1,0 +1,191 @@
+//! Per-linear-layer FLOP/IO formulae (paper Appendix E, Tables 1 & 2).
+//!
+//! Notation: B = batch, T = sequence length, K = input dim, L = output dim.
+//! "Simultaneous" is the paper's Algorithm 1; "Li" is Li et al. [36]'s
+//! O(T^2) contraction; "LnOnly" is the LayerNorm-only tracking of §5
+//! (per-layer cost shown for the normalization layers' K-vectors).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Simultaneous,
+    Li,
+    LnOnly,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LinearCost {
+    pub weight_grad_flops: u128,
+    pub norm_flops: u128,
+    pub weight_grad_io: u128,
+    pub norm_io: u128,
+}
+
+impl LinearCost {
+    pub fn total_flops(&self) -> u128 {
+        self.weight_grad_flops + self.norm_flops
+    }
+    pub fn total_io(&self) -> u128 {
+        self.weight_grad_io + self.norm_io
+    }
+}
+
+/// Table 1 + Table 2 rows for one linear layer, 4-byte elements.
+pub fn linear_cost(method: Method, b: u128, t: u128, k: u128, l: u128) -> LinearCost {
+    let bytes = 4u128;
+    match method {
+        Method::Simultaneous => LinearCost {
+            // BKL(2T-1) + KL(B-1)
+            weight_grad_flops: b * k * l * (2 * t - 1) + k * l * (b - 1),
+            // BKL + B(KL - 1)
+            norm_flops: b * k * l + b * (k * l - 1),
+            // BKL + BKT + BLT
+            weight_grad_io: (b * k * l + b * k * t + b * l * t) * bytes,
+            // BKL + B
+            norm_io: (b * k * l + b) * bytes,
+        },
+        Method::Li => LinearCost {
+            // KL(2BT - 1)
+            weight_grad_flops: k * l * (2 * b * t - 1),
+            // BT^2 (2K + 2L - 2) + BT^2
+            norm_flops: b * t * t * (2 * k + 2 * l - 2) + b * t * t,
+            // BKT + BLT + KL
+            weight_grad_io: (b * k * t + b * l * t + k * l) * bytes,
+            // 2BT^2 + B
+            norm_io: (2 * b * t * t + b) * bytes,
+        },
+        // LayerNorm per-example norms: gradient vectors are K-sized; the
+        // fused kernel touches x, g once (backward I/O) and adds B scalars.
+        Method::LnOnly => LinearCost {
+            weight_grad_flops: 2 * b * t * k,
+            norm_flops: 2 * b * k,
+            weight_grad_io: (2 * b * k * t + 2 * k) * bytes,
+            norm_io: b * bytes,
+        },
+    }
+}
+
+/// Appendix E FLOP crossover: simultaneous becomes cheaper than Li for
+/// `T > sqrt((2KL - 1) / (2K + 2L - 1))`.
+pub fn flop_crossover_t(k: f64, l: f64) -> f64 {
+    ((2.0 * k * l - 1.0) / (2.0 * k + 2.0 * l - 1.0)).sqrt()
+}
+
+/// Appendix E I/O crossover: `T = sqrt(2 K L) / 2`.
+pub fn io_crossover_t(k: f64, l: f64) -> f64 {
+    (2.0 * k * l).sqrt() / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simultaneous_norm_flops_independent_of_t() {
+        // Fig. 3 (right) message: the extra FLOPs don't depend on T.
+        let a = linear_cost(Method::Simultaneous, 8, 128, 512, 512).norm_flops;
+        let b = linear_cost(Method::Simultaneous, 8, 4096, 512, 512).norm_flops;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn li_norm_flops_quadratic_in_t() {
+        let f = |t| linear_cost(Method::Li, 1, t, 64, 64).norm_flops;
+        let r = f(256) as f64 / f(128) as f64;
+        assert!((r - 4.0).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn flop_crossover_matches_closed_form() {
+        for (k, l) in [(256u128, 256u128), (512, 2048), (4096, 4096)] {
+            let t_star = flop_crossover_t(k as f64, l as f64);
+            let below = (t_star * 0.9) as u128;
+            let above = (t_star * 1.1).ceil() as u128;
+            let below_cost = |m| linear_cost(m, 1, below, k, l).norm_flops;
+            let above_cost = |m| linear_cost(m, 1, above, k, l).norm_flops;
+            assert!(below_cost(Method::Li) < below_cost(Method::Simultaneous));
+            assert!(above_cost(Method::Li) > above_cost(Method::Simultaneous));
+        }
+    }
+
+    #[test]
+    fn io_crossover_matches_closed_form() {
+        // Appendix E solves the norm-I/O terms: BKL + B vs 2BT^2 + B.
+        for (k, l) in [(256u128, 256u128), (1024, 4096)] {
+            let t_star = io_crossover_t(k as f64, l as f64);
+            let below = (t_star * 0.8) as u128;
+            let above = (t_star * 1.25).ceil() as u128;
+            let f = |m, t| linear_cost(m, 4, t, k, l).norm_io;
+            assert!(f(Method::Li, below) < f(Method::Simultaneous, below));
+            assert!(f(Method::Li, above) > f(Method::Simultaneous, above));
+        }
+    }
+
+    #[test]
+    fn ln_only_is_much_cheaper() {
+        // Fig. 4: "The IO cost of LN per-example gradient norms alone is
+        // much lower than either method."
+        let d = 2048;
+        let ln = linear_cost(Method::LnOnly, 8, 2048, d, d).norm_io;
+        let sim = linear_cost(Method::Simultaneous, 8, 2048, d, d).norm_io;
+        let li = linear_cost(Method::Li, 8, 2048, d, d).norm_io;
+        assert!(ln * 100 < sim && ln * 100 < li);
+    }
+
+    /// Table 1 identity: BKL(2T-1) + KL(B-1) == KL(2BT-1) — the
+    /// simultaneous method computes the weight gradient with exactly the
+    /// same FLOPs as the standard contraction (the paper's Section 3
+    /// headline: only the cheap norm reduction is additional).
+    #[test]
+    fn prop_weight_grad_flops_identical() {
+        crate::util::prop::forall(
+            51,
+            500,
+            |r| {
+                (
+                    r.range(1, 64) as u128,
+                    r.range(1, 1024) as u128,
+                    r.range(1, 512) as u128,
+                    r.range(1, 512) as u128,
+                )
+            },
+            |&(b, t, k, l)| {
+                let sim = linear_cost(Method::Simultaneous, b, t, k, l).weight_grad_flops;
+                let li = linear_cost(Method::Li, b, t, k, l).weight_grad_flops;
+                crate::prop_check!(sim == li, "sim {sim} != li {li}");
+                Ok(())
+            },
+        );
+    }
+
+    /// Costs are monotone in every dimension.
+    #[test]
+    fn prop_monotone() {
+        crate::util::prop::forall(
+            52,
+            500,
+            |r| {
+                (
+                    r.range(1, 32) as u128,
+                    r.range(2, 512) as u128,
+                    r.range(2, 256) as u128,
+                    r.range(2, 256) as u128,
+                )
+            },
+            |&(b, t, k, l)| {
+                for m in [Method::Simultaneous, Method::Li] {
+                    crate::prop_check!(
+                        linear_cost(m, b + 1, t, k, l).total_flops()
+                            >= linear_cost(m, b, t, k, l).total_flops(),
+                        "not monotone in b"
+                    );
+                    crate::prop_check!(
+                        linear_cost(m, b, t + 1, k, l).total_io()
+                            >= linear_cost(m, b, t, k, l).total_io(),
+                        "not monotone in t"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

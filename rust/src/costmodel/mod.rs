@@ -1,0 +1,10 @@
+//! Analytic FLOP and I/O cost model for per-example gradient-norm methods
+//! (paper Section 3.1, Appendix E — Tables 1 & 2, Figures 3 & 4).
+
+pub mod linear;
+pub mod mfu;
+pub mod transformer;
+
+pub use linear::{LinearCost, Method};
+pub use mfu::{achieved_flops, mfu, Device};
+pub use transformer::{transformer_cost, TransformerCost, TransformerShape};

@@ -1,0 +1,158 @@
+//! Whole-transformer cost aggregation for the Fig. 3 / Fig. 4 axes:
+//! total per-example-gradient-norm cost vs model scale and context length,
+//! and the proportional cost vs one forward+backward pass.
+
+use super::linear::{linear_cost, LinearCost, Method};
+
+/// GPT-family shape (decoder-only, 4x MLP, fused QKV).
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerShape {
+    pub d_model: u128,
+    pub n_layers: u128,
+    pub vocab: u128,
+    pub seq_len: u128,
+    pub batch: u128,
+}
+
+impl TransformerShape {
+    /// Roughly 12 * d^2 per layer + embeddings, the usual estimate.
+    pub fn n_params(&self) -> u128 {
+        12 * self.d_model * self.d_model * self.n_layers
+            + 2 * self.vocab * self.d_model
+            + self.seq_len * self.d_model
+    }
+
+    /// Shape with d_model chosen to hit a parameter budget (layers scale
+    /// as d/64, the GPT-3 family aspect ratio).
+    pub fn from_params(target: u128, seq_len: u128, batch: u128) -> Self {
+        let mut d = 128u128;
+        loop {
+            let s = TransformerShape {
+                d_model: d,
+                n_layers: (d / 64).max(2),
+                vocab: 50_257,
+                seq_len,
+                batch,
+            };
+            if s.n_params() >= target || d > 65_536 {
+                return s;
+            }
+            d += 64;
+        }
+    }
+
+    /// The linear layers of one block: (K, L) pairs.
+    fn block_linears(&self) -> [(u128, u128); 4] {
+        let d = self.d_model;
+        [(d, 3 * d), (d, d), (d, 4 * d), (4 * d, d)]
+    }
+
+    /// Model fwd+bwd FLOPs, 6 * params * tokens (the standard estimate the
+    /// paper's FLOPCounterMode measurement approximates).
+    pub fn train_flops(&self) -> u128 {
+        6 * self.n_params() * self.batch * self.seq_len
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerCost {
+    pub norm_flops: u128,
+    pub norm_io: u128,
+    /// Ratio of norm FLOPs to one full fwd+bwd pass.
+    pub rel_flops: f64,
+}
+
+/// Total per-example-gradient-norm cost for a method over all linear
+/// layers of the model (Fig. 3 left / Fig. 4). For `Method::LnOnly` the
+/// cost covers the 2L+1 LayerNorm layers instead.
+pub fn transformer_cost(shape: &TransformerShape, method: Method) -> TransformerCost {
+    let (mut flops, mut io) = (0u128, 0u128);
+    match method {
+        Method::LnOnly => {
+            let n_ln = 2 * shape.n_layers + 1;
+            let c: LinearCost =
+                linear_cost(Method::LnOnly, shape.batch, shape.seq_len, shape.d_model, 1);
+            flops += n_ln * c.norm_flops;
+            io += n_ln * c.norm_io;
+        }
+        m => {
+            for (k, l) in shape.block_linears() {
+                let c = linear_cost(m, shape.batch, shape.seq_len, k, l);
+                flops += shape.n_layers * c.norm_flops;
+                io += shape.n_layers * c.norm_io;
+            }
+            // LM head
+            let c = linear_cost(m, shape.batch, shape.seq_len, shape.d_model, shape.vocab);
+            flops += c.norm_flops;
+            io += c.norm_io;
+        }
+    }
+    TransformerCost {
+        norm_flops: flops,
+        norm_io: io,
+        rel_flops: flops as f64 / shape.train_flops() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(d: u128, t: u128) -> TransformerShape {
+        TransformerShape { d_model: d, n_layers: d / 64, vocab: 50_257, seq_len: t, batch: 8 }
+    }
+
+    #[test]
+    fn param_count_sane() {
+        // GPT-2 small-ish: d=768, 12 layers -> ~85M + embeddings
+        let s = shape(768, 1024);
+        let p = s.n_params();
+        assert!(p > 100_000_000 && p < 200_000_000, "{p}");
+    }
+
+    #[test]
+    fn from_params_hits_target() {
+        for target in [125_000_000u128, 1_300_000_000, 13_000_000_000] {
+            let s = TransformerShape::from_params(target, 2048, 8);
+            let p = s.n_params();
+            assert!(p >= target && p < target * 2, "target {target} got {p}");
+        }
+    }
+
+    #[test]
+    fn simultaneous_norm_flops_independent_of_context() {
+        // Fig. 3: the simultaneous method's additional FLOPs are flat in T
+        // (so its proportional cost never blows up with context length,
+        // unlike Li et al.'s T^2 term).
+        let a = transformer_cost(&shape(1024, 512), Method::Simultaneous).norm_flops;
+        let b = transformer_cost(&shape(1024, 8192), Method::Simultaneous).norm_flops;
+        assert_eq!(a, b);
+        // and the relative cost is therefore non-increasing in T
+        let ra = transformer_cost(&shape(1024, 512), Method::Simultaneous).rel_flops;
+        let rb = transformer_cost(&shape(1024, 8192), Method::Simultaneous).rel_flops;
+        assert!(rb <= ra, "{rb} > {ra}");
+    }
+
+    #[test]
+    fn li_relative_flops_grow_with_context() {
+        let a = transformer_cost(&shape(1024, 512), Method::Li).rel_flops;
+        let b = transformer_cost(&shape(1024, 8192), Method::Li).rel_flops;
+        assert!(b > 4.0 * a, "{a} vs {b}");
+    }
+
+    #[test]
+    fn fig4_shape_io_tradeoff() {
+        // Fig. 4: simultaneous wins at long context, loses at short
+        // context for large models; LN-only is way below both.
+        let big_short = shape(4096, 256);
+        let big_long = shape(4096, 16384);
+        let sim_s = transformer_cost(&big_short, Method::Simultaneous).norm_io;
+        let li_s = transformer_cost(&big_short, Method::Li).norm_io;
+        let sim_l = transformer_cost(&big_long, Method::Simultaneous).norm_io;
+        let li_l = transformer_cost(&big_long, Method::Li).norm_io;
+        assert!(li_s < sim_s, "short context: Li should win");
+        assert!(li_l > sim_l, "long context: simultaneous should win");
+        let ln = transformer_cost(&big_long, Method::LnOnly).norm_io;
+        assert!(ln * 1000 < sim_l.min(li_l));
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal byte-pair encoding tokenizer (train + encode + decode).
+//!
+//! The shipped models use the byte-level tokenizer (vocab 256 baked into
+//! the artifacts), but the data pipeline is tokenizer-agnostic; this BPE
+//! exists so larger-vocab configs can be exported without new Rust code,
+//! and as the natural upgrade path a downstream user would reach for.
+
+use std::collections::HashMap;
+
+/// A trained BPE vocabulary: 256 byte tokens + learned merges.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merge list in training order: (left, right) -> new token id
+    merges: Vec<(i32, i32)>,
+    /// rank lookup for encoding
+    ranks: HashMap<(i32, i32), usize>,
+}
+
+impl Bpe {
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Train `n_merges` merges on `text` (greedy most-frequent pair).
+    pub fn train(text: &str, n_merges: usize) -> Self {
+        let mut ids: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut ranks = HashMap::new();
+        for m in 0..n_merges {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: highest count, ties by smallest pair
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(pair, count)| (**count, std::cmp::Reverse(**pair)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = 256 + m as i32;
+            merges.push(pair);
+            ranks.insert(pair, m);
+            ids = Self::apply_merge(&ids, pair, new_id);
+        }
+        Self { merges, ranks }
+    }
+
+    fn apply_merge(ids: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Encode text by repeatedly applying the lowest-rank applicable merge.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.ranks.get(&(w[0], w[1])) {
+                    if best.is_none() || rank < best.unwrap().0 {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank];
+            ids = Self::apply_merge(&ids, pair, 256 + rank as i32);
+        }
+        ids
+    }
+
+    /// Expand one token id to its byte sequence.
+    fn expand(&self, id: i32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.expand(l, out);
+            self.expand(r, out);
+        }
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.expand(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> String {
+        crate::data::corpus::CorpusGenerator::new(3).generate(1 << 15)
+    }
+
+    #[test]
+    fn round_trip() {
+        let text = corpus();
+        let bpe = Bpe::train(&text, 100);
+        assert_eq!(bpe.vocab_size(), 356);
+        let sample = &text[..512];
+        assert_eq!(bpe.decode(&bpe.encode(sample)), sample);
+    }
+
+    #[test]
+    fn compresses_repetitive_text() {
+        let text = corpus();
+        let bpe = Bpe::train(&text, 200);
+        let ids = bpe.encode(&text[..4096]);
+        let ratio = ids.len() as f64 / 4096.0;
+        assert!(ratio < 0.6, "compression ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let text = corpus();
+        let a = Bpe::train(&text, 50);
+        let b = Bpe::train(&text, 50);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn encode_respects_merge_order() {
+        // train on "abab...": first merge must be ('a','b')
+        let text = "ab".repeat(64);
+        let bpe = Bpe::train(&text, 4);
+        assert_eq!(bpe.merges[0], (b'a' as i32, b'b' as i32));
+        let ids = bpe.encode("abab");
+        assert!(ids.iter().all(|&i| i >= 256), "{ids:?}");
+    }
+
+    #[test]
+    fn handles_text_with_no_merges() {
+        let bpe = Bpe::train("abcdefg", 10); // all pairs unique -> no merges
+        assert_eq!(bpe.vocab_size(), 256);
+        assert_eq!(bpe.decode(&bpe.encode("xyz")), "xyz");
+    }
+
+    #[test]
+    fn prop_round_trip_ascii() {
+        let text = corpus();
+        let bpe = Bpe::train(&text, 64);
+        crate::util::prop::forall(
+            93,
+            100,
+            |r| {
+                let n = r.range(0, 120);
+                (0..n).map(|_| (r.range(0x20, 0x7f) as u8) as char).collect::<String>()
+            },
+            |s| {
+                crate::prop_check!(bpe.decode(&bpe.encode(s)) == *s, "round trip failed");
+                Ok(())
+            },
+        );
+    }
+}

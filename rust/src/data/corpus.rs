@@ -1,0 +1,178 @@
+//! Procedural text corpus with natural-language-like statistics.
+//!
+//! Generates sentences from a fixed synthetic vocabulary sampled with a
+//! Zipfian unigram distribution, chained through a sparse Markov bigram
+//! model (each word prefers a small set of successors), with punctuation,
+//! capitalization and paragraph breaks. Deterministic given a seed.
+//!
+//! This gives the byte-level model several things to learn in sequence —
+//! character statistics, word spellings, bigram structure — which produces
+//! the staged loss-curve and rising-GNS dynamics the paper's OpenWebText
+//! runs show.
+
+use crate::util::rng::Rng;
+
+/// Synthetic word stems; inflections are generated per word.
+const STEMS: [&str; 60] = [
+    "gradient", "noise", "scale", "batch", "layer", "norm", "model", "train",
+    "loss", "step", "token", "data", "parameter", "update", "learning",
+    "rate", "estimate", "variance", "sample", "example", "measure", "signal",
+    "kernel", "tensor", "matrix", "vector", "linear", "embed", "attention",
+    "network", "compute", "memory", "schedule", "optimal", "critical",
+    "small", "large", "deep", "wide", "fast", "slow", "true", "mean",
+    "sum", "ratio", "curve", "phase", "track", "guide", "save", "cost",
+    "time", "run", "seed", "plot", "fit", "slope", "error", "bound", "work",
+];
+
+const SUFFIXES: [&str; 6] = ["", "s", "ed", "ing", "ly", "er"];
+
+#[derive(Debug, Clone)]
+pub struct CorpusGenerator {
+    words: Vec<String>,
+    /// Zipf CDF over words.
+    cdf: Vec<f64>,
+    /// successors[i] = preferred next-word indices for word i.
+    successors: Vec<Vec<usize>>,
+    rng: Rng,
+}
+
+impl CorpusGenerator {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut words = Vec::new();
+        for stem in STEMS {
+            for suf in SUFFIXES {
+                words.push(format!("{stem}{suf}"));
+            }
+        }
+        // Zipf(1.1) over the word list
+        let s = 1.1;
+        let weights: Vec<f64> = (1..=words.len()).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut cdf = Vec::with_capacity(words.len());
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w / total;
+            cdf.push(acc);
+        }
+        // sparse bigram structure: 4 preferred successors per word
+        let n = words.len();
+        let successors = (0..n)
+            .map(|_| (0..4).map(|_| rng.range(0, n)).collect())
+            .collect();
+        Self { words, cdf, successors, rng }
+    }
+
+    fn sample_unigram(&mut self) -> usize {
+        let u: f64 = self.rng.f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.words.len() - 1),
+        }
+    }
+
+    fn next_word(&mut self, prev: Option<usize>) -> usize {
+        match prev {
+            // 70% of the time follow the bigram structure
+            Some(p) if self.rng.bool(0.7) => {
+                let succ = &self.successors[p];
+                succ[self.rng.range(0, succ.len())]
+            }
+            _ => self.sample_unigram(),
+        }
+    }
+
+    fn sentence(&mut self) -> String {
+        let len = self.rng.range(4, 14);
+        let mut prev = None;
+        let mut parts: Vec<String> = Vec::with_capacity(len);
+        for _ in 0..len {
+            let w = self.next_word(prev);
+            parts.push(self.words[w].clone());
+            prev = Some(w);
+        }
+        let mut s = parts.join(" ");
+        // capitalize
+        if let Some(c) = s.get_mut(0..1) {
+            let up = c.to_uppercase();
+            s.replace_range(0..1, &up);
+        }
+        let punct = if self.rng.bool(0.85) { "." } else { "?" };
+        s.push_str(punct);
+        s
+    }
+
+    /// Generate at least `n_bytes` of text.
+    pub fn generate(&mut self, n_bytes: usize) -> String {
+        let mut out = String::with_capacity(n_bytes + 128);
+        let mut sentences_in_par = 0;
+        while out.len() < n_bytes {
+            out.push_str(&self.sentence());
+            sentences_in_par += 1;
+            if sentences_in_par >= self.rng.range(3, 7) {
+                out.push_str("\n\n");
+                sentences_in_par = 0;
+            } else {
+                out.push(' ');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = CorpusGenerator::new(7).generate(4096);
+        let b = CorpusGenerator::new(7).generate(4096);
+        assert_eq!(a, b);
+        let c = CorpusGenerator::new(8).generate(4096);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn produces_requested_length() {
+        let text = CorpusGenerator::new(0).generate(10_000);
+        assert!(text.len() >= 10_000);
+        assert!(text.len() < 11_000);
+    }
+
+    #[test]
+    fn unigram_distribution_is_skewed() {
+        // Zipf: the most common word should appear much more often than
+        // the median word.
+        let text = CorpusGenerator::new(1).generate(200_000);
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            let w = w.trim_matches(|c: char| !c.is_alphanumeric());
+            if !w.is_empty() {
+                *counts.entry(w).or_default() += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().cloned().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(freqs[0] > 10 * freqs[freqs.len() / 2], "{:?}", &freqs[..5]);
+    }
+
+    #[test]
+    fn text_is_ascii_printable() {
+        let text = CorpusGenerator::new(2).generate(8192);
+        assert!(text.bytes().all(|b| b == b'\n' || (0x20..0x7f).contains(&b)));
+    }
+
+    #[test]
+    fn bigram_structure_present() {
+        // With 70% bigram-following, some bigrams repeat far above chance.
+        let text = CorpusGenerator::new(3).generate(200_000);
+        let words: Vec<&str> = text.split_whitespace().collect();
+        let mut bigrams: HashMap<(&str, &str), usize> = HashMap::new();
+        for w in words.windows(2) {
+            *bigrams.entry((w[0], w[1])).or_default() += 1;
+        }
+        let max = bigrams.values().max().copied().unwrap_or(0);
+        assert!(max > 20, "max bigram count {max}");
+    }
+}

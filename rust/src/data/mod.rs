@@ -1,0 +1,19 @@
+//! Data pipeline: synthetic corpus generation, byte-level tokenization and
+//! deterministic batch loading.
+//!
+//! The paper trains on OpenWebText; this substrate replaces it (DESIGN.md
+//! §Substitutions) with a procedurally generated corpus that has natural-
+//! language-like statistics — Zipfian unigrams with Markov bigram structure
+//! and sentence/paragraph punctuation — so the model has real structure to
+//! learn and the loss curve and GNS dynamics behave qualitatively like a
+//! text run.
+
+pub mod bpe;
+pub mod corpus;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::CorpusGenerator;
+pub use loader::{Batch, Loader};
+pub use bpe::Bpe;
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,58 @@
+//! Byte-level tokenizer: token id == byte value (vocab 256).
+//!
+//! The models are exported with vocab = 256, so tokenization is the
+//! identity on bytes. Kept as a type (rather than inlining `as u8`) so the
+//! loader/corpus code is tokenizer-agnostic and a BPE could be dropped in.
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox. 123!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        let t = ByteTokenizer;
+        for id in t.encode("hello \u{00e9}") {
+            assert!((0..256).contains(&id));
+        }
+    }
+
+    #[test]
+    fn prop_round_trip_any_ascii() {
+        crate::util::prop::forall(
+            61,
+            300,
+            |r| {
+                let n = r.range(0, 200);
+                (0..n).map(|_| (r.range(0x20, 0x7f) as u8) as char).collect::<String>()
+            },
+            |s| {
+                let t = ByteTokenizer;
+                crate::prop_check!(t.decode(&t.encode(s)) == *s, "round trip failed");
+                Ok(())
+            },
+        );
+    }
+}

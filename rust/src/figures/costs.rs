@@ -1,0 +1,141 @@
+//! Figures 3 & 4 and Tables 1 & 2: the analytic FLOP/IO cost model.
+
+use anyhow::Result;
+
+use crate::costmodel::linear::{flop_crossover_t, io_crossover_t, linear_cost};
+use crate::costmodel::transformer::{transformer_cost, TransformerShape};
+use crate::costmodel::Method;
+use crate::telemetry::CsvLogger;
+
+/// Model scales swept in Figs. 3/4 (parameter targets).
+const SCALES: [(u128, &str); 4] = [
+    (125_000_000, "125M"),
+    (1_300_000_000, "1.3B"),
+    (13_000_000_000, "13B"),
+    (175_000_000_000, "175B"),
+];
+
+const CONTEXTS: [u128; 6] = [256, 512, 1024, 2048, 4096, 16384];
+
+/// Table 1: FLOP formulae evaluated for a representative layer.
+pub fn table1() -> Result<()> {
+    println!("Table 1: FLOPs (B=8, K=L=4096)");
+    println!("{:<14} {:>22} {:>22}", "Algorithm", "Weight Gradient", "Gradient Norms");
+    let (b, k, l) = (8u128, 4096u128, 4096u128);
+    for t in [512u128, 4096] {
+        println!("-- T = {t}");
+        for (m, name) in [(Method::Simultaneous, "Simultaneous"), (Method::Li, "Li et al.")] {
+            let c = linear_cost(m, b, t, k, l);
+            println!("{:<14} {:>22} {:>22}", name, c.weight_grad_flops, c.norm_flops);
+        }
+    }
+    println!(
+        "FLOP crossover T* = sqrt((2KL-1)/(2K+2L-1)) = {:.1}",
+        flop_crossover_t(k as f64, l as f64)
+    );
+    Ok(())
+}
+
+/// Table 2: I/O formulae evaluated for a representative layer.
+pub fn table2() -> Result<()> {
+    println!("Table 2: I/O bytes (B=8, K=L=4096, 4-byte elements)");
+    println!("{:<14} {:>22} {:>22}", "Algorithm", "Weight Gradient", "Gradient Norms");
+    let (b, k, l) = (8u128, 4096u128, 4096u128);
+    for t in [512u128, 4096] {
+        println!("-- T = {t}");
+        for (m, name) in [(Method::Simultaneous, "Simultaneous"), (Method::Li, "Li et al.")] {
+            let c = linear_cost(m, b, t, k, l);
+            println!("{:<14} {:>22} {:>22}", name, c.weight_grad_io, c.norm_io);
+        }
+    }
+    println!(
+        "I/O crossover T* = sqrt(2KL)/2 = {:.1}",
+        io_crossover_t(k as f64, l as f64)
+    );
+    Ok(())
+}
+
+/// Figure 3: FLOP cost of per-example grad norms vs model scale / context.
+pub fn fig3() -> Result<()> {
+    let path = super::results_path("fig3_flops.csv")?;
+    let mut csv = CsvLogger::to_file(&path, &[
+        "params", "context", "sim_flops", "li_flops", "ln_flops", "sim_rel", "li_rel",
+    ])?;
+    println!("Fig. 3: per-example grad-norm FLOPs (batch 8)");
+    println!(
+        "{:>6} {:>7} {:>12} {:>12} {:>12} {:>9} {:>9}",
+        "scale", "ctx", "simul", "li", "ln-only", "sim/fwbw", "li/fwbw"
+    );
+    for (target, label) in SCALES {
+        for ctx in CONTEXTS {
+            let shape = TransformerShape::from_params(target, ctx, 8);
+            let sim = transformer_cost(&shape, Method::Simultaneous);
+            let li = transformer_cost(&shape, Method::Li);
+            let ln = transformer_cost(&shape, Method::LnOnly);
+            println!(
+                "{:>6} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>9.5} {:>9.5}",
+                label, ctx, sim.norm_flops as f64, li.norm_flops as f64,
+                ln.norm_flops as f64, sim.rel_flops, li.rel_flops
+            );
+            csv.row(&[
+                shape.n_params() as f64,
+                ctx as f64,
+                sim.norm_flops as f64,
+                li.norm_flops as f64,
+                ln.norm_flops as f64,
+                sim.rel_flops,
+                li.rel_flops,
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("(series -> {})", path.display());
+    println!("shape check: simultaneous rel-cost is context-independent; Li grows ~T^2");
+    Ok(())
+}
+
+/// Figure 4: I/O cost, same axes.
+pub fn fig4() -> Result<()> {
+    let path = super::results_path("fig4_io.csv")?;
+    let mut csv = CsvLogger::to_file(&path, &[
+        "params", "context", "sim_io", "li_io", "ln_io",
+    ])?;
+    println!("Fig. 4: per-example grad-norm I/O bytes (batch 8)");
+    println!(
+        "{:>6} {:>7} {:>12} {:>12} {:>12} {:>10}",
+        "scale", "ctx", "simul", "li", "ln-only", "winner"
+    );
+    for (target, label) in SCALES {
+        for ctx in CONTEXTS {
+            let shape = TransformerShape::from_params(target, ctx, 8);
+            let sim = transformer_cost(&shape, Method::Simultaneous);
+            let li = transformer_cost(&shape, Method::Li);
+            let ln = transformer_cost(&shape, Method::LnOnly);
+            let winner = if sim.norm_io < li.norm_io { "simul" } else { "li" };
+            println!(
+                "{:>6} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>10}",
+                label, ctx, sim.norm_io as f64, li.norm_io as f64, ln.norm_io as f64, winner
+            );
+            csv.row(&[
+                shape.n_params() as f64,
+                ctx as f64,
+                sim.norm_io as f64,
+                li.norm_io as f64,
+                ln.norm_io as f64,
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("(series -> {})", path.display());
+    println!("shape check: Li wins short-context/large-model; simultaneous wins long context; LN-only far below both");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn harnesses_run() {
+        super::table1().unwrap();
+        super::table2().unwrap();
+    }
+}

@@ -1,0 +1,170 @@
+//! Figs. 11–13: attention numerical-instability teacher–student harness.
+//!
+//! Two students (identical init: teacher + noise on the QKV bias) train to
+//! match a frozen teacher; the "lowprec" student computes attention in
+//! bfloat16 (the flash-kernel numerics proxy, DESIGN.md §Substitutions),
+//! the "exact" student in float32. Fig. 12 tracks bias norms and distances;
+//! Fig. 13 repeats with cosine attention and the divergence disappears.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::util::rng::Rng;
+
+use crate::runtime::{tensor, Manifest, Runtime};
+use crate::telemetry::CsvLogger;
+
+struct TsHarness {
+    teacher: Vec<Literal>,
+    students: Vec<(String, Vec<Literal>)>,
+    exes: std::collections::HashMap<String, std::rc::Rc<crate::runtime::Executable>>,
+    n: usize,
+    shape: (usize, usize, usize),
+    rng: Rng,
+}
+
+impl TsHarness {
+    fn new(rt: &Runtime, manifest: &Manifest, variants: &[&str], seed: i32) -> Result<Self> {
+        let entry = manifest
+            .instability
+            .as_ref()
+            .ok_or_else(|| anyhow!("manifest has no instability artifacts (re-run make artifacts)"))?
+            .clone();
+        let mut exes = std::collections::HashMap::new();
+        for (name, rel) in &entry.artifacts {
+            exes.insert(name.clone(), rt.load(manifest.root.join(rel))?);
+        }
+        let n = entry.param_names.len();
+        let mut init_out = exes
+            .get("ts_init")
+            .ok_or_else(|| anyhow!("ts_init missing"))?
+            .run(&[tensor::i32_scalar(seed)])?;
+        let student0 = init_out.split_off(n);
+        let teacher = init_out;
+        let students = variants
+            .iter()
+            .map(|v| (v.to_string(), student0.clone()))
+            .collect();
+        Ok(Self {
+            teacher,
+            students,
+            exes,
+            n,
+            shape: (entry.b, entry.t, entry.d),
+            rng: Rng::seed_from_u64(seed as u64),
+        })
+    }
+
+    fn random_input(&mut self) -> Result<Literal> {
+        let (b, t, d) = self.shape;
+        let data: Vec<f32> =
+            (0..b * t * d).map(|_| self.rng.normal_f32()).collect();
+        tensor::Tensor::new(vec![b, t, d], data)?.to_literal()
+    }
+
+    /// One step for every student on the *same* input; returns per-student
+    /// (loss, dist_to_teacher, qkv_w_norm, qkv_b_norm).
+    fn step(&mut self, lr: f32) -> Result<Vec<(f64, f64, f64, f64)>> {
+        let x = self.random_input()?;
+        let lr_l = tensor::f32_scalar(lr);
+        let mut out_metrics = Vec::new();
+        for (variant, params) in self.students.iter_mut() {
+            let exe = self
+                .exes
+                .get(&format!("ts_step_{variant}"))
+                .ok_or_else(|| anyhow!("variant {variant} missing"))?;
+            let mut args: Vec<&Literal> = self.teacher.iter().collect();
+            args.extend(params.iter());
+            args.push(&x);
+            args.push(&lr_l);
+            let mut out = exe.run(&args)?;
+            anyhow::ensure!(out.len() == self.n + 4, "ts_step arity {}", out.len());
+            let qkv_b_norm = tensor::scalar_f32(&out.pop().unwrap())? as f64;
+            let qkv_w_norm = tensor::scalar_f32(&out.pop().unwrap())? as f64;
+            let dist = tensor::scalar_f32(&out.pop().unwrap())? as f64;
+            let loss = tensor::scalar_f32(&out.pop().unwrap())? as f64;
+            *params = out;
+            out_metrics.push((loss, dist, qkv_w_norm, qkv_b_norm));
+        }
+        Ok(out_metrics)
+    }
+
+    /// L2 distance between two students' parameters.
+    fn student_distance(&self, a: usize, b: usize) -> Result<f64> {
+        let mut sq = 0f64;
+        for (pa, pb) in self.students[a].1.iter().zip(self.students[b].1.iter()) {
+            let ta = tensor::Tensor::from_literal(pa)?;
+            let tb = tensor::Tensor::from_literal(pb)?;
+            sq += ta
+                .data
+                .iter()
+                .zip(&tb.data)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>();
+        }
+        Ok(sq.sqrt())
+    }
+}
+
+/// Figs. 11–12: exact-f32 vs lowprec(bf16-attention) students.
+pub fn fig12(rt: &Runtime, manifest: &Manifest, steps: u64, lr: f32) -> Result<()> {
+    let mut h = TsHarness::new(rt, manifest, &["exact", "lowprec"], 0)?;
+    let path = super::results_path("fig12_teacher_student.csv")?;
+    let mut csv = CsvLogger::to_file(&path, &[
+        "step", "exact_loss", "lowprec_loss", "exact_dist", "lowprec_dist",
+        "exact_bias_norm", "lowprec_bias_norm", "flash_to_nonflash_dist",
+    ])?;
+    println!("Fig. 12: teacher-student divergence, exact vs bf16-attention (lr={lr})");
+    println!(
+        "{:>6} {:>11} {:>11} {:>10} {:>10} {:>10}",
+        "step", "exact_loss", "lowp_loss", "exact_d", "lowp_d", "stu_dist"
+    );
+    let every = (steps / 12).max(1);
+    let mut final_row = (0.0, 0.0);
+    for step in 1..=steps {
+        let m = h.step(lr)?;
+        let dist = h.student_distance(0, 1)?;
+        csv.row(&[
+            step as f64, m[0].0, m[1].0, m[0].1, m[1].1, m[0].3, m[1].3, dist,
+        ])?;
+        if step % every == 0 || step == steps {
+            println!(
+                "{:>6} {:>11.4e} {:>11.4e} {:>10.4} {:>10.4} {:>10.4}",
+                step, m[0].0, m[1].0, m[0].1, m[1].1, dist
+            );
+        }
+        final_row = (m[0].1, m[1].1);
+    }
+    csv.flush()?;
+    println!("(series -> {})", path.display());
+    println!(
+        "final dist-to-teacher: exact={:.4} lowprec={:.4} (paper: lowprec student drifts away)",
+        final_row.0, final_row.1
+    );
+    Ok(())
+}
+
+/// Fig. 13: the same experiment under cosine attention — no divergence.
+pub fn fig13(rt: &Runtime, manifest: &Manifest, steps: u64, lr: f32) -> Result<()> {
+    let mut h = TsHarness::new(rt, manifest, &["cosine", "exact"], 0)?;
+    let path = super::results_path("fig13_cosine.csv")?;
+    let mut csv = CsvLogger::to_file(&path, &[
+        "step", "cosine_loss", "exact_loss", "cosine_dist", "exact_dist",
+    ])?;
+    println!("Fig. 13: cosine-attention mitigation (lr={lr})");
+    let every = (steps / 12).max(1);
+    for step in 1..=steps {
+        let m = h.step(lr)?;
+        csv.row(&[step as f64, m[0].0, m[1].0, m[0].1, m[1].1])?;
+        if step % every == 0 || step == steps {
+            println!(
+                "step {:>5}: cosine loss {:.4e} dist {:.4} | exact loss {:.4e} dist {:.4}",
+                step, m[0].0, m[0].1, m[1].0, m[1].1
+            );
+        }
+    }
+    csv.flush()?;
+    println!("(series -> {})", path.display());
+    println!("shape check: bounded q/k norms keep the students together");
+    Ok(())
+}

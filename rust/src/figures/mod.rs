@@ -1,0 +1,20 @@
+//! Figure/table regeneration harness: one function per paper figure.
+//!
+//! Each harness prints the paper's rows/series to stdout and writes a CSV
+//! under `results/` for inspection. Training-based figures accept a step
+//! budget so smoke tests can run them cheaply.
+
+pub mod costs;
+pub mod instability;
+pub mod simulation;
+pub mod training;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Create `results/` and return the CSV path for a figure id.
+pub fn results_path(name: &str) -> Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    Ok(dir.join(name))
+}

@@ -1,0 +1,57 @@
+//! Figure 2: variance of the GNS estimator vs B_big / B_small, by
+//! simulation with jackknife stderr (ratio estimators).
+//!
+//! Setting mirrors the paper: true GNS = 1; for each (B_big, B_small)
+//! pair, process the same number of samples and report the jackknife
+//! stderr of the smoothed GNS estimate.
+
+use anyhow::Result;
+
+use crate::gns::{GnsSimulator, SimConfig};
+use crate::telemetry::CsvLogger;
+
+pub fn fig2(samples_budget: usize, seeds: u64) -> Result<()> {
+    let path = super::results_path("fig2_stderr.csv")?;
+    let mut csv = CsvLogger::to_file(&path, &["b_big", "b_small", "gns_est", "stderr"])?;
+
+    println!("Fig. 2 (left): stderr vs B_big at B_small = 1 (true GNS = 1)");
+    println!("{:>7} {:>8} {:>10} {:>10}", "b_big", "b_small", "gns", "stderr");
+    let mut run = |b_big: usize, b_small: usize| -> Result<(f64, f64)> {
+        let mut est_sum = 0.0;
+        let mut se_sum = 0.0;
+        for seed in 0..seeds {
+            let mut sim = GnsSimulator::new(SimConfig { seed, ..SimConfig::default() });
+            let steps = (samples_budget / b_big).max(4);
+            let (est, se) = sim.estimate(b_big, b_small, steps);
+            est_sum += est;
+            se_sum += se;
+        }
+        Ok((est_sum / seeds as f64, se_sum / seeds as f64))
+    };
+
+    for b_big in [8usize, 32, 128, 512] {
+        let (est, se) = run(b_big, 1)?;
+        println!("{:>7} {:>8} {:>10.4} {:>10.4}", b_big, 1, est, se);
+        csv.row(&[b_big as f64, 1.0, est, se])?;
+    }
+
+    println!("\nFig. 2 (right): stderr vs B_small at B_big = 512");
+    println!("{:>7} {:>8} {:>10} {:>10}", "b_big", "b_small", "gns", "stderr");
+    for b_small in [1usize, 4, 16, 64, 256] {
+        let (est, se) = run(512, b_small)?;
+        println!("{:>7} {:>8} {:>10.4} {:>10.4}", 512, b_small, est, se);
+        csv.row(&[512.0, b_small as f64, est, se])?;
+    }
+    csv.flush()?;
+    println!("(series -> {})", path.display());
+    println!("shape check: stderr flat in B_big, increasing in B_small — per-example (B_small=1) is minimal-variance");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig2_smoke() {
+        super::fig2(512, 2).unwrap();
+    }
+}

@@ -1,0 +1,119 @@
+//! Critical-batch-size economics (McCandlish et al. [39], used by the
+//! paper's Section 5.2 scheduling argument).
+//!
+//! With gradient noise scale `B_noise`, training at batch B needs
+//!
+//! ```text
+//! S / S_min = 1 + B_noise / B     (optimizer steps, vs B -> inf)
+//! E / E_min = 1 + B / B_noise     (examples processed, vs B -> 0)
+//! ```
+//!
+//! The critical batch `B == B_noise` doubles both relative to their minima —
+//! the canonical compute/time tradeoff point. A batch-size *schedule* that
+//! tracks the (growing) GNS stays near this point throughout training,
+//! which is where the paper's ~18% saving comes from.
+
+/// Relative optimizer steps to reach a loss target at batch `b`.
+pub fn step_multiplier(b: f64, b_noise: f64) -> f64 {
+    assert!(b > 0.0 && b_noise >= 0.0);
+    1.0 + b_noise / b
+}
+
+/// Relative examples processed to reach a loss target at batch `b`.
+pub fn example_multiplier(b: f64, b_noise: f64) -> f64 {
+    assert!(b > 0.0 && b_noise >= 0.0);
+    1.0 + b / b_noise.max(1e-300)
+}
+
+/// Cost-weighted objective: `time_weight` trades steps against examples;
+/// minimized at `B = B_noise * sqrt(time_weight / example_weight)`-free
+/// form below uses equal weights, whose optimum is exactly `B_noise`.
+pub fn combined_inefficiency(b: f64, b_noise: f64) -> f64 {
+    step_multiplier(b, b_noise) * example_multiplier(b, b_noise)
+}
+
+/// The batch minimizing [`combined_inefficiency`] (== B_noise).
+pub fn optimal_batch(b_noise: f64) -> f64 {
+    b_noise
+}
+
+/// Expected fraction of examples *wasted* (vs E_min) by running batch `b`
+/// when the true noise scale is `b_noise`.
+pub fn waste_fraction(b: f64, b_noise: f64) -> f64 {
+    1.0 - 1.0 / example_multiplier(b, b_noise)
+}
+
+/// Token saving of an adaptive schedule vs a fixed batch, for a GNS
+/// trajectory sampled at equal loss-progress intervals.
+///
+/// For each phase with noise scale `g`, the fixed batch pays
+/// `1 + B_fixed/g` examples-per-progress while the tracking schedule
+/// (clamped to `B_fixed` — you never exceed the baseline batch, as in the
+/// paper's ramp) pays `1 + min(g, B_fixed)/g`. Returns the relative saving
+/// in total examples.
+pub fn schedule_saving(gns_trajectory: &[f64], b_fixed: f64) -> f64 {
+    assert!(!gns_trajectory.is_empty());
+    let fixed: f64 = gns_trajectory.iter().map(|&g| example_multiplier(b_fixed, g)).sum();
+    let sched: f64 = gns_trajectory
+        .iter()
+        .map(|&g| example_multiplier(g.clamp(1.0, b_fixed), g))
+        .sum();
+    1.0 - sched / fixed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multipliers_at_critical_batch() {
+        // At B = B_noise both penalties are exactly 2x.
+        assert!((step_multiplier(100.0, 100.0) - 2.0).abs() < 1e-12);
+        assert!((example_multiplier(100.0, 100.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn limits() {
+        // Huge batch: steps -> minimum, examples -> huge.
+        assert!((step_multiplier(1e12, 100.0) - 1.0).abs() < 1e-9);
+        assert!(example_multiplier(1e12, 100.0) > 1e9);
+        // Tiny batch: examples -> minimum.
+        assert!((example_multiplier(1e-9, 100.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn combined_minimized_at_b_noise() {
+        let bn = 37.0;
+        let at_opt = combined_inefficiency(optimal_batch(bn), bn);
+        for b in [bn / 8.0, bn / 2.0, bn * 2.0, bn * 8.0] {
+            assert!(combined_inefficiency(b, bn) > at_opt, "b={b}");
+        }
+        assert!((at_opt - 4.0).abs() < 1e-12); // 2 * 2
+    }
+
+    #[test]
+    fn schedule_saving_positive_for_rising_gns() {
+        // GNS ramps from 1 to 64 (the usual training shape); fixed batch 64
+        // wastes examples early; tracking it saves a meaningful fraction.
+        let traj: Vec<f64> = (0..64).map(|i| 1.0 + i as f64).collect();
+        let saving = schedule_saving(&traj, 64.0);
+        assert!(saving > 0.1 && saving < 0.9, "{saving}");
+        // flat GNS at the fixed batch: nothing to save
+        let flat = vec![64.0; 32];
+        assert!(schedule_saving(&flat, 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_waste_in_unit_interval() {
+        crate::util::prop::forall(
+            92,
+            300,
+            |r| (r.range_f64(0.1, 1e4), r.range_f64(0.1, 1e4)),
+            |&(b, bn)| {
+                let w = waste_fraction(b, bn);
+                crate::prop_check!((0.0..1.0).contains(&w), "waste {w}");
+                Ok(())
+            },
+        );
+    }
+}

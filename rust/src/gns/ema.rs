@@ -1,0 +1,147 @@
+//! Exponential moving average used to smooth the GNS component estimators
+//! before taking their ratio (paper footnote 7: "All GNS figures presented
+//! in this paper ... smooth both of these estimators").
+
+/// `y_t = alpha * x_t + (1 - alpha) * y_{t-1}`, seeded by the first sample.
+///
+/// `alpha = 1` disables smoothing. Optional bias correction divides by
+/// `1 - (1-alpha)^t` (Adam-style), useful when comparing different alphas
+/// early in training (Fig. 7 sweeps alpha over decades).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    state: Option<f64>,
+    t: u64,
+    bias_correct: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { alpha, state: None, t: 0, bias_correct: false }
+    }
+
+    pub fn with_bias_correction(alpha: f64) -> Self {
+        let mut e = Self::new(alpha);
+        e.bias_correct = true;
+        // bias-corrected EMA accumulates from zero rather than seeding
+        e.state = Some(0.0);
+        e
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        self.t += 1;
+        let s = match self.state {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.state = Some(s);
+        self.value().unwrap()
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        let s = self.state?;
+        if self.t == 0 {
+            return None;
+        }
+        if self.bias_correct {
+            let denom = 1.0 - (1.0 - self.alpha).powi(self.t as i32);
+            Some(s / denom)
+        } else {
+            Some(s)
+        }
+    }
+}
+
+/// Offline EMA over a full series (used by the Fig. 7 regression harness to
+/// re-smooth logged raw components at many alphas).
+pub fn ema_series(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut e = Ema::new(alpha);
+    xs.iter().map(|&x| e.update(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_with_first_sample() {
+        let mut e = Ema::new(0.1);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.update(5.0), 5.0);
+        let v = e.update(0.0);
+        assert!((v - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_one_is_identity() {
+        let mut e = Ema::new(1.0);
+        for x in [3.0, -2.0, 7.5] {
+            assert_eq!(e.update(x), x);
+        }
+    }
+
+    #[test]
+    fn bias_correction_recovers_constant() {
+        let mut e = Ema::with_bias_correction(0.05);
+        for _ in 0..3 {
+            e.update(10.0);
+        }
+        // even after 3 steps, corrected value equals the constant
+        assert!((e.value().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_alpha() {
+        Ema::new(0.0);
+    }
+
+    /// EMA of a constant series is that constant (fixed point).
+    #[test]
+    fn prop_fixed_point() {
+        crate::util::prop::forall(
+            21,
+            300,
+            |r| (r.range_f64(0.01, 1.0), r.range_f64(-1e6, 1e6), r.range(1, 50)),
+            |&(alpha, c, n)| {
+                let mut e = Ema::new(alpha);
+                let mut last = 0.0;
+                for _ in 0..n {
+                    last = e.update(c);
+                }
+                crate::prop_check!((last - c).abs() < 1e-6 * c.abs().max(1.0), "{last} != {c}");
+                Ok(())
+            },
+        );
+    }
+
+    /// EMA stays within the min/max envelope of its inputs.
+    #[test]
+    fn prop_stays_in_envelope() {
+        crate::util::prop::forall(
+            22,
+            300,
+            |r| {
+                let alpha = r.range_f64(0.01, 1.0);
+                let n = r.range(1, 50);
+                (alpha, crate::util::prop::vec_of(r, n, |r| r.range_f64(-1e3, 1e3)))
+            },
+            |(alpha, xs)| {
+                let mut e = Ema::new(*alpha);
+                for &x in xs {
+                    e.update(x);
+                }
+                let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let v = e.value().unwrap();
+                crate::prop_check!(v >= lo - 1e-9 && v <= hi + 1e-9, "{v} outside [{lo}, {hi}]");
+                Ok(())
+            },
+        );
+    }
+}

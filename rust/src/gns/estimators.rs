@@ -1,0 +1,315 @@
+//! Unbiased GNS component estimators (paper Eqs. 4 and 5) and the online
+//! per-layer-type tracker used by the coordinator.
+
+use std::collections::BTreeMap;
+
+use super::ema::Ema;
+
+/// The two unbiased estimators and their ratio for one observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GnsComponents {
+    /// `||G||^2` — estimate of the true squared gradient norm (Eq. 4).
+    pub g_sq: f64,
+    /// `S` — estimate of `tr(Sigma)`, the gradient noise (Eq. 5).
+    pub s: f64,
+}
+
+impl GnsComponents {
+    /// `B_simple = S / ||G||^2`; None when the denominator is ~0.
+    pub fn b_simple(&self) -> Option<f64> {
+        (self.g_sq.abs() > 1e-300).then(|| self.s / self.g_sq)
+    }
+}
+
+/// Compute Eqs. 4 and 5 from squared gradient norms measured at two batch
+/// sizes. `norm_sq_small` must already be the *mean* over however many
+/// small-batch norms were observed.
+pub fn gns_components(
+    b_big: f64,
+    norm_sq_big: f64,
+    b_small: f64,
+    norm_sq_small: f64,
+) -> GnsComponents {
+    debug_assert!(b_big > b_small && b_small > 0.0);
+    let g_sq = (b_big * norm_sq_big - b_small * norm_sq_small) / (b_big - b_small);
+    let s = (norm_sq_small - norm_sq_big) / (1.0 / b_small - 1.0 / b_big);
+    GnsComponents { g_sq, s }
+}
+
+/// Accumulates the per-microbatch statistics of one optimizer step.
+///
+/// The grad_step artifact reports, per layer type, `sum_b ||w'_b||^2` where
+/// `w'_b = (1/B_micro) dL_b/dw` (gradients of the *mean-microbatch* loss).
+/// Algorithm 1 step 4's correction to per-example scale is
+/// `mean_b ||dL_b/dw||^2 = B_micro * sum_b ||w'_b||^2`, applied here.
+#[derive(Debug, Clone)]
+pub struct GnsAccumulator {
+    microbatch: usize,
+    /// Per layer-type running sum of per-example squared norms (corrected).
+    perex_sum: Vec<f64>,
+    /// Number of examples folded into `perex_sum`.
+    n_examples: usize,
+}
+
+impl GnsAccumulator {
+    pub fn new(n_types: usize, microbatch: usize) -> Self {
+        Self { microbatch, perex_sum: vec![0.0; n_types], n_examples: 0 }
+    }
+
+    /// Fold one microbatch's stats vector (raw `sum_b ||w'_b||^2` per type).
+    pub fn add_microbatch(&mut self, stats: &[f32]) {
+        assert_eq!(stats.len(), self.perex_sum.len());
+        let b = self.microbatch as f64;
+        for (acc, &s) in self.perex_sum.iter_mut().zip(stats) {
+            // sum_b ||dL_b||^2 = B^2 * sum_b ||w'_b||^2; we accumulate the
+            // sum and divide by total examples at finish() for the mean.
+            *acc += b * b * (s as f64);
+        }
+        self.n_examples += self.microbatch;
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.n_examples
+    }
+
+    /// Mean per-example squared norm per layer type (`||G_Bsmall||^2` with
+    /// B_small = 1), plus the total.
+    pub fn finish(&self) -> (Vec<f64>, f64) {
+        let n = self.n_examples.max(1) as f64;
+        let per_type: Vec<f64> = self.perex_sum.iter().map(|s| s / n).collect();
+        let total = per_type.iter().sum();
+        (per_type, total)
+    }
+}
+
+/// Online per-layer-type GNS tracker: EMA-smooths the Eq. 4/5 components
+/// separately (paper footnote 7) and exposes smoothed `B_simple` per type
+/// and for the whole model.
+#[derive(Debug, Clone)]
+pub struct GnsTracker {
+    types: Vec<String>,
+    ema_g_sq: Vec<Ema>,
+    ema_s: Vec<Ema>,
+    ema_g_sq_total: Ema,
+    ema_s_total: Ema,
+    /// Most recent raw (unsmoothed) components per type.
+    pub last_raw: Vec<GnsComponents>,
+    pub last_raw_total: Option<GnsComponents>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GnsSnapshot {
+    pub per_type: BTreeMap<String, TypeSnapshot>,
+    pub total: TypeSnapshot,
+}
+
+#[derive(Debug, Clone)]
+pub struct TypeSnapshot {
+    pub g_sq: f64,
+    pub s: f64,
+    pub gns: Option<f64>,
+}
+
+impl GnsTracker {
+    pub fn new(types: &[&str], alpha: f64) -> Self {
+        Self {
+            types: types.iter().map(|s| s.to_string()).collect(),
+            ema_g_sq: vec![Ema::new(alpha); types.len()],
+            ema_s: vec![Ema::new(alpha); types.len()],
+            ema_g_sq_total: Ema::new(alpha),
+            ema_s_total: Ema::new(alpha),
+            last_raw: Vec::new(),
+            last_raw_total: None,
+        }
+    }
+
+    /// Observe one optimizer step.
+    ///
+    /// * `big_sq[t]` — squared norm of the accumulated (big-batch, i.e.
+    ///   mean over `b_big` examples) gradient, per layer type;
+    /// * `small_sq[t]` — mean per-example squared norm per type (from
+    ///   [`GnsAccumulator::finish`]);
+    /// * `b_big` — effective batch size of the accumulated gradient.
+    pub fn observe(&mut self, b_big: f64, big_sq: &[f64], small_sq: &[f64]) {
+        assert_eq!(big_sq.len(), self.types.len());
+        assert_eq!(small_sq.len(), self.types.len());
+        self.last_raw.clear();
+        let mut tot_big = 0.0;
+        let mut tot_small = 0.0;
+        for i in 0..self.types.len() {
+            let c = gns_components(b_big, big_sq[i], 1.0, small_sq[i]);
+            self.ema_g_sq[i].update(c.g_sq);
+            self.ema_s[i].update(c.s);
+            self.last_raw.push(c);
+            tot_big += big_sq[i];
+            tot_small += small_sq[i];
+        }
+        let ct = gns_components(b_big, tot_big, 1.0, tot_small);
+        self.ema_g_sq_total.update(ct.g_sq);
+        self.ema_s_total.update(ct.s);
+        self.last_raw_total = Some(ct);
+    }
+
+    /// Observe pre-computed components directly (e.g. from the DDP
+    /// estimator, which uses B_small = rank batch rather than 1).
+    pub fn observe_components(&mut self, per_type: &[GnsComponents], total: &GnsComponents) {
+        assert_eq!(per_type.len(), self.types.len());
+        self.last_raw.clear();
+        for (i, c) in per_type.iter().enumerate() {
+            self.ema_g_sq[i].update(c.g_sq);
+            self.ema_s[i].update(c.s);
+            self.last_raw.push(*c);
+        }
+        self.ema_g_sq_total.update(total.g_sq);
+        self.ema_s_total.update(total.s);
+        self.last_raw_total = Some(*total);
+    }
+
+    /// Smoothed GNS per layer type; None until first observation.
+    pub fn gns_of(&self, ltype: &str) -> Option<f64> {
+        let i = self.types.iter().position(|t| t == ltype)?;
+        let g = self.ema_g_sq[i].value()?;
+        let s = self.ema_s[i].value()?;
+        (g.abs() > 1e-300).then(|| s / g)
+    }
+
+    /// Smoothed total GNS.
+    pub fn gns_total(&self) -> Option<f64> {
+        let g = self.ema_g_sq_total.value()?;
+        let s = self.ema_s_total.value()?;
+        (g.abs() > 1e-300).then(|| s / g)
+    }
+
+    pub fn snapshot(&self) -> GnsSnapshot {
+        let mut per_type = BTreeMap::new();
+        for (i, t) in self.types.iter().enumerate() {
+            per_type.insert(
+                t.clone(),
+                TypeSnapshot {
+                    g_sq: self.ema_g_sq[i].value().unwrap_or(f64::NAN),
+                    s: self.ema_s[i].value().unwrap_or(f64::NAN),
+                    gns: self.gns_of(t),
+                },
+            );
+        }
+        GnsSnapshot {
+            per_type,
+            total: TypeSnapshot {
+                g_sq: self.ema_g_sq_total.value().unwrap_or(f64::NAN),
+                s: self.ema_s_total.value().unwrap_or(f64::NAN),
+                gns: self.gns_total(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn components_exact_on_noiseless_gradient() {
+        // With zero noise, ||G_big||^2 == ||G_small||^2 == ||G||^2:
+        // S must be 0 and g_sq the common value.
+        let c = gns_components(64.0, 4.0, 1.0, 4.0);
+        assert!((c.g_sq - 4.0).abs() < 1e-12);
+        assert!(c.s.abs() < 1e-12);
+        assert_eq!(c.b_simple(), Some(0.0));
+    }
+
+    #[test]
+    fn components_match_expected_values() {
+        // E||G_B||^2 = ||G||^2 + tr(Sigma)/B. Take ||G||^2 = 2, tr = 6.
+        let (g2, tr) = (2.0, 6.0);
+        let big = g2 + tr / 8.0;
+        let small = g2 + tr / 1.0;
+        let c = gns_components(8.0, big, 1.0, small);
+        assert!((c.g_sq - g2).abs() < 1e-12, "{c:?}");
+        assert!((c.s - tr).abs() < 1e-12, "{c:?}");
+        assert!((c.b_simple().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_applies_b_squared_correction() {
+        let mut acc = GnsAccumulator::new(2, 4);
+        // raw stats from grad_step: sum_b ||w'_b||^2
+        acc.add_microbatch(&[1.0, 0.5]);
+        acc.add_microbatch(&[3.0, 0.5]);
+        let (per_type, total) = acc.finish();
+        // corrected: 16*(1+3)/8 = 8, 16*(0.5+0.5)/8 = 2
+        assert!((per_type[0] - 8.0).abs() < 1e-12);
+        assert!((per_type[1] - 2.0).abs() < 1e-12);
+        assert!((total - 10.0).abs() < 1e-12);
+        assert_eq!(acc.n_examples(), 8);
+    }
+
+    #[test]
+    fn tracker_total_is_sum_of_components() {
+        let mut tr = GnsTracker::new(&["a", "b"], 1.0); // alpha=1: no smoothing
+        tr.observe(16.0, &[1.0, 2.0], &[5.0, 6.0]);
+        let ca = tr.last_raw[0];
+        let cb = tr.last_raw[1];
+        let ct = tr.last_raw_total.unwrap();
+        assert!((ct.g_sq - (ca.g_sq + cb.g_sq)).abs() < 1e-12);
+        assert!((ct.s - (ca.s + cb.s)).abs() < 1e-12);
+        assert!(tr.gns_total().is_some());
+        assert!(tr.gns_of("a").is_some());
+        assert!(tr.gns_of("zzz").is_none());
+    }
+
+    /// Unbiasedness identity: plugging expectations under the noise model
+    /// (Eq. 1) into Eqs. 4/5 recovers the true parameters for arbitrary
+    /// batch sizes and parameter values.
+    #[test]
+    fn prop_estimators_invert_noise_model() {
+        crate::util::prop::forall(
+            11,
+            500,
+            |r| {
+                (
+                    10f64.powf(r.range_f64(-6.0, 6.0)), // g2
+                    r.range_f64(0.0, 1e6),              // tr
+                    r.range_f64(2.0, 4096.0),           // b_big
+                )
+            },
+            |&(g2, tr, b_big)| {
+                let big = g2 + tr / b_big;
+                let small = g2 + tr;
+                let c = gns_components(b_big, big, 1.0, small);
+                crate::prop_check!(
+                    (c.g_sq - g2).abs() <= 1e-9 * g2.max(tr).max(1.0),
+                    "g_sq {} != {}", c.g_sq, g2
+                );
+                crate::prop_check!(
+                    (c.s - tr).abs() <= 1e-9 * g2.max(tr).max(1.0),
+                    "s {} != {}", c.s, tr
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// The accumulator's mean is invariant to microbatch ordering.
+    #[test]
+    fn prop_accumulator_mean_is_order_invariant() {
+        crate::util::prop::forall(
+            12,
+            200,
+            |r| crate::util::prop::vec_of(r, 4, |r| r.range_f64(0.0, 10.0) as f32),
+            |stats| {
+                let mut one = GnsAccumulator::new(1, 2);
+                for s in stats {
+                    one.add_microbatch(&[*s]);
+                }
+                let mut per2 = GnsAccumulator::new(1, 2);
+                for s in stats.iter().rev() {
+                    per2.add_microbatch(&[*s]);
+                }
+                let a = one.finish().1;
+                let b = per2.finish().1;
+                crate::prop_check!((a - b).abs() < 1e-6 * a.abs().max(1.0), "{a} != {b}");
+                Ok(())
+            },
+        );
+    }
+}

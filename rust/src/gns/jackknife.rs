@@ -1,0 +1,128 @@
+//! Jackknife standard errors for ratio estimators (Choquet, L'Ecuyer &
+//! Léger 1999), used for the Fig. 2 error bars: the GNS is a ratio of two
+//! correlated unbiased estimators, so naive stderr propagation is biased.
+
+/// Leave-one-out jackknife stderr of `f(mean(xs), mean(ys))`.
+///
+/// `xs` and `ys` are paired observations (e.g. per-step `S` and `||G||^2`
+/// component estimates); `f` is the ratio (or any smooth function) of their
+/// means. Returns `(point_estimate, stderr)`.
+pub fn jackknife_stderr<F>(xs: &[f64], ys: &[f64], f: F) -> (f64, f64)
+where
+    F: Fn(f64, f64) -> f64,
+{
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    assert!(n >= 2, "jackknife needs >= 2 samples");
+    let nf = n as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let theta_hat = f(sx / nf, sy / nf);
+
+    let mut thetas = Vec::with_capacity(n);
+    for i in 0..n {
+        let mx = (sx - xs[i]) / (nf - 1.0);
+        let my = (sy - ys[i]) / (nf - 1.0);
+        thetas.push(f(mx, my));
+    }
+    let mean_theta: f64 = thetas.iter().sum::<f64>() / nf;
+    let var: f64 =
+        (nf - 1.0) / nf * thetas.iter().map(|t| (t - mean_theta).powi(2)).sum::<f64>();
+    (theta_hat, var.sqrt())
+}
+
+/// Jackknife stderr of the GNS ratio `S / ||G||^2` from paired per-step
+/// component observations.
+pub fn jackknife_ratio_stderr(s_obs: &[f64], g_sq_obs: &[f64]) -> (f64, f64) {
+    jackknife_stderr(s_obs, g_sq_obs, |s, g| if g.abs() > 1e-300 { s / g } else { f64::NAN })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_variance_inputs_give_zero_stderr() {
+        let s = vec![2.0; 10];
+        let g = vec![4.0; 10];
+        let (est, se) = jackknife_ratio_stderr(&s, &g);
+        assert!((est - 0.5).abs() < 1e-12);
+        assert!(se.abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_function_matches_classic_sem() {
+        // For f(x, y) = x, the jackknife reduces to the standard error of
+        // the mean of xs.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [0.0; 5];
+        let (_, se) = jackknife_stderr(&xs, &ys, |x, _| x);
+        let mean = 3.0;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        let sem = (var / 5.0).sqrt();
+        assert!((se - sem).abs() < 1e-9, "{se} vs {sem}");
+    }
+
+    #[test]
+    fn more_samples_shrink_stderr() {
+        // deterministic synthetic observations with spread
+        let mk = |n: usize| -> (Vec<f64>, Vec<f64>) {
+            (0..n)
+                .map(|i| {
+                    let z = ((i * 37 + 11) % 17) as f64 / 17.0 - 0.5;
+                    (2.0 + z, 4.0 + 0.5 * z)
+                })
+                .unzip()
+        };
+        let (s1, g1) = mk(8);
+        let (s2, g2) = mk(512);
+        let (_, se1) = jackknife_ratio_stderr(&s1, &g1);
+        let (_, se2) = jackknife_ratio_stderr(&s2, &g2);
+        assert!(se2 < se1, "{se2} !< {se1}");
+    }
+
+    /// stderr is non-negative and finite for well-conditioned inputs.
+    #[test]
+    fn prop_stderr_nonnegative() {
+        crate::util::prop::forall(
+            31,
+            300,
+            |r| {
+                let n = r.range(2, 64);
+                crate::util::prop::vec_of(r, n, |r| (r.range_f64(0.1, 10.0), r.range_f64(1.0, 10.0)))
+            },
+            |pairs| {
+                let (s, g): (Vec<_>, Vec<_>) = pairs.iter().cloned().unzip();
+                let (est, se) = jackknife_ratio_stderr(&s, &g);
+                crate::prop_check!(se >= 0.0 && se.is_finite(), "se = {se}");
+                crate::prop_check!(est.is_finite(), "est = {est}");
+                Ok(())
+            },
+        );
+    }
+
+    /// Permutation invariance: the jackknife is symmetric in samples.
+    #[test]
+    fn prop_permutation_invariant() {
+        crate::util::prop::forall(
+            32,
+            300,
+            |r| {
+                let n = r.range(3, 32);
+                crate::util::prop::vec_of(r, n, |r| (r.range_f64(0.1, 10.0), r.range_f64(1.0, 10.0)))
+            },
+            |pairs| {
+                let (s, g): (Vec<_>, Vec<_>) = pairs.iter().cloned().unzip();
+                let mut rev_s = s.clone();
+                rev_s.reverse();
+                let mut rev_g = g.clone();
+                rev_g.reverse();
+                let (e1, se1) = jackknife_ratio_stderr(&s, &g);
+                let (e2, se2) = jackknife_ratio_stderr(&rev_s, &rev_g);
+                crate::prop_check!((e1 - e2).abs() < 1e-9, "{e1} != {e2}");
+                crate::prop_check!((se1 - se2).abs() < 1e-9, "{se1} != {se2}");
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Gradient Noise Scale estimation (paper Section 2.1).
+//!
+//! The GNS (`B_simple`) is the ratio of two unbiased estimators built from
+//! gradient norms at two batch sizes (Eqs. 4, 5):
+//!
+//! ```text
+//! ||G||^2 = (B_big ||G_big||^2 - B_small ||G_small||^2) / (B_big - B_small)
+//! S       = (||G_small||^2 - ||G_big||^2) / (1/B_small - 1/B_big)
+//! B_simple = S / ||G||^2
+//! ```
+//!
+//! With per-example gradient norms, B_small = 1 and the estimator reaches
+//! its minimum variance (Fig. 2). Both components are EMA-smoothed before
+//! taking the ratio (paper footnote 7).
+
+pub mod critical;
+pub mod ema;
+pub mod estimators;
+pub mod jackknife;
+pub mod regression;
+pub mod simulator;
+pub mod welford;
+
+pub use ema::Ema;
+pub use estimators::{gns_components, GnsAccumulator, GnsComponents, GnsTracker};
+pub use jackknife::jackknife_ratio_stderr;
+pub use regression::{linreg, Regression};
+pub use simulator::{GnsSimulator, SimConfig};
+pub use welford::{OfflineGns, Welford};

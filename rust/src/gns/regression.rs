@@ -1,0 +1,128 @@
+//! Ordinary least squares + Pearson correlation, for the Fig. 7 analysis:
+//! regressing the total GNS against each layer type's GNS across EMA alphas.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Regression {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Pearson correlation coefficient r.
+    pub r: f64,
+    pub n: usize,
+}
+
+/// OLS of y on x. Returns None for degenerate inputs (n < 2 or zero
+/// variance in x).
+pub fn linreg(x: &[f64], y: &[f64]) -> Option<Regression> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return None;
+    }
+    let nf = n as f64;
+    let mx = x.iter().sum::<f64>() / nf;
+    let my = y.iter().sum::<f64>() / nf;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    let mut sxy = 0.0;
+    for i in 0..n {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxx += dx * dx;
+        syy += dy * dy;
+        sxy += dx * dy;
+    }
+    if sxx <= 0.0 {
+        return None;
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r = if syy > 0.0 { sxy / (sxx * syy).sqrt() } else { 0.0 };
+    Some(Regression { slope, intercept, r, n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 1.4 * v + 0.3).collect();
+        let r = linreg(&x, &y).unwrap();
+        assert!((r.slope - 1.4).abs() < 1e-12);
+        assert!((r.intercept - 0.3).abs() < 1e-12);
+        assert!((r.r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn anticorrelation() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| -2.0 * v).collect();
+        let r = linreg(&x, &y).unwrap();
+        assert!((r.r + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(linreg(&[1.0], &[2.0]).is_none());
+        assert!(linreg(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    /// r is always in [-1, 1]; slope sign matches r's sign.
+    #[test]
+    fn prop_r_bounded() {
+        crate::util::prop::forall(
+            41,
+            300,
+            |r| {
+                let n = r.range(3, 50);
+                crate::util::prop::vec_of(r, n, |r| (r.range_f64(-1e3, 1e3), r.range_f64(-1e3, 1e3)))
+            },
+            |pts| {
+                let (x, y): (Vec<_>, Vec<_>) = pts.iter().cloned().unzip();
+                if let Some(reg) = linreg(&x, &y) {
+                    crate::prop_check!(
+                        reg.r >= -1.0 - 1e-9 && reg.r <= 1.0 + 1e-9,
+                        "r = {}", reg.r
+                    );
+                    if reg.r.abs() > 1e-9 {
+                        crate::prop_check!(
+                            reg.slope.signum() == reg.r.signum(),
+                            "slope/r sign mismatch"
+                        );
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Affine-transforming x rescales the slope exactly.
+    #[test]
+    fn prop_slope_scales() {
+        crate::util::prop::forall(
+            42,
+            300,
+            |r| {
+                let n = r.range(3, 30);
+                let pts = crate::util::prop::vec_of(r, n, |r| {
+                    (r.range_f64(-100.0, 100.0), r.range_f64(-100.0, 100.0))
+                });
+                (pts, r.range_f64(0.1, 10.0))
+            },
+            |(pts, a)| {
+                let (x, y): (Vec<_>, Vec<_>) = pts.iter().cloned().unzip();
+                if let (Some(r1), Some(r2)) = (
+                    linreg(&x, &y),
+                    linreg(&x.iter().map(|v| a * v).collect::<Vec<_>>(), &y),
+                ) {
+                    crate::prop_check!(
+                        (r1.slope - a * r2.slope).abs() < 1e-6 * r1.slope.abs().max(1.0),
+                        "slope scaling broken"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Synthetic gradient world with a *known* GNS, for validating the
+//! estimators and regenerating Fig. 2 (estimator stderr vs B_small/B_big).
+//!
+//! Model (paper Eq. 1): per-example gradients are
+//! `g_i ~ N(G, Sigma)` with isotropic `Sigma = (tr/d) I`. Then
+//! `B_simple = tr(Sigma) / ||G||^2` exactly, and batch-B gradient norms
+//! have `E||G_B||^2 = ||G||^2 + tr(Sigma)/B`.
+
+use crate::util::rng::Rng;
+
+use super::estimators::gns_components;
+use super::jackknife::jackknife_ratio_stderr;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Parameter dimension of the synthetic gradient.
+    pub dim: usize,
+    /// True squared gradient norm ||G||^2.
+    pub g_sq: f64,
+    /// True gradient noise tr(Sigma).
+    pub tr_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        // GNS = 1 as in Fig. 2.
+        Self { dim: 256, g_sq: 1.0, tr_sigma: 1.0, seed: 0 }
+    }
+}
+
+pub struct GnsSimulator {
+    cfg: SimConfig,
+    g: Vec<f64>,
+    sigma_per_dim: f64,
+    rng: Rng,
+}
+
+impl GnsSimulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        // random direction with exact squared norm g_sq
+        let mut g: Vec<f64> = (0..cfg.dim).map(|_| rng.normal()).collect();
+        let norm: f64 = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let scale = cfg.g_sq.sqrt() / norm;
+        for x in &mut g {
+            *x *= scale;
+        }
+        Self { cfg, g, sigma_per_dim: cfg.tr_sigma / cfg.dim as f64, rng }
+    }
+
+    pub fn true_gns(&self) -> f64 {
+        self.cfg.tr_sigma / self.cfg.g_sq
+    }
+
+    /// Squared norm of the mean gradient over a batch of `b` examples.
+    ///
+    /// mean of b i.i.d. N(G, sI) draws is N(G, (s/b) I); sample directly.
+    pub fn batch_grad_sq_norm(&mut self, b: usize) -> f64 {
+        let sd = (self.sigma_per_dim / b as f64).sqrt();
+        self.g
+            .iter()
+            .map(|&gi| {
+                let z: f64 = self.rng.normal();
+                let v = gi + sd * z;
+                v * v
+            })
+            .sum()
+    }
+
+    /// One optimizer-step observation: a big-batch norm plus the mean of
+    /// `b_big / b_small` small-batch norms (the Microbatch taxonomy entry;
+    /// `b_small = 1` is the per-example method).
+    pub fn observe_step(&mut self, b_big: usize, b_small: usize) -> (f64, f64) {
+        assert!(b_big % b_small == 0 && b_big > b_small);
+        let n_small = b_big / b_small;
+        let big = self.batch_grad_sq_norm(b_big);
+        let small = (0..n_small).map(|_| self.batch_grad_sq_norm(b_small)).sum::<f64>()
+            / n_small as f64;
+        (big, small)
+    }
+
+    /// Run `steps` observations and return (gns_estimate, jackknife_stderr),
+    /// reproducing one point of Fig. 2.
+    pub fn estimate(&mut self, b_big: usize, b_small: usize, steps: usize) -> (f64, f64) {
+        let mut s_obs = Vec::with_capacity(steps);
+        let mut g_obs = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let (big, small) = self.observe_step(b_big, b_small);
+            let c = gns_components(b_big as f64, big, b_small as f64, small);
+            s_obs.push(c.s);
+            g_obs.push(c.g_sq);
+        }
+        jackknife_ratio_stderr(&s_obs, &g_obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_norm_expectation_matches_theory() {
+        let mut sim = GnsSimulator::new(SimConfig { dim: 128, g_sq: 2.0, tr_sigma: 4.0, seed: 1 });
+        let n = 4000;
+        for b in [1usize, 8, 64] {
+            let mean: f64 =
+                (0..n).map(|_| sim.batch_grad_sq_norm(b)).sum::<f64>() / n as f64;
+            let expect = 2.0 + 4.0 / b as f64;
+            assert!(
+                (mean - expect).abs() < 0.15 * expect,
+                "b={b}: {mean} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn estimator_recovers_true_gns() {
+        let mut sim = GnsSimulator::new(SimConfig::default());
+        let (est, se) = sim.estimate(64, 1, 400);
+        assert!(se > 0.0);
+        assert!((est - 1.0).abs() < 5.0 * se.max(0.05), "est={est} se={se}");
+    }
+
+    #[test]
+    fn smaller_b_small_has_lower_stderr() {
+        // The paper's Fig. 2 (right) headline: for the same number of
+        // samples processed, smaller B_small always wins. Average over
+        // seeds to make the test robust.
+        let avg_se = |b_small: usize| -> f64 {
+            (0..8)
+                .map(|seed| {
+                    let mut sim = GnsSimulator::new(SimConfig {
+                        seed,
+                        ..SimConfig::default()
+                    });
+                    sim.estimate(64, b_small, 200).1
+                })
+                .sum::<f64>()
+                / 8.0
+        };
+        let se1 = avg_se(1);
+        let se16 = avg_se(16);
+        assert!(se1 < se16, "se(B_small=1)={se1} !< se(B_small=16)={se16}");
+    }
+
+    #[test]
+    fn b_big_does_not_matter_much() {
+        // Fig. 2 (left): stderr is insensitive to B_big *at equal numbers
+        // of samples processed* (steps scale inversely with B_big).
+        let budget = 25_600usize;
+        let avg_se = |b_big: usize| -> f64 {
+            (0..8)
+                .map(|seed| {
+                    let mut sim = GnsSimulator::new(SimConfig {
+                        seed: 100 + seed,
+                        ..SimConfig::default()
+                    });
+                    sim.estimate(b_big, 1, budget / b_big).1
+                })
+                .sum::<f64>()
+                / 8.0
+        };
+        let a = avg_se(16);
+        let b = avg_se(256);
+        let ratio = a / b;
+        assert!(ratio > 0.4 && ratio < 2.5, "stderr ratio {ratio} not ~1");
+    }
+}

@@ -1,0 +1,202 @@
+//! Welford running moments, for the *offline* GNS estimation mode of
+//! Appendix A: "The estimators of Equation 4 and 5 can then be aggregated
+//! using a mean rather than an EMA", with uncertainty from the jackknife.
+
+/// Numerically-stable running mean/variance (Welford), mergeable.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.mean)
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> Option<f64> {
+        (self.n > 1).then(|| self.m2 / (self.n - 1) as f64)
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> Option<f64> {
+        Some((self.var()? / self.n as f64).sqrt())
+    }
+
+    /// Parallel merge (Chan et al.) — combine per-rank statistics.
+    pub fn merge(&self, other: &Welford) -> Welford {
+        if self.n == 0 {
+            return other.clone();
+        }
+        if other.n == 0 {
+            return self.clone();
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        Welford { n, mean, m2 }
+    }
+}
+
+/// Offline GNS aggregate (Appendix A): plain means of the Eq. 4/5
+/// components over an observation window, jackknife stderr on the ratio.
+#[derive(Debug, Clone, Default)]
+pub struct OfflineGns {
+    s_obs: Vec<f64>,
+    g_obs: Vec<f64>,
+}
+
+impl OfflineGns {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, components: super::GnsComponents) {
+        self.s_obs.push(components.s);
+        self.g_obs.push(components.g_sq);
+    }
+
+    pub fn len(&self) -> usize {
+        self.s_obs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.s_obs.is_empty()
+    }
+
+    /// (GNS point estimate, jackknife stderr); None with < 2 observations.
+    pub fn estimate(&self) -> Option<(f64, f64)> {
+        (self.len() >= 2).then(|| super::jackknife_ratio_stderr(&self.s_obs, &self.g_obs))
+    }
+
+    /// Observations needed for a target relative stderr, extrapolating the
+    /// current variance ~ 1/n (the App. A "how long to run offline" use).
+    pub fn obs_needed_for(&self, rel_stderr: f64) -> Option<u64> {
+        let (est, se) = self.estimate()?;
+        if est.abs() < 1e-300 || se == 0.0 {
+            return Some(self.len() as u64);
+        }
+        let current_rel = se / est.abs();
+        let factor = (current_rel / rel_stderr).powi(2);
+        Some((self.len() as f64 * factor).ceil() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gns::gns_components;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5, -3.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean().unwrap() - mean).abs() < 1e-12);
+        assert!((w.var().unwrap() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64 * 0.7).sin() * 3.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        let m = a.merge(&b);
+        assert_eq!(m.count(), all.count());
+        assert!((m.mean().unwrap() - all.mean().unwrap()).abs() < 1e-12);
+        assert!((m.var().unwrap() - all.var().unwrap()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = Welford::new();
+        a.push(3.0);
+        let e = Welford::new();
+        assert_eq!(a.merge(&e).mean(), Some(3.0));
+        assert_eq!(e.merge(&a).mean(), Some(3.0));
+    }
+
+    #[test]
+    fn offline_estimate_converges() {
+        // noiseless components -> exact ratio with zero stderr
+        let mut off = OfflineGns::new();
+        for _ in 0..10 {
+            off.push(gns_components(64.0, 1.0 + 4.0 / 64.0, 1.0, 5.0));
+        }
+        let (est, se) = off.estimate().unwrap();
+        assert!((est - 4.0).abs() < 1e-9, "{est}");
+        assert!(se < 1e-9);
+    }
+
+    #[test]
+    fn obs_needed_scales_inverse_square() {
+        let mut off = OfflineGns::new();
+        // alternating noisy observations
+        for i in 0..16 {
+            let jitter = if i % 2 == 0 { 0.2 } else { -0.2 };
+            off.push(gns_components(64.0, 1.0, 1.0, 3.0 + jitter));
+        }
+        let (est, se) = off.estimate().unwrap();
+        let rel = se / est.abs();
+        let need_half = off.obs_needed_for(rel / 2.0).unwrap();
+        assert!((need_half as f64 / off.len() as f64 - 4.0).abs() < 0.6, "{need_half}");
+    }
+
+    #[test]
+    fn prop_welford_mean_in_envelope() {
+        crate::util::prop::forall(
+            91,
+            300,
+            |r| {
+                let n = r.range(1, 40);
+                crate::util::prop::vec_of(r, n, |r| r.range_f64(-100.0, 100.0))
+            },
+            |xs| {
+                let mut w = Welford::new();
+                for &x in xs {
+                    w.push(x);
+                }
+                let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let m = w.mean().unwrap();
+                crate::prop_check!(m >= lo - 1e-9 && m <= hi + 1e-9, "mean out of envelope");
+                if let Some(v) = w.var() {
+                    crate::prop_check!(v >= -1e-9, "negative variance");
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! nanoGNS-rs: Rust + JAX + Pallas reproduction of *"Normalization Layer
+//! Per-Example Gradients are Sufficient to Predict Gradient Noise Scale in
+//! Transformers"* (Gray et al., NeurIPS 2024).
+//!
+//! Layer map (see DESIGN.md):
+//! - L1 (Pallas) + L2 (JAX) live in `python/compile/` and are compiled
+//!   **once** by `make artifacts` into HLO-text artifacts;
+//! - L3 — this crate — is the training coordinator: it loads the artifacts
+//!   through the PJRT C API ([`runtime`]), runs the microbatch
+//!   gradient-accumulation loop ([`coordinator`]), tracks the gradient
+//!   noise scale online ([`gns`]) and drives GNS-guided batch-size
+//!   schedules ([`schedule`]). Python is never on the training path.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod figures;
+pub mod gns;
+pub mod runtime;
+pub mod schedule;
+pub mod telemetry;
+pub mod util;
+
+/// Canonical layer-type order of the stats vector crossing the L2→L3
+/// boundary. Must match `python/compile/layers.py::STATS_ORDER`.
+pub const STATS_ORDER: [&str; 5] = ["embedding", "layernorm", "attention", "mlp", "lm_head"];
+
+/// Number of layer types tracked in the stats vector.
+pub const N_TYPES: usize = STATS_ORDER.len();

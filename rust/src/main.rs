@@ -1,0 +1,205 @@
+//! `repro` — nanoGNS-rs launcher.
+//!
+//! Subcommands:
+//! * `train`   — run a training job from a JSON config (or quick flags);
+//! * `figures` — regenerate any paper figure/table (see DESIGN.md §4);
+//! * `bench`   — run the in-tree benchmark suites (ln-kernel, train-step);
+//! * `info`    — inspect the artifact manifest.
+//!
+//! The binary is self-contained once `make artifacts` has produced the
+//! AOT-compiled HLO artifacts; Python is never invoked from here.
+//! (CLI parsing is hand-rolled: this build is offline, no clap.)
+
+use anyhow::{bail, Result};
+
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::Trainer;
+use nanogns::figures;
+use nanogns::runtime::{Manifest, Runtime};
+
+const USAGE: &str = "\
+repro — GNS-instrumented training coordinator (nanoGNS-rs)
+
+USAGE:
+  repro train  [--config F.json] [--model NAME] [--steps N] [--seed N] [--metrics F.csv]
+  repro figures (--fig N | --table N | --all) [--model NAME] [--steps N] [--seeds N] [--ranks N]
+  repro info
+  repro help
+
+GLOBAL:
+  --artifacts DIR   artifact directory (default: artifacts)
+
+FIGURES: 2..16 map to the paper's figures (8 = `repro bench ln`), tables 1..2.
+";
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut switches = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.insert(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument {a:?}\n{USAGE}");
+            }
+        }
+        Ok(Self { flags, switches })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.contains(key)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        "train" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let rt = Runtime::cpu()?;
+            let mut cfg = match args.get("config") {
+                Some(path) => TrainConfig::from_file(path)?,
+                None => {
+                    let mut c = TrainConfig::quickstart(
+                        &args.get_or("model", "small"),
+                        args.get_num("steps", 50u64)?,
+                    );
+                    c.seed = args.get_num("seed", 0u64)?;
+                    c.metrics_path = args.get_or("metrics", "");
+                    c
+                }
+            };
+            cfg.artifacts = artifacts.clone();
+            println!(
+                "training {} ({:.2}M params) for {} steps on {}",
+                cfg.model,
+                manifest.config(&cfg.model)?.n_params as f64 / 1e6,
+                cfg.steps,
+                rt.platform()
+            );
+            let mut tr = Trainer::new(&rt, &manifest, cfg)?;
+            let out = tr.run()?;
+            if let Some(r) = out.records.last() {
+                println!(
+                    "final: step {} loss {:.4} gns_total {:.2} gns_ln {:.2} ({} tokens)",
+                    r.step, r.loss, r.gns_total, r.gns_layernorm, out.tokens
+                );
+            }
+        }
+        "figures" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let rt = Runtime::cpu()?;
+            let model = args.get_or("model", "micro");
+            let steps = args.get_num("steps", 60u64)?;
+            let seeds = args.get_num("seeds", 3u64)?;
+            let ranks = args.get_num("ranks", 4usize)?;
+            let run_fig = |n: u32| -> Result<()> {
+                match n {
+                    2 => figures::simulation::fig2(4096, 8),
+                    3 => figures::costs::fig3(),
+                    4 => figures::costs::fig4(),
+                    5 => figures::training::fig5(&rt, &manifest, &model, steps, false),
+                    6 => figures::training::fig6(&rt, &manifest, &model, steps),
+                    7 => figures::training::fig7(&rt, &manifest, &model, steps),
+                    8 => {
+                        println!("Fig. 8 is the LayerNorm kernel timing benchmark:");
+                        println!("  cargo bench --bench ln_kernel   (or: repro bench --suite ln)");
+                        Ok(())
+                    }
+                    9 => figures::training::fig9(&rt, &manifest, &model, steps, seeds),
+                    10 => figures::training::fig10(&rt, &manifest, steps),
+                    11 | 12 => figures::instability::fig12(&rt, &manifest, steps.max(100), 0.35),
+                    13 => figures::instability::fig13(&rt, &manifest, steps.max(100), 0.35),
+                    14 => figures::training::fig5(&rt, &manifest, &model, steps, true),
+                    15 => figures::training::fig15(&rt, &manifest, &model, steps),
+                    16 => figures::training::fig16(&rt, &manifest, &model, steps, ranks),
+                    _ => bail!("unknown figure {n} (2..16)"),
+                }
+            };
+            let run_table = |n: u32| -> Result<()> {
+                match n {
+                    1 => figures::costs::table1(),
+                    2 => figures::costs::table2(),
+                    _ => bail!("unknown table {n} (1..2)"),
+                }
+            };
+            if args.has("all") {
+                for t in 1..=2 {
+                    run_table(t)?;
+                    println!();
+                }
+                for f in [2u32, 3, 4, 5, 6, 7, 9, 10, 12, 13, 14, 15, 16] {
+                    run_fig(f)?;
+                    println!();
+                }
+            } else if let Some(t) = args.get("table") {
+                run_table(t.parse()?)?;
+            } else if let Some(f) = args.get("fig") {
+                run_fig(f.parse()?)?;
+            } else {
+                bail!("pass --fig N, --table N, or --all\n{USAGE}");
+            }
+        }
+        "info" => {
+            let manifest = Manifest::load(&artifacts)?;
+            println!("manifest schema v{}", manifest.schema_version);
+            let mut names: Vec<_> = manifest.configs.keys().collect();
+            names.sort();
+            for name in names {
+                let c = &manifest.configs[name];
+                println!(
+                    "  {name}: d={} L={} heads={} T={} vocab={} microbatch={} params={:.2}M",
+                    c.d_model, c.n_layers, c.n_heads, c.seq_len, c.vocab, c.microbatch,
+                    c.n_params as f64 / 1e6
+                );
+            }
+            println!(
+                "  ln_bench sizes: {:?}",
+                manifest.ln_bench.iter().map(|e| e.k).collect::<Vec<_>>()
+            );
+            println!("  instability artifacts: {}", manifest.instability.is_some());
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,350 @@
+//! The L2→L3 artifact contract: `artifacts/manifest.json`.
+//!
+//! Rust never parses HLO text; everything it must know about an artifact —
+//! parameter order, shapes, dtypes, layer-type tags, microbatch size, the
+//! stats-vector layout — is carried by the manifest written by
+//! `python/compile/aot.py`. The manifest is versioned and validated here.
+//! Parsing goes through the in-tree JSON substrate (`util::json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::Value;
+
+/// Manifest schema version this crate understands.
+pub const SCHEMA_VERSION: u64 = 2;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema_version: u64,
+    pub stats_order: Vec<String>,
+    pub configs: HashMap<String, ModelEntry>,
+    pub ln_bench: Vec<LnBenchEntry>,
+    /// Appendix C.2 teacher–student artifacts (optional).
+    pub instability: Option<InstabilityEntry>,
+    /// Directory the manifest was loaded from; artifact paths are relative
+    /// to it.
+    pub root: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// Microbatch size baked into grad_step/eval_step artifact shapes.
+    pub microbatch: usize,
+    pub n_params: u64,
+    pub pallas_ln: bool,
+    pub adam: AdamHypers,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AdamHypers {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub wd: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// Layer type tag: one of `crate::STATS_ORDER`.
+    pub ltype: String,
+    /// Whether AdamW weight decay applies.
+    pub decay: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct InstabilityEntry {
+    pub b: usize,
+    pub t: usize,
+    pub d: usize,
+    pub n_heads: usize,
+    pub bias_noise: f64,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub artifacts: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LnBenchEntry {
+    pub b: usize,
+    pub t: usize,
+    pub k: usize,
+    pub variants: HashMap<String, String>,
+    pub vmem_fused: u64,
+    pub vmem_plain: u64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn str_map(v: &Value) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (k, x) in v.as_obj()? {
+        out.insert(k.clone(), x.as_str()?.to_string());
+    }
+    Ok(out)
+}
+
+fn usize_vec(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+impl ModelEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: usize_vec(p.get("shape")?)?,
+                    dtype: p.get("dtype")?.as_str()?.to_string(),
+                    ltype: p.get("ltype")?.as_str()?.to_string(),
+                    decay: p.get("decay")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let adam = v.get("adam")?;
+        Ok(Self {
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            seq_len: v.get("seq_len")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            microbatch: v.get("microbatch")?.as_usize()?,
+            n_params: v.get("n_params")?.as_u64()?,
+            pallas_ln: v.get("pallas_ln")?.as_bool()?,
+            adam: AdamHypers {
+                beta1: adam.get("beta1")?.as_f64()?,
+                beta2: adam.get("beta2")?.as_f64()?,
+                eps: adam.get("eps")?.as_f64()?,
+                wd: adam.get("wd")?.as_f64()?,
+            },
+            params,
+            artifacts: str_map(v.get("artifacts")?)?,
+        })
+    }
+
+    /// Absolute path of a named artifact (e.g. "grad_step").
+    pub fn artifact_path(&self, root: &Path, name: &str) -> Result<PathBuf> {
+        let rel = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' missing from manifest"))?;
+        Ok(root.join(rel))
+    }
+
+    /// Index of each parameter whose layer type is `ltype`.
+    pub fn params_of_type(&self, ltype: &str) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.ltype == ltype)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("cannot read {path:?} (run `make artifacts`): {e}"))?;
+        let mut m = Self::from_json_text(&text).context("parsing manifest.json")?;
+        m.root = dir.to_path_buf();
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let mut configs = HashMap::new();
+        for (name, c) in v.get("configs")?.as_obj()? {
+            configs.insert(
+                name.clone(),
+                ModelEntry::from_json(c).with_context(|| format!("config {name}"))?,
+            );
+        }
+        let ln_bench = match v.opt("ln_bench") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(LnBenchEntry {
+                        b: e.get("b")?.as_usize()?,
+                        t: e.get("t")?.as_usize()?,
+                        k: e.get("k")?.as_usize()?,
+                        variants: str_map(e.get("variants")?)?,
+                        vmem_fused: e.get("vmem_fused")?.as_u64()?,
+                        vmem_plain: e.get("vmem_plain")?.as_u64()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let instability = match v.opt("instability") {
+            None | Some(Value::Null) => None,
+            Some(e) => Some(InstabilityEntry {
+                b: e.get("b")?.as_usize()?,
+                t: e.get("t")?.as_usize()?,
+                d: e.get("d")?.as_usize()?,
+                n_heads: e.get("n_heads")?.as_usize()?,
+                bias_noise: e.get("bias_noise")?.as_f64()?,
+                param_names: e
+                    .get("param_names")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                param_shapes: e
+                    .get("param_shapes")?
+                    .as_arr()?
+                    .iter()
+                    .map(usize_vec)
+                    .collect::<Result<Vec<_>>>()?,
+                artifacts: str_map(e.get("artifacts")?)?,
+            }),
+        };
+        Ok(Self {
+            schema_version: v.get("schema_version")?.as_u64()?,
+            stats_order: v
+                .get("stats_order")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            configs,
+            ln_bench,
+            instability,
+            root: PathBuf::new(),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.schema_version == SCHEMA_VERSION,
+            "manifest schema {} != supported {}",
+            self.schema_version,
+            SCHEMA_VERSION
+        );
+        ensure!(
+            self.stats_order == crate::STATS_ORDER,
+            "stats_order mismatch between manifest and crate"
+        );
+        for (name, cfg) in &self.configs {
+            let total: u64 = cfg.params.iter().map(|p| p.numel() as u64).sum();
+            ensure!(
+                total == cfg.n_params,
+                "config {name}: param element counts ({total}) != n_params ({})",
+                cfg.n_params
+            );
+            for p in &cfg.params {
+                ensure!(
+                    crate::STATS_ORDER.contains(&p.ltype.as_str()),
+                    "config {name}: unknown layer type {:?} on {}",
+                    p.ltype,
+                    p.name
+                );
+                ensure!(p.dtype == "f32", "only f32 params supported, got {}", p.dtype);
+            }
+            for k in ["init", "grad_step", "grad_sqnorms", "accumulate", "adamw_update", "eval_step"] {
+                ensure!(cfg.artifacts.contains_key(k), "config {name}: artifact {k} missing");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelEntry> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config '{name}' not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "schema_version": 2,
+          "stats_order": ["embedding", "layernorm", "attention", "mlp", "lm_head"],
+          "configs": {
+            "t": {
+              "d_model": 4, "n_layers": 1, "n_heads": 1, "seq_len": 2,
+              "vocab": 3, "microbatch": 2, "n_params": 14, "pallas_ln": false,
+              "adam": {"beta1": 0.9, "beta2": 0.95, "eps": 1e-8, "wd": 0.1},
+              "params": [
+                {"name": "wte", "shape": [3, 4], "dtype": "f32", "ltype": "embedding", "decay": true},
+                {"name": "lnf.g", "shape": [2], "dtype": "f32", "ltype": "layernorm", "decay": false}
+              ],
+              "artifacts": {
+                "init": "t/init.hlo.txt", "grad_step": "t/grad_step.hlo.txt",
+                "grad_sqnorms": "t/x.hlo.txt", "accumulate": "t/a.hlo.txt",
+                "adamw_update": "t/u.hlo.txt", "eval_step": "t/e.hlo.txt"
+              }
+            }
+          },
+          "ln_bench": []
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json_text(&sample_json()).unwrap();
+        m.validate().unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.params[0].numel(), 12);
+        assert_eq!(c.params_of_type("embedding"), vec![0]);
+        assert_eq!(c.params_of_type("layernorm"), vec![1]);
+        assert!((c.adam.eps - 1e-8).abs() < 1e-20);
+        assert!(m.instability.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_schema_version() {
+        let bad = sample_json().replace("\"schema_version\": 2", "\"schema_version\": 1");
+        let m = Manifest::from_json_text(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_param_total() {
+        let bad = sample_json().replace("\"n_params\": 14", "\"n_params\": 15");
+        let m = Manifest::from_json_text(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_ltype() {
+        let bad = sample_json().replace("\"ltype\": \"embedding\"", "\"ltype\": \"conv\"");
+        let m = Manifest::from_json_text(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_artifact_detected() {
+        let bad = sample_json().replace("\"init\": \"t/init.hlo.txt\",", "");
+        let m = Manifest::from_json_text(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal host tensor + Literal conversions.
+//!
+//! The coordinator mostly shuttles opaque `xla::Literal`s between
+//! artifacts; [`Tensor`] exists for the places where host-side math or
+//! serialization is needed (checkpoints, metrics, token batches).
+
+use anyhow::{ensure, anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// A host-resident f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(n == data.len(), "shape {:?} != data len {}", shape, data.len());
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {:?}: {e:?}", self.shape))
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
+        Tensor::new(dims, data)
+    }
+}
+
+/// Build an i32 literal of the given shape (token id batches).
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(), "i32 literal shape mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Scalar literals for artifact hyper-parameter inputs.
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Read an f32 vector (e.g. the (5,) stats vector).
+pub fn vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    ensure!(
+        lit.ty().map_err(|e| anyhow!("{e:?}"))? == ElementType::F32,
+        "expected f32 literal"
+    );
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::zeros(&[4, 2]).numel(), 8);
+    }
+
+    #[test]
+    fn sq_norm() {
+        let t = Tensor::new(vec![3], vec![1.0, 2.0, 2.0]).unwrap();
+        assert!((t.sq_norm() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let l = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&l).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn i32_literal_round_trip() {
+        let l = i32_literal(&[2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+}

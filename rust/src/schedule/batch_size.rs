@@ -1,0 +1,175 @@
+//! Batch-size schedules (paper Section 5.2) and the GNS-guided controller.
+//!
+//! All schedules emit an *accumulation-step count* at fixed microbatch
+//! size; effective batch = microbatch * accum * ranks. The paper's case
+//! study uses `Linear`: ramp the batch size linearly in tokens processed
+//! up to the fixed baseline batch (Fig. 15), which tracks the growing GNS.
+
+#[derive(Debug, Clone)]
+pub enum BatchSizeSchedule {
+    /// Constant effective batch (the paper's baseline).
+    Fixed { accum: usize },
+    /// Linear ramp in tokens processed: accum rises from `min_accum` to
+    /// `max_accum` by `ramp_tokens`, then stays (Fig. 15's schedule).
+    Linear { min_accum: usize, max_accum: usize, ramp_tokens: u64 },
+    /// Track the measured GNS: batch ~ gain * B_simple, clamped.
+    Adaptive { min_accum: usize, max_accum: usize, gain: f64 },
+}
+
+impl BatchSizeSchedule {
+    /// Accumulation steps for the next optimizer step.
+    ///
+    /// * `tokens_processed` — total tokens consumed so far;
+    /// * `gns` — current smoothed total GNS estimate in *examples*
+    ///   (B_small = 1 example in our estimator), None early on;
+    /// * `microbatch_examples` — examples per microbatch.
+    pub fn accum_steps(
+        &self,
+        tokens_processed: u64,
+        gns: Option<f64>,
+        microbatch_examples: usize,
+    ) -> usize {
+        match self {
+            Self::Fixed { accum } => (*accum).max(1),
+            Self::Linear { min_accum, max_accum, ramp_tokens } => {
+                let frac = (tokens_processed as f64 / (*ramp_tokens).max(1) as f64).min(1.0);
+                let a = *min_accum as f64 + frac * (*max_accum as f64 - *min_accum as f64);
+                (a.round() as usize).clamp(*min_accum, *max_accum)
+            }
+            Self::Adaptive { min_accum, max_accum, gain } => {
+                let Some(g) = gns else { return *min_accum };
+                // target batch (examples) = gain * B_simple
+                let target_accum =
+                    (gain * g.max(0.0) / microbatch_examples.max(1) as f64).round() as usize;
+                target_accum.clamp(*min_accum, *max_accum)
+            }
+        }
+    }
+}
+
+/// Closed-loop GNS controller: smooths the raw schedule decision to avoid
+/// thrashing the accumulation count step-to-step (hysteresis of one step).
+#[derive(Debug, Clone)]
+pub struct GnsController {
+    pub schedule: BatchSizeSchedule,
+    last: usize,
+}
+
+impl GnsController {
+    pub fn new(schedule: BatchSizeSchedule) -> Self {
+        Self { schedule, last: 1 }
+    }
+
+    /// Controller whose hysteresis starts at `start` (mid-run forking).
+    pub fn with_start(schedule: BatchSizeSchedule, start: usize) -> Self {
+        Self { schedule, last: start.max(1) }
+    }
+
+    pub fn decide(&mut self, tokens: u64, gns: Option<f64>, microbatch_examples: usize) -> usize {
+        let raw = self.schedule.accum_steps(tokens, gns, microbatch_examples);
+        // move at most one accumulation step per decision (hysteresis)
+        let next = if raw > self.last {
+            self.last + 1
+        } else if raw < self.last {
+            self.last.saturating_sub(1).max(1)
+        } else {
+            raw
+        };
+        self.last = next;
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = BatchSizeSchedule::Fixed { accum: 8 };
+        for t in [0u64, 1_000_000, u64::MAX / 2] {
+            assert_eq!(s.accum_steps(t, None, 4), 8);
+        }
+    }
+
+    #[test]
+    fn linear_ramps_and_saturates() {
+        let s = BatchSizeSchedule::Linear { min_accum: 1, max_accum: 9, ramp_tokens: 1000 };
+        assert_eq!(s.accum_steps(0, None, 4), 1);
+        assert_eq!(s.accum_steps(500, None, 4), 5);
+        assert_eq!(s.accum_steps(1000, None, 4), 9);
+        assert_eq!(s.accum_steps(99_999, None, 4), 9);
+    }
+
+    #[test]
+    fn adaptive_clamps() {
+        let s = BatchSizeSchedule::Adaptive { min_accum: 2, max_accum: 16, gain: 1.0 };
+        // no GNS yet -> min
+        assert_eq!(s.accum_steps(0, None, 4), 2);
+        // huge GNS -> max
+        assert_eq!(s.accum_steps(0, Some(1e9), 4), 16);
+        // negative (noisy early estimate) -> min
+        assert_eq!(s.accum_steps(0, Some(-5.0), 4), 2);
+    }
+
+    #[test]
+    fn controller_hysteresis() {
+        let mut c = GnsController::new(BatchSizeSchedule::Fixed { accum: 10 });
+        // from 1, may only climb one per decision
+        assert_eq!(c.decide(0, None, 4), 2);
+        assert_eq!(c.decide(0, None, 4), 3);
+        for _ in 0..20 {
+            c.decide(0, None, 4);
+        }
+        assert_eq!(c.decide(0, None, 4), 10);
+    }
+
+    /// Linear schedule is monotone in tokens and always within bounds.
+    #[test]
+    fn prop_linear_monotone() {
+        crate::util::prop::forall(
+            81,
+            500,
+            |r| (r.next_u64() % 10_000, r.next_u64() % 10_000),
+            |&(t1, dt)| {
+                let s = BatchSizeSchedule::Linear { min_accum: 1, max_accum: 32, ramp_tokens: 5000 };
+                let a = s.accum_steps(t1, None, 4);
+                let b = s.accum_steps(t1 + dt, None, 4);
+                crate::prop_check!(b >= a, "not monotone");
+                crate::prop_check!(
+                    (1..=32).contains(&a) && (1..=32).contains(&b),
+                    "out of bounds"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// Controller never returns 0 and never jumps more than 1.
+    #[test]
+    fn prop_controller_steps_bounded() {
+        crate::util::prop::forall(
+            82,
+            300,
+            |r| {
+                let gns = if r.bool(0.3) { None } else { Some(r.range_f64(-10.0, 1e6)) };
+                (gns, r.range(1, 30))
+            },
+            |&(gns, n)| {
+                let mut c = GnsController::new(BatchSizeSchedule::Adaptive {
+                    min_accum: 1,
+                    max_accum: 64,
+                    gain: 0.01,
+                });
+                let mut prev = 1usize;
+                for _ in 0..n {
+                    let a = c.decide(0, gns, 4);
+                    crate::prop_check!(a >= 1, "returned 0");
+                    crate::prop_check!(a.abs_diff(prev) <= 1, "jumped > 1");
+                    prev = a;
+                }
+                Ok(())
+            },
+        );
+    }
+}

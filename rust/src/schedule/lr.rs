@@ -1,0 +1,100 @@
+//! Learning-rate schedules: linear warmup + cosine decay to a floor
+//! (the Cerebras-GPT / nanoGPT recipe used by the paper's experiments).
+
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub max_lr: f64,
+    pub min_lr: f64,
+    pub warmup_steps: u64,
+    pub decay_steps: u64,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f64) -> Self {
+        Self { max_lr: lr, min_lr: lr, warmup_steps: 0, decay_steps: 1 }
+    }
+
+    /// LR at optimizer step `step` (0-based).
+    pub fn at(&self, step: u64) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.max_lr * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let t = step.saturating_sub(self.warmup_steps);
+        if t >= self.decay_steps {
+            return self.min_lr;
+        }
+        let frac = t as f64 / self.decay_steps as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * frac).cos());
+        self.min_lr + (self.max_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> LrSchedule {
+        LrSchedule { max_lr: 6e-4, min_lr: 6e-5, warmup_steps: 100, decay_steps: 1000 }
+    }
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = sched();
+        assert!((s.at(0) - 6e-6).abs() < 1e-12);
+        assert!((s.at(49) - 3e-4).abs() < 1e-6);
+        assert!((s.at(99) - 6e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_to_floor() {
+        let s = sched();
+        assert!((s.at(100) - 6e-4).abs() < 1e-6);
+        assert!((s.at(1100) - 6e-5).abs() < 1e-12);
+        assert!((s.at(99999) - 6e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(1e-3);
+        for step in [0u64, 10, 100000] {
+            assert_eq!(s.at(step), 1e-3);
+        }
+    }
+
+    /// LR always within [min_lr, max_lr].
+    #[test]
+    fn prop_bounded() {
+        crate::util::prop::forall(
+            71,
+            500,
+            |r| r.next_u64() % 100_000,
+            |&step| {
+                let s = sched();
+                let lr = s.at(step);
+                crate::prop_check!(
+                    lr >= s.min_lr - 1e-15 && lr <= s.max_lr + 1e-15,
+                    "lr {lr} out of bounds at step {step}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// Monotone non-increasing after warmup.
+    #[test]
+    fn prop_monotone_decay() {
+        crate::util::prop::forall(
+            72,
+            500,
+            |r| 100 + r.next_u64() % 1_100,
+            |&step| {
+                let s = sched();
+                crate::prop_check!(
+                    s.at(step + 1) <= s.at(step) + 1e-15,
+                    "not monotone at {step}"
+                );
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Learning-rate and batch-size schedules (paper Section 5.2).
+//!
+//! Batch size is varied by changing the number of gradient-accumulation
+//! steps at fixed microbatch size — exactly the mechanism of the paper's
+//! case study — so no re-compilation is ever needed.
+
+pub mod batch_size;
+pub mod lr;
+
+pub use batch_size::{BatchSizeSchedule, GnsController};
+pub use lr::LrSchedule;

@@ -1,0 +1,126 @@
+//! Metrics telemetry: CSV series consumed by the figure harness.
+//!
+//! One row per optimizer step, wide format. The figure harness re-reads
+//! these files to regenerate the paper's plots (phase plots, regressions,
+//! loss curves), so schema changes must update `figures/`.
+
+pub mod summary;
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+/// Append-only CSV writer with a fixed header.
+pub struct CsvLogger {
+    out: Box<dyn Write>,
+    n_cols: usize,
+}
+
+impl CsvLogger {
+    pub fn to_file(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out: Box<dyn Write> = Box::new(BufWriter::new(File::create(path)?));
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, n_cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        ensure!(values.len() == self.n_cols, "row arity {} != header {}", values.len(), self.n_cols);
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v:.9e}"));
+        }
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a CSV produced by [`CsvLogger`] back into (header, columns).
+pub fn read_csv(path: impl AsRef<Path>) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = BufReader::new(File::open(path.as_ref())?);
+    let mut lines = f.lines();
+    let header: Vec<String> = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty csv"))??
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); header.len()];
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        for (i, tok) in line.split(',').enumerate() {
+            ensure!(i < cols.len(), "row wider than header");
+            cols[i].push(tok.parse::<f64>()?);
+        }
+    }
+    Ok((header, cols))
+}
+
+/// Column accessor helper for figure code.
+pub fn column<'a>(header: &[String], cols: &'a [Vec<f64>], name: &str) -> Result<&'a [f64]> {
+    let i = header
+        .iter()
+        .position(|h| h == name)
+        .ok_or_else(|| anyhow::anyhow!("column {name} not in {header:?}"))?;
+    Ok(&cols[i])
+}
+
+/// The standard per-step training metrics schema.
+pub const TRAIN_HEADER: &[&str] = &[
+    "step", "tokens", "loss", "lr", "accum", "b_big",
+    "gsq_embedding", "s_embedding",
+    "gsq_layernorm", "s_layernorm",
+    "gsq_attention", "s_attention",
+    "gsq_mlp", "s_mlp",
+    "gsq_lm_head", "s_lm_head",
+    "gsq_total", "s_total",
+    "gns_layernorm", "gns_total",
+    "step_ms",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("nanogns_test_telemetry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut log = CsvLogger::to_file(&path, &["a", "b"]).unwrap();
+            log.row(&[1.0, 2.0]).unwrap();
+            log.row(&[3.5, -1e-9]).unwrap();
+            log.flush().unwrap();
+        }
+        let (hdr, cols) = read_csv(&path).unwrap();
+        assert_eq!(hdr, vec!["a", "b"]);
+        assert_eq!(cols[0], vec![1.0, 3.5]);
+        assert!((cols[1][1] + 1e-9).abs() < 1e-18);
+        assert_eq!(column(&hdr, &cols, "b").unwrap().len(), 2);
+        assert!(column(&hdr, &cols, "zz").is_err());
+    }
+
+    #[test]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("nanogns_test_telemetry2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut log = CsvLogger::to_file(dir.join("u.csv"), &["a", "b"]).unwrap();
+        assert!(log.row(&[1.0]).is_err());
+    }
+}

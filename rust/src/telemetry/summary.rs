@@ -1,0 +1,100 @@
+//! Loss-curve analytics shared by the figure harnesses and reports:
+//! token-grid interpolation, running-min smoothing, tokens-to-loss and
+//! tokens-saved computations (the Fig. 9 right panel).
+
+/// Linear interpolation of a (tokens, loss) series at `tok`.
+pub fn interp(series: &[(u64, f64)], tok: u64) -> f64 {
+    assert!(!series.is_empty());
+    match series.binary_search_by_key(&tok, |&(t, _)| t) {
+        Ok(i) => series[i].1,
+        Err(0) => series[0].1,
+        Err(i) if i >= series.len() => series[series.len() - 1].1,
+        Err(i) => {
+            let (t0, l0) = series[i - 1];
+            let (t1, l1) = series[i];
+            let f = (tok - t0) as f64 / (t1 - t0).max(1) as f64;
+            l0 + f * (l1 - l0)
+        }
+    }
+}
+
+/// Average several runs onto the first run's token grid.
+pub fn mean_curve(runs: &[Vec<(u64, f64)>]) -> Vec<(u64, f64)> {
+    assert!(!runs.is_empty());
+    runs[0]
+        .iter()
+        .map(|&(tok, _)| {
+            let sum: f64 = runs.iter().map(|r| interp(r, tok)).sum();
+            (tok, sum / runs.len() as f64)
+        })
+        .collect()
+}
+
+/// First token count at which the running-min of the series reaches
+/// `target` loss (noise-tolerant "time to loss").
+pub fn tokens_to_reach(series: &[(u64, f64)], target: f64) -> Option<u64> {
+    let mut best = f64::INFINITY;
+    for &(tok, loss) in series {
+        best = best.min(loss);
+        if best <= target {
+            return Some(tok);
+        }
+    }
+    None
+}
+
+/// Tokens saved (fractional) by `faster` relative to `baseline` at the
+/// loss `baseline` reaches after `frac` of its run.
+pub fn tokens_saved_at(baseline: &[(u64, f64)], faster: &[(u64, f64)], frac: f64) -> Option<f64> {
+    let idx = ((baseline.len() as f64 * frac) as usize).min(baseline.len() - 1);
+    let (bt, bl) = baseline[idx];
+    let ft = tokens_to_reach(faster, bl)?;
+    Some((bt as f64 - ft as f64) / bt as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(n: u64, slope: f64, offset: f64) -> Vec<(u64, f64)> {
+        (1..=n).map(|i| (i * 100, offset - slope * i as f64)).collect()
+    }
+
+    #[test]
+    fn interp_endpoints_and_middle() {
+        let s = vec![(100u64, 5.0), (200, 3.0)];
+        assert_eq!(interp(&s, 50), 5.0);
+        assert_eq!(interp(&s, 100), 5.0);
+        assert!((interp(&s, 150) - 4.0).abs() < 1e-12);
+        assert_eq!(interp(&s, 999), 3.0);
+    }
+
+    #[test]
+    fn mean_curve_of_identical_runs_is_identity() {
+        let r = line(10, 0.1, 5.0);
+        let m = mean_curve(&[r.clone(), r.clone(), r.clone()]);
+        for (a, b) in m.iter().zip(&r) {
+            assert!((a.1 - b.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tokens_to_reach_monotone_tolerant() {
+        // noisy series: running min must ignore upward blips
+        let s = vec![(100u64, 5.0), (200, 4.0), (300, 4.5), (400, 3.0)];
+        assert_eq!(tokens_to_reach(&s, 4.0), Some(200));
+        assert_eq!(tokens_to_reach(&s, 3.5), Some(400));
+        assert_eq!(tokens_to_reach(&s, 1.0), None);
+    }
+
+    #[test]
+    fn faster_run_saves_tokens() {
+        let slow = line(100, 0.01, 5.0);
+        let fast = line(100, 0.02, 5.0); // reaches any loss in half the tokens
+        let saved = tokens_saved_at(&slow, &fast, 0.8).unwrap();
+        assert!((saved - 0.5).abs() < 0.02, "{saved}");
+        // baseline vs itself: zero saving
+        let zero = tokens_saved_at(&slow, &slow, 0.8).unwrap();
+        assert!(zero.abs() < 0.02, "{zero}");
+    }
+}

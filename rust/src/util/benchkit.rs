@@ -1,0 +1,144 @@
+//! Tiny benchmark harness (the offline stand-in for criterion).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, runs
+//! warmup + timed samples, and reports mean / stddev / min per iteration.
+//! Results are also appended to `results/bench.csv` so figure harnesses
+//! (Fig. 8) can consume them.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    /// target wall time per measurement batch
+    target: Duration,
+    samples: usize,
+    csv: Option<std::fs::File>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        std::fs::create_dir_all("results").ok();
+        let csv = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open("results/bench.csv")
+            .ok();
+        Self {
+            group: group.to_string(),
+            target: Duration::from_millis(200),
+            samples: 10,
+            csv,
+        }
+    }
+
+    pub fn with_target_ms(mut self, ms: u64) -> Self {
+        self.target = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f`, printing and returning per-iteration stats.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // calibrate: how many iterations fit in the target time?
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.target / 4 || iters >= 1 << 24 {
+                let per = dt.as_nanos().max(1) as f64 / iters as f64;
+                iters = ((self.target.as_nanos() as f64 / per).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 4;
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let var = samples_ns.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / samples_ns.len() as f64;
+        let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+            iters,
+        };
+        println!(
+            "{:<40} {:>12} ± {:>10}  (min {:>12}, {} iters/sample)",
+            format!("{}/{}", self.group, name),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.std_ns),
+            fmt_ns(stats.min_ns),
+            iters
+        );
+        if let Some(fcsv) = self.csv.as_mut() {
+            use std::io::Write;
+            let _ = writeln!(
+                fcsv,
+                "{},{},{:.1},{:.1},{:.1},{}",
+                self.group, name, stats.mean_ns, stats.std_ns, stats.min_ns, iters
+            );
+        }
+        stats
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").with_target_ms(5).with_samples(3);
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0 && s.mean_ns.is_finite());
+        assert!(s.min_ns <= s.mean_ns);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

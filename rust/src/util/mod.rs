@@ -1,0 +1,11 @@
+//! Self-contained substrates that would normally come from crates.io.
+//!
+//! This build is fully offline: only the `xla` crate's vendored dependency
+//! closure is available, so the usual ecosystem crates (serde, rand,
+//! clap, criterion, proptest) are re-implemented here at the scale this
+//! project needs. Each is small, tested, and deterministic.
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,90 @@
+//! Tiny property-testing harness (the offline stand-in for proptest).
+//!
+//! `forall(seed, cases, gen, check)` generates `cases` random inputs with
+//! a deterministic [`Rng`] and asserts the property on each; on failure it
+//! panics with the case index and a Debug dump of the failing input, which
+//! together with the fixed seed makes every failure reproducible. No
+//! shrinking — inputs are kept small by construction instead.
+
+use std::fmt::Debug;
+
+use super::rng::Rng;
+
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, check: C)
+where
+    T: Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!("property failed at case {case} (seed {seed}): {msg}\ninput: {input:#?}");
+        }
+    }
+}
+
+/// Convenience: build a Vec of `len` items from a generator.
+pub fn vec_of<T>(rng: &mut Rng, len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    (0..len).map(|_| f(rng)).collect()
+}
+
+/// Assert-style helper returning Result for `forall` checks.
+#[macro_export]
+macro_rules! prop_check {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            0,
+            200,
+            |r| (r.range(0, 100), r.range(0, 100)),
+            |&(a, b)| {
+                prop_check!(a + b >= a, "overflowed");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_invalid_property() {
+        forall(
+            0,
+            200,
+            |r| r.range(0, 100),
+            |&x| {
+                prop_check!(x < 50, "x = {x} not < 50");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut seen1 = Vec::new();
+        forall(7, 10, |r| r.next_u64(), |&x| {
+            // collect via side effect is awkward; regenerate instead
+            let _ = x;
+            Ok(())
+        });
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..10 {
+            seen1.push(rng.next_u64());
+        }
+        let mut rng2 = Rng::seed_from_u64(7);
+        let seen2: Vec<u64> = (0..10).map(|_| rng2.next_u64()).collect();
+        assert_eq!(seen1, seen2);
+    }
+}
