@@ -3,12 +3,12 @@
 //! matched token budget, and report the tokens saved to reach equal loss.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example batch_size_schedule [model] [steps] [seeds]
+//! cargo run --release --example batch_size_schedule [model] [steps] [seeds]
 //! ```
 
 use anyhow::Result;
 use nanogns::figures;
-use nanogns::runtime::{Manifest, Runtime};
+use nanogns::runtime::ReferenceFactory;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -16,9 +16,8 @@ fn main() -> Result<()> {
     let steps: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(80);
     let seeds: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
 
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::cpu()?;
-    figures::training::fig9(&rt, &manifest, &model, steps, seeds)?;
-    figures::training::fig15(&rt, &manifest, &model, steps)?;
+    let factory = ReferenceFactory;
+    figures::training::fig9(&factory, &model, steps, seeds)?;
+    figures::training::fig15(&factory, &model, steps)?;
     Ok(())
 }

@@ -6,26 +6,25 @@
 //! in variance exactly as Fig. 2 predicts.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example gns_taxonomy
+//! cargo run --release --example gns_taxonomy
 //! ```
 
 use anyhow::Result;
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
 use nanogns::gns::{gns_components, GnsAccumulator, GnsTracker};
-use nanogns::runtime::{Manifest, Runtime};
+use nanogns::runtime::{BackendFactory, Buffer, ReferenceFactory};
 use nanogns::{N_TYPES, STATS_ORDER};
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::cpu()?;
+    let factory = ReferenceFactory;
     let model = "micro";
     let steps = 30u64;
     let ranks = 4usize;
     let accum = 2usize;
 
-    let entry = manifest.config(model)?.clone();
-    let mut runner = ModelRunner::new(&rt, &manifest, model)?;
+    let entry = factory.describe(model)?;
+    let mut runner = ModelRunner::new(&factory, model)?;
     runner.init(7)?;
     let text = CorpusGenerator::new(7).generate(1 << 19);
     let base = Loader::new(&text, entry.seq_len, 7);
@@ -46,7 +45,7 @@ fn main() -> Result<()> {
         let mut gns_acc = GnsAccumulator::new(N_TYPES, mb);
         let mut micro_sq = [0f64; N_TYPES]; // mean per-microbatch grad sq-norms
         let mut rank_sq = [0f64; N_TYPES]; // mean per-rank grad sq-norms
-        let mut total_acc: Option<Vec<xla::Literal>> = None;
+        let mut total_acc: Option<Vec<Buffer>> = None;
         let mut loss_sum = 0.0;
 
         for loader in loaders.iter_mut() {

@@ -1,22 +1,21 @@
-//! Quickstart: load the AOT artifacts, train the nano model for a handful
-//! of steps on synthetic text, and print loss + GNS per step.
+//! Quickstart: train the nano model for a handful of steps on synthetic
+//! text with the hermetic reference backend, printing loss + GNS per step.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
 use nanogns::config::TrainConfig;
 use nanogns::coordinator::Trainer;
-use nanogns::runtime::{Manifest, Runtime};
+use nanogns::runtime::{BackendFactory, ReferenceFactory};
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::cpu()?;
-    println!("platform: {}", rt.platform());
+    let factory = ReferenceFactory;
+    println!("platform: {}", factory.platform());
 
     let cfg = TrainConfig::quickstart("nano", 20);
-    let entry = manifest.config(&cfg.model)?;
+    let entry = factory.describe(&cfg.model)?;
     println!(
         "model {}: {:.2}M params, microbatch {} x seq {}",
         cfg.model,
@@ -25,7 +24,7 @@ fn main() -> Result<()> {
         entry.seq_len
     );
 
-    let mut trainer = Trainer::new(&rt, &manifest, cfg)?;
+    let mut trainer = Trainer::new(&factory, cfg)?;
     println!("{:>5} {:>9} {:>9} {:>9} {:>8}", "step", "loss", "gns_tot", "gns_ln", "ms");
     for _ in 0..20 {
         let r = trainer.step()?;

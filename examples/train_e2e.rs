@@ -4,15 +4,14 @@
 //! curve and GNS series to CSV.
 //!
 //! ```sh
-//! make artifacts
-//! cargo run --release --example train_e2e                 # small (~3M), 300 steps
-//! cargo run --release --example train_e2e -- gpt111m 5    # ~113M smoke (needs `make artifacts FULL=1`)
+//! cargo run --release --example train_e2e                 # small, 300 steps
+//! cargo run --release --example train_e2e -- micro 50     # quicker smoke
 //! ```
 
 use anyhow::Result;
 use nanogns::config::TrainConfig;
 use nanogns::coordinator::Trainer;
-use nanogns::runtime::{Manifest, Runtime};
+use nanogns::runtime::{BackendFactory, ReferenceFactory};
 use nanogns::schedule::{BatchSizeSchedule, LrSchedule};
 
 fn main() -> Result<()> {
@@ -20,9 +19,8 @@ fn main() -> Result<()> {
     let model = args.get(1).cloned().unwrap_or_else(|| "small".to_string());
     let steps: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::cpu()?;
-    let entry = manifest.config(&model)?;
+    let factory = ReferenceFactory;
+    let entry = factory.describe(&model)?;
     let tokens_per_accum = (entry.microbatch * entry.seq_len) as u64;
 
     let cfg = TrainConfig {
@@ -51,9 +49,9 @@ fn main() -> Result<()> {
     println!(
         "e2e: training {model} ({:.2}M params) for {steps} steps on {}",
         entry.n_params as f64 / 1e6,
-        rt.platform()
+        factory.platform()
     );
-    let mut trainer = Trainer::new(&rt, &manifest, cfg)?;
+    let mut trainer = Trainer::new(&factory, cfg)?;
     let t0 = std::time::Instant::now();
     let mut out_records = Vec::new();
     let report_every = (steps / 20).max(1);
@@ -61,7 +59,8 @@ fn main() -> Result<()> {
         let r = trainer.step()?;
         if r.step % report_every == 0 || r.step == 1 {
             println!(
-                "step {:>5} | tokens {:>9} | loss {:>7.4} | batch {:>3} | gns_tot {:>7.2} | gns_ln {:>7.2} | {:>6.0} ms",
+                "step {:>5} | tokens {:>9} | loss {:>7.4} | batch {:>3} | gns_tot {:>7.2} | \
+                 gns_ln {:>7.2} | {:>6.0} ms",
                 r.step, r.tokens, r.loss, r.b_big as u64, r.gns_total, r.gns_layernorm, r.step_ms
             );
         }
@@ -82,8 +81,15 @@ fn main() -> Result<()> {
     let first = out_records.first().unwrap().loss;
     let last = out_records.last().unwrap().loss;
     println!("---");
-    println!("trained {} tokens in {wall:.1}s ({:.0} tok/s)", trainer.tokens(), trainer.tokens() as f64 / wall);
-    println!("loss: {first:.4} -> {last:.4}; held-out {eval:.4} (ln 256 = {:.4} at random)", (256f64).ln());
+    println!(
+        "trained {} tokens in {wall:.1}s ({:.0} tok/s)",
+        trainer.tokens(),
+        trainer.tokens() as f64 / wall
+    );
+    println!(
+        "loss: {first:.4} -> {last:.4}; held-out {eval:.4} (ln 256 = {:.4} at random)",
+        (256f64).ln()
+    );
     println!("final GNS: total {:.2}, layernorm {:.2}",
              out_records.last().unwrap().gns_total,
              out_records.last().unwrap().gns_layernorm);

@@ -9,7 +9,7 @@
 
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
-use nanogns::runtime::{tensor, Manifest, Runtime};
+use nanogns::runtime::{pjrt, Manifest, PjrtFactory, Runtime};
 use nanogns::util::benchkit::Bench;
 
 fn main() {
@@ -21,6 +21,7 @@ fn main() {
         }
     };
     let rt = Runtime::cpu().expect("pjrt cpu client");
+    let factory = PjrtFactory::from_parts(rt.clone(), manifest.clone());
     println!("§5.1 ablation: instrumented vs plain grad step");
     let mut rows = Vec::new();
     for model in ["nano", "micro", "small"] {
@@ -29,13 +30,13 @@ fn main() {
             eprintln!("{model}: no grad_step_plain artifact (re-run make artifacts)");
             continue;
         }
-        let mut runner = ModelRunner::new(&rt, &manifest, model).unwrap();
+        let mut runner = ModelRunner::new(&factory, model).unwrap();
         runner.init(0).unwrap();
         let text = CorpusGenerator::new(0).generate(1 << 16);
         let mut loader = Loader::new(&text, entry.seq_len, 0);
         let batch = loader.next_batch(entry.microbatch);
-        let ids = tensor::i32_literal(&[batch.batch, batch.seq_len], &batch.inputs).unwrap();
-        let tgt = tensor::i32_literal(&[batch.batch, batch.seq_len], &batch.targets).unwrap();
+        let ids = pjrt::i32_literal(&[batch.batch, batch.seq_len], &batch.inputs).unwrap();
+        let tgt = pjrt::i32_literal(&[batch.batch, batch.seq_len], &batch.targets).unwrap();
 
         let inst = rt
             .load(entry.artifact_path(&manifest.root, "grad_step").unwrap())
@@ -43,11 +44,19 @@ fn main() {
         let plain = rt
             .load(entry.artifact_path(&manifest.root, "grad_step_plain").unwrap())
             .unwrap();
-        let mut args: Vec<&xla::Literal> = runner.params.iter().collect();
-        args.push(&ids);
-        args.push(&tgt);
+        let mut args: Vec<xla::Literal> = runner
+            .params
+            .iter()
+            .map(|b| match b {
+                nanogns::runtime::Buffer::Pjrt(l) => l.clone(),
+                other => pjrt::tensor_to_literal(&other.to_tensor().unwrap()).unwrap(),
+            })
+            .collect();
+        args.push(ids);
+        args.push(tgt);
 
-        let mut bench = Bench::new(&format!("gradstep_{model}")).with_samples(5).with_target_ms(400);
+        let mut bench =
+            Bench::new(&format!("gradstep_{model}")).with_samples(5).with_target_ms(400);
         let p = bench.run("plain", || {
             plain.run(&args).unwrap();
         });

@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench ln_kernel` (uses the in-tree benchkit; this
 //! offline build has no criterion).
 
-use nanogns::runtime::{tensor, Manifest, Runtime};
+use nanogns::runtime::{pjrt, Manifest, Runtime, Tensor};
 use nanogns::util::benchkit::Bench;
 
 fn main() {
@@ -24,16 +24,17 @@ fn main() {
     let mut rows: Vec<(usize, String, f64)> = Vec::new();
     for entry in &manifest.ln_bench {
         let (b, t, k) = (entry.b, entry.t, entry.k);
-        let x = tensor::Tensor::new(
-            vec![b, t, k],
-            (0..b * t * k).map(|i| ((i % 97) as f32 - 48.0) / 48.0).collect(),
+        let x = pjrt::tensor_to_literal(
+            &Tensor::new(
+                vec![b, t, k],
+                (0..b * t * k).map(|i| ((i % 97) as f32 - 48.0) / 48.0).collect(),
+            )
+            .unwrap(),
         )
-        .unwrap()
-        .to_literal()
         .unwrap();
         let g = x.clone();
-        let gamma = tensor::Tensor::new(vec![k], vec![1.0; k]).unwrap().to_literal().unwrap();
-        let beta = tensor::Tensor::new(vec![k], vec![0.0; k]).unwrap().to_literal().unwrap();
+        let gamma = pjrt::tensor_to_literal(&Tensor::new(vec![k], vec![1.0; k]).unwrap()).unwrap();
+        let beta = pjrt::tensor_to_literal(&Tensor::new(vec![k], vec![0.0; k]).unwrap()).unwrap();
 
         let mut bench = Bench::new(&format!("ln_backward_k{k}")).with_samples(10);
         let mut variants: Vec<&String> = entry.variants.keys().collect();

@@ -2,27 +2,22 @@
 //! update, grad_sqnorms — the coordinator's hot path per Section 5's
 //! requirement that GNS tracking adds no training-time overhead.
 //!
+//! Runs on the hermetic reference backend, so this benchmark works on a
+//! bare machine and tracks the pure-Rust kernels' trajectory over PRs.
+//!
 //! Run: `cargo bench --bench train_step`.
 
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
-use nanogns::runtime::{Manifest, Runtime};
+use nanogns::runtime::ReferenceFactory;
 use nanogns::util::benchkit::Bench;
 
 fn main() {
-    let manifest = match Manifest::load("artifacts") {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping train_step bench: {e}");
-            return;
-        }
-    };
-    let rt = Runtime::cpu().expect("pjrt cpu client");
     for model in ["nano", "micro", "small"] {
-        if manifest.config(model).is_err() {
+        let Ok(mut runner) = ModelRunner::new(&ReferenceFactory, model) else {
+            eprintln!("skipping unknown model {model}");
             continue;
-        }
-        let mut runner = ModelRunner::new(&rt, &manifest, model).unwrap();
+        };
         runner.init(0).unwrap();
         let text = CorpusGenerator::new(0).generate(1 << 17);
         let mut loader = Loader::new(&text, runner.entry.seq_len, 0);

@@ -8,14 +8,13 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{ensure, Result};
-use xla::Literal;
 
 use crate::runtime::tensor::Tensor;
-use crate::runtime::ModelEntry;
+use crate::runtime::{Buffer, ModelEntry};
 
 const MAGIC: &[u8; 8] = b"NANOGNS1";
 
-pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Literal]) -> Result<()> {
+pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Buffer]) -> Result<()> {
     ensure!(params.len() == entry.params.len(), "param count mismatch");
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir)?;
@@ -23,8 +22,8 @@ pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Literal]) -> R
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MAGIC)?;
     w.write_all(&(params.len() as u32).to_le_bytes())?;
-    for (spec, lit) in entry.params.iter().zip(params) {
-        let t = Tensor::from_literal(lit)?;
+    for (spec, buf) in entry.params.iter().zip(params) {
+        let t = buf.to_tensor()?;
         ensure!(t.shape == spec.shape, "{}: shape drift", spec.name);
         let name = spec.name.as_bytes();
         w.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -41,7 +40,7 @@ pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Literal]) -> R
     Ok(())
 }
 
-pub fn load(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<Vec<Literal>> {
+pub fn load(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<Vec<Buffer>> {
     let mut r = BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -77,7 +76,7 @@ pub fn load(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<Vec<Literal>> 
             r.read_exact(&mut buf4)?;
             *v = f32::from_le_bytes(buf4);
         }
-        out.push(Tensor::new(shape, data)?.to_literal()?);
+        out.push(Buffer::from_tensor(Tensor::new(shape, data)?));
     }
     Ok(out)
 }

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::data::Loader;
 use crate::gns::{gns_components, GnsComponents};
+use crate::runtime::Buffer;
 use crate::N_TYPES;
 
 use super::runner::ModelRunner;
@@ -25,7 +26,7 @@ pub struct DdpObservation {
     /// mean loss across all microbatches
     pub loss: f64,
     /// the all-reduced (mean) gradient, for the optimizer to consume
-    pub mean_grads: Vec<xla::Literal>,
+    pub mean_grads: Vec<Buffer>,
     pub b_big: f64,
     pub b_small: f64,
 }
@@ -57,7 +58,7 @@ pub fn ddp_step_with_stats(
     let mb = runner.entry.microbatch;
 
     let mut rank_sqnorms: Vec<[f64; N_TYPES]> = Vec::with_capacity(ranks);
-    let mut all_acc: Option<Vec<xla::Literal>> = None;
+    let mut all_acc: Option<Vec<Buffer>> = None;
     let mut loss_sum = 0f64;
 
     for loader in loaders.iter_mut() {

@@ -1,8 +1,8 @@
 //! L3 coordinator: the training orchestration layer.
 //!
-//! * [`runner`] — owns a model's device state (params, Adam moments) and
-//!   dispatches the AOT artifacts (init / grad_step / accumulate /
-//!   adamw_update / grad_sqnorms / eval_step);
+//! * [`runner`] — owns a model's training state (params, Adam moments)
+//!   and dispatches it through the `runtime::Backend` trait (init /
+//!   grad_step / accumulate / adamw_update / grad_sqnorms / eval);
 //! * [`trainer`] — the optimizer-step loop: microbatch gradient
 //!   accumulation, online GNS tracking, LR + batch-size schedules,
 //!   telemetry, checkpoints;
@@ -11,8 +11,8 @@
 //!   against the per-example method (Fig. 16);
 //! * [`checkpoint`] — binary param snapshots.
 //!
-//! Python never appears here: artifacts are loaded from disk and executed
-//! through PJRT.
+//! Python never appears here: the default backend is pure Rust, and the
+//! `pjrt` feature executes pre-compiled artifacts from disk.
 
 pub mod checkpoint;
 pub mod ddp;

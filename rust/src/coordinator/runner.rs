@@ -1,53 +1,50 @@
-//! Model runner: device state + artifact dispatch for one model config.
+//! Model runner: training state + backend dispatch for one model config.
+//!
+//! Owns parameters and AdamW moments as opaque [`Buffer`]s and forwards
+//! the compute to whichever [`Backend`] it was built with (reference or
+//! PJRT). The backend itself is stateless, so snapshot/restore (run
+//! forking, Fig. 6) and checkpointing are pure buffer copies.
 
-use std::collections::HashMap;
-use std::rc::Rc;
-
-use anyhow::{ensure, anyhow, Result};
-use xla::Literal;
+use anyhow::{ensure, Result};
 
 use crate::data::Batch;
-use crate::runtime::{tensor, Executable, Manifest, ModelEntry, Runtime};
+use crate::runtime::{Backend, BackendFactory, Buffer, ModelEntry};
 use crate::N_TYPES;
 
-/// Output of one microbatch gradient step.
-pub struct GradOut {
-    pub loss: f32,
-    pub grads: Vec<Literal>,
-    /// Raw per-layer-type `sum_b ||w'_b||^2` (pre-correction) stats.
-    pub stats: [f32; N_TYPES],
-}
+pub use crate::runtime::backend::GradOut;
 
 /// Deep copy of a runner's mutable state.
 #[derive(Clone)]
 pub struct RunnerSnapshot {
-    params: Vec<Literal>,
-    m: Vec<Literal>,
-    v: Vec<Literal>,
+    params: Vec<Buffer>,
+    m: Vec<Buffer>,
+    v: Vec<Buffer>,
     step: u64,
 }
 
-/// Owns parameters + optimizer state as XLA literals and runs the
-/// compiled artifacts. All shapes/orders come from the manifest.
+/// Owns parameters + optimizer state and runs them through a backend.
 pub struct ModelRunner {
+    backend: Box<dyn Backend>,
     pub entry: ModelEntry,
-    exes: HashMap<String, Rc<Executable>>,
-    pub params: Vec<Literal>,
-    m: Vec<Literal>,
-    v: Vec<Literal>,
+    pub params: Vec<Buffer>,
+    m: Vec<Buffer>,
+    v: Vec<Buffer>,
     /// Optimizer step count (1-based after first update).
     pub step: u64,
 }
 
 impl ModelRunner {
-    pub fn new(rt: &Runtime, manifest: &Manifest, config: &str) -> Result<Self> {
-        let entry = manifest.config(config)?.clone();
-        let exes = rt.load_model(manifest, config)?;
-        Ok(Self { entry, exes, params: Vec::new(), m: Vec::new(), v: Vec::new(), step: 0 })
+    pub fn new(factory: &dyn BackendFactory, model: &str) -> Result<Self> {
+        Ok(Self::from_backend(factory.create(model)?))
     }
 
-    fn exe(&self, name: &str) -> Result<&Rc<Executable>> {
-        self.exes.get(name).ok_or_else(|| anyhow!("artifact {name} not loaded"))
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        let entry = backend.entry().clone();
+        Self { backend, entry, params: Vec::new(), m: Vec::new(), v: Vec::new(), step: 0 }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn n_params_tensors(&self) -> usize {
@@ -56,138 +53,81 @@ impl ModelRunner {
 
     /// Initialize parameters and zero optimizer state from a seed.
     pub fn init(&mut self, seed: i32) -> Result<()> {
-        let out = self.exe("init")?.run(&[tensor::i32_scalar(seed)])?;
+        let out = self.backend.init(seed)?;
         ensure!(
             out.len() == self.entry.params.len(),
-            "init returned {} tensors, manifest says {}",
+            "init returned {} tensors, model has {}",
             out.len(),
             self.entry.params.len()
         );
-        self.m = out
-            .iter()
-            .zip(&self.entry.params)
-            .map(|(_, spec)| {
-                tensor::Tensor::zeros(&spec.shape).to_literal()
-            })
-            .collect::<Result<Vec<_>>>()?;
-        self.v = self
-            .entry
-            .params
-            .iter()
-            .map(|spec| tensor::Tensor::zeros(&spec.shape).to_literal())
-            .collect::<Result<Vec<_>>>()?;
+        self.m = self.backend.zero_grads()?;
+        self.v = self.backend.zero_grads()?;
         self.params = out;
         self.step = 0;
         Ok(())
     }
 
     /// Replace parameters (e.g. from a checkpoint); resets Adam state.
-    pub fn set_params(&mut self, params: Vec<Literal>) -> Result<()> {
+    pub fn set_params(&mut self, params: Vec<Buffer>) -> Result<()> {
         ensure!(params.len() == self.entry.params.len(), "param count mismatch");
-        self.m = self
-            .entry
-            .params
-            .iter()
-            .map(|s| tensor::Tensor::zeros(&s.shape).to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        self.v = self
-            .entry
-            .params
-            .iter()
-            .map(|s| tensor::Tensor::zeros(&s.shape).to_literal())
-            .collect::<Result<Vec<_>>>()?;
+        self.m = self.backend.zero_grads()?;
+        self.v = self.backend.zero_grads()?;
         self.params = params;
         self.step = 0;
         Ok(())
     }
 
-    fn batch_literals(&self, batch: &Batch) -> Result<(Literal, Literal)> {
+    fn check_batch(&self, batch: &Batch) -> Result<()> {
         ensure!(
             batch.batch == self.entry.microbatch && batch.seq_len == self.entry.seq_len,
-            "batch shape ({}, {}) != artifact shape ({}, {})",
+            "batch shape ({}, {}) != model shape ({}, {})",
             batch.batch,
             batch.seq_len,
             self.entry.microbatch,
             self.entry.seq_len
         );
-        let shape = [batch.batch, batch.seq_len];
-        Ok((
-            tensor::i32_literal(&shape, &batch.inputs)?,
-            tensor::i32_literal(&shape, &batch.targets)?,
-        ))
+        Ok(())
     }
 
     /// Forward+backward on one microbatch: loss, gradients, GNS stats.
     pub fn grad_microbatch(&self, batch: &Batch) -> Result<GradOut> {
-        let (ids, tgt) = self.batch_literals(batch)?;
-        let mut args: Vec<&Literal> = self.params.iter().collect();
-        args.push(&ids);
-        args.push(&tgt);
-        let mut out = self.exe("grad_step")?.run(&args)?;
-        let n = self.entry.params.len();
-        ensure!(out.len() == n + 2, "grad_step returned {} outputs", out.len());
-        let stats_lit = out.pop().unwrap();
-        let stats_v = tensor::vec_f32(&stats_lit)?;
-        ensure!(stats_v.len() == N_TYPES, "stats len {}", stats_v.len());
-        let mut stats = [0f32; N_TYPES];
-        stats.copy_from_slice(&stats_v);
-        let grads = out.split_off(1);
-        let loss = tensor::scalar_f32(&out[0])?;
-        Ok(GradOut { loss, grads, stats })
+        self.check_batch(batch)?;
+        self.backend.grad_step(&self.params, batch)
     }
 
     /// acc += grads (element-wise over the whole parameter list).
-    pub fn accumulate(&self, acc: Vec<Literal>, grads: &[Literal]) -> Result<Vec<Literal>> {
-        let mut args: Vec<&Literal> = acc.iter().collect();
-        args.extend(grads.iter());
-        self.exe("accumulate")?.run(&args)
+    pub fn accumulate(&self, acc: Vec<Buffer>, grads: &[Buffer]) -> Result<Vec<Buffer>> {
+        self.backend.accumulate(acc, grads)
     }
 
     /// Per-layer-type squared norms of a gradient set (Eq. 4's big-batch
     /// component, computed on the accumulated gradient).
-    pub fn grad_sqnorms(&self, grads: &[Literal]) -> Result<[f64; N_TYPES]> {
-        let args: Vec<&Literal> = grads.iter().collect();
-        let out = self.exe("grad_sqnorms")?.run1(&args)?;
-        let v = tensor::vec_f32(&out)?;
-        ensure!(v.len() == N_TYPES);
-        let mut a = [0f64; N_TYPES];
-        for (d, s) in a.iter_mut().zip(v) {
-            *d = s as f64;
-        }
-        Ok(a)
+    pub fn grad_sqnorms(&self, grads: &[Buffer]) -> Result<[f64; N_TYPES]> {
+        self.backend.grad_sqnorms(grads)
     }
 
-    /// AdamW update with `grads * grad_scale`; advances `self.step`.
-    pub fn adamw_update(&mut self, grads: &[Literal], lr: f64, grad_scale: f64) -> Result<()> {
+    /// AdamW update with `grads * grad_scale`; advances `self.step` on
+    /// success. The state buffers are moved into the backend, so on a
+    /// backend error the runner's state is consumed and must be rebuilt
+    /// via [`Self::init`], [`Self::set_params`], or [`Self::restore`]
+    /// before further use (the step counter is left unadvanced).
+    pub fn adamw_update(&mut self, grads: &[Buffer], lr: f64, grad_scale: f64) -> Result<()> {
+        let params = std::mem::take(&mut self.params);
+        let m = std::mem::take(&mut self.m);
+        let v = std::mem::take(&mut self.v);
+        let (p, m, v) =
+            self.backend.adamw_update(params, m, v, grads, self.step + 1, lr, grad_scale)?;
         self.step += 1;
-        let step_l = tensor::f32_scalar(self.step as f32);
-        let lr_l = tensor::f32_scalar(lr as f32);
-        let scale_l = tensor::f32_scalar(grad_scale as f32);
-        let mut args: Vec<&Literal> = Vec::with_capacity(4 * self.params.len() + 3);
-        args.extend(self.params.iter());
-        args.extend(self.m.iter());
-        args.extend(self.v.iter());
-        args.extend(grads.iter());
-        args.push(&step_l);
-        args.push(&lr_l);
-        args.push(&scale_l);
-        let mut out = self.exe("adamw_update")?.run(&args)?;
-        let n = self.entry.params.len();
-        ensure!(out.len() == 3 * n, "adamw_update returned {} outputs", out.len());
-        self.v = out.split_off(2 * n);
-        self.m = out.split_off(n);
-        self.params = out;
+        self.params = p;
+        self.m = m;
+        self.v = v;
         Ok(())
     }
 
     /// Evaluation loss on one batch (no stats, no grads).
     pub fn eval(&self, batch: &Batch) -> Result<f32> {
-        let (ids, tgt) = self.batch_literals(batch)?;
-        let mut args: Vec<&Literal> = self.params.iter().collect();
-        args.push(&ids);
-        args.push(&tgt);
-        let out = self.exe("eval_step")?.run1(&args)?;
-        tensor::scalar_f32(&out)
+        self.check_batch(batch)?;
+        self.backend.eval(&self.params, batch)
     }
 
     /// Deep-copy the full optimizer state (for run forking, Fig. 6).
@@ -207,12 +147,8 @@ impl ModelRunner {
         self.step = s.step;
     }
 
-    /// Zero-filled gradient accumulator literal set.
-    pub fn zero_grads(&self) -> Result<Vec<Literal>> {
-        self.entry
-            .params
-            .iter()
-            .map(|s| tensor::Tensor::zeros(&s.shape).to_literal())
-            .collect()
+    /// Zero-filled gradient accumulator buffer set.
+    pub fn zero_grads(&self) -> Result<Vec<Buffer>> {
+        self.backend.zero_grads()
     }
 }

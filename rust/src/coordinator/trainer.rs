@@ -19,7 +19,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::data::{CorpusGenerator, Loader};
 use crate::gns::{GnsAccumulator, GnsTracker};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::BackendFactory;
 use crate::schedule::GnsController;
 use crate::telemetry::{CsvLogger, TRAIN_HEADER};
 use crate::{N_TYPES, STATS_ORDER};
@@ -74,8 +74,8 @@ pub struct TrainerSnapshot {
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
-        let mut runner = ModelRunner::new(rt, manifest, &cfg.model)?;
+    pub fn new(factory: &dyn BackendFactory, cfg: TrainConfig) -> Result<Self> {
+        let mut runner = ModelRunner::new(factory, &cfg.model)?;
         runner.init(cfg.seed as i32)?;
         let text = CorpusGenerator::new(cfg.seed).generate(cfg.corpus_bytes);
         let base = Loader::new(&text, runner.entry.seq_len, cfg.seed);
@@ -109,7 +109,11 @@ impl Trainer {
 
     /// Replace the batch-size schedule mid-run (Fig. 6 interventions),
     /// seeding the controller's hysteresis at `start_accum`.
-    pub fn set_batch_schedule(&mut self, s: crate::schedule::BatchSizeSchedule, start_accum: usize) {
+    pub fn set_batch_schedule(
+        &mut self,
+        s: crate::schedule::BatchSizeSchedule,
+        start_accum: usize,
+    ) {
         self.controller = GnsController::with_start(s, start_accum);
     }
 

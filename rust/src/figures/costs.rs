@@ -127,7 +127,10 @@ pub fn fig4() -> Result<()> {
     }
     csv.flush()?;
     println!("(series -> {})", path.display());
-    println!("shape check: Li wins short-context/large-model; simultaneous wins long context; LN-only far below both");
+    println!(
+        "shape check: Li wins short-context/large-model; simultaneous wins long context; \
+         LN-only far below both"
+    );
     Ok(())
 }
 

@@ -11,7 +11,8 @@ use xla::Literal;
 
 use crate::util::rng::Rng;
 
-use crate::runtime::{tensor, Manifest, Runtime};
+use crate::runtime::pjrt::{self, Runtime};
+use crate::runtime::{Manifest, Tensor};
 use crate::telemetry::CsvLogger;
 
 struct TsHarness {
@@ -28,7 +29,9 @@ impl TsHarness {
         let entry = manifest
             .instability
             .as_ref()
-            .ok_or_else(|| anyhow!("manifest has no instability artifacts (re-run make artifacts)"))?
+            .ok_or_else(|| {
+                anyhow!("manifest has no instability artifacts (re-run make artifacts)")
+            })?
             .clone();
         let mut exes = std::collections::HashMap::new();
         for (name, rel) in &entry.artifacts {
@@ -38,7 +41,7 @@ impl TsHarness {
         let mut init_out = exes
             .get("ts_init")
             .ok_or_else(|| anyhow!("ts_init missing"))?
-            .run(&[tensor::i32_scalar(seed)])?;
+            .run(&[pjrt::i32_scalar(seed)])?;
         let student0 = init_out.split_off(n);
         let teacher = init_out;
         let students = variants
@@ -59,14 +62,14 @@ impl TsHarness {
         let (b, t, d) = self.shape;
         let data: Vec<f32> =
             (0..b * t * d).map(|_| self.rng.normal_f32()).collect();
-        tensor::Tensor::new(vec![b, t, d], data)?.to_literal()
+        pjrt::tensor_to_literal(&Tensor::new(vec![b, t, d], data)?)
     }
 
     /// One step for every student on the *same* input; returns per-student
     /// (loss, dist_to_teacher, qkv_w_norm, qkv_b_norm).
     fn step(&mut self, lr: f32) -> Result<Vec<(f64, f64, f64, f64)>> {
         let x = self.random_input()?;
-        let lr_l = tensor::f32_scalar(lr);
+        let lr_l = pjrt::f32_scalar(lr);
         let mut out_metrics = Vec::new();
         for (variant, params) in self.students.iter_mut() {
             let exe = self
@@ -79,10 +82,10 @@ impl TsHarness {
             args.push(&lr_l);
             let mut out = exe.run(&args)?;
             anyhow::ensure!(out.len() == self.n + 4, "ts_step arity {}", out.len());
-            let qkv_b_norm = tensor::scalar_f32(&out.pop().unwrap())? as f64;
-            let qkv_w_norm = tensor::scalar_f32(&out.pop().unwrap())? as f64;
-            let dist = tensor::scalar_f32(&out.pop().unwrap())? as f64;
-            let loss = tensor::scalar_f32(&out.pop().unwrap())? as f64;
+            let qkv_b_norm = pjrt::scalar_f32(&out.pop().unwrap())? as f64;
+            let qkv_w_norm = pjrt::scalar_f32(&out.pop().unwrap())? as f64;
+            let dist = pjrt::scalar_f32(&out.pop().unwrap())? as f64;
+            let loss = pjrt::scalar_f32(&out.pop().unwrap())? as f64;
             *params = out;
             out_metrics.push((loss, dist, qkv_w_norm, qkv_b_norm));
         }
@@ -93,8 +96,8 @@ impl TsHarness {
     fn student_distance(&self, a: usize, b: usize) -> Result<f64> {
         let mut sq = 0f64;
         for (pa, pb) in self.students[a].1.iter().zip(self.students[b].1.iter()) {
-            let ta = tensor::Tensor::from_literal(pa)?;
-            let tb = tensor::Tensor::from_literal(pb)?;
+            let ta = pjrt::literal_to_tensor(pa)?;
+            let tb = pjrt::literal_to_tensor(pb)?;
             sq += ta
                 .data
                 .iter()

@@ -5,6 +5,7 @@
 //! budget so smoke tests can run them cheaply.
 
 pub mod costs;
+#[cfg(feature = "pjrt")]
 pub mod instability;
 pub mod simulation;
 pub mod training;

@@ -44,7 +44,10 @@ pub fn fig2(samples_budget: usize, seeds: u64) -> Result<()> {
     }
     csv.flush()?;
     println!("(series -> {})", path.display());
-    println!("shape check: stderr flat in B_big, increasing in B_small — per-example (B_small=1) is minimal-variance");
+    println!(
+        "shape check: stderr flat in B_big, increasing in B_small — per-example (B_small=1) \
+         is minimal-variance"
+    );
     Ok(())
 }
 

@@ -1,7 +1,7 @@
 //! Training-based figures: 5, 6, 7, 9, 10, 14, 15, 16.
 //!
-//! Each harness runs real training through the coordinator (AOT artifacts
-//! via PJRT; Python is not involved) and prints the paper's series.
+//! Each harness runs real training through the coordinator on whatever
+//! [`BackendFactory`] the caller provides and prints the paper's series.
 //! `steps` budgets are caller-controlled so smoke tests stay cheap; the
 //! recorded runs in EXPERIMENTS.md use the defaults from main.rs.
 
@@ -13,7 +13,7 @@ use crate::coordinator::{ddp, Trainer};
 use crate::data::{CorpusGenerator, Loader};
 use crate::gns::ema::ema_series;
 use crate::gns::{linreg, GnsAccumulator, GnsTracker};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::BackendFactory;
 use crate::schedule::{BatchSizeSchedule, LrSchedule};
 use crate::telemetry::summary::{mean_curve, tokens_to_reach};
 use crate::telemetry::{CsvLogger, TRAIN_HEADER};
@@ -26,7 +26,12 @@ fn base_cfg(model: &str, steps: u64, seed: u64) -> TrainConfig {
         steps,
         seed,
         ranks: 1,
-        lr: LrSchedule { max_lr: 1e-3, min_lr: 1e-4, warmup_steps: steps / 20 + 1, decay_steps: steps },
+        lr: LrSchedule {
+            max_lr: 1e-3,
+            min_lr: 1e-4,
+            warmup_steps: steps / 20 + 1,
+            decay_steps: steps,
+        },
         batch_size: BatchSizeSchedule::Fixed { accum: 2 },
         gns_alpha: 0.05,
         corpus_bytes: 1 << 19,
@@ -56,16 +61,21 @@ fn ti(name: &str) -> usize {
 
 /// Fig. 5 (fixed batch) / Fig. 14 (linear schedule): per-layer-type phase
 /// plot of the Eq. 4/5 components and the resulting GNS curves.
-pub fn fig5(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, linear_schedule: bool) -> Result<()> {
+pub fn fig5(
+    f: &dyn BackendFactory,
+    model: &str,
+    steps: u64,
+    linear_schedule: bool,
+) -> Result<()> {
     let mut cfg = base_cfg(model, steps, 0);
     if linear_schedule {
         cfg.batch_size = BatchSizeSchedule::Linear {
             min_accum: 1,
             max_accum: 4,
-            ramp_tokens: steps * 2 * cfg_tokens_per_accum(manifest, model)?,
+            ramp_tokens: steps * 2 * cfg_tokens_per_accum(f, model)?,
         };
     }
-    let mut tr = Trainer::new(rt, manifest, cfg)?;
+    let mut tr = Trainer::new(f, cfg)?;
     let out = tr.run()?;
     let name = if linear_schedule { "fig14_phase_linear.csv" } else { "fig5_phase.csv" };
     let path = write_records(name, &out.records)?;
@@ -88,12 +98,14 @@ pub fn fig5(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, linear_s
         );
     }
     println!("(full series -> {})", path.display());
-    println!("shape check: LN components orders of magnitude smaller, but GNS curves track each other");
+    println!(
+        "shape check: LN components orders of magnitude smaller, but GNS curves track each other"
+    );
     Ok(())
 }
 
-fn cfg_tokens_per_accum(manifest: &Manifest, model: &str) -> Result<u64> {
-    let e = manifest.config(model)?;
+fn cfg_tokens_per_accum(f: &dyn BackendFactory, model: &str) -> Result<u64> {
+    let e = f.describe(model)?;
     Ok((e.microbatch * e.seq_len) as u64)
 }
 
@@ -103,9 +115,9 @@ fn cfg_tokens_per_accum(manifest: &Manifest, model: &str) -> Result<u64> {
 
 /// Fig. 6: fork a run mid-training, varying LR or batch size; GNS should
 /// respond to LR (inverse temperature) per McCandlish et al.'s prediction.
-pub fn fig6(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Result<()> {
+pub fn fig6(f: &dyn BackendFactory, model: &str, steps: u64) -> Result<()> {
     let cfg = base_cfg(model, steps, 1);
-    let mut tr = Trainer::new(rt, manifest, cfg)?;
+    let mut tr = Trainer::new(f, cfg)?;
     let warm = steps / 2;
     for _ in 0..warm {
         tr.step()?;
@@ -120,7 +132,8 @@ pub fn fig6(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Resul
         ("bs_half", 1.0, 1),
     ];
     let path = super::results_path("fig6_temperature.csv")?;
-    let mut csv = CsvLogger::to_file(&path, &["branch", "step", "gns_total", "gns_layernorm", "loss"])?;
+    let mut csv =
+        CsvLogger::to_file(&path, &["branch", "step", "gns_total", "gns_layernorm", "loss"])?;
     println!("Fig. 6: GNS response to mid-training LR/BS interventions ({model})");
     println!("{:>10} {:>12} {:>12}", "branch", "gns_before", "gns_after");
     let gns_before = tr.tracker.gns_total().unwrap_or(f64::NAN);
@@ -139,7 +152,10 @@ pub fn fig6(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Resul
     csv.flush()?;
     println!("(series -> {}; branch ids in order {:?})", path.display(),
              branches.map(|b| b.0));
-    println!("shape check (paper): GNS rises with lower LR, falls with higher LR; BS changes move it little");
+    println!(
+        "shape check (paper): GNS rises with lower LR, falls with higher LR; BS changes move \
+         it little"
+    );
     Ok(())
 }
 
@@ -147,9 +163,9 @@ pub fn fig6(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Resul
 // Fig. 7: regression of total GNS on per-layer-type GNS across EMA alphas
 // ---------------------------------------------------------------------------
 
-pub fn fig7(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Result<()> {
+pub fn fig7(f: &dyn BackendFactory, model: &str, steps: u64) -> Result<()> {
     let cfg = base_cfg(model, steps, 2);
-    let mut tr = Trainer::new(rt, manifest, cfg)?;
+    let mut tr = Trainer::new(f, cfg)?;
     let out = tr.run()?;
     write_records("fig7_run.csv", &out.records)?;
     fig7_from_records(&out.records)
@@ -169,7 +185,8 @@ pub fn fig7_from_records(records: &[StepRecord]) -> Result<()> {
         // re-smooth raw components offline at this alpha, ratio last
         let total_g: Vec<f64> = recs.iter().map(|r| r.raw_g_sq_total).collect();
         let total_s: Vec<f64> = recs.iter().map(|r| r.raw_s_total).collect();
-        let total_gns: Vec<f64> = ratio_series(&ema_series(&total_s, alpha), &ema_series(&total_g, alpha));
+        let total_gns: Vec<f64> =
+            ratio_series(&ema_series(&total_s, alpha), &ema_series(&total_g, alpha));
         for (t, name) in STATS_ORDER.iter().enumerate() {
             let g: Vec<f64> = recs.iter().map(|r| r.raw_g_sq[t]).collect();
             let s: Vec<f64> = recs.iter().map(|r| r.raw_s[t]).collect();
@@ -197,14 +214,15 @@ fn ratio_series(num: &[f64], den: &[f64]) -> Vec<f64> {
 // Fig. 9 (+15): batch-size schedule case study
 // ---------------------------------------------------------------------------
 
-pub fn fig9(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, seeds: u64) -> Result<()> {
-    let tpa = cfg_tokens_per_accum(manifest, model)?;
+pub fn fig9(f: &dyn BackendFactory, model: &str, steps: u64, seeds: u64) -> Result<()> {
+    let tpa = cfg_tokens_per_accum(f, model)?;
     let max_accum = 4usize;
     let fixed_tokens_per_step = tpa * max_accum as u64;
     let total_tokens = steps * fixed_tokens_per_step;
 
     let path = super::results_path("fig9_schedule.csv")?;
-    let mut csv = CsvLogger::to_file(&path, &["variant", "seed", "tokens", "loss", "accum", "gns_total"])?;
+    let mut csv =
+        CsvLogger::to_file(&path, &["variant", "seed", "tokens", "loss", "accum", "gns_total"])?;
 
     let mut fixed_runs: Vec<Vec<(u64, f64)>> = Vec::new();
     let mut sched_runs: Vec<Vec<(u64, f64)>> = Vec::new();
@@ -219,11 +237,18 @@ pub fn fig9(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, seeds: u
             };
             // token-budget matched: schedule runs until it consumes the
             // same number of tokens as the fixed run
-            let mut tr = Trainer::new(rt, manifest, cfg)?;
+            let mut tr = Trainer::new(f, cfg)?;
             let mut series = Vec::new();
             while tr.tokens() < total_tokens {
                 let r = tr.step()?;
-                csv.row(&[vi as f64, seed as f64, r.tokens as f64, r.loss, r.accum as f64, r.gns_total])?;
+                csv.row(&[
+                    vi as f64,
+                    seed as f64,
+                    r.tokens as f64,
+                    r.loss,
+                    r.accum as f64,
+                    r.gns_total,
+                ])?;
                 series.push((r.tokens, r.loss));
             }
             if linear {
@@ -259,15 +284,15 @@ pub fn fig9(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, seeds: u
 }
 
 /// Fig. 15: the schedule itself + GNS observed along it.
-pub fn fig15(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Result<()> {
-    let tpa = cfg_tokens_per_accum(manifest, model)?;
+pub fn fig15(f: &dyn BackendFactory, model: &str, steps: u64) -> Result<()> {
+    let tpa = cfg_tokens_per_accum(f, model)?;
     let mut cfg = base_cfg(model, steps, 3);
     cfg.batch_size = BatchSizeSchedule::Linear {
         min_accum: 1,
         max_accum: 4,
         ramp_tokens: steps * 2 * tpa,
     };
-    let mut tr = Trainer::new(rt, manifest, cfg)?;
+    let mut tr = Trainer::new(f, cfg)?;
     let out = tr.run()?;
     let path = write_records("fig15_schedule.csv", &out.records)?;
     println!("Fig. 15: batch-size schedule and observed GNS ({model})");
@@ -287,7 +312,7 @@ pub fn fig15(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64) -> Resu
 // Fig. 10: Chinchilla-optimality LR sweep across sizes
 // ---------------------------------------------------------------------------
 
-pub fn fig10(rt: &Runtime, manifest: &Manifest, steps: u64) -> Result<()> {
+pub fn fig10(f: &dyn BackendFactory, steps: u64) -> Result<()> {
     // FLOP-matched token budgets: steps scaled inversely to params.
     let models = ["sweep70", "small", "sweep161"];
     let lrs = [3e-4, 1e-3, 3e-3];
@@ -295,9 +320,9 @@ pub fn fig10(rt: &Runtime, manifest: &Manifest, steps: u64) -> Result<()> {
     let mut csv = CsvLogger::to_file(&path, &["model_params", "lr", "final_loss"])?;
     println!("Fig. 10: LR sweep at three model sizes (FLOP-matched budgets)");
     println!("{:>9} {:>10} {:>8} {:>11}", "model", "params", "lr", "final_loss");
-    let base_params = manifest.config("small")?.n_params as f64;
+    let base_params = f.describe("small")?.n_params as f64;
     for m in models {
-        let entry = manifest.config(m)?;
+        let entry = f.describe(m)?;
         let scale = base_params / entry.n_params as f64;
         let msteps = ((steps as f64) * scale).round().max(4.0) as u64;
         for &lr in &lrs {
@@ -308,7 +333,7 @@ pub fn fig10(rt: &Runtime, manifest: &Manifest, steps: u64) -> Result<()> {
                 warmup_steps: msteps / 20 + 1,
                 decay_steps: msteps,
             };
-            let mut tr = Trainer::new(rt, manifest, cfg)?;
+            let mut tr = Trainer::new(f, cfg)?;
             let out = tr.run()?;
             // average the last 10% of steps for a stable final loss
             let tail = out.records.len() / 10 + 1;
@@ -331,9 +356,9 @@ pub fn fig10(rt: &Runtime, manifest: &Manifest, steps: u64) -> Result<()> {
 // Fig. 16: LN per-example GNS vs simulated-DDP GNS
 // ---------------------------------------------------------------------------
 
-pub fn fig16(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, ranks: usize) -> Result<()> {
-    let entry = manifest.config(model)?.clone();
-    let mut runner = crate::coordinator::ModelRunner::new(rt, manifest, model)?;
+pub fn fig16(f: &dyn BackendFactory, model: &str, steps: u64, ranks: usize) -> Result<()> {
+    let entry = f.describe(model)?;
+    let mut runner = crate::coordinator::ModelRunner::new(f, model)?;
     runner.init(42)?;
     let text = CorpusGenerator::new(5).generate(1 << 19);
     let base = Loader::new(&text, entry.seq_len, 5);
@@ -341,14 +366,22 @@ pub fn fig16(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, ranks: 
 
     let mut ddp_tracker = GnsTracker::new(&STATS_ORDER, 0.1);
     let mut pex_tracker = GnsTracker::new(&STATS_ORDER, 0.1);
-    let lr = LrSchedule { max_lr: 1e-3, min_lr: 1e-4, warmup_steps: steps / 20 + 1, decay_steps: steps };
+    let lr = LrSchedule {
+        max_lr: 1e-3,
+        min_lr: 1e-4,
+        warmup_steps: steps / 20 + 1,
+        decay_steps: steps,
+    };
 
     let path = super::results_path("fig16_ddp_vs_perex.csv")?;
     let mut csv = CsvLogger::to_file(&path, &[
         "step", "loss", "gns_ddp_total", "gns_perex_total", "gns_perex_ln",
     ])?;
     println!("Fig. 16: per-example (LN) GNS vs simulated-DDP GNS ({model}, {ranks} ranks)");
-    println!("{:>6} {:>9} {:>11} {:>11} {:>11}", "step", "loss", "ddp_gns", "perex_gns", "perex_ln");
+    println!(
+        "{:>6} {:>9} {:>11} {:>11} {:>11}",
+        "step", "loss", "ddp_gns", "perex_gns", "perex_ln"
+    );
     let accum = 1usize;
     let mb = entry.microbatch;
     for step in 1..=steps {
@@ -390,6 +423,9 @@ pub fn fig16(rt: &Runtime, manifest: &Manifest, model: &str, steps: u64, ranks: 
     }
     csv.flush()?;
     println!("(series -> {})", path.display());
-    println!("shape check: LN per-example GNS tracks the DDP estimate (paper corrects a constant-factor bug the same way)");
+    println!(
+        "shape check: LN per-example GNS tracks the DDP estimate (paper corrects a \
+         constant-factor bug the same way)"
+    );
     Ok(())
 }

@@ -15,22 +15,30 @@ pub struct GnsComponents {
 }
 
 impl GnsComponents {
-    /// `B_simple = S / ||G||^2`; None when the denominator is ~0.
+    /// `B_simple = S / ||G||^2`; None when the denominator is ~0 or the
+    /// components are degenerate (NaN/inf).
     pub fn b_simple(&self) -> Option<f64> {
-        (self.g_sq.abs() > 1e-300).then(|| self.s / self.g_sq)
+        (self.g_sq.is_finite() && self.g_sq.abs() > 1e-300).then(|| self.s / self.g_sq)
     }
 }
 
 /// Compute Eqs. 4 and 5 from squared gradient norms measured at two batch
 /// sizes. `norm_sq_small` must already be the *mean* over however many
 /// small-batch norms were observed.
+///
+/// Degenerate inputs (`b_big <= b_small` or `b_small <= 0`, where the
+/// estimators are undefined) yield NaN components rather than a division
+/// blow-up, so a misconfigured caller sees NaN in its telemetry instead
+/// of a plausible-looking garbage GNS.
 pub fn gns_components(
     b_big: f64,
     norm_sq_big: f64,
     b_small: f64,
     norm_sq_small: f64,
 ) -> GnsComponents {
-    debug_assert!(b_big > b_small && b_small > 0.0);
+    if !(b_big > b_small && b_small > 0.0) {
+        return GnsComponents { g_sq: f64::NAN, s: f64::NAN };
+    }
     let g_sq = (b_big * norm_sq_big - b_small * norm_sq_small) / (b_big - b_small);
     let s = (norm_sq_small - norm_sq_big) / (1.0 / b_small - 1.0 / b_big);
     GnsComponents { g_sq, s }
@@ -283,6 +291,72 @@ mod tests {
                 crate::prop_check!(
                     (c.s - tr).abs() <= 1e-9 * g2.max(tr).max(1.0),
                     "s {} != {}", c.s, tr
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn degenerate_batch_sizes_yield_nan_not_panic() {
+        // b_big == b_small: Eqs. 4/5 are undefined (0/0).
+        let c = gns_components(8.0, 1.0, 8.0, 1.0);
+        assert!(c.g_sq.is_nan() && c.s.is_nan(), "{c:?}");
+        assert_eq!(c.b_simple(), None);
+        // b_big < b_small and b_small <= 0 likewise.
+        assert!(gns_components(1.0, 1.0, 8.0, 1.0).g_sq.is_nan());
+        assert!(gns_components(8.0, 1.0, 0.0, 1.0).s.is_nan());
+        assert!(gns_components(8.0, 1.0, -1.0, 1.0).s.is_nan());
+    }
+
+    #[test]
+    fn b_simple_guards_near_zero_g_sq() {
+        assert_eq!(GnsComponents { g_sq: 0.0, s: 1.0 }.b_simple(), None);
+        assert_eq!(GnsComponents { g_sq: 1e-301, s: 1.0 }.b_simple(), None);
+        assert_eq!(GnsComponents { g_sq: f64::NAN, s: 1.0 }.b_simple(), None);
+        let b = GnsComponents { g_sq: 2.0, s: 6.0 }.b_simple().unwrap();
+        assert!((b - 3.0).abs() < 1e-12);
+    }
+
+    /// `finish()` against a brute-force reimplementation of Algorithm 1
+    /// step 4 on random stats vectors, random microbatch sizes, and a
+    /// random number of microbatches.
+    #[test]
+    fn prop_finish_matches_bruteforce_per_example_mean() {
+        crate::util::prop::forall(
+            13,
+            300,
+            |r| {
+                let mb = r.range(1, 9);
+                let k = r.range(1, 12);
+                let stats: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..3).map(|_| r.range_f64(0.0, 10.0) as f32).collect())
+                    .collect();
+                (mb, stats)
+            },
+            |(mb, stats)| {
+                let mut acc = GnsAccumulator::new(3, *mb);
+                for s in stats {
+                    acc.add_microbatch(s);
+                }
+                let (per_type, total) = acc.finish();
+                // Brute force: sum_b ||dL_b||^2 = B^2 * raw, averaged over
+                // all k*B examples.
+                let b = *mb as f64;
+                let n = (stats.len() * mb) as f64;
+                for t in 0..3 {
+                    let want: f64 =
+                        stats.iter().map(|s| b * b * (s[t] as f64)).sum::<f64>() / n;
+                    crate::prop_check!(
+                        (per_type[t] - want).abs() <= 1e-9 * want.max(1.0),
+                        "type {t}: {} != {want}",
+                        per_type[t]
+                    );
+                }
+                let want_total: f64 = per_type.iter().sum();
+                crate::prop_check!(
+                    (total - want_total).abs() <= 1e-9 * want_total.max(1.0),
+                    "total {total} != {want_total}"
                 );
                 Ok(())
             },

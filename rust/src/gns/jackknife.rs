@@ -89,7 +89,9 @@ mod tests {
             300,
             |r| {
                 let n = r.range(2, 64);
-                crate::util::prop::vec_of(r, n, |r| (r.range_f64(0.1, 10.0), r.range_f64(1.0, 10.0)))
+                crate::util::prop::vec_of(r, n, |r| {
+                    (r.range_f64(0.1, 10.0), r.range_f64(1.0, 10.0))
+                })
             },
             |pairs| {
                 let (s, g): (Vec<_>, Vec<_>) = pairs.iter().cloned().unzip();
@@ -109,7 +111,9 @@ mod tests {
             300,
             |r| {
                 let n = r.range(3, 32);
-                crate::util::prop::vec_of(r, n, |r| (r.range_f64(0.1, 10.0), r.range_f64(1.0, 10.0)))
+                crate::util::prop::vec_of(r, n, |r| {
+                    (r.range_f64(0.1, 10.0), r.range_f64(1.0, 10.0))
+                })
             },
             |pairs| {
                 let (s, g): (Vec<_>, Vec<_>) = pairs.iter().cloned().unzip();

@@ -76,7 +76,9 @@ mod tests {
             300,
             |r| {
                 let n = r.range(3, 50);
-                crate::util::prop::vec_of(r, n, |r| (r.range_f64(-1e3, 1e3), r.range_f64(-1e3, 1e3)))
+                crate::util::prop::vec_of(r, n, |r| {
+                    (r.range_f64(-1e3, 1e3), r.range_f64(-1e3, 1e3))
+                })
             },
             |pts| {
                 let (x, y): (Vec<_>, Vec<_>) = pts.iter().cloned().unzip();

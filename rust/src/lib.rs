@@ -5,11 +5,21 @@
 //! Layer map (see DESIGN.md):
 //! - L1 (Pallas) + L2 (JAX) live in `python/compile/` and are compiled
 //!   **once** by `make artifacts` into HLO-text artifacts;
-//! - L3 — this crate — is the training coordinator: it loads the artifacts
-//!   through the PJRT C API ([`runtime`]), runs the microbatch
+//! - L3 — this crate — is the training coordinator: it drives a model
+//!   through the [`runtime::Backend`] abstraction, runs the microbatch
 //!   gradient-accumulation loop ([`coordinator`]), tracks the gradient
 //!   noise scale online ([`gns`]) and drives GNS-guided batch-size
 //!   schedules ([`schedule`]). Python is never on the training path.
+//!
+//! Two backends implement the trait: the hermetic pure-Rust
+//! [`runtime::reference`] transformer (default — builds and trains on a
+//! bare machine) and the PJRT/HLO-artifact path (`--features pjrt`).
+
+// Numeric code throughout (reference kernels, estimators, figures)
+// indexes several parallel slices per loop; the indexed form is the
+// readable one there. `too_many_arguments` is scoped to the places
+// that need it (`runtime::reference`, the `Backend` trait).
+#![allow(clippy::needless_range_loop)]
 
 pub mod config;
 pub mod coordinator;

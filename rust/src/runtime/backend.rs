@@ -1,0 +1,151 @@
+//! The [`Backend`] trait: everything the coordinator needs from an
+//! execution engine, and nothing else.
+//!
+//! `coordinator::{runner, trainer, ddp}` and the figure harnesses are
+//! written against this trait, so the same training loop runs on:
+//!
+//! * [`crate::runtime::reference`] — a pure-Rust CPU transformer with
+//!   hand-written forward/backward (hermetic; the default);
+//! * [`crate::runtime::pjrt`] — the AOT HLO-artifact path through the
+//!   PJRT C API (feature `pjrt`).
+//!
+//! The interchange value is [`Buffer`], an opaque per-backend tensor
+//! handle. Backends are *stateless with respect to training*: parameters
+//! and Adam moments are owned by `ModelRunner` and passed in explicitly,
+//! which is what makes run forking (Fig. 6) and checkpointing uniform
+//! across backends.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::manifest::ModelEntry;
+use crate::runtime::tensor::Tensor;
+use crate::N_TYPES;
+
+/// Opaque tensor handle owned by a backend.
+#[derive(Clone)]
+pub enum Buffer {
+    /// Host-resident f32 tensor (reference backend, checkpoints).
+    Host(Tensor),
+    /// Literal owned by the PJRT runtime.
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::Literal),
+}
+
+impl std::fmt::Debug for Buffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Buffer::Host(t) => write!(f, "Buffer::Host(shape={:?})", t.shape),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => write!(f, "Buffer::Pjrt(..)"),
+        }
+    }
+}
+
+impl Buffer {
+    pub fn from_tensor(t: Tensor) -> Self {
+        Buffer::Host(t)
+    }
+
+    /// Copy out to a host tensor.
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        match self {
+            Buffer::Host(t) => Ok(t.clone()),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(l) => crate::runtime::pjrt::literal_to_tensor(l),
+        }
+    }
+
+    /// Borrow the host tensor; fails on device-resident buffers.
+    pub fn as_host(&self) -> Result<&Tensor> {
+        match self {
+            Buffer::Host(t) => Ok(t),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => anyhow::bail!("buffer is device-resident, expected host tensor"),
+        }
+    }
+
+    /// Take the host tensor, converting device buffers if necessary.
+    pub fn into_host(self) -> Result<Tensor> {
+        match self {
+            Buffer::Host(t) => Ok(t),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(l) => crate::runtime::pjrt::literal_to_tensor(&l),
+        }
+    }
+}
+
+/// Output of one microbatch gradient step.
+pub struct GradOut {
+    pub loss: f32,
+    pub grads: Vec<Buffer>,
+    /// Raw per-layer-type `sum_b ||w'_b||^2` (pre-correction) stats, in
+    /// `crate::STATS_ORDER` order. See `gns::GnsAccumulator` for the
+    /// per-example scale correction.
+    pub stats: [f32; N_TYPES],
+}
+
+/// An execution engine for one model configuration.
+pub trait Backend {
+    /// Short backend identifier ("reference", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Model shape/params/optimizer metadata (the L2→L3 contract).
+    fn entry(&self) -> &ModelEntry;
+
+    /// Initialize parameters from a seed (deterministic, seed-sensitive).
+    fn init(&self, seed: i32) -> Result<Vec<Buffer>>;
+
+    /// Forward+backward on one microbatch: loss, gradients of the
+    /// mean-microbatch loss, and the per-layer-type GNS stats vector.
+    fn grad_step(&self, params: &[Buffer], batch: &Batch) -> Result<GradOut>;
+
+    /// Element-wise `acc + grads` over the whole parameter list.
+    fn accumulate(&self, acc: Vec<Buffer>, grads: &[Buffer]) -> Result<Vec<Buffer>>;
+
+    /// Per-layer-type squared norms of a gradient set.
+    fn grad_sqnorms(&self, grads: &[Buffer]) -> Result<[f64; N_TYPES]>;
+
+    /// One AdamW update with `grads * grad_scale`; `step` is the 1-based
+    /// optimizer step for bias correction. Returns (params, m, v).
+    #[allow(clippy::too_many_arguments)]
+    fn adamw_update(
+        &self,
+        params: Vec<Buffer>,
+        m: Vec<Buffer>,
+        v: Vec<Buffer>,
+        grads: &[Buffer],
+        step: u64,
+        lr: f64,
+        grad_scale: f64,
+    ) -> Result<(Vec<Buffer>, Vec<Buffer>, Vec<Buffer>)>;
+
+    /// Evaluation loss on one batch (no stats, no grads).
+    fn eval(&self, params: &[Buffer], batch: &Batch) -> Result<f32>;
+
+    /// Zero-filled gradient accumulator buffer set.
+    fn zero_grads(&self) -> Result<Vec<Buffer>> {
+        Ok(self
+            .entry()
+            .params
+            .iter()
+            .map(|s| Buffer::Host(Tensor::zeros(&s.shape)))
+            .collect())
+    }
+}
+
+/// Creates [`Backend`]s by model name; what the launcher and figure
+/// harnesses hold instead of a (Runtime, Manifest) pair.
+pub trait BackendFactory {
+    /// Instantiate a backend for a named model config.
+    fn create(&self, model: &str) -> Result<Box<dyn Backend>>;
+
+    /// Model metadata without paying for backend construction.
+    fn describe(&self, model: &str) -> Result<ModelEntry>;
+
+    /// Names of the model configs this factory can create.
+    fn models(&self) -> Vec<String>;
+
+    /// Human-readable execution platform ("reference-cpu", "Host", ...).
+    fn platform(&self) -> String;
+}

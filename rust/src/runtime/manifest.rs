@@ -264,7 +264,9 @@ impl Manifest {
                 );
                 ensure!(p.dtype == "f32", "only f32 params supported, got {}", p.dtype);
             }
-            for k in ["init", "grad_step", "grad_sqnorms", "accumulate", "adamw_update", "eval_step"] {
+            for k in
+                ["init", "grad_step", "grad_sqnorms", "accumulate", "adamw_update", "eval_step"]
+            {
                 ensure!(cfg.artifacts.contains_key(k), "config {name}: artifact {k} missing");
             }
         }
@@ -293,8 +295,10 @@ mod tests {
               "vocab": 3, "microbatch": 2, "n_params": 14, "pallas_ln": false,
               "adam": {"beta1": 0.9, "beta2": 0.95, "eps": 1e-8, "wd": 0.1},
               "params": [
-                {"name": "wte", "shape": [3, 4], "dtype": "f32", "ltype": "embedding", "decay": true},
-                {"name": "lnf.g", "shape": [2], "dtype": "f32", "ltype": "layernorm", "decay": false}
+                {"name": "wte", "shape": [3, 4], "dtype": "f32",
+                 "ltype": "embedding", "decay": true},
+                {"name": "lnf.g", "shape": [2], "dtype": "f32",
+                 "ltype": "layernorm", "decay": false}
               ],
               "artifacts": {
                 "init": "t/init.hlo.txt", "grad_step": "t/grad_step.hlo.txt",

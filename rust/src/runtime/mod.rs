@@ -1,103 +1,24 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtimes behind the [`Backend`] abstraction.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `client.compile` → `execute`). One [`Runtime`] owns the client and a
-//! compile cache so each artifact is compiled exactly once per process.
-//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! * [`backend`] — the [`Backend`]/[`BackendFactory`] traits and the
+//!   [`Buffer`] tensor handle the coordinator is written against;
+//! * [`reference`] — hermetic pure-Rust CPU transformer (default);
+//! * [`pjrt`] — AOT HLO artifacts through the PJRT C API (feature
+//!   `pjrt`; requires `make artifacts` and the real `xla` crate);
+//! * [`manifest`] — the L2→L3 artifact/model-metadata contract;
+//! * [`tensor`] — the host tensor value type.
 
+pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod tensor;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
-
-use anyhow::{anyhow, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
+pub use backend::{Backend, BackendFactory, Buffer, GradOut};
 pub use manifest::{AdamHypers, LnBenchEntry, Manifest, ModelEntry, ParamSpec};
+pub use reference::{ReferenceBackend, ReferenceFactory, RefModelConfig};
 pub use tensor::Tensor;
 
-/// A compiled artifact. All lowered functions return a single tuple (the
-/// AOT path lowers with `return_tuple=True`), which [`Executable::run`]
-/// flattens back into a `Vec<Literal>`.
-pub struct Executable {
-    exe: PjRtLoadedExecutable,
-    pub path: PathBuf,
-    pub compile_ms: u128,
-}
-
-impl Executable {
-    /// Execute with host literals; returns the untupled outputs.
-    pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
-        let out = self
-            .exe
-            .execute(args)
-            .map_err(|e| anyhow!("execute {:?}: {e:?}", self.path))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal {:?}: {e:?}", self.path))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple {:?}: {e:?}", self.path))
-    }
-
-    /// Execute expecting exactly one output.
-    pub fn run1<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Literal> {
-        let mut v = self.run(args)?;
-        anyhow::ensure!(v.len() == 1, "expected 1 output, got {}", v.len());
-        Ok(v.pop().unwrap())
-    }
-}
-
-/// PJRT client + executable cache. Cheap to clone (shared internals).
-#[derive(Clone)]
-pub struct Runtime {
-    client: Rc<PjRtClient>,
-    cache: Rc<RefCell<HashMap<PathBuf, Rc<Executable>>>>,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Self { client: Rc::new(client), cache: Rc::new(RefCell::new(HashMap::new())) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(e) = self.cache.borrow().get(&path) {
-            return Ok(e.clone());
-        }
-        let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {path:?}: {e:?} (run `make artifacts`)"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        let exe = Rc::new(Executable { exe, path: path.clone(), compile_ms: t0.elapsed().as_millis() });
-        self.cache.borrow_mut().insert(path, exe.clone());
-        Ok(exe)
-    }
-
-    /// Load every artifact of a model config, keyed by artifact name.
-    pub fn load_model(
-        &self,
-        manifest: &Manifest,
-        config: &str,
-    ) -> Result<HashMap<String, Rc<Executable>>> {
-        let entry = manifest.config(config)?;
-        let mut out = HashMap::new();
-        for name in entry.artifacts.keys() {
-            out.insert(name.clone(), self.load(entry.artifact_path(&manifest.root, name)?)?);
-        }
-        Ok(out)
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, PjrtBackend, PjrtFactory, Runtime};

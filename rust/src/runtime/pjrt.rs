@@ -1,0 +1,366 @@
+//! PJRT backend: load AOT artifacts (HLO text) and execute them
+//! (feature `pjrt`).
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`). One [`Runtime`] owns the client and a
+//! compile cache so each artifact is compiled exactly once per process.
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! [`PjrtBackend`] adapts the artifact dispatch to the [`Backend`] trait;
+//! the offline workspace compiles this module against the `vendor/xla`
+//! stub, so it type-checks everywhere but executes only when the real
+//! `xla` crate is patched in (DESIGN.md §5).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::data::Batch;
+use crate::runtime::backend::{Backend, BackendFactory, Buffer, GradOut};
+use crate::runtime::manifest::{Manifest, ModelEntry};
+use crate::runtime::tensor::Tensor;
+use crate::N_TYPES;
+
+// ---------------------------------------------------------------------------
+// Literal <-> host conversions
+// ---------------------------------------------------------------------------
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {:?}: {e:?}", t.shape))
+}
+
+pub fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
+    Tensor::new(dims, data)
+}
+
+/// Build an i32 literal of the given shape (token id batches).
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(), "i32 literal shape mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Scalar literals for artifact hyper-parameter inputs.
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Read an f32 vector (e.g. the (5,) stats vector).
+pub fn vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    ensure!(lit.ty().map_err(|e| anyhow!("{e:?}"))? == ElementType::F32, "expected f32 literal");
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Runtime: client + compile cache
+// ---------------------------------------------------------------------------
+
+/// A compiled artifact. All lowered functions return a single tuple (the
+/// AOT path lowers with `return_tuple=True`), which [`Executable::run`]
+/// flattens back into a `Vec<Literal>`.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub path: PathBuf,
+    pub compile_ms: u128,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the untupled outputs.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute(args)
+            .map_err(|e| anyhow!("execute {:?}: {e:?}", self.path))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {:?}: {e:?}", self.path))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {:?}: {e:?}", self.path))
+    }
+
+    /// Execute expecting exactly one output.
+    pub fn run1<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Literal> {
+        let mut v = self.run(args)?;
+        anyhow::ensure!(v.len() == 1, "expected 1 output, got {}", v.len());
+        Ok(v.pop().unwrap())
+    }
+}
+
+/// PJRT client + executable cache. Cheap to clone (shared internals).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Rc<PjRtClient>,
+    cache: Rc<RefCell<HashMap<PathBuf, Rc<Executable>>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Self { client: Rc::new(client), cache: Rc::new(RefCell::new(HashMap::new())) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.cache.borrow().get(&path) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?} (run `make artifacts`)"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        let exe = Rc::new(Executable {
+            exe,
+            path: path.clone(),
+            compile_ms: t0.elapsed().as_millis(),
+        });
+        self.cache.borrow_mut().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Load every artifact of a model config, keyed by artifact name.
+    pub fn load_model(
+        &self,
+        manifest: &Manifest,
+        config: &str,
+    ) -> Result<HashMap<String, Rc<Executable>>> {
+        let entry = manifest.config(config)?;
+        let mut out = HashMap::new();
+        for name in entry.artifacts.keys() {
+            out.insert(name.clone(), self.load(entry.artifact_path(&manifest.root, name)?)?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend adapter
+// ---------------------------------------------------------------------------
+
+/// Run an executable over buffer groups + trailing scalar literals
+/// without copying device-resident literals: `Buffer::Pjrt` is passed by
+/// reference; only `Buffer::Host` tensors are materialized.
+fn run_buffers(exe: &Executable, groups: &[&[Buffer]], extra: &[Literal]) -> Result<Vec<Literal>> {
+    let mut owned: Vec<Literal> = Vec::new();
+    for bufs in groups {
+        for b in bufs.iter() {
+            if let Buffer::Host(t) = b {
+                owned.push(tensor_to_literal(t)?);
+            }
+        }
+    }
+    let mut oi = 0;
+    let n_args = groups.iter().map(|g| g.len()).sum::<usize>() + extra.len();
+    let mut args: Vec<&Literal> = Vec::with_capacity(n_args);
+    for bufs in groups {
+        for b in bufs.iter() {
+            match b {
+                Buffer::Host(_) => {
+                    args.push(&owned[oi]);
+                    oi += 1;
+                }
+                Buffer::Pjrt(l) => args.push(l),
+            }
+        }
+    }
+    args.extend(extra.iter());
+    exe.run(&args)
+}
+
+fn wrap(lits: Vec<Literal>) -> Vec<Buffer> {
+    lits.into_iter().map(Buffer::Pjrt).collect()
+}
+
+/// [`Backend`] over the compiled artifacts of one model config.
+pub struct PjrtBackend {
+    entry: ModelEntry,
+    exes: HashMap<String, Rc<Executable>>,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: &Runtime, manifest: &Manifest, config: &str) -> Result<Self> {
+        let entry = manifest.config(config)?.clone();
+        let exes = rt.load_model(manifest, config)?;
+        Ok(Self { entry, exes })
+    }
+
+    fn exe(&self, name: &str) -> Result<&Rc<Executable>> {
+        self.exes.get(name).ok_or_else(|| anyhow!("artifact {name} not loaded"))
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<(Literal, Literal)> {
+        let shape = [batch.batch, batch.seq_len];
+        Ok((i32_literal(&shape, &batch.inputs)?, i32_literal(&shape, &batch.targets)?))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn init(&self, seed: i32) -> Result<Vec<Buffer>> {
+        let out = self.exe("init")?.run(&[i32_scalar(seed)])?;
+        ensure!(
+            out.len() == self.entry.params.len(),
+            "init returned {} tensors, manifest says {}",
+            out.len(),
+            self.entry.params.len()
+        );
+        Ok(wrap(out))
+    }
+
+    fn grad_step(&self, params: &[Buffer], batch: &Batch) -> Result<GradOut> {
+        let (ids, tgt) = self.batch_literals(batch)?;
+        let mut out = run_buffers(self.exe("grad_step")?, &[params], &[ids, tgt])?;
+        let n = self.entry.params.len();
+        ensure!(out.len() == n + 2, "grad_step returned {} outputs", out.len());
+        let stats_lit = out.pop().unwrap();
+        let stats_v = vec_f32(&stats_lit)?;
+        ensure!(stats_v.len() == N_TYPES, "stats len {}", stats_v.len());
+        let mut stats = [0f32; N_TYPES];
+        stats.copy_from_slice(&stats_v);
+        let grads = out.split_off(1);
+        let loss = scalar_f32(&out[0])?;
+        Ok(GradOut { loss, grads: wrap(grads), stats })
+    }
+
+    fn accumulate(&self, acc: Vec<Buffer>, grads: &[Buffer]) -> Result<Vec<Buffer>> {
+        Ok(wrap(run_buffers(self.exe("accumulate")?, &[&acc, grads], &[])?))
+    }
+
+    fn grad_sqnorms(&self, grads: &[Buffer]) -> Result<[f64; N_TYPES]> {
+        let mut out = run_buffers(self.exe("grad_sqnorms")?, &[grads], &[])?;
+        ensure!(out.len() == 1, "grad_sqnorms returned {} outputs", out.len());
+        let out = out.pop().unwrap();
+        let v = vec_f32(&out)?;
+        ensure!(v.len() == N_TYPES);
+        let mut a = [0f64; N_TYPES];
+        for (d, s) in a.iter_mut().zip(v) {
+            *d = s as f64;
+        }
+        Ok(a)
+    }
+
+    fn adamw_update(
+        &self,
+        params: Vec<Buffer>,
+        m: Vec<Buffer>,
+        v: Vec<Buffer>,
+        grads: &[Buffer],
+        step: u64,
+        lr: f64,
+        grad_scale: f64,
+    ) -> Result<(Vec<Buffer>, Vec<Buffer>, Vec<Buffer>)> {
+        let n = self.entry.params.len();
+        let scalars =
+            [f32_scalar(step as f32), f32_scalar(lr as f32), f32_scalar(grad_scale as f32)];
+        let mut out =
+            run_buffers(self.exe("adamw_update")?, &[&params, &m, &v, grads], &scalars)?;
+        ensure!(out.len() == 3 * n, "adamw_update returned {} outputs", out.len());
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        Ok((wrap(out), wrap(new_m), wrap(new_v)))
+    }
+
+    fn eval(&self, params: &[Buffer], batch: &Batch) -> Result<f32> {
+        let (ids, tgt) = self.batch_literals(batch)?;
+        let mut out = run_buffers(self.exe("eval_step")?, &[params], &[ids, tgt])?;
+        ensure!(out.len() == 1, "eval_step returned {} outputs", out.len());
+        scalar_f32(&out.pop().unwrap())
+    }
+}
+
+/// [`BackendFactory`] over a manifest + PJRT runtime.
+pub struct PjrtFactory {
+    rt: Runtime,
+    manifest: Manifest,
+}
+
+impl PjrtFactory {
+    pub fn new(artifacts: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts)?;
+        let rt = Runtime::cpu()?;
+        Ok(Self { rt, manifest })
+    }
+
+    pub fn from_parts(rt: Runtime, manifest: Manifest) -> Self {
+        Self { rt, manifest }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl BackendFactory for PjrtFactory {
+    fn create(&self, model: &str) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(PjrtBackend::new(&self.rt, &self.manifest, model)?))
+    }
+
+    fn describe(&self, model: &str) -> Result<ModelEntry> {
+        Ok(self.manifest.config(model)?.clone())
+    }
+
+    fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.manifest.configs.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let t2 = literal_to_tensor(&l).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn i32_literal_round_trip() {
+        let l = i32_literal(&[2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+}

@@ -1,0 +1,1077 @@
+//! Pure-Rust reference backend: a hermetic CPU transformer.
+//!
+//! Implements [`Backend`] with a hand-written forward/backward for a small
+//! decoder-only transformer (embedding → N× {LayerNorm, causal attention,
+//! MLP} → LayerNorm → lm_head), so the whole coordinator — trainer, DDP
+//! estimator, GNS tracking, schedules, figures — runs end-to-end with zero
+//! native dependencies.
+//!
+//! Per-example gradient statistics follow the *reference formula* pattern
+//! of Goodfellow, "Efficient Per-Example Gradient Computations"
+//! (arXiv:1510.01799): the backward pass is evaluated one example at a
+//! time, so the per-layer-type `sum_b ||w'_b||^2` stats vector (the
+//! quantity the paper's fused kernels compute on-device) is obtained from
+//! the definitionally-correct per-example gradients. This is the oracle
+//! the Pallas kernels in `python/compile/kernels/` are validated against,
+//! now available to the Rust coordinator directly.
+//!
+//! Conventions match the PJRT artifacts (see DESIGN.md §3):
+//! * `grad_step` returns gradients of the **mean-microbatch** loss, i.e.
+//!   `sum_b w'_b` with `w'_b = (1/B) dL_b/dw`;
+//! * `stats[t] = sum_b ||w'_b||^2` restricted to layer type `t`;
+//! * losses are mean cross-entropy per token, in nats.
+
+// Backward-pass helpers thread several gradient slices explicitly; the
+// many-argument form is the readable one here.
+#![allow(clippy::too_many_arguments)]
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::data::Batch;
+use crate::runtime::backend::{Backend, BackendFactory, Buffer, GradOut};
+use crate::runtime::manifest::{AdamHypers, ModelEntry, ParamSpec};
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::{N_TYPES, STATS_ORDER};
+
+const LN_EPS: f32 = 1e-5;
+
+/// Shape of a reference-backend model.
+#[derive(Debug, Clone, Copy)]
+pub struct RefModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub microbatch: usize,
+}
+
+const fn preset(d: usize, l: usize, h: usize, t: usize) -> RefModelConfig {
+    RefModelConfig { d_model: d, n_layers: l, n_heads: h, seq_len: t, vocab: 256, microbatch: 4 }
+}
+
+/// Built-in model configs, mirroring the artifact manifest's names.
+pub const PRESETS: [(&str, RefModelConfig); 5] = [
+    ("nano", preset(16, 2, 2, 32)),
+    ("micro", preset(32, 2, 2, 48)),
+    ("small", preset(48, 3, 4, 64)),
+    ("sweep70", preset(24, 2, 2, 48)),
+    ("sweep161", preset(48, 2, 4, 48)),
+];
+
+// Per-block parameter offsets from the block base index (2 + 12*i).
+const LN1_G: usize = 0;
+const LN1_B: usize = 1;
+const W_QKV: usize = 2;
+const B_QKV: usize = 3;
+const W_O: usize = 4;
+const B_O: usize = 5;
+const LN2_G: usize = 6;
+const LN2_B: usize = 7;
+const W_FC: usize = 8;
+const B_FC: usize = 9;
+const W_PROJ: usize = 10;
+const B_PROJ: usize = 11;
+
+fn spec(name: &str, shape: Vec<usize>, ltype: &str, decay: bool) -> ParamSpec {
+    ParamSpec {
+        name: name.to_string(),
+        shape,
+        dtype: "f32".to_string(),
+        ltype: ltype.to_string(),
+        decay,
+    }
+}
+
+fn build_entry(cfg: &RefModelConfig) -> ModelEntry {
+    let d = cfg.d_model;
+    let mut params = vec![
+        spec("wte", vec![cfg.vocab, d], "embedding", true),
+        spec("wpe", vec![cfg.seq_len, d], "embedding", true),
+    ];
+    for i in 0..cfg.n_layers {
+        params.push(spec(&format!("h{i}.ln1.g"), vec![d], "layernorm", false));
+        params.push(spec(&format!("h{i}.ln1.b"), vec![d], "layernorm", false));
+        params.push(spec(&format!("h{i}.attn.w_qkv"), vec![d, 3 * d], "attention", true));
+        params.push(spec(&format!("h{i}.attn.b_qkv"), vec![3 * d], "attention", false));
+        params.push(spec(&format!("h{i}.attn.w_o"), vec![d, d], "attention", true));
+        params.push(spec(&format!("h{i}.attn.b_o"), vec![d], "attention", false));
+        params.push(spec(&format!("h{i}.ln2.g"), vec![d], "layernorm", false));
+        params.push(spec(&format!("h{i}.ln2.b"), vec![d], "layernorm", false));
+        params.push(spec(&format!("h{i}.mlp.w_fc"), vec![d, 4 * d], "mlp", true));
+        params.push(spec(&format!("h{i}.mlp.b_fc"), vec![4 * d], "mlp", false));
+        params.push(spec(&format!("h{i}.mlp.w_proj"), vec![4 * d, d], "mlp", true));
+        params.push(spec(&format!("h{i}.mlp.b_proj"), vec![d], "mlp", false));
+    }
+    params.push(spec("lnf.g", vec![d], "layernorm", false));
+    params.push(spec("lnf.b", vec![d], "layernorm", false));
+    params.push(spec("lm_head.w", vec![d, cfg.vocab], "lm_head", true));
+    let n_params = params.iter().map(|p| p.numel() as u64).sum();
+    ModelEntry {
+        d_model: d,
+        n_layers: cfg.n_layers,
+        n_heads: cfg.n_heads,
+        seq_len: cfg.seq_len,
+        vocab: cfg.vocab,
+        microbatch: cfg.microbatch,
+        n_params,
+        pallas_ln: false,
+        adam: AdamHypers { beta1: 0.9, beta2: 0.95, eps: 1e-8, wd: 0.1 },
+        params,
+        artifacts: HashMap::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense math helpers (row-major, f32)
+// ---------------------------------------------------------------------------
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y = x @ w (+ b)` with `x: [t, k]`, `w: [k, n]`.
+fn linear_fwd(x: &[f32], w: &[f32], b: Option<&[f32]>, t: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; t * n];
+    for ti in 0..t {
+        let yrow = &mut y[ti * n..(ti + 1) * n];
+        if let Some(b) = b {
+            yrow.copy_from_slice(&b[..n]);
+        }
+        for kk in 0..k {
+            let xv = x[ti * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                yrow[j] += xv * wrow[j];
+            }
+        }
+    }
+    y
+}
+
+/// Backward of [`linear_fwd`]: accumulates `dw += x^T dy`,
+/// `db += colsum(dy)`, returns `dx = dy @ w^T`.
+fn linear_bwd(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    t: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+    db: Option<&mut [f32]>,
+) -> Vec<f32> {
+    if let Some(db) = db {
+        for ti in 0..t {
+            let dyr = &dy[ti * n..(ti + 1) * n];
+            for j in 0..n {
+                db[j] += dyr[j];
+            }
+        }
+    }
+    for ti in 0..t {
+        let dyr = &dy[ti * n..(ti + 1) * n];
+        for kk in 0..k {
+            let xv = x[ti * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let dwr = &mut dw[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                dwr[j] += xv * dyr[j];
+            }
+        }
+    }
+    let mut dx = vec![0f32; t * k];
+    for ti in 0..t {
+        let dyr = &dy[ti * n..(ti + 1) * n];
+        for kk in 0..k {
+            dx[ti * k + kk] = dot(dyr, &w[kk * n..(kk + 1) * n]);
+        }
+    }
+    dx
+}
+
+/// Per-row LayerNorm; returns (out, xhat, rstd).
+fn layernorm_fwd(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    t: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut out = vec![0f32; t * d];
+    let mut xhat = vec![0f32; t * d];
+    let mut rstd = vec![0f32; t];
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + LN_EPS).sqrt();
+        rstd[ti] = r;
+        for j in 0..d {
+            let xh = (row[j] - mean) * r;
+            xhat[ti * d + j] = xh;
+            out[ti * d + j] = g[j] * xh + b[j];
+        }
+    }
+    (out, xhat, rstd)
+}
+
+/// Backward of [`layernorm_fwd`]: accumulates `dg`, `db`, returns `dx`.
+fn layernorm_bwd(
+    dout: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    t: usize,
+    d: usize,
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0f32; t * d];
+    for ti in 0..t {
+        let mut m1 = 0f32; // mean(dxhat)
+        let mut m2 = 0f32; // mean(dxhat * xhat)
+        for j in 0..d {
+            let dy = dout[ti * d + j];
+            let xh = xhat[ti * d + j];
+            dg[j] += dy * xh;
+            db[j] += dy;
+            let dxh = dy * g[j];
+            m1 += dxh;
+            m2 += dxh * xh;
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for j in 0..d {
+            let dxh = dout[ti * d + j] * g[j];
+            dx[ti * d + j] = rstd[ti] * (dxh - m1 - xhat[ti * d + j] * m2);
+        }
+    }
+    dx
+}
+
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_A: f32 = 0.044715;
+
+fn gelu(v: f32) -> f32 {
+    0.5 * v * (1.0 + (GELU_C * (v + GELU_A * v * v * v)).tanh())
+}
+
+fn gelu_grad(v: f32) -> f32 {
+    let u = GELU_C * (v + GELU_A * v * v * v);
+    let th = u.tanh();
+    let sech2 = 1.0 - th * th;
+    0.5 * (1.0 + th) + 0.5 * v * sech2 * GELU_C * (1.0 + 3.0 * GELU_A * v * v)
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Per-example activation caches from one forward pass.
+struct BlockCache {
+    ln1_xhat: Vec<f32>,
+    ln1_rstd: Vec<f32>,
+    ln1_out: Vec<f32>,
+    /// `[t, 3d]` rows of `[q | k | v]` (post-bias).
+    qkv: Vec<f32>,
+    /// Softmax attention weights, `[heads, t, t]` (causal; upper zero).
+    att_p: Vec<f32>,
+    /// Concatenated head outputs before the output projection, `[t, d]`.
+    att_out: Vec<f32>,
+    ln2_xhat: Vec<f32>,
+    ln2_rstd: Vec<f32>,
+    ln2_out: Vec<f32>,
+    fc_pre: Vec<f32>,
+    fc_act: Vec<f32>,
+}
+
+struct Caches {
+    blocks: Vec<BlockCache>,
+    lnf_xhat: Vec<f32>,
+    lnf_rstd: Vec<f32>,
+    lnf_out: Vec<f32>,
+    /// Softmax over logits, `[t, vocab]`.
+    probs: Vec<f32>,
+}
+
+/// Pure-Rust CPU implementation of [`Backend`].
+pub struct ReferenceBackend {
+    cfg: RefModelConfig,
+    entry: ModelEntry,
+    /// Per-parameter index into `STATS_ORDER`.
+    ltype_idx: Vec<usize>,
+}
+
+impl ReferenceBackend {
+    pub fn new(cfg: RefModelConfig) -> Result<Self> {
+        ensure!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0, "d_model must divide by heads");
+        ensure!(
+            cfg.n_layers > 0 && cfg.seq_len > 0 && cfg.vocab > 1 && cfg.microbatch > 0,
+            "degenerate reference model config {cfg:?}"
+        );
+        let entry = build_entry(&cfg);
+        let ltype_idx = entry
+            .params
+            .iter()
+            .map(|p| {
+                STATS_ORDER
+                    .iter()
+                    .position(|t| *t == p.ltype)
+                    .ok_or_else(|| anyhow!("unknown ltype {}", p.ltype))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { cfg, entry, ltype_idx })
+    }
+
+    pub fn from_preset(name: &str) -> Result<Self> {
+        let cfg = PRESETS
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| *c)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown reference model {name:?} (have: {:?})",
+                    PRESETS.map(|(n, _)| n)
+                )
+            })?;
+        Self::new(cfg)
+    }
+
+    pub fn config(&self) -> &RefModelConfig {
+        &self.cfg
+    }
+
+    fn block_base(&self, i: usize) -> usize {
+        2 + 12 * i
+    }
+
+    fn lnf_g_idx(&self) -> usize {
+        2 + 12 * self.cfg.n_layers
+    }
+
+    fn host_params<'a>(&self, params: &'a [Buffer]) -> Result<Vec<&'a [f32]>> {
+        ensure!(
+            params.len() == self.entry.params.len(),
+            "got {} param tensors, model has {}",
+            params.len(),
+            self.entry.params.len()
+        );
+        params.iter().map(|b| Ok(b.as_host()?.data.as_slice())).collect()
+    }
+
+    /// Forward pass for one example; returns (mean token loss, caches).
+    fn example_forward(
+        &self,
+        ps: &[&[f32]],
+        ids: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Caches)> {
+        let d = self.cfg.d_model;
+        let t = ids.len();
+        let v = self.cfg.vocab;
+        let heads = self.cfg.n_heads;
+        let hd = d / heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // Embedding: wte[id] + wpe[pos].
+        let mut x = vec![0f32; t * d];
+        for ti in 0..t {
+            let id = ids[ti] as usize;
+            ensure!(id < v, "token id {id} out of vocab {v}");
+            for j in 0..d {
+                x[ti * d + j] = ps[0][id * d + j] + ps[1][ti * d + j];
+            }
+        }
+
+        let mut blocks = Vec::with_capacity(self.cfg.n_layers);
+        for i in 0..self.cfg.n_layers {
+            let base = self.block_base(i);
+            let (ln1_out, ln1_xhat, ln1_rstd) =
+                layernorm_fwd(&x, ps[base + LN1_G], ps[base + LN1_B], t, d);
+            let qkv = linear_fwd(&ln1_out, ps[base + W_QKV], Some(ps[base + B_QKV]), t, d, 3 * d);
+
+            // Causal multi-head attention.
+            let mut att_p = vec![0f32; heads * t * t];
+            let mut att_out = vec![0f32; t * d];
+            for h in 0..heads {
+                let q_off = h * hd;
+                let k_off = d + h * hd;
+                let v_off = 2 * d + h * hd;
+                for ti in 0..t {
+                    let q_row = &qkv[ti * 3 * d + q_off..ti * 3 * d + q_off + hd];
+                    let mut row = vec![0f32; ti + 1];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for s in 0..=ti {
+                        let k_row = &qkv[s * 3 * d + k_off..s * 3 * d + k_off + hd];
+                        let sc = scale * dot(q_row, k_row);
+                        row[s] = sc;
+                        maxv = maxv.max(sc);
+                    }
+                    let mut sum = 0f32;
+                    for r in row.iter_mut() {
+                        *r = (*r - maxv).exp();
+                        sum += *r;
+                    }
+                    for (s, r) in row.iter().enumerate() {
+                        let pv = r / sum;
+                        att_p[h * t * t + ti * t + s] = pv;
+                        let v_row = &qkv[s * 3 * d + v_off..s * 3 * d + v_off + hd];
+                        for j in 0..hd {
+                            att_out[ti * d + q_off + j] += pv * v_row[j];
+                        }
+                    }
+                }
+            }
+
+            let o = linear_fwd(&att_out, ps[base + W_O], Some(ps[base + B_O]), t, d, d);
+            for (xv, ov) in x.iter_mut().zip(&o) {
+                *xv += *ov;
+            }
+
+            let (ln2_out, ln2_xhat, ln2_rstd) =
+                layernorm_fwd(&x, ps[base + LN2_G], ps[base + LN2_B], t, d);
+            let fc_pre =
+                linear_fwd(&ln2_out, ps[base + W_FC], Some(ps[base + B_FC]), t, d, 4 * d);
+            let fc_act: Vec<f32> = fc_pre.iter().map(|&u| gelu(u)).collect();
+            let p = linear_fwd(&fc_act, ps[base + W_PROJ], Some(ps[base + B_PROJ]), t, 4 * d, d);
+            for (xv, pv) in x.iter_mut().zip(&p) {
+                *xv += *pv;
+            }
+
+            blocks.push(BlockCache {
+                ln1_xhat,
+                ln1_rstd,
+                ln1_out,
+                qkv,
+                att_p,
+                att_out,
+                ln2_xhat,
+                ln2_rstd,
+                ln2_out,
+                fc_pre,
+                fc_act,
+            });
+        }
+
+        let gi = self.lnf_g_idx();
+        let (lnf_out, lnf_xhat, lnf_rstd) = layernorm_fwd(&x, ps[gi], ps[gi + 1], t, d);
+        let logits = linear_fwd(&lnf_out, ps[gi + 2], None, t, d, v);
+
+        // Softmax cross-entropy, mean over tokens.
+        let mut probs = vec![0f32; t * v];
+        let mut loss = 0f64;
+        for ti in 0..t {
+            let row = &logits[ti * v..(ti + 1) * v];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for j in 0..v {
+                let e = (row[j] - maxv).exp();
+                probs[ti * v + j] = e;
+                sum += e;
+            }
+            for j in 0..v {
+                probs[ti * v + j] /= sum;
+            }
+            let y = targets[ti] as usize;
+            ensure!(y < v, "target id {y} out of vocab {v}");
+            loss -= (probs[ti * v + y].max(1e-30) as f64).ln();
+        }
+        let loss = (loss / t as f64) as f32;
+
+        Ok((loss, Caches { blocks, lnf_xhat, lnf_rstd, lnf_out, probs }))
+    }
+
+    /// Backward pass for one example; accumulates `dL_b/dw` into `eg`.
+    fn example_backward(
+        &self,
+        ps: &[&[f32]],
+        ids: &[i32],
+        targets: &[i32],
+        caches: &Caches,
+        eg: &mut [Vec<f32>],
+    ) {
+        let d = self.cfg.d_model;
+        let t = ids.len();
+        let v = self.cfg.vocab;
+        let heads = self.cfg.n_heads;
+        let hd = d / heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let gi = self.lnf_g_idx();
+
+        // dlogits = (softmax - onehot) / t.
+        let mut dlogits = vec![0f32; t * v];
+        let inv_t = 1.0 / t as f32;
+        for ti in 0..t {
+            for j in 0..v {
+                dlogits[ti * v + j] = caches.probs[ti * v + j] * inv_t;
+            }
+            dlogits[ti * v + targets[ti] as usize] -= inv_t;
+        }
+
+        // lm_head (no bias).
+        let dlnf_out =
+            linear_bwd(&caches.lnf_out, ps[gi + 2], &dlogits, t, d, v, &mut eg[gi + 2], None);
+
+        // Final LayerNorm.
+        let (dgf, dbf) = two_mut(eg, gi, gi + 1);
+        let mut dx = layernorm_bwd(
+            &dlnf_out,
+            &caches.lnf_xhat,
+            &caches.lnf_rstd,
+            ps[gi],
+            t,
+            d,
+            dgf,
+            dbf,
+        );
+
+        for i in (0..self.cfg.n_layers).rev() {
+            let base = self.block_base(i);
+            let c = &caches.blocks[i];
+
+            // MLP branch: x_out = x_mid + proj(gelu(fc(ln2(x_mid)))).
+            let dfc_act = {
+                let (dw, db) = two_mut(eg, base + W_PROJ, base + B_PROJ);
+                linear_bwd(&c.fc_act, ps[base + W_PROJ], &dx, t, 4 * d, d, dw, Some(db))
+            };
+            let mut dfc_pre = dfc_act;
+            for (g, &u) in dfc_pre.iter_mut().zip(&c.fc_pre) {
+                *g *= gelu_grad(u);
+            }
+            let dln2_out = {
+                let (dw, db) = two_mut(eg, base + W_FC, base + B_FC);
+                linear_bwd(&c.ln2_out, ps[base + W_FC], &dfc_pre, t, d, 4 * d, dw, Some(db))
+            };
+            let dx_ln2 = {
+                let (dg, db) = two_mut(eg, base + LN2_G, base + LN2_B);
+                layernorm_bwd(&dln2_out, &c.ln2_xhat, &c.ln2_rstd, ps[base + LN2_G], t, d, dg, db)
+            };
+            for (a, b) in dx.iter_mut().zip(&dx_ln2) {
+                *a += *b;
+            }
+
+            // Attention branch: x_mid = x_in + w_o(att(ln1(x_in))).
+            let datt_out = {
+                let (dw, db) = two_mut(eg, base + W_O, base + B_O);
+                linear_bwd(&c.att_out, ps[base + W_O], &dx, t, d, d, dw, Some(db))
+            };
+
+            let mut dqkv = vec![0f32; t * 3 * d];
+            for h in 0..heads {
+                let q_off = h * hd;
+                let k_off = d + h * hd;
+                let v_off = 2 * d + h * hd;
+                let ph = &c.att_p[h * t * t..(h + 1) * t * t];
+                for ti in 0..t {
+                    let dout_row = &datt_out[ti * d + q_off..ti * d + q_off + hd];
+                    let mut dp = vec![0f32; ti + 1];
+                    for s in 0..=ti {
+                        let v_row = &c.qkv[s * 3 * d + v_off..s * 3 * d + v_off + hd];
+                        dp[s] = dot(dout_row, v_row);
+                        let pv = ph[ti * t + s];
+                        for j in 0..hd {
+                            dqkv[s * 3 * d + v_off + j] += pv * dout_row[j];
+                        }
+                    }
+                    let dsum: f32 = (0..=ti).map(|s| dp[s] * ph[ti * t + s]).sum();
+                    for s in 0..=ti {
+                        let ds = ph[ti * t + s] * (dp[s] - dsum) * scale;
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        for j in 0..hd {
+                            dqkv[ti * 3 * d + q_off + j] += ds * c.qkv[s * 3 * d + k_off + j];
+                            dqkv[s * 3 * d + k_off + j] += ds * c.qkv[ti * 3 * d + q_off + j];
+                        }
+                    }
+                }
+            }
+
+            let dln1_out = {
+                let (dw, db) = two_mut(eg, base + W_QKV, base + B_QKV);
+                linear_bwd(&c.ln1_out, ps[base + W_QKV], &dqkv, t, d, 3 * d, dw, Some(db))
+            };
+            let dx_ln1 = {
+                let (dg, db) = two_mut(eg, base + LN1_G, base + LN1_B);
+                layernorm_bwd(&dln1_out, &c.ln1_xhat, &c.ln1_rstd, ps[base + LN1_G], t, d, dg, db)
+            };
+            for (a, b) in dx.iter_mut().zip(&dx_ln1) {
+                *a += *b;
+            }
+        }
+
+        // Embedding.
+        for ti in 0..t {
+            let id = ids[ti] as usize;
+            for j in 0..d {
+                eg[0][id * d + j] += dx[ti * d + j];
+                eg[1][ti * d + j] += dx[ti * d + j];
+            }
+        }
+    }
+
+    fn check_batch(&self, batch: &Batch) -> Result<()> {
+        ensure!(
+            batch.seq_len == self.cfg.seq_len && batch.batch > 0,
+            "batch shape ({}, {}) incompatible with model seq_len {}",
+            batch.batch,
+            batch.seq_len,
+            self.cfg.seq_len
+        );
+        let n = batch.batch * batch.seq_len;
+        ensure!(
+            batch.inputs.len() == n && batch.targets.len() == n,
+            "batch declares {} tokens but holds {} inputs / {} targets",
+            n,
+            batch.inputs.len(),
+            batch.targets.len()
+        );
+        Ok(())
+    }
+}
+
+/// Disjoint mutable borrows of two entries of a slice of Vecs.
+fn two_mut(eg: &mut [Vec<f32>], a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+    assert!(a < b);
+    let (lo, hi) = eg.split_at_mut(b);
+    (&mut lo[a], &mut hi[0])
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn init(&self, seed: i32) -> Result<Vec<Buffer>> {
+        let mut rng = Rng::seed_from_u64(seed as i64 as u64);
+        let resid_scale = 1.0 / (2.0 * self.cfg.n_layers as f64).sqrt();
+        let out = self
+            .entry
+            .params
+            .iter()
+            .map(|p| {
+                let n = p.numel();
+                let data: Vec<f32> = if p.shape.len() == 1 {
+                    if p.name.ends_with(".g") {
+                        vec![1.0; n]
+                    } else {
+                        vec![0.0; n]
+                    }
+                } else {
+                    let std = if p.name.contains("w_o") || p.name.contains("w_proj") {
+                        0.02 * resid_scale
+                    } else {
+                        0.02
+                    };
+                    (0..n).map(|_| (rng.normal() * std) as f32).collect()
+                };
+                Ok(Buffer::Host(Tensor::new(p.shape.clone(), data)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(out)
+    }
+
+    fn grad_step(&self, params: &[Buffer], batch: &Batch) -> Result<GradOut> {
+        self.check_batch(batch)?;
+        let ps = self.host_params(params)?;
+        let t = batch.seq_len;
+        let bsz = batch.batch;
+        let inv_b = 1.0 / bsz as f32;
+
+        let mut acc: Vec<Vec<f32>> =
+            self.entry.params.iter().map(|p| vec![0f32; p.numel()]).collect();
+        let mut eg: Vec<Vec<f32>> =
+            self.entry.params.iter().map(|p| vec![0f32; p.numel()]).collect();
+        let mut stats = [0f64; N_TYPES];
+        let mut loss_sum = 0f64;
+
+        for b in 0..bsz {
+            let ids = &batch.inputs[b * t..(b + 1) * t];
+            let tgt = &batch.targets[b * t..(b + 1) * t];
+            for g in eg.iter_mut() {
+                g.fill(0.0);
+            }
+            let (loss, caches) = self.example_forward(&ps, ids, tgt)?;
+            loss_sum += loss as f64;
+            self.example_backward(&ps, ids, tgt, &caches, &mut eg);
+            for (i, g) in eg.iter().enumerate() {
+                let ti = self.ltype_idx[i];
+                let mut sq = 0f64;
+                let a = &mut acc[i];
+                for (av, gv) in a.iter_mut().zip(g) {
+                    let w = gv * inv_b; // w'_b = (1/B) dL_b/dw
+                    *av += w;
+                    sq += (w as f64) * (w as f64);
+                }
+                stats[ti] += sq;
+            }
+        }
+
+        let grads = acc
+            .into_iter()
+            .zip(&self.entry.params)
+            .map(|(data, p)| Ok(Buffer::Host(Tensor::new(p.shape.clone(), data)?)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut stats32 = [0f32; N_TYPES];
+        for (dst, src) in stats32.iter_mut().zip(stats) {
+            *dst = src as f32;
+        }
+        Ok(GradOut { loss: (loss_sum / bsz as f64) as f32, grads, stats: stats32 })
+    }
+
+    fn accumulate(&self, acc: Vec<Buffer>, grads: &[Buffer]) -> Result<Vec<Buffer>> {
+        ensure!(acc.len() == grads.len(), "accumulate arity mismatch");
+        acc.into_iter()
+            .zip(grads)
+            .map(|(a, g)| {
+                let mut t = a.into_host()?;
+                let gt = g.as_host()?;
+                ensure!(t.data.len() == gt.data.len(), "accumulate shape mismatch");
+                for (x, y) in t.data.iter_mut().zip(&gt.data) {
+                    *x += *y;
+                }
+                Ok(Buffer::Host(t))
+            })
+            .collect()
+    }
+
+    fn grad_sqnorms(&self, grads: &[Buffer]) -> Result<[f64; N_TYPES]> {
+        ensure!(grads.len() == self.entry.params.len(), "grad_sqnorms arity mismatch");
+        let mut out = [0f64; N_TYPES];
+        for (i, g) in grads.iter().enumerate() {
+            out[self.ltype_idx[i]] += g.as_host()?.sq_norm();
+        }
+        Ok(out)
+    }
+
+    fn adamw_update(
+        &self,
+        params: Vec<Buffer>,
+        m: Vec<Buffer>,
+        v: Vec<Buffer>,
+        grads: &[Buffer],
+        step: u64,
+        lr: f64,
+        grad_scale: f64,
+    ) -> Result<(Vec<Buffer>, Vec<Buffer>, Vec<Buffer>)> {
+        let n = self.entry.params.len();
+        ensure!(
+            params.len() == n && m.len() == n && v.len() == n && grads.len() == n,
+            "adamw_update arity mismatch"
+        );
+        ensure!(step >= 1, "adamw_update needs a 1-based step");
+        let h = &self.entry.adam;
+        let bc1 = 1.0 - h.beta1.powi(step.min(i32::MAX as u64) as i32);
+        let bc2 = 1.0 - h.beta2.powi(step.min(i32::MAX as u64) as i32);
+
+        let mut new_p = Vec::with_capacity(n);
+        let mut new_m = Vec::with_capacity(n);
+        let mut new_v = Vec::with_capacity(n);
+        for (i, ((pb, mb), vb)) in params.into_iter().zip(m).zip(v).enumerate() {
+            let mut pt = pb.into_host()?;
+            let mut mt = mb.into_host()?;
+            let mut vt = vb.into_host()?;
+            let gt = grads[i].as_host()?;
+            ensure!(
+                pt.data.len() == gt.data.len()
+                    && mt.data.len() == gt.data.len()
+                    && vt.data.len() == gt.data.len(),
+                "adamw_update shape mismatch on {}",
+                self.entry.params[i].name
+            );
+            let decay = self.entry.params[i].decay;
+            for j in 0..pt.data.len() {
+                let g = gt.data[j] as f64 * grad_scale;
+                let m1 = h.beta1 * mt.data[j] as f64 + (1.0 - h.beta1) * g;
+                let v1 = h.beta2 * vt.data[j] as f64 + (1.0 - h.beta2) * g * g;
+                let mhat = m1 / bc1;
+                let vhat = v1 / bc2;
+                let mut upd = mhat / (vhat.sqrt() + h.eps);
+                if decay {
+                    upd += h.wd * pt.data[j] as f64;
+                }
+                pt.data[j] = (pt.data[j] as f64 - lr * upd) as f32;
+                mt.data[j] = m1 as f32;
+                vt.data[j] = v1 as f32;
+            }
+            new_p.push(Buffer::Host(pt));
+            new_m.push(Buffer::Host(mt));
+            new_v.push(Buffer::Host(vt));
+        }
+        Ok((new_p, new_m, new_v))
+    }
+
+    fn eval(&self, params: &[Buffer], batch: &Batch) -> Result<f32> {
+        self.check_batch(batch)?;
+        let ps = self.host_params(params)?;
+        let t = batch.seq_len;
+        let mut loss_sum = 0f64;
+        for b in 0..batch.batch {
+            let ids = &batch.inputs[b * t..(b + 1) * t];
+            let tgt = &batch.targets[b * t..(b + 1) * t];
+            let (loss, _) = self.example_forward(&ps, ids, tgt)?;
+            loss_sum += loss as f64;
+        }
+        Ok((loss_sum / batch.batch as f64) as f32)
+    }
+}
+
+/// Factory over the built-in [`PRESETS`].
+pub struct ReferenceFactory;
+
+impl BackendFactory for ReferenceFactory {
+    fn create(&self, model: &str) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(ReferenceBackend::from_preset(model)?))
+    }
+
+    fn describe(&self, model: &str) -> Result<ModelEntry> {
+        Ok(ReferenceBackend::from_preset(model)?.entry().clone())
+    }
+
+    fn models(&self) -> Vec<String> {
+        PRESETS.iter().map(|(n, _)| n.to_string()).collect()
+    }
+
+    fn platform(&self) -> String {
+        "reference-cpu".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(microbatch: usize) -> RefModelConfig {
+        RefModelConfig {
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            seq_len: 6,
+            vocab: 11,
+            microbatch,
+        }
+    }
+
+    fn tiny_batch(bsz: usize, t: usize, vocab: usize, seed: u64) -> Batch {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = bsz * t;
+        Batch {
+            batch: bsz,
+            seq_len: t,
+            inputs: (0..n).map(|_| rng.range(0, vocab) as i32).collect(),
+            targets: (0..n).map(|_| rng.range(0, vocab) as i32).collect(),
+        }
+    }
+
+    fn perturbed(params: &[Buffer], i: usize, j: usize, eps: f32) -> Vec<Buffer> {
+        let mut out = params.to_vec();
+        let mut t = out[i].to_tensor().unwrap();
+        t.data[j] += eps;
+        out[i] = Buffer::Host(t);
+        out
+    }
+
+    #[test]
+    fn presets_all_build() {
+        for (name, _) in PRESETS {
+            let be = ReferenceBackend::from_preset(name).unwrap();
+            let e = be.entry();
+            assert_eq!(e.params.len(), 2 + 12 * e.n_layers + 3, "{name}");
+            let total: u64 = e.params.iter().map(|p| p.numel() as u64).sum();
+            assert_eq!(total, e.n_params, "{name}");
+        }
+        assert!(ReferenceBackend::from_preset("gpt5").is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let be = ReferenceBackend::new(tiny_cfg(2)).unwrap();
+        let a = be.init(3).unwrap();
+        let b = be.init(3).unwrap();
+        let c = be.init(4).unwrap();
+        assert_eq!(a[0].as_host().unwrap(), b[0].as_host().unwrap());
+        assert_ne!(a[0].as_host().unwrap(), c[0].as_host().unwrap());
+        // ln gamma ones, biases zero
+        let e = be.entry();
+        for (i, p) in e.params.iter().enumerate() {
+            let t = a[i].as_host().unwrap();
+            if p.name.ends_with(".g") {
+                assert!(t.data.iter().all(|&x| x == 1.0), "{}", p.name);
+            } else if p.shape.len() == 1 {
+                assert!(t.data.iter().all(|&x| x == 0.0), "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_step_is_deterministic() {
+        let be = ReferenceBackend::new(tiny_cfg(2)).unwrap();
+        let params = be.init(0).unwrap();
+        let batch = tiny_batch(2, 6, 11, 7);
+        let a = be.grad_step(&params, &batch).unwrap();
+        let b = be.grad_step(&params, &batch).unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.stats, b.stats);
+        for (x, y) in a.grads.iter().zip(&b.grads) {
+            assert_eq!(x.as_host().unwrap(), y.as_host().unwrap());
+        }
+    }
+
+    #[test]
+    fn grad_step_loss_matches_eval() {
+        let be = ReferenceBackend::new(tiny_cfg(2)).unwrap();
+        let params = be.init(1).unwrap();
+        let batch = tiny_batch(2, 6, 11, 3);
+        let g = be.grad_step(&params, &batch).unwrap();
+        let e = be.eval(&params, &batch).unwrap();
+        assert!((g.loss - e).abs() < 1e-6, "{} vs {e}", g.loss);
+        // random-init loss near ln(vocab)
+        assert!((e - (11f32).ln()).abs() < 1.0, "{e}");
+    }
+
+    /// The backward pass against central finite differences, per tensor.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let be = ReferenceBackend::new(tiny_cfg(2)).unwrap();
+        let params = be.init(5).unwrap();
+        let batch = tiny_batch(2, 6, 11, 9);
+        let out = be.grad_step(&params, &batch).unwrap();
+        let h = 1e-2f32;
+        let mut checked = 0usize;
+        for (i, g) in out.grads.iter().enumerate() {
+            let gt = g.as_host().unwrap();
+            // most-identifiable coordinate of this tensor
+            let (j, &ana) = gt
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                .unwrap();
+            if ana.abs() < 1e-3 {
+                continue;
+            }
+            let lp = be.eval(&perturbed(&params, i, j, h), &batch).unwrap();
+            let lm = be.eval(&perturbed(&params, i, j, -h), &batch).unwrap();
+            let num = (lp - lm) / (2.0 * h);
+            let tol = 0.1 * ana.abs().max(num.abs()) + 2e-3;
+            assert!(
+                (num - ana).abs() <= tol,
+                "param {} ({}): numeric {num} vs analytic {ana}",
+                be.entry().params[i].name,
+                i
+            );
+            checked += 1;
+        }
+        assert!(checked >= 5, "only {checked} tensors had a testable coordinate");
+    }
+
+    /// `stats` and `grads` of a B=4 step against brute-force per-example
+    /// gradients obtained from four B=1 steps (Goodfellow reference path).
+    #[test]
+    fn stats_match_bruteforce_per_example_gradients() {
+        let be4 = ReferenceBackend::new(tiny_cfg(4)).unwrap();
+        let be1 = ReferenceBackend::new(tiny_cfg(1)).unwrap();
+        let params = be4.init(2).unwrap();
+        let t = 6;
+        let batch = tiny_batch(4, t, 11, 11);
+        let out = be4.grad_step(&params, &batch).unwrap();
+
+        let mut brute_stats = [0f64; N_TYPES];
+        let mut brute_grads: Vec<Vec<f64>> =
+            be4.entry().params.iter().map(|p| vec![0f64; p.numel()]).collect();
+        for b in 0..4 {
+            let one = Batch {
+                batch: 1,
+                seq_len: t,
+                inputs: batch.inputs[b * t..(b + 1) * t].to_vec(),
+                targets: batch.targets[b * t..(b + 1) * t].to_vec(),
+            };
+            // B=1: returned grads are exactly dL_b/dw.
+            let ob = be1.grad_step(&params, &one).unwrap();
+            for (i, g) in ob.grads.iter().enumerate() {
+                let gt = g.as_host().unwrap();
+                let ti = be1.ltype_idx[i];
+                let mut sq = 0f64;
+                for (acc, &gv) in brute_grads[i].iter_mut().zip(&gt.data) {
+                    let w = gv as f64 / 4.0;
+                    *acc += w;
+                    sq += w * w;
+                }
+                brute_stats[ti] += sq;
+            }
+        }
+        for (a, b) in out.stats.iter().zip(brute_stats) {
+            assert!(
+                ((*a as f64) - b).abs() <= 1e-4 * b.abs().max(1e-12),
+                "stats {a} vs brute {b}"
+            );
+        }
+        for (i, g) in out.grads.iter().enumerate() {
+            let gt = g.as_host().unwrap();
+            for (x, y) in gt.data.iter().zip(&brute_grads[i]) {
+                assert!(
+                    ((*x as f64) - y).abs() <= 1e-5 * y.abs().max(1e-6),
+                    "grad[{i}] {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_and_sqnorms_are_consistent() {
+        let be = ReferenceBackend::new(tiny_cfg(2)).unwrap();
+        let params = be.init(0).unwrap();
+        let g1 = be.grad_step(&params, &tiny_batch(2, 6, 11, 1)).unwrap().grads;
+        let g2 = be.grad_step(&params, &tiny_batch(2, 6, 11, 2)).unwrap().grads;
+        let acc = be.accumulate(be.zero_grads().unwrap(), &g1).unwrap();
+        let acc = be.accumulate(acc, &g2).unwrap();
+        let sq = be.grad_sqnorms(&acc).unwrap();
+        let mut host = [0f64; N_TYPES];
+        for (i, (a, b)) in g1.iter().zip(&g2).enumerate() {
+            let ta = a.as_host().unwrap();
+            let tb = b.as_host().unwrap();
+            let s: f64 = ta
+                .data
+                .iter()
+                .zip(&tb.data)
+                .map(|(x, y)| ((x + y) as f64) * ((x + y) as f64))
+                .sum();
+            host[be.ltype_idx[i]] += s;
+        }
+        for (d, h) in sq.iter().zip(host) {
+            assert!((d - h).abs() <= 1e-6 * h.max(1e-12), "{d} vs {h}");
+        }
+    }
+
+    #[test]
+    fn adamw_overfits_one_batch() {
+        let be = ReferenceBackend::new(tiny_cfg(2)).unwrap();
+        let mut params = be.init(4).unwrap();
+        let mut m = be.zero_grads().unwrap();
+        let mut v = be.zero_grads().unwrap();
+        let batch = tiny_batch(2, 6, 11, 5);
+        let before = be.eval(&params, &batch).unwrap();
+        for step in 1..=8u64 {
+            let out = be.grad_step(&params, &batch).unwrap();
+            let (p2, m2, v2) = be.adamw_update(params, m, v, &out.grads, step, 3e-3, 1.0).unwrap();
+            params = p2;
+            m = m2;
+            v = v2;
+        }
+        let after = be.eval(&params, &batch).unwrap();
+        assert!(after < before, "{after} !< {before}");
+    }
+}

@@ -1,11 +1,11 @@
-//! Minimal host tensor + Literal conversions.
+//! Minimal host tensor.
 //!
-//! The coordinator mostly shuttles opaque `xla::Literal`s between
-//! artifacts; [`Tensor`] exists for the places where host-side math or
-//! serialization is needed (checkpoints, metrics, token batches).
+//! [`Tensor`] is the host-side value type of the [`Buffer`] interchange
+//! (`crate::runtime::backend::Buffer`): the reference backend computes on
+//! it directly, and checkpoints/metrics serialize through it. Conversions
+//! to/from device literals live in `runtime::pjrt` (feature `pjrt`).
 
-use anyhow::{ensure, anyhow, Result};
-use xla::{ElementType, Literal};
+use anyhow::{ensure, Result};
 
 /// A host-resident f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -37,50 +37,6 @@ impl Tensor {
     pub fn sq_norm(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
-
-    pub fn to_literal(&self) -> Result<Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Literal::vec1(&self.data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape to {:?}: {e:?}", self.shape))
-    }
-
-    pub fn from_literal(lit: &Literal) -> Result<Self> {
-        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
-        Tensor::new(dims, data)
-    }
-}
-
-/// Build an i32 literal of the given shape (token id batches).
-pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
-    ensure!(shape.iter().product::<usize>() == data.len(), "i32 literal shape mismatch");
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
-}
-
-/// Scalar literals for artifact hyper-parameter inputs.
-pub fn f32_scalar(v: f32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn i32_scalar(v: i32) -> Literal {
-    Literal::scalar(v)
-}
-
-/// Read a scalar f32 out of a literal.
-pub fn scalar_f32(lit: &Literal) -> Result<f32> {
-    lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
-}
-
-/// Read an f32 vector (e.g. the (5,) stats vector).
-pub fn vec_f32(lit: &Literal) -> Result<Vec<f32>> {
-    ensure!(
-        lit.ty().map_err(|e| anyhow!("{e:?}"))? == ElementType::F32,
-        "expected f32 literal"
-    );
-    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
 }
 
 #[cfg(test)]
@@ -92,25 +48,12 @@ mod tests {
         assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
         assert_eq!(Tensor::zeros(&[4, 2]).numel(), 8);
+        assert_eq!(Tensor::scalar(2.5).numel(), 1);
     }
 
     #[test]
     fn sq_norm() {
         let t = Tensor::new(vec![3], vec![1.0, 2.0, 2.0]).unwrap();
         assert!((t.sq_norm() - 9.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn literal_round_trip() {
-        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
-        let l = t.to_literal().unwrap();
-        let t2 = Tensor::from_literal(&l).unwrap();
-        assert_eq!(t, t2);
-    }
-
-    #[test]
-    fn i32_literal_round_trip() {
-        let l = i32_literal(&[2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
-        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
     }
 }

@@ -132,7 +132,8 @@ mod tests {
             500,
             |r| (r.next_u64() % 10_000, r.next_u64() % 10_000),
             |&(t1, dt)| {
-                let s = BatchSizeSchedule::Linear { min_accum: 1, max_accum: 32, ramp_tokens: 5000 };
+                let s =
+                    BatchSizeSchedule::Linear { min_accum: 1, max_accum: 32, ramp_tokens: 5000 };
                 let a = s.accum_steps(t1, None, 4);
                 let b = s.accum_steps(t1 + dt, None, 4);
                 crate::prop_check!(b >= a, "not monotone");

@@ -29,7 +29,12 @@ impl CsvLogger {
     }
 
     pub fn row(&mut self, values: &[f64]) -> Result<()> {
-        ensure!(values.len() == self.n_cols, "row arity {} != header {}", values.len(), self.n_cols);
+        ensure!(
+            values.len() == self.n_cols,
+            "row arity {} != header {}",
+            values.len(),
+            self.n_cols
+        );
         let mut line = String::with_capacity(values.len() * 12);
         for (i, v) in values.iter().enumerate() {
             if i > 0 {

@@ -1,74 +1,67 @@
-//! Runtime integration tests against the real nano artifacts.
+//! Runner-level integration tests against the reference backend.
 //!
-//! Require `make artifacts` to have run (skipped with a message otherwise,
-//! so pure-Rust unit tests never depend on Python).
+//! Hermetic: these run on a bare machine with no Python, no HLO artifacts
+//! and no xla_extension — the pure-Rust backend executes everything. The
+//! same assertions hold for the pjrt backend when its artifacts exist.
 
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
-use nanogns::runtime::{tensor, Manifest, Runtime};
+use nanogns::runtime::{Backend, BackendFactory, ReferenceFactory};
 
-fn setup() -> Option<(Runtime, Manifest)> {
-    let manifest = match Manifest::load("artifacts") {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping runtime integration tests: {e}");
-            return None;
-        }
-    };
-    Some((Runtime::cpu().expect("pjrt cpu"), manifest))
+fn runner(seed: i32) -> ModelRunner {
+    let mut r = ModelRunner::new(&ReferenceFactory, "nano").expect("create nano backend");
+    r.init(seed).expect("init");
+    r
+}
+
+fn loader_for(runner: &ModelRunner, seed: u64) -> Loader {
+    let text = CorpusGenerator::new(seed).generate(1 << 16);
+    Loader::new(&text, runner.entry.seq_len, seed)
 }
 
 #[test]
-fn manifest_and_artifacts_load() {
-    let Some((rt, manifest)) = setup() else { return };
-    let exes = rt.load_model(&manifest, "nano").unwrap();
-    assert!(exes.len() >= 6);
-    // cached: a second load returns the same Rc
-    let entry = manifest.config("nano").unwrap();
-    let p = entry.artifact_path(&manifest.root, "init").unwrap();
-    let a = rt.load(&p).unwrap();
-    let b = rt.load(&p).unwrap();
-    assert!(std::rc::Rc::ptr_eq(&a, &b));
+fn factory_lists_and_describes_every_preset() {
+    let f = ReferenceFactory;
+    let models = f.models();
+    assert!(models.iter().any(|m| m == "nano"), "{models:?}");
+    for m in &models {
+        let entry = f.describe(m).unwrap();
+        let built = f.create(m).unwrap();
+        assert_eq!(entry.n_params, built.entry().n_params, "{m}");
+        assert_eq!(entry.params.len(), built.entry().params.len(), "{m}");
+    }
+    assert!(f.create("no-such-model").is_err());
 }
 
 #[test]
-fn init_produces_manifest_shapes() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut runner = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    runner.init(0).unwrap();
-    let entry = manifest.config("nano").unwrap();
-    for (spec, lit) in entry.params.iter().zip(&runner.params) {
-        let t = tensor::Tensor::from_literal(lit).unwrap();
+fn init_produces_entry_shapes() {
+    let runner = runner(0);
+    for (spec, buf) in runner.entry.params.iter().zip(&runner.params) {
+        let t = buf.to_tensor().unwrap();
         assert_eq!(t.shape, spec.shape, "{}", spec.name);
     }
     // gamma initialized to ones
-    let i = entry.params.iter().position(|p| p.name == "h0.ln1.g").unwrap();
-    let g = tensor::Tensor::from_literal(&runner.params[i]).unwrap();
+    let i = runner.entry.params.iter().position(|p| p.name == "h0.ln1.g").unwrap();
+    let g = runner.params[i].to_tensor().unwrap();
     assert!(g.data.iter().all(|&v| v == 1.0));
 }
 
 #[test]
 fn init_is_deterministic_and_seed_sensitive() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut a = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    let mut b = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    a.init(3).unwrap();
-    b.init(3).unwrap();
-    let ta = tensor::Tensor::from_literal(&a.params[0]).unwrap();
-    let tb = tensor::Tensor::from_literal(&b.params[0]).unwrap();
+    let a = runner(3);
+    let b = runner(3);
+    let ta = a.params[0].to_tensor().unwrap();
+    let tb = b.params[0].to_tensor().unwrap();
     assert_eq!(ta, tb);
-    b.init(4).unwrap();
-    let tb2 = tensor::Tensor::from_literal(&b.params[0]).unwrap();
-    assert_ne!(ta, tb2);
+    let c = runner(4);
+    let tc = c.params[0].to_tensor().unwrap();
+    assert_ne!(ta, tc);
 }
 
 #[test]
 fn grad_step_outputs_are_sane() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut runner = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    runner.init(1).unwrap();
-    let text = CorpusGenerator::new(1).generate(1 << 16);
-    let mut loader = Loader::new(&text, runner.entry.seq_len, 1);
+    let runner = runner(1);
+    let mut loader = loader_for(&runner, 1);
     let out = runner.grad_microbatch(&loader.next_batch(runner.entry.microbatch)).unwrap();
     // random-init loss ~ ln(256)
     assert!((out.loss - (256f32).ln()).abs() < 1.0, "loss {}", out.loss);
@@ -81,18 +74,14 @@ fn grad_step_outputs_are_sane() {
 
 #[test]
 fn grad_sqnorms_matches_host_computation() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut runner = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    runner.init(2).unwrap();
-    let text = CorpusGenerator::new(2).generate(1 << 16);
-    let mut loader = Loader::new(&text, runner.entry.seq_len, 2);
+    let runner = runner(2);
+    let mut loader = loader_for(&runner, 2);
     let out = runner.grad_microbatch(&loader.next_batch(runner.entry.microbatch)).unwrap();
     let device = runner.grad_sqnorms(&out.grads).unwrap();
     // recompute on host
-    let entry = manifest.config("nano").unwrap();
     let mut host = [0f64; nanogns::N_TYPES];
-    for (spec, g) in entry.params.iter().zip(&out.grads) {
-        let t = tensor::Tensor::from_literal(g).unwrap();
+    for (spec, g) in runner.entry.params.iter().zip(&out.grads) {
+        let t = g.to_tensor().unwrap();
         let idx = nanogns::STATS_ORDER.iter().position(|s| *s == spec.ltype).unwrap();
         host[idx] += t.sq_norm();
     }
@@ -103,11 +92,8 @@ fn grad_sqnorms_matches_host_computation() {
 
 #[test]
 fn accumulation_equals_sum() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut runner = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    runner.init(3).unwrap();
-    let text = CorpusGenerator::new(3).generate(1 << 16);
-    let mut loader = Loader::new(&text, runner.entry.seq_len, 3);
+    let runner = runner(3);
+    let mut loader = loader_for(&runner, 3);
     let b1 = loader.next_batch(runner.entry.microbatch);
     let b2 = loader.next_batch(runner.entry.microbatch);
     let g1 = runner.grad_microbatch(&b1).unwrap().grads;
@@ -115,9 +101,9 @@ fn accumulation_equals_sum() {
     let acc = runner.accumulate(runner.zero_grads().unwrap(), &g1).unwrap();
     let acc = runner.accumulate(acc, &g2).unwrap();
     for ((a, x), y) in acc.iter().zip(&g1).zip(&g2) {
-        let ta = tensor::Tensor::from_literal(a).unwrap();
-        let tx = tensor::Tensor::from_literal(x).unwrap();
-        let ty = tensor::Tensor::from_literal(y).unwrap();
+        let ta = a.to_tensor().unwrap();
+        let tx = x.to_tensor().unwrap();
+        let ty = y.to_tensor().unwrap();
         for i in 0..ta.data.len() {
             let want = tx.data[i] + ty.data[i];
             assert!((ta.data[i] - want).abs() <= 1e-5 * want.abs().max(1e-3));
@@ -127,35 +113,36 @@ fn accumulation_equals_sum() {
 
 #[test]
 fn adam_update_decreases_loss_on_same_batch() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut runner = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    runner.init(4).unwrap();
-    let text = CorpusGenerator::new(4).generate(1 << 16);
-    let mut loader = Loader::new(&text, runner.entry.seq_len, 4);
+    let mut runner = runner(4);
+    let mut loader = loader_for(&runner, 4);
     let batch = loader.next_batch(runner.entry.microbatch);
     let before = runner.eval(&batch).unwrap();
-    for _ in 0..3 {
+    for _ in 0..5 {
         let out = runner.grad_microbatch(&batch).unwrap();
-        runner.adamw_update(&out.grads, 1e-3, 1.0).unwrap();
+        runner.adamw_update(&out.grads, 3e-3, 1.0).unwrap();
     }
     let after = runner.eval(&batch).unwrap();
     assert!(after < before, "{after} !< {before}");
 }
 
 #[test]
+fn batch_shape_mismatch_is_rejected() {
+    let runner = runner(6);
+    let mut loader = loader_for(&runner, 6);
+    let bad = loader.next_batch(runner.entry.microbatch + 1);
+    assert!(runner.grad_microbatch(&bad).is_err());
+    assert!(runner.eval(&bad).is_err());
+}
+
+#[test]
 fn checkpoint_round_trip() {
-    let Some((rt, manifest)) = setup() else { return };
-    let mut runner = ModelRunner::new(&rt, &manifest, "nano").unwrap();
-    runner.init(5).unwrap();
-    let entry = manifest.config("nano").unwrap();
+    let runner = runner(5);
+    let entry = &runner.entry;
     let dir = std::env::temp_dir().join("nanogns_ckpt_test");
     let path = dir.join("nano.ckpt");
     nanogns::coordinator::checkpoint::save(&path, entry, &runner.params).unwrap();
     let loaded = nanogns::coordinator::checkpoint::load(&path, entry).unwrap();
     for (a, b) in runner.params.iter().zip(&loaded) {
-        assert_eq!(
-            tensor::Tensor::from_literal(a).unwrap(),
-            tensor::Tensor::from_literal(b).unwrap()
-        );
+        assert_eq!(a.to_tensor().unwrap(), b.to_tensor().unwrap());
     }
 }

@@ -1,0 +1,182 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This workspace builds with no network access, so the real `anyhow`
+//! cannot be fetched from crates.io. This shim implements the subset of
+//! the API the workspace uses — `Error`, `Result`, `Context`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — with the same semantics:
+//! a dynamic error type that any `std::error::Error` converts into, plus
+//! layered human-readable context.
+//!
+//! Notable (intentional) divergence: `Display` prints the whole context
+//! chain (`outer: inner: root`) rather than only the outermost message,
+//! which makes single-line `{e}` logging self-contained.
+
+use std::fmt;
+
+/// Dynamic error: a root message plus layered context strings.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, context: String) -> Self {
+        self.context.push(context);
+        self
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent (no overlap with the reflexive `From<Error> for Error`).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human-readable context to an error while propagating it.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.push_context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.push_context(f().to_string()))
+    }
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn io_error_converts_and_takes_context() {
+        let e = fails_io().context("reading config").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("reading config: "), "{s}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        fn inner(v: usize) -> Result<()> {
+            ensure!(v < 2, "v too big: {v}");
+            if v == 1 {
+                bail!("one is not allowed");
+            }
+            Ok(())
+        }
+        assert!(inner(0).is_ok());
+        assert_eq!(format!("{}", inner(1).unwrap_err()), "one is not allowed");
+        assert_eq!(format!("{}", inner(5).unwrap_err()), "v too big: 5");
+        fn bare(v: usize) -> Result<()> {
+            ensure!(v == 0);
+            Ok(())
+        }
+        assert!(format!("{}", bare(1).unwrap_err()).contains("condition failed"));
+    }
+
+    #[test]
+    fn context_layers_print_outermost_first() {
+        let e = Error::msg("root").push_context("mid".into()).push_context("outer".into());
+        assert_eq!(format!("{e}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+}
