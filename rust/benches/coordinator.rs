@@ -2,18 +2,26 @@
 //! top of the XLA executions — GNS bookkeeping, schedules, data loading,
 //! jackknife — which must be negligible next to a model step.
 //!
-//! Run: `cargo bench --bench coordinator`.
+//! Run: `cargo bench --bench coordinator`. Pass `--json` (after `--`) to
+//! write medians to `BENCH_coordinator.json`.
 
 use nanogns::data::{CorpusGenerator, Loader};
 use nanogns::gns::{jackknife_ratio_stderr, GnsAccumulator, GnsSimulator, GnsTracker, SimConfig};
 use nanogns::schedule::{BatchSizeSchedule, GnsController};
-use nanogns::util::benchkit::Bench;
+use nanogns::util::benchkit::{Bench, BenchJson};
 use nanogns::{N_TYPES, STATS_ORDER};
 
+fn run_and_record(bench: &mut Bench, report: &mut BenchJson, name: &str, f: impl FnMut()) {
+    let stats = bench.run(name, f);
+    report.record(&format!("coordinator/{name}"), &stats, None);
+}
+
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let mut report = BenchJson::new();
     let mut bench = Bench::new("coordinator");
 
-    bench.run("gns_accumulator_8mb", || {
+    run_and_record(&mut bench, &mut report, "gns_accumulator_8mb", || {
         let stats = [0.1f32, 0.2, 0.3, 0.4, 0.5];
         let mut acc = GnsAccumulator::new(N_TYPES, 4);
         for _ in 0..8 {
@@ -25,20 +33,20 @@ fn main() {
     let mut tr = GnsTracker::new(&STATS_ORDER, 0.05);
     let big = [1.0; N_TYPES];
     let small = [2.0; N_TYPES];
-    bench.run("gns_tracker_observe", || {
+    run_and_record(&mut bench, &mut report, "gns_tracker_observe", || {
         tr.observe(64.0, &big, &small);
         std::hint::black_box(tr.gns_total());
     });
 
     let s: Vec<f64> = (0..256).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
     let g: Vec<f64> = (0..256).map(|i| 2.0 + (i % 5) as f64 * 0.1).collect();
-    bench.run("jackknife_256", || {
+    run_and_record(&mut bench, &mut report, "jackknife_256", || {
         std::hint::black_box(jackknife_ratio_stderr(&s, &g));
     });
 
     let text = CorpusGenerator::new(0).generate(1 << 20);
     let mut loader = Loader::new(&text, 128, 0);
-    bench.run("loader_next_batch_b4_t128", || {
+    run_and_record(&mut bench, &mut report, "loader_next_batch_b4_t128", || {
         std::hint::black_box(loader.next_batch(4));
     });
 
@@ -47,16 +55,20 @@ fn main() {
         max_accum: 64,
         gain: 0.5,
     });
-    bench.run("controller_decide", || {
+    run_and_record(&mut bench, &mut report, "controller_decide", || {
         std::hint::black_box(ctl.decide(1_000_000, Some(37.5), 4));
     });
 
-    bench.run("simulator_estimate_32", || {
+    run_and_record(&mut bench, &mut report, "simulator_estimate_32", || {
         let mut sim = GnsSimulator::new(SimConfig::default());
         std::hint::black_box(sim.estimate(64, 1, 32));
     });
 
-    bench.run("corpus_generate_64k", || {
+    run_and_record(&mut bench, &mut report, "corpus_generate_64k", || {
         std::hint::black_box(CorpusGenerator::new(1).generate(1 << 16));
     });
+
+    if json_mode {
+        report.write_or_exit("BENCH_coordinator.json");
+    }
 }

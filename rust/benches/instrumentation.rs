@@ -5,14 +5,17 @@
 //! model, no instrumentation) — the measured analogue of the paper's
 //! 40% vs 57% MFU comparison, and the motivation for LN-only tracking.
 //!
-//! Run: `cargo bench --bench instrumentation`.
+//! Run: `cargo bench --bench instrumentation`. Pass `--json` (after
+//! `--`) to write medians to `BENCH_instrumentation.json`.
 
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
 use nanogns::runtime::{pjrt, Manifest, PjrtFactory, Runtime};
-use nanogns::util::benchkit::Bench;
+use nanogns::util::benchkit::{Bench, BenchJson};
 
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let mut report = BenchJson::new();
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(e) => {
@@ -63,7 +66,13 @@ fn main() {
         let i = bench.run("instrumented", || {
             inst.run(&args).unwrap();
         });
+        let tokens = (batch.batch * batch.seq_len) as f64;
+        report.record(&format!("gradstep_{model}/plain"), &p, Some(tokens));
+        report.record(&format!("gradstep_{model}/instrumented"), &i, Some(tokens));
         rows.push((model, p.mean_ns, i.mean_ns));
+    }
+    if json_mode {
+        report.write_or_exit("BENCH_instrumentation.json");
     }
     println!("\n{:>8} {:>12} {:>14} {:>9}", "model", "plain", "instrumented", "ratio");
     for (m, p, i) in rows {

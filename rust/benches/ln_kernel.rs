@@ -5,12 +5,15 @@
 //! the same PJRT runtime the trainer uses.
 //!
 //! Run: `cargo bench --bench ln_kernel` (uses the in-tree benchkit; this
-//! offline build has no criterion).
+//! offline build has no criterion). Pass `--json` (after `--`) to write
+//! medians to `BENCH_ln_kernel.json`.
 
 use nanogns::runtime::{pjrt, Manifest, Runtime, Tensor};
-use nanogns::util::benchkit::Bench;
+use nanogns::util::benchkit::{Bench, BenchJson};
 
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let mut report = BenchJson::new();
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(e) => {
@@ -45,8 +48,16 @@ fn main() {
             let stats = bench.run(variant, || {
                 exe.run(&[&x, &gamma, &beta, &g]).expect("ln exec");
             });
+            report.record(
+                &format!("ln_backward_k{k}/{variant}"),
+                &stats,
+                Some((b * t) as f64), // rows normalized per second
+            );
             rows.push((k, variant.clone(), stats.mean_ns));
         }
+    }
+    if json_mode {
+        report.write_or_exit("BENCH_ln_kernel.json");
     }
 
     // The zero-overhead headline: gnorm/plain ratio per K.

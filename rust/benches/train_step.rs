@@ -4,45 +4,108 @@
 //!
 //! Runs on the hermetic reference backend, so this benchmark works on a
 //! bare machine and tracks the pure-Rust kernels' trajectory over PRs.
+//! The fused batched path (`grad_microbatch`) is benchmarked against the
+//! retained per-example oracle (`grad_microbatch_per_example`) — the
+//! before/after pair for the PR-over-PR speedup record.
 //!
 //! Run: `cargo bench --bench train_step`.
+//! Flags (after `--`):
+//! * `--json`  — write medians to `BENCH_train_step.json` (name →
+//!   {median_ns, samples, throughput in tokens/sec for step entries});
+//! * `--smoke` — minimal timing (CI mode): exercises every entry and the
+//!   NaN/panic guard without caring about wall-clock stability.
 
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
-use nanogns::runtime::ReferenceFactory;
-use nanogns::util::benchkit::Bench;
+use nanogns::runtime::{ReferenceBackend, ReferenceFactory};
+use nanogns::util::benchkit::{Bench, BenchJson};
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_mode = args.iter().any(|a| a == "--json");
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let (target_ms, samples) = if smoke { (10, 2) } else { (300, 5) };
+    let mut report = BenchJson::new();
+
     for model in ["nano", "micro", "small"] {
         let Ok(mut runner) = ModelRunner::new(&ReferenceFactory, model) else {
             eprintln!("skipping unknown model {model}");
             continue;
         };
         runner.init(0).unwrap();
+        let oracle = ReferenceBackend::from_preset(model).unwrap();
         let text = CorpusGenerator::new(0).generate(1 << 17);
         let mut loader = Loader::new(&text, runner.entry.seq_len, 0);
         let batch = loader.next_batch(runner.entry.microbatch);
+        let tokens = (runner.entry.microbatch * runner.entry.seq_len) as f64;
 
-        let mut bench = Bench::new(&format!("step_{model}")).with_samples(5).with_target_ms(300);
-        bench.run("grad_microbatch", || {
+        // NaN/regression guard (the point of the CI smoke job): a fused
+        // step must produce finite loss, strictly-positive finite stats,
+        // and finite gradients.
+        let out = runner.grad_microbatch(&batch).unwrap();
+        assert!(out.loss.is_finite(), "{model}: non-finite loss {}", out.loss);
+        for (t, s) in nanogns::STATS_ORDER.iter().zip(out.stats) {
+            assert!(s.is_finite() && s > 0.0, "{model}: bad stats[{t}] = {s}");
+        }
+        for (spec, g) in runner.entry.params.iter().zip(&out.grads) {
+            let gt = g.to_tensor().unwrap();
+            assert!(
+                gt.data.iter().all(|v| v.is_finite()),
+                "{model}: non-finite gradient in {}",
+                spec.name
+            );
+        }
+
+        let group = format!("step_{model}");
+        let mut bench = Bench::new(&group).with_samples(samples).with_target_ms(target_ms);
+
+        let fused = bench.run("grad_microbatch", || {
             runner.grad_microbatch(&batch).unwrap();
         });
-        let out = runner.grad_microbatch(&batch).unwrap();
-        bench.run("grad_sqnorms", || {
+        report.record(&format!("{group}/grad_microbatch"), &fused, Some(tokens));
+
+        let baseline = bench.run("grad_microbatch_per_example", || {
+            oracle.grad_step_per_example(&runner.params, &batch).unwrap();
+        });
+        report.record(&format!("{group}/grad_microbatch_per_example"), &baseline, Some(tokens));
+        println!(
+            "{group}: fused {:.3} ms vs per-example {:.3} ms -> {:.2}x",
+            fused.median_ns / 1e6,
+            baseline.median_ns / 1e6,
+            baseline.median_ns / fused.median_ns.max(1.0)
+        );
+
+        let s = bench.run("grad_sqnorms", || {
             runner.grad_sqnorms(&out.grads).unwrap();
         });
-        bench.run("accumulate", || {
-            let acc = runner.zero_grads().unwrap();
-            runner.accumulate(acc, &out.grads).unwrap();
+        report.record(&format!("{group}/grad_sqnorms"), &s, None);
+        let s = bench.run("accumulate", || {
+            let acc = runner.lease_zero_grads().unwrap();
+            let acc = runner.accumulate(acc, &out.grads).unwrap();
+            runner.recycle_grads(acc);
         });
-        bench.run("adamw_update", || {
+        report.record(&format!("{group}/accumulate"), &s, None);
+        let s = bench.run("adamw_update", || {
             runner.adamw_update(&out.grads, 1e-3, 1.0).unwrap();
         });
-        bench.run("eval_step", || {
+        report.record(&format!("{group}/adamw_update"), &s, None);
+        let s = bench.run("eval_step", || {
             runner.eval(&batch).unwrap();
         });
-        bench.run("zero_grads_alloc", || {
+        report.record(&format!("{group}/eval_step"), &s, Some(tokens));
+        let s = bench.run("zero_grads_alloc", || {
             runner.zero_grads().unwrap();
         });
+        report.record(&format!("{group}/zero_grads_alloc"), &s, None);
+        // The arena satellite: lease + recycle must beat fresh allocation.
+        let s = bench.run("zero_grads_arena", || {
+            let g = runner.lease_zero_grads().unwrap();
+            runner.recycle_grads(g);
+        });
+        report.record(&format!("{group}/zero_grads_arena"), &s, None);
+    }
+
+    if json_mode {
+        report.write_or_exit("BENCH_train_step.json");
     }
 }

@@ -62,13 +62,14 @@ pub fn ddp_step_with_stats(
     let mut loss_sum = 0f64;
 
     for loader in loaders.iter_mut() {
-        let mut acc = runner.zero_grads()?;
+        let mut acc = runner.lease_zero_grads()?;
         for _ in 0..accum {
             let batch = loader.next_batch(mb);
             let out = runner.grad_microbatch(&batch)?;
             loss_sum += out.loss as f64;
             gns_acc.add_microbatch(&out.stats);
             acc = runner.accumulate(acc, &out.grads)?;
+            runner.recycle_grads(out.grads);
         }
         // per-rank mean gradient norm: ||sum/accum||^2 = ||sum||^2/accum^2
         let sums = runner.grad_sqnorms(&acc)?;
@@ -80,7 +81,11 @@ pub fn ddp_step_with_stats(
         rank_sqnorms.push(sq);
         all_acc = Some(match all_acc {
             None => acc,
-            Some(prev) => runner.accumulate(prev, &acc)?,
+            Some(prev) => {
+                let merged = runner.accumulate(prev, &acc)?;
+                runner.recycle_grads(acc);
+                merged
+            }
         });
     }
 

@@ -5,11 +5,19 @@
 //! PJRT). The backend itself is stateless, so snapshot/restore (run
 //! forking, Fig. 6) and checkpointing are pure buffer copies.
 
+use std::sync::Mutex;
+
 use anyhow::{ensure, Result};
 
 use crate::data::Batch;
 use crate::runtime::{Backend, BackendFactory, Buffer, ModelEntry};
 use crate::N_TYPES;
+
+/// Gradient buffer sets the arena keeps around for reuse. The
+/// accumulation loops lease at most one set at a time (the accumulator);
+/// a second slot absorbs recycle/lease interleaving without hoarding
+/// model-sized buffers.
+const ARENA_MAX_SETS: usize = 2;
 
 pub use crate::runtime::backend::GradOut;
 
@@ -31,6 +39,12 @@ pub struct ModelRunner {
     v: Vec<Buffer>,
     /// Optimizer step count (1-based after first update).
     pub step: u64,
+    /// Reusable gradient buffer sets: [`Self::lease_zero_grads`] pops and
+    /// re-zeroes one instead of allocating every accumulation step;
+    /// [`Self::recycle_grads`] returns sets to the pool. Purely a scratch
+    /// cache — never part of snapshot/restore state, and leasing from a
+    /// dirty pool is always equivalent to a fresh `zero_grads` call.
+    arena: Mutex<Vec<Vec<Buffer>>>,
 }
 
 impl ModelRunner {
@@ -40,7 +54,15 @@ impl ModelRunner {
 
     pub fn from_backend(backend: Box<dyn Backend>) -> Self {
         let entry = backend.entry().clone();
-        Self { backend, entry, params: Vec::new(), m: Vec::new(), v: Vec::new(), step: 0 }
+        Self {
+            backend,
+            entry,
+            params: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            step: 0,
+            arena: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -150,5 +172,50 @@ impl ModelRunner {
     /// Zero-filled gradient accumulator buffer set.
     pub fn zero_grads(&self) -> Result<Vec<Buffer>> {
         self.backend.zero_grads()
+    }
+
+    /// Like [`Self::zero_grads`], but reuses a buffer set previously
+    /// returned via [`Self::recycle_grads`] (re-zeroed in place) instead
+    /// of reallocating — the accumulator's per-step allocation becomes a
+    /// `fill(0.0)`. (Backends still allocate their *output* gradient set
+    /// per `grad_step`; that allocation is part of the `GradOut` API.)
+    pub fn lease_zero_grads(&self) -> Result<Vec<Buffer>> {
+        let reused = self.arena.lock().ok().and_then(|mut pool| pool.pop());
+        match reused {
+            Some(mut set) => {
+                // Pooled sets are all host-resident (recycle_grads
+                // guarantees it), so re-zeroing is a plain fill.
+                for b in set.iter_mut() {
+                    match b {
+                        Buffer::Host(t) => t.data.fill(0.0),
+                        #[cfg(feature = "pjrt")]
+                        Buffer::Pjrt(_) => {}
+                    }
+                }
+                Ok(set)
+            }
+            None => self.backend.zero_grads(),
+        }
+    }
+
+    /// Return a no-longer-needed gradient set to the arena for reuse.
+    /// Only host-resident sets matching this model's tensor arity *and
+    /// shapes* are pooled (a set from a different runner must not poison
+    /// the pool); anything else is simply dropped.
+    pub fn recycle_grads(&self, grads: Vec<Buffer>) {
+        let matches_model = grads.len() == self.entry.params.len()
+            && grads.iter().zip(&self.entry.params).all(|(b, spec)| match b {
+                Buffer::Host(t) => t.shape == spec.shape,
+                #[cfg(feature = "pjrt")]
+                Buffer::Pjrt(_) => false,
+            });
+        if !matches_model {
+            return;
+        }
+        if let Ok(mut pool) = self.arena.lock() {
+            if pool.len() < ARENA_MAX_SETS {
+                pool.push(grads);
+            }
+        }
     }
 }

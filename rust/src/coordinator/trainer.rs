@@ -125,7 +125,11 @@ impl Trainer {
         let accum = self.controller.decide(self.tokens, self.tracker.gns_total(), mb);
         let ranks = self.cfg.ranks.max(1);
 
-        let mut acc = self.runner.zero_grads()?;
+        // Leased from the runner's gradient arena: after the first step
+        // the accumulator is re-zeroed in place instead of reallocated
+        // (grad_step's own output buffers are still per-call — GradOut
+        // hands them to the caller by value).
+        let mut acc = self.runner.lease_zero_grads()?;
         let mut gns_acc = GnsAccumulator::new(N_TYPES, mb);
         let mut loss_sum = 0f64;
         let mut n_micro = 0usize;
@@ -135,6 +139,7 @@ impl Trainer {
                 let out = self.runner.grad_microbatch(&batch)?;
                 gns_acc.add_microbatch(&out.stats);
                 acc = self.runner.accumulate(acc, &out.grads)?;
+                self.runner.recycle_grads(out.grads);
                 loss_sum += out.loss as f64;
                 n_micro += 1;
             }
@@ -154,6 +159,7 @@ impl Trainer {
 
         let lr = self.cfg.lr.at(self.runner.step) * self.lr_scale;
         self.runner.adamw_update(&acc, lr, scale)?;
+        self.runner.recycle_grads(acc);
         self.tokens += (n_micro * mb * seq) as u64;
 
         let mut raw_g_sq = [0f64; N_TYPES];

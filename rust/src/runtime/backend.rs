@@ -4,8 +4,10 @@
 //! `coordinator::{runner, trainer, ddp}` and the figure harnesses are
 //! written against this trait, so the same training loop runs on:
 //!
-//! * [`crate::runtime::reference`] — a pure-Rust CPU transformer with
-//!   hand-written forward/backward (hermetic; the default);
+//! * [`crate::runtime::reference`] — a pure-Rust CPU transformer whose
+//!   batched backward emits per-example gradient norms simultaneously
+//!   with the parameter gradients via the fused
+//!   [`crate::runtime::kernels`] (hermetic; the default);
 //! * [`crate::runtime::pjrt`] — the AOT HLO-artifact path through the
 //!   PJRT C API (feature `pjrt`).
 //!
@@ -98,6 +100,8 @@ pub trait Backend {
 
     /// Forward+backward on one microbatch: loss, gradients of the
     /// mean-microbatch loss, and the per-layer-type GNS stats vector.
+    /// Implementations compute the stats *with* the gradient contraction
+    /// (paper §3), not from materialized per-example gradients.
     fn grad_step(&self, params: &[Buffer], batch: &Batch) -> Result<GradOut>;
 
     /// Element-wise `acc + grads` over the whole parameter list.

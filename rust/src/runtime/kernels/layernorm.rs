@@ -1,0 +1,248 @@
+//! Batched LayerNorm forward and the paper's §3 fused backward.
+//!
+//! The fused backward computes `dx`, accumulates `dγ`/`dβ`, *and* emits
+//! per-example `||dγ_b||² + ||dβ_b||²` from the same pass. The per-example
+//! vectors `dγ_b = Σ_t dy_t ⊙ x̂_t` and `dβ_b = Σ_t dy_t` are exactly the
+//! partial sums the batch reduction has to form anyway, so the norms are
+//! free — this is the zero-overhead LN kernel of Gray et al. §3, in Rust.
+//!
+//! Thread-determinism contract: workers own disjoint example blocks
+//! (disjoint `dx` rows and per-example scratch slots); the `dγ`/`dβ`
+//! accumulation and the norm emission run on the calling thread in fixed
+//! example order after the join.
+
+use super::threads::par_row_blocks2;
+
+/// Row-wise LayerNorm over `rows` rows of width `d`. Writes the output,
+/// the normalized activations `xhat` and the per-row reciprocal stddev
+/// `rstd` (both needed by the backward). Serial: `O(rows·d)`.
+pub fn ln_fwd(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+    out: &mut [f32],
+    xhat: &mut [f32],
+    rstd: &mut [f32],
+) {
+    assert!(x.len() >= rows * d && out.len() >= rows * d && xhat.len() >= rows * d);
+    assert!(rstd.len() >= rows && gamma.len() >= d && beta.len() >= d);
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mut mean = 0f32;
+        for &v in row {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0f32;
+        for &v in row {
+            var += (v - mean) * (v - mean);
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        rstd[r] = rs;
+        for j in 0..d {
+            let xh = (row[j] - mean) * rs;
+            xhat[r * d + j] = xh;
+            out[r * d + j] = gamma[j] * xh + beta[j];
+        }
+    }
+}
+
+/// Fused LayerNorm backward over a `[bsz, t, d]` batch.
+///
+/// Computes `dx`, accumulates the batch `dgamma`/`dbeta`, and writes each
+/// example's `||dγ_b||² + ||dβ_b||²` into `per_ex_sq[b]` — both LN
+/// parameters carry the `layernorm` stats tag, so one slot per example
+/// covers the pair. `scratch` needs `bsz * 2d` elements (per-example
+/// `dγ_b` then `dβ_b`).
+#[allow(clippy::too_many_arguments)]
+pub fn ln_bwd_fused(
+    workers: usize,
+    dout: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    gamma: &[f32],
+    bsz: usize,
+    t: usize,
+    d: usize,
+    dx: &mut [f32],
+    scratch: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    per_ex_sq: &mut [f64],
+) {
+    let m = bsz * t;
+    assert!(dout.len() >= m * d && xhat.len() >= m * d && rstd.len() >= m);
+    assert!(dx.len() >= m * d && scratch.len() >= bsz * 2 * d);
+    assert!(dgamma.len() >= d && dbeta.len() >= d && per_ex_sq.len() >= bsz);
+    par_row_blocks2(workers, bsz, t * d, dx, 2 * d, scratch, |b0, b1, dxb, scb| {
+        for b in b0..b1 {
+            let sl = &mut scb[(b - b0) * 2 * d..(b - b0 + 1) * 2 * d];
+            sl.fill(0.0);
+            for ti in 0..t {
+                let r = b * t + ti;
+                let dyr = &dout[r * d..(r + 1) * d];
+                let xhr = &xhat[r * d..(r + 1) * d];
+                let mut m1 = 0f32; // mean(dxhat)
+                let mut m2 = 0f32; // mean(dxhat * xhat)
+                for j in 0..d {
+                    let dy = dyr[j];
+                    let xh = xhr[j];
+                    sl[j] += dy * xh; // dγ_b
+                    sl[d + j] += dy; // dβ_b
+                    let dxh = dy * gamma[j];
+                    m1 += dxh;
+                    m2 += dxh * xh;
+                }
+                m1 /= d as f32;
+                m2 /= d as f32;
+                let rs = rstd[r];
+                let dxr = &mut dxb[((b - b0) * t + ti) * d..((b - b0) * t + ti + 1) * d];
+                for j in 0..d {
+                    let dxh = dyr[j] * gamma[j];
+                    dxr[j] = rs * (dxh - m1 - xhr[j] * m2);
+                }
+            }
+        }
+    });
+    // Batch reduction + norm emission, fixed example order (deterministic).
+    for b in 0..bsz {
+        let sl = &scratch[b * 2 * d..(b + 1) * 2 * d];
+        let mut sq = 0f64;
+        for j in 0..d {
+            dgamma[j] += sl[j];
+            dbeta[j] += sl[d + j];
+            sq += sl[j] as f64 * sl[j] as f64 + sl[d + j] as f64 * sl[d + j] as f64;
+        }
+        per_ex_sq[b] = sq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const EPS: f32 = 1e-5;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Reference per-row backward (the pre-batched formula).
+    #[allow(clippy::too_many_arguments)]
+    fn naive_bwd(
+        dout: &[f32],
+        xhat: &[f32],
+        rstd: &[f32],
+        g: &[f32],
+        rows: usize,
+        d: usize,
+        dg: &mut [f32],
+        db: &mut [f32],
+    ) -> Vec<f32> {
+        let mut dx = vec![0f32; rows * d];
+        for r in 0..rows {
+            let mut m1 = 0f32;
+            let mut m2 = 0f32;
+            for j in 0..d {
+                let dy = dout[r * d + j];
+                let xh = xhat[r * d + j];
+                dg[j] += dy * xh;
+                db[j] += dy;
+                let dxh = dy * g[j];
+                m1 += dxh;
+                m2 += dxh * xh;
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            for j in 0..d {
+                let dxh = dout[r * d + j] * g[j];
+                dx[r * d + j] = rstd[r] * (dxh - m1 - xhat[r * d + j] * m2);
+            }
+        }
+        dx
+    }
+
+    #[test]
+    fn fused_backward_matches_reference_and_emits_norms() {
+        let mut rng = Rng::seed_from_u64(11);
+        for (bsz, t, d) in [(1, 1, 4), (2, 3, 8), (4, 5, 6)] {
+            let rows = bsz * t;
+            let x = randv(&mut rng, rows * d);
+            let gamma: Vec<f32> = (0..d).map(|j| 1.0 + 0.1 * j as f32).collect();
+            let beta = randv(&mut rng, d);
+            let (mut out, mut xhat, mut rstd) =
+                (vec![0f32; rows * d], vec![0f32; rows * d], vec![0f32; rows]);
+            ln_fwd(&x, &gamma, &beta, rows, d, EPS, &mut out, &mut xhat, &mut rstd);
+            let dout = randv(&mut rng, rows * d);
+
+            let mut dg_ref = vec![0f32; d];
+            let mut db_ref = vec![0f32; d];
+            let dx_ref = naive_bwd(&dout, &xhat, &rstd, &gamma, rows, d, &mut dg_ref, &mut db_ref);
+
+            let mut dx = vec![0f32; rows * d];
+            let mut scratch = vec![0f32; bsz * 2 * d];
+            let mut dg = vec![0f32; d];
+            let mut db = vec![0f32; d];
+            let mut sq = vec![0f64; bsz];
+            ln_bwd_fused(
+                2, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch, &mut dg,
+                &mut db, &mut sq,
+            );
+            for (a, b) in dx.iter().zip(&dx_ref) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-3));
+            }
+            for j in 0..d {
+                assert!((dg[j] - dg_ref[j]).abs() <= 1e-4 * dg_ref[j].abs().max(1e-3));
+                assert!((db[j] - db_ref[j]).abs() <= 1e-4 * db_ref[j].abs().max(1e-3));
+            }
+            // per-example norms: recompute from per-example partial sums
+            for b in 0..bsz {
+                let mut want = 0f64;
+                for j in 0..d {
+                    let mut dgj = 0f64;
+                    let mut dbj = 0f64;
+                    for ti in 0..t {
+                        let r = b * t + ti;
+                        dgj += dout[r * d + j] as f64 * xhat[r * d + j] as f64;
+                        dbj += dout[r * d + j] as f64;
+                    }
+                    want += dgj * dgj + dbj * dbj;
+                }
+                assert!(
+                    (sq[b] - want).abs() <= 1e-4 * want.max(1e-9),
+                    "bsz={bsz} t={t} d={d} b={b}: {} vs {want}",
+                    sq[b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_backward_is_worker_invariant() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (bsz, t, d) = (5, 3, 8);
+        let rows = bsz * t;
+        let xhat = randv(&mut rng, rows * d);
+        let rstd: Vec<f32> = (0..rows).map(|_| 1.0 + rng.f64() as f32).collect();
+        let gamma = randv(&mut rng, d);
+        let dout = randv(&mut rng, rows * d);
+        let run = |workers: usize| {
+            let mut dx = vec![0f32; rows * d];
+            let mut scratch = vec![0f32; bsz * 2 * d];
+            let mut dg = vec![0f32; d];
+            let mut db = vec![0f32; d];
+            let mut sq = vec![0f64; bsz];
+            ln_bwd_fused(
+                workers, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch,
+                &mut dg, &mut db, &mut sq,
+            );
+            (dx, dg, db, sq)
+        };
+        assert_eq!(run(1), run(3));
+    }
+}

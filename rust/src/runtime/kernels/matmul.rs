@@ -1,0 +1,284 @@
+//! Blocked batched matmul kernels for the fused reference backend.
+//!
+//! All linear layers flatten the microbatch to a single `[B·T, K] × [K, N]`
+//! contraction. Three shapes cover forward and backward:
+//!
+//! * [`matmul_xwt`] — `y = x @ w (+ b)` with the weight packed transposed
+//!   (`wt: [N, K]`), so every output element is one contiguous dot product;
+//! * [`matmul_xw_t`] — `dx = dy @ w^T` using `w` in its natural `[K, N]`
+//!   layout (rows of `w` are already the contiguous operand);
+//! * [`matmul_at_b_acc`] — `dw += x^T @ dy` from a pre-transposed
+//!   `xt: [K, B·T]`, threaded over disjoint rows of `dw`.
+//!
+//! Dot products run over eight independent accumulator lanes ([`dot`]) so
+//! LLVM can vectorize the f32 reduction (a naive `sum` is a serial
+//! dependency chain the compiler must not reorder). Lane order is fixed,
+//! so results are bitwise deterministic for any worker count — each
+//! parallel region writes disjoint output rows and reduces inside a row
+//! sequentially (see `threads`).
+
+use super::threads::par_row_blocks;
+
+/// Eight-lane blocked dot product. Deterministic (fixed association) and
+/// autovectorizable: the eight partial sums have no cross-iteration
+/// dependency, unlike a single running f32 sum.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let ao = &a[c * 8..c * 8 + 8];
+        let bo = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += ao[l] * bo[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `dst = src^T`: `src` is `[rows, cols]` row-major, `dst` becomes
+/// `[cols, rows]`. Used to pack weights (forward) and activations
+/// (backward) into the layout the dot-product kernels stream.
+pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    assert!(src.len() >= rows * cols && dst.len() >= rows * cols);
+    for r in 0..rows {
+        let srow = &src[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            dst[c * rows + r] = srow[c];
+        }
+    }
+}
+
+/// Threaded [`transpose`] for large activation buffers: workers own
+/// disjoint destination-row blocks (a pure scatter, no reductions), so
+/// the result is bitwise identical to the serial version for any worker
+/// count. Weight packs stay on the serial path — they are tiny.
+pub fn transpose_par(workers: usize, src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    assert!(src.len() >= rows * cols && dst.len() >= rows * cols);
+    par_row_blocks(workers, cols, rows, dst, |c0, c1, db| {
+        for c in c0..c1 {
+            let drow = &mut db[(c - c0) * rows..(c - c0 + 1) * rows];
+            for r in 0..rows {
+                drow[r] = src[r * cols + c];
+            }
+        }
+    });
+}
+
+/// `y = x @ w (+ bias)` with `x: [m, k]`, `wt = w^T: [n, k]`, `y: [m, n]`.
+/// Threaded over row blocks of `y`; each element is one contiguous dot.
+pub fn matmul_xwt(
+    workers: usize,
+    x: &[f32],
+    wt: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+) {
+    assert!(x.len() >= m * k && wt.len() >= n * k && y.len() >= m * n);
+    par_row_blocks(workers, m, n, y, |r0, r1, yb| {
+        for r in r0..r1 {
+            let xrow = &x[r * k..(r + 1) * k];
+            let yrow = &mut yb[(r - r0) * n..(r - r0 + 1) * n];
+            for j in 0..n {
+                let mut v = dot(xrow, &wt[j * k..(j + 1) * k]);
+                if let Some(b) = bias {
+                    v += b[j];
+                }
+                yrow[j] = v;
+            }
+        }
+    });
+}
+
+/// `dx = dy @ w^T` with `dy: [m, n]`, `w: [k, n]` (natural layout),
+/// `dx: [m, k]`. Threaded over row blocks of `dx`.
+pub fn matmul_xw_t(
+    workers: usize,
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dx: &mut [f32],
+) {
+    assert!(dy.len() >= m * n && w.len() >= k * n && dx.len() >= m * k);
+    par_row_blocks(workers, m, k, dx, |r0, r1, db| {
+        for r in r0..r1 {
+            let dyr = &dy[r * n..(r + 1) * n];
+            let drow = &mut db[(r - r0) * k..(r - r0 + 1) * k];
+            for kk in 0..k {
+                drow[kk] = dot(dyr, &w[kk * n..(kk + 1) * n]);
+            }
+        }
+    });
+}
+
+/// `dw += x^T @ dy` with `xt = x^T: [k, m]`, `dy: [m, n]`, `dw: [k, n]`.
+/// Threaded over disjoint row blocks of `dw`; within each row the
+/// reduction over the `m` batch rows runs in fixed order (deterministic).
+/// Rows are processed four at a time so each streamed `dy` row updates
+/// four output rows.
+pub fn matmul_at_b_acc(
+    workers: usize,
+    xt: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+) {
+    assert!(xt.len() >= k * m && dy.len() >= m * n && dw.len() >= k * n);
+    par_row_blocks(workers, k, n, dw, |k0, k1, dwb| {
+        let mut kk = k0;
+        while kk < k1 {
+            let kb = (k1 - kk).min(4);
+            for r in 0..m {
+                let dyr = &dy[r * n..(r + 1) * n];
+                for kr in 0..kb {
+                    let xv = xt[(kk + kr) * m + r];
+                    if xv != 0.0 {
+                        let dwr = &mut dwb[(kk + kr - k0) * n..(kk + kr - k0 + 1) * n];
+                        for j in 0..n {
+                            dwr[j] += xv * dyr[j];
+                        }
+                    }
+                }
+            }
+            kk += kb;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_mm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0f64; m * n];
+        for r in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    y[r * n + j] += x[r * k + kk] as f64 * w[kk * n + j] as f64;
+                }
+            }
+        }
+        y.into_iter().map(|v| v as f32).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * y.abs().max(1.0), "[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        let mut rng = Rng::seed_from_u64(1);
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 64] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert!(
+                (dot(&a, &b) as f64 - naive).abs() <= 1e-4 * naive.abs().max(1.0),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_matches_naive_and_is_worker_invariant() {
+        let mut rng = Rng::seed_from_u64(2);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (16, 8, 12), (33, 17, 9)] {
+            let x = randv(&mut rng, m * k);
+            let w = randv(&mut rng, k * n);
+            let bias = randv(&mut rng, n);
+            let mut wt = vec![0f32; k * n];
+            transpose(&w, k, n, &mut wt);
+            let mut want = naive_mm(&x, &w, m, k, n);
+            for (v, b) in want.iter_mut().zip(bias.iter().cycle()) {
+                *v += b;
+            }
+            let mut y1 = vec![0f32; m * n];
+            matmul_xwt(1, &x, &wt, Some(&bias), m, k, n, &mut y1);
+            assert_close(&y1, &want, 1e-4);
+            let mut y3 = vec![0f32; m * n];
+            matmul_xwt(3, &x, &wt, Some(&bias), m, k, n, &mut y3);
+            assert_eq!(y1, y3, "worker count changed the result");
+        }
+    }
+
+    #[test]
+    fn backward_dx_matches_naive() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (m, k, n) = (9, 6, 11);
+        let dy = randv(&mut rng, m * n);
+        let w = randv(&mut rng, k * n);
+        // dx = dy @ w^T  ==  naive_mm(dy, w^T)
+        let mut wt = vec![0f32; k * n];
+        transpose(&w, k, n, &mut wt);
+        let want = naive_mm(&dy, &wt, m, n, k);
+        let mut dx = vec![0f32; m * k];
+        matmul_xw_t(2, &dy, &w, m, k, n, &mut dx);
+        assert_close(&dx, &want, 1e-4);
+    }
+
+    #[test]
+    fn backward_dw_accumulates_and_is_worker_invariant() {
+        let mut rng = Rng::seed_from_u64(4);
+        let (m, k, n) = (13, 10, 7);
+        let x = randv(&mut rng, m * k);
+        let dy = randv(&mut rng, m * n);
+        let mut xt = vec![0f32; m * k];
+        transpose(&x, m, k, &mut xt);
+        // want = x^T @ dy == naive_mm(xt, dy) with xt as [k, m]
+        let want = naive_mm(&xt, &dy, k, m, n);
+        let mut dw1 = vec![1f32; k * n]; // pre-seeded: kernel must accumulate
+        matmul_at_b_acc(1, &xt, &dy, m, k, n, &mut dw1);
+        let mut dw3 = vec![1f32; k * n];
+        matmul_at_b_acc(3, &xt, &dy, m, k, n, &mut dw3);
+        assert_eq!(dw1, dw3);
+        let shifted: Vec<f32> = want.iter().map(|v| v + 1.0).collect();
+        assert_close(&dw1, &shifted, 1e-4);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (r, c) = (5, 8);
+        let src = randv(&mut rng, r * c);
+        let mut t = vec![0f32; r * c];
+        transpose(&src, r, c, &mut t);
+        let mut back = vec![0f32; r * c];
+        transpose(&t, c, r, &mut back);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn threaded_transpose_matches_serial() {
+        let mut rng = Rng::seed_from_u64(6);
+        for (r, c) in [(1, 1), (7, 3), (16, 9), (33, 12)] {
+            let src = randv(&mut rng, r * c);
+            let mut serial = vec![0f32; r * c];
+            transpose(&src, r, c, &mut serial);
+            for workers in [1, 2, 5] {
+                let mut par = vec![0f32; r * c];
+                transpose_par(workers, &src, r, c, &mut par);
+                assert_eq!(serial, par, "r={r} c={c} workers={workers}");
+            }
+        }
+    }
+}

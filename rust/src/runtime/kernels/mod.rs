@@ -1,0 +1,35 @@
+//! Fused CPU kernels for the reference backend's batched hot path.
+//!
+//! The paper's central claim (§3) is that per-example gradient norms can
+//! be computed *simultaneously* with the batched parameter-gradient
+//! contraction at near-zero extra FLOPs. This module is that method in
+//! pure Rust, replacing the naive one-example-at-a-time backward:
+//!
+//! * [`matmul`] — blocked, transposed-B batched matmuls (`[B·T, K] ×
+//!   [K, N]`) shared by every linear layer, with eight-lane vectorizable
+//!   dot products;
+//! * [`gram`] — Goodfellow's trick: per-example squared weight-gradient
+//!   norms from activation/delta Gram matrices, never materializing a
+//!   per-example weight gradient (Eqs. 4–5 inputs);
+//! * [`layernorm`] — the §3 fused LayerNorm backward that emits
+//!   per-example `||dγ_b||² + ||dβ_b||²` inside the same reduction pass;
+//! * [`threads`] — `std::thread::scope` data parallelism whose outputs
+//!   are always disjoint row blocks, making every kernel bitwise
+//!   deterministic for any worker count.
+//!
+//! DESIGN.md §2 "Kernels" maps each kernel to the paper equation it
+//! implements.
+
+// Kernels thread shapes and several output slices explicitly; the
+// many-argument form is the readable one here (as in runtime::reference).
+#![allow(clippy::too_many_arguments)]
+
+pub mod gram;
+pub mod layernorm;
+pub mod matmul;
+pub mod threads;
+
+pub use gram::{bias_sqnorms_acc, weight_sqnorms};
+pub use layernorm::{ln_bwd_fused, ln_fwd};
+pub use matmul::{dot, matmul_at_b_acc, matmul_xw_t, matmul_xwt, transpose, transpose_par};
+pub use threads::{default_workers, par_row_blocks, par_row_blocks2};

@@ -1,0 +1,187 @@
+//! Scoped-thread data parallelism with a deterministic reduction contract.
+//!
+//! All parallel loops in the fused kernels split their *output* into
+//! contiguous, disjoint row blocks — one per worker — so no two threads
+//! ever write the same element, and every floating-point reduction runs
+//! either entirely inside one row (fixed index order) or on the calling
+//! thread after the join (fixed example order). Results are therefore
+//! bitwise identical for any worker count, which is the thread-determinism
+//! contract stated in DESIGN.md §2.
+//!
+//! Workers are plain `std::thread::scope` threads (no pool, no deps); the
+//! calling thread runs the first block itself, so `workers = n` spawns
+//! only `n - 1` OS threads per parallel region.
+
+/// Cap on the machine-derived default: each parallel region spawns fresh
+/// scoped threads (no persistent pool), and one fused grad_step issues
+/// dozens of regions, so beyond a handful of workers the per-region
+/// spawn/join cost (~10–20 µs each) outweighs extra cores at these model
+/// sizes. An explicit `NANOGNS_THREADS` bypasses the cap.
+const DEFAULT_MAX_WORKERS: usize = 8;
+
+/// Worker count from the environment (`NANOGNS_THREADS`, uncapped) or
+/// the machine (capped at [`DEFAULT_MAX_WORKERS`]).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("NANOGNS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(DEFAULT_MAX_WORKERS)
+}
+
+/// Split `rows` into at most `workers` contiguous chunks.
+/// Returns the chunk length in rows (>= 1 when rows > 0).
+fn chunk_rows(rows: usize, workers: usize) -> usize {
+    let w = workers.clamp(1, rows.max(1));
+    rows.div_ceil(w.max(1)).max(1)
+}
+
+/// Run `f(row0, row1, out_block)` over disjoint row blocks of `out`
+/// (`rows` rows of `row_len` elements), one block per worker. The first
+/// block runs on the calling thread. Deterministic: block boundaries
+/// depend only on `(rows, workers)` and blocks never overlap.
+pub fn par_row_blocks<T, F>(workers: usize, rows: usize, row_len: usize, out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(out.len() >= rows * row_len, "output too small: {} < {}", out.len(), rows * row_len);
+    if rows == 0 {
+        return;
+    }
+    let per = chunk_rows(rows, workers);
+    if per >= rows {
+        f(0, rows, &mut out[..rows * row_len]);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = &mut out[..rows * row_len];
+        // Spawn blocks after the first; run the first block here.
+        let (first, tail) = std::mem::take(&mut rest).split_at_mut(per * row_len);
+        rest = tail;
+        let mut start = per;
+        while start < rows {
+            let end = (start + per).min(rows);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((end - start) * row_len);
+            rest = tail;
+            s.spawn(move || f(start, end, head));
+            start = end;
+        }
+        f(0, per, first);
+    });
+}
+
+/// Two-output variant of [`par_row_blocks`]: both buffers are split by the
+/// same row boundaries (with independent row lengths) and handed to
+/// `f(row0, row1, a_block, b_block)`.
+pub fn par_row_blocks2<T, U, F>(
+    workers: usize,
+    rows: usize,
+    a_row_len: usize,
+    a: &mut [T],
+    b_row_len: usize,
+    b: &mut [U],
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, usize, &mut [T], &mut [U]) + Sync,
+{
+    assert!(a.len() >= rows * a_row_len, "output A too small");
+    assert!(b.len() >= rows * b_row_len, "output B too small");
+    if rows == 0 {
+        return;
+    }
+    let per = chunk_rows(rows, workers);
+    if per >= rows {
+        f(0, rows, &mut a[..rows * a_row_len], &mut b[..rows * b_row_len]);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest_a = &mut a[..rows * a_row_len];
+        let mut rest_b = &mut b[..rows * b_row_len];
+        let (first_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(per * a_row_len);
+        let (first_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(per * b_row_len);
+        rest_a = tail_a;
+        rest_b = tail_b;
+        let mut start = per;
+        while start < rows {
+            let end = (start + per).min(rows);
+            let n = end - start;
+            let (ha, ta) = std::mem::take(&mut rest_a).split_at_mut(n * a_row_len);
+            let (hb, tb) = std::mem::take(&mut rest_b).split_at_mut(n * b_row_len);
+            rest_a = ta;
+            rest_b = tb;
+            s.spawn(move || f(start, end, ha, hb));
+            start = end;
+        }
+        f(0, per, first_a, first_b);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        for workers in [1, 2, 3, 5, 16] {
+            for rows in [0usize, 1, 2, 7, 16] {
+                let mut out = vec![0u32; rows * 3];
+                par_row_blocks(workers, rows, 3, &mut out, |r0, r1, block| {
+                    assert_eq!(block.len(), (r1 - r0) * 3);
+                    for v in block.iter_mut() {
+                        *v += 1;
+                    }
+                });
+                assert!(out.iter().all(|&v| v == 1), "workers={workers} rows={rows}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_indices_match_slices() {
+        let rows = 11;
+        let mut out = vec![0usize; rows * 2];
+        par_row_blocks(3, rows, 2, &mut out, |r0, r1, block| {
+            for (i, chunk) in block.chunks_mut(2).enumerate() {
+                chunk[0] = r0 + i;
+                chunk[1] = r1;
+            }
+        });
+        for r in 0..rows {
+            assert_eq!(out[r * 2], r);
+            assert!(out[r * 2 + 1] > r);
+        }
+    }
+
+    #[test]
+    fn two_output_variant_splits_consistently() {
+        let rows = 9;
+        let mut a = vec![0f32; rows * 4];
+        let mut b = vec![0f64; rows];
+        par_row_blocks2(4, rows, 4, &mut a, 1, &mut b, |r0, r1, ab, bb| {
+            assert_eq!(ab.len(), (r1 - r0) * 4);
+            assert_eq!(bb.len(), r1 - r0);
+            for v in ab.iter_mut() {
+                *v = r0 as f32;
+            }
+            for v in bb.iter_mut() {
+                *v = r1 as f64;
+            }
+        });
+        assert!(a.iter().all(|&v| v >= 0.0));
+        assert!(b.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

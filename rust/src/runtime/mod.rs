@@ -3,12 +3,15 @@
 //! * [`backend`] — the [`Backend`]/[`BackendFactory`] traits and the
 //!   [`Buffer`] tensor handle the coordinator is written against;
 //! * [`reference`] — hermetic pure-Rust CPU transformer (default);
+//! * [`kernels`] — the fused batched matmul / Gram-norm / LayerNorm
+//!   kernels behind the reference backend's hot path (paper §3);
 //! * [`pjrt`] — AOT HLO artifacts through the PJRT C API (feature
 //!   `pjrt`; requires `make artifacts` and the real `xla` crate);
 //! * [`manifest`] — the L2→L3 artifact/model-metadata contract;
 //! * [`tensor`] — the host tensor value type.
 
 pub mod backend;
+pub mod kernels;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;

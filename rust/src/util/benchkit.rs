@@ -1,11 +1,16 @@
 //! Tiny benchmark harness (the offline stand-in for criterion).
 //!
 //! Auto-calibrates iteration counts to a target measurement time, runs
-//! warmup + timed samples, and reports mean / stddev / min per iteration.
-//! Results are also appended to `results/bench.csv` so figure harnesses
-//! (Fig. 8) can consume them.
+//! warmup + timed samples, and reports mean / stddev / median / min per
+//! iteration. Results are also appended to `results/bench.csv` so figure
+//! harnesses (Fig. 8) can consume them, and can be collected into a
+//! machine-readable `BENCH_*.json` via [`BenchJson`] so the perf
+//! trajectory is comparable across PRs.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
 
 pub struct Bench {
     group: String,
@@ -20,8 +25,13 @@ pub struct Stats {
     pub name: String,
     pub mean_ns: f64,
     pub std_ns: f64,
+    /// Median of the per-sample means — the robust per-PR trajectory
+    /// number `BENCH_*.json` records.
+    pub median_ns: f64,
     pub min_ns: f64,
     pub iters: u64,
+    /// Number of timed samples behind the statistics.
+    pub samples: usize,
 }
 
 impl Bench {
@@ -80,12 +90,21 @@ impl Bench {
         let var = samples_ns.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
             / samples_ns.len() as f64;
         let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if sorted.len() % 2 == 1 {
+            sorted[sorted.len() / 2]
+        } else {
+            0.5 * (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2])
+        };
         let stats = Stats {
             name: name.to_string(),
             mean_ns: mean,
             std_ns: var.sqrt(),
+            median_ns: median,
             min_ns: min,
             iters,
+            samples: samples_ns.len(),
         };
         println!(
             "{:<40} {:>12} ± {:>10}  (min {:>12}, {} iters/sample)",
@@ -105,6 +124,94 @@ impl Bench {
         }
         stats
     }
+}
+
+/// Machine-readable bench report: `name → {median_ns, samples,
+/// throughput}`, written as a `BENCH_*.json` file at the workspace root
+/// so the perf trajectory is diffable across PRs.
+///
+/// `throughput` is items/sec when the caller supplies an items-per-
+/// iteration count (tokens for train steps), else iterations/sec.
+#[derive(Default)]
+pub struct BenchJson {
+    entries: BTreeMap<String, (f64, usize, f64)>,
+}
+
+impl BenchJson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one benchmark under `name` (conventionally
+    /// `"group/entry"`). `items_per_iter` scales the throughput figure.
+    pub fn record(&mut self, name: &str, stats: &Stats, items_per_iter: Option<f64>) {
+        let per_iter = items_per_iter.unwrap_or(1.0);
+        let throughput =
+            if stats.median_ns > 0.0 { per_iter * 1e9 / stats.median_ns } else { 0.0 };
+        self.entries.insert(name.to_string(), (stats.median_ns, stats.samples, throughput));
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut top = BTreeMap::new();
+        for (name, (median, samples, thr)) in &self.entries {
+            let mut e = BTreeMap::new();
+            e.insert("median_ns".to_string(), Value::Num(*median));
+            e.insert("samples".to_string(), Value::Num(*samples as f64));
+            e.insert("throughput".to_string(), Value::Num(*thr));
+            top.insert(name.clone(), Value::Obj(e));
+        }
+        Value::Obj(top)
+    }
+
+    /// Write the report. Relative paths are resolved against the
+    /// *workspace* root (cargo runs bench binaries with CWD = package
+    /// dir, which would scatter `BENCH_*.json` under `rust/` instead of
+    /// the documented repo-root location). Returns the resolved path.
+    pub fn write(&self, path: &str) -> std::io::Result<std::path::PathBuf> {
+        let mut target = std::path::PathBuf::from(path);
+        if target.is_relative() {
+            target = workspace_root().join(target);
+        }
+        std::fs::write(&target, self.to_value().to_string())?;
+        Ok(target)
+    }
+
+    /// [`Self::write`] for bench binaries: prints the destination on
+    /// success and exits the process with code 1 on failure, so a CI
+    /// gate on any bench cannot silently pass over an unwritable report.
+    pub fn write_or_exit(&self, path: &str) {
+        match self.write(path) {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Nearest ancestor of `CARGO_MANIFEST_DIR` whose Cargo.toml declares
+/// `[workspace]` (the workspace root — anchoring on the declaration
+/// avoids over-climbing into an unrelated outer Rust project); falls
+/// back to the manifest dir, or the current directory outside cargo.
+fn workspace_root() -> std::path::PathBuf {
+    let start = std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let mut dir = start.as_path();
+    while let Some(parent) = dir.parent() {
+        let manifest = parent.join("Cargo.toml");
+        if !manifest.exists() {
+            break;
+        }
+        if let Ok(s) = std::fs::read_to_string(&manifest) {
+            if s.contains("[workspace]") {
+                return parent.to_path_buf();
+            }
+        }
+        dir = parent;
+    }
+    start
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -140,5 +247,39 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn median_is_ordered_and_finite() {
+        let mut b = Bench::new("test").with_target_ms(5).with_samples(4);
+        let mut acc = 0u64;
+        let s = b.run("median", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.median_ns.is_finite() && s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert_eq!(s.samples, 4);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let stats = Stats {
+            name: "grad_microbatch".to_string(),
+            mean_ns: 2e6,
+            std_ns: 1e4,
+            median_ns: 2e6,
+            min_ns: 1.9e6,
+            iters: 10,
+            samples: 5,
+        };
+        let mut j = BenchJson::new();
+        j.record("step_small/grad_microbatch", &stats, Some(256.0));
+        let v = Value::parse(&j.to_value().to_string()).unwrap();
+        let e = v.get("step_small/grad_microbatch").unwrap();
+        assert_eq!(e.get("median_ns").unwrap().as_f64().unwrap(), 2e6);
+        assert_eq!(e.get("samples").unwrap().as_f64().unwrap(), 5.0);
+        // 256 items every 2ms = 128k items/sec
+        let thr = e.get("throughput").unwrap().as_f64().unwrap();
+        assert!((thr - 128_000.0).abs() < 1.0, "{thr}");
     }
 }

@@ -6,7 +6,7 @@
 
 use nanogns::coordinator::ModelRunner;
 use nanogns::data::{CorpusGenerator, Loader};
-use nanogns::runtime::{Backend, BackendFactory, ReferenceFactory};
+use nanogns::runtime::{Backend, BackendFactory, Buffer, ReferenceBackend, ReferenceFactory};
 
 fn runner(seed: i32) -> ModelRunner {
     let mut r = ModelRunner::new(&ReferenceFactory, "nano").expect("create nano backend");
@@ -132,6 +132,71 @@ fn batch_shape_mismatch_is_rejected() {
     let bad = loader.next_batch(runner.entry.microbatch + 1);
     assert!(runner.grad_microbatch(&bad).is_err());
     assert!(runner.eval(&bad).is_err());
+}
+
+/// The fused batched grad_step against the retained per-example oracle on
+/// real loader data at preset scale (unit tests cover random tiny shapes).
+#[test]
+fn fused_grad_step_matches_per_example_oracle_on_nano() {
+    let runner = runner(7);
+    let mut loader = loader_for(&runner, 7);
+    let batch = loader.next_batch(runner.entry.microbatch);
+    let fused = runner.grad_microbatch(&batch).unwrap();
+    let oracle = ReferenceBackend::from_preset("nano").unwrap();
+    let want = oracle.grad_step_per_example(&runner.params, &batch).unwrap();
+    assert!((fused.loss - want.loss).abs() <= 1e-5 * want.loss.abs().max(1e-6));
+    for (t, (a, b)) in nanogns::STATS_ORDER.iter().zip(fused.stats.iter().zip(want.stats)) {
+        assert!(
+            (*a as f64 - b as f64).abs() <= 1e-4 * (b as f64).abs().max(1e-10),
+            "stats[{t}]: fused {a} vs oracle {b}"
+        );
+    }
+    for (spec, (g, w)) in runner.entry.params.iter().zip(fused.grads.iter().zip(&want.grads)) {
+        let gt = g.to_tensor().unwrap();
+        let wt = w.to_tensor().unwrap();
+        let scale = wt.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (x, y) in gt.data.iter().zip(&wt.data) {
+            assert!(
+                (x - y).abs() <= 1e-5 * y.abs() + 1e-5 * scale + 1e-12,
+                "{}: {x} vs {y}",
+                spec.name
+            );
+        }
+    }
+}
+
+/// Gradient arena (satellite): leased sets are zeroed regardless of what
+/// was recycled, and behave exactly like fresh `zero_grads` buffers.
+#[test]
+fn grad_arena_lease_recycle_round_trip() {
+    let runner = runner(8);
+    let mut loader = loader_for(&runner, 8);
+    let batch = loader.next_batch(runner.entry.microbatch);
+    let out = runner.grad_microbatch(&batch).unwrap();
+
+    // Dirty a leased set, recycle it, lease again: must come back zeroed.
+    let mut dirty = runner.lease_zero_grads().unwrap();
+    for b in dirty.iter_mut() {
+        let mut t = b.to_tensor().unwrap();
+        t.data.fill(42.0);
+        *b = Buffer::Host(t);
+    }
+    runner.recycle_grads(dirty);
+    let leased = runner.lease_zero_grads().unwrap();
+    assert_eq!(leased.len(), runner.n_params_tensors());
+    for b in &leased {
+        assert!(b.to_tensor().unwrap().data.iter().all(|&v| v == 0.0));
+    }
+
+    // Accumulating into a leased set equals accumulating into fresh zeros.
+    let fresh = runner.accumulate(runner.zero_grads().unwrap(), &out.grads).unwrap();
+    let reused = runner.accumulate(leased, &out.grads).unwrap();
+    for (a, b) in fresh.iter().zip(&reused) {
+        assert_eq!(a.to_tensor().unwrap(), b.to_tensor().unwrap());
+    }
+
+    // Recycling junk (wrong arity) is a no-op, not a panic.
+    runner.recycle_grads(Vec::new());
 }
 
 #[test]

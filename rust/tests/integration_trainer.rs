@@ -124,6 +124,29 @@ fn ddp_estimator_agrees_with_per_example_in_scale() {
     assert!(ratio > 0.25 && ratio < 4.0, "ddp {ddp_g} vs perex {pex_g}");
 }
 
+/// The runner's gradient arena is pure scratch: poisoning it between
+/// steps (lease → overwrite → recycle) must not change training results.
+#[test]
+fn arena_reuse_does_not_change_training() {
+    let mut clean = Trainer::new(&ReferenceFactory, quick_cfg(4)).unwrap();
+    let mut dirty = Trainer::new(&ReferenceFactory, quick_cfg(4)).unwrap();
+    for _ in 0..4 {
+        // poison the dirty trainer's arena before every step
+        let mut set = dirty.runner.lease_zero_grads().unwrap();
+        for b in set.iter_mut() {
+            let mut t = b.to_tensor().unwrap();
+            t.data.fill(1e9);
+            *b = nanogns::runtime::Buffer::Host(t);
+        }
+        dirty.runner.recycle_grads(set);
+        let a = clean.step().unwrap();
+        let b = dirty.step().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.raw_g_sq_total, b.raw_g_sq_total);
+        assert_eq!(a.raw_s_total, b.raw_s_total);
+    }
+}
+
 #[test]
 fn eval_uses_heldout_stream() {
     let mut tr = Trainer::new(&ReferenceFactory, quick_cfg(4)).unwrap();
