@@ -44,6 +44,9 @@ fn main() -> Result<()> {
         corpus_bytes: 1 << 20,
         eval_every: 0,
         metrics_path: format!("results/e2e_{model}.csv"),
+        checkpoint_dir: String::new(),
+        checkpoint_every: 0,
+        resume: String::new(),
     };
 
     println!(

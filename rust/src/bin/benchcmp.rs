@@ -1,0 +1,108 @@
+//! `benchcmp` — the CI bench-regression gate.
+//!
+//! Compares a current `BENCH_*.json` report (from
+//! `cargo bench --bench train_step -- --json [--smoke]`) against a
+//! committed baseline (`bench/baseline.json`) and fails when the fused
+//! path regressed.
+//!
+//! The gated metric is the *within-run* speedup of the fused batched
+//! `grad_microbatch` over the retained per-example oracle: absolute
+//! nanoseconds differ wildly across CI machines, but the fused/oracle
+//! ratio measures the same kernels on the same hardware in the same run,
+//! so it transfers. Raw median deltas are printed for information only.
+//!
+//! ```sh
+//! cargo run --release --bin benchcmp -- \
+//!   --baseline bench/baseline.json --current BENCH_train_step.json \
+//!   --max-regress-pct 15
+//! ```
+//!
+//! Exit code 0 = all gates pass, 1 = regression, 2 = usage/IO error.
+
+use nanogns::util::benchkit::{compare_bench_reports, fmt_ns, BenchCompare};
+use nanogns::util::json::Value;
+
+const USAGE: &str = "\
+benchcmp — compare BENCH_*.json reports and gate fused-path regressions
+
+USAGE:
+  benchcmp --baseline bench/baseline.json --current BENCH_train_step.json
+           [--max-regress-pct 15]
+";
+
+fn run() -> Result<BenchCompare, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut baseline_path = None;
+    let mut current_path = None;
+    let mut max_regress_pct = 15.0f64;
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i].clone();
+        let val = args.get(i + 1).cloned();
+        let need = |v: Option<String>| v.ok_or_else(|| format!("{key} needs a value\n{USAGE}"));
+        match key.as_str() {
+            "--baseline" => baseline_path = Some(need(val)?),
+            "--current" => current_path = Some(need(val)?),
+            "--max-regress-pct" => {
+                max_regress_pct = need(val)?
+                    .parse()
+                    .map_err(|e| format!("--max-regress-pct: {e}\n{USAGE}"))?
+            }
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag {other:?}\n{USAGE}")),
+        }
+        i += 2;
+    }
+    let baseline_path = baseline_path.ok_or_else(|| format!("--baseline required\n{USAGE}"))?;
+    let current_path = current_path.ok_or_else(|| format!("--current required\n{USAGE}"))?;
+
+    let read = |path: &str| -> Result<Value, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Value::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let baseline = read(&baseline_path)?;
+    let current = read(&current_path)?;
+
+    let out = compare_bench_reports(&baseline, &current, max_regress_pct)
+        .map_err(|e| format!("{e}"))?;
+
+    println!("benchcmp: {baseline_path} vs {current_path}");
+    println!("{:<44} {:>12} {:>12} {:>9}", "entry", "baseline", "current", "delta");
+    for d in &out.deltas {
+        println!(
+            "{:<44} {:>12} {:>12} {:>+8.1}%",
+            d.name,
+            fmt_ns(d.baseline_ns),
+            fmt_ns(d.current_ns),
+            d.delta_pct
+        );
+    }
+    println!();
+    println!("fused-path gate (speedup vs per-example oracle, {max_regress_pct}% budget):");
+    for g in &out.gates {
+        println!(
+            "  {} {:<12} {:.2}x -> {:.2}x ({:+.1}% speedup loss)",
+            if g.pass { "PASS" } else { "FAIL" },
+            g.group,
+            g.baseline_speedup,
+            g.current_speedup,
+            g.regress_pct
+        );
+    }
+    Ok(out)
+}
+
+fn main() {
+    match run() {
+        Ok(out) if out.all_pass() => {}
+        Ok(_) => {
+            eprintln!("benchcmp: fused path regressed beyond the budget");
+            std::process::exit(1);
+        }
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}

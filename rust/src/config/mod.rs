@@ -33,6 +33,12 @@ pub struct TrainConfig {
     pub eval_every: u64,
     /// Metrics CSV path ("" = stdout summary only).
     pub metrics_path: String,
+    /// Directory for full-state checkpoints ("" = no checkpointing).
+    pub checkpoint_dir: String,
+    /// Checkpoint every N optimizer steps (0 = never).
+    pub checkpoint_every: u64,
+    /// Resume from this full-state checkpoint file ("" = fresh run).
+    pub resume: String,
 }
 
 impl TrainConfig {
@@ -76,6 +82,18 @@ impl TrainConfig {
                 Some(m) => m.as_str()?.to_string(),
                 None => String::new(),
             },
+            checkpoint_dir: match v.opt("checkpoint_dir") {
+                Some(c) => c.as_str()?.to_string(),
+                None => String::new(),
+            },
+            checkpoint_every: match v.opt("checkpoint_every") {
+                Some(c) => c.as_u64()?,
+                None => 0,
+            },
+            resume: match v.opt("resume") {
+                Some(r) => r.as_str()?.to_string(),
+                None => String::new(),
+            },
         })
     }
 
@@ -93,6 +111,9 @@ impl TrainConfig {
             corpus_bytes: 1 << 18,
             eval_every: 0,
             metrics_path: String::new(),
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            resume: String::new(),
         }
     }
 }

@@ -1,18 +1,36 @@
-//! Binary parameter checkpoints.
+//! Binary checkpoints: params-only snapshots (v1) and full training
+//! state for interrupt/resume (v2).
 //!
-//! Format: magic, schema version, param count, then per param
-//! (name-len, name, rank, dims..., f32 data). Self-describing enough to
-//! verify against a manifest on load; little-endian throughout.
+//! **v1** (`NANOGNS1`): magic, param count, then per param (name-len,
+//! name, rank, dims..., f32 data). Kept for params-only export/import.
+//!
+//! **v2** (`NGNSCKP2`): magic, u32 header length, a JSON header manifest
+//! (via [`crate::util::json`]), then the raw f32 payload of every listed
+//! tensor (params, Adam m, Adam v — in manifest order). The header
+//! carries everything else a [`super::Trainer`] mutates: step/token
+//! counters, GNS tracker EMAs, batch-size controller hysteresis, LR
+//! scale, and per-rank loader cursors. All f64/u64 header scalars are
+//! encoded as exact strings (`0x…` bit patterns for floats, decimal for
+//! integers) so a resumed run replays a **bitwise-identical** trajectory
+//! — JSON numbers would round u64 RNG words through f64 and silently
+//! fork the data stream. Little-endian throughout.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::gns::{EmaParts, TrackerState};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{Buffer, ModelEntry};
+use crate::util::json::Value;
+use crate::util::rng::RngState;
 
 const MAGIC: &[u8; 8] = b"NANOGNS1";
+const MAGIC_V2: &[u8; 8] = b"NGNSCKP2";
+const VERSION_V2: u64 = 2;
+/// Sanity bound on the v2 header: a few KiB in practice.
+const MAX_HEADER_BYTES: usize = 1 << 24;
 
 pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Buffer]) -> Result<()> {
     ensure!(params.len() == entry.params.len(), "param count mismatch");
@@ -79,4 +97,365 @@ pub fn load(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<Vec<Buffer>> {
         out.push(Buffer::from_tensor(Tensor::new(shape, data)?));
     }
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// v2: full training state
+// ---------------------------------------------------------------------------
+
+/// Everything a [`super::Trainer`] needs to resume a run bitwise-exactly.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub model: String,
+    /// Run seed: the corpus and loader streams derive from it, so a
+    /// resume under a different seed would silently fork the data.
+    pub seed: u64,
+    /// Corpus size the loaders were built over (same divergence hazard).
+    pub corpus_bytes: u64,
+    pub step: u64,
+    pub tokens: u64,
+    pub lr_scale: f64,
+    /// Batch-size controller hysteresis anchor.
+    pub controller_last: usize,
+    pub tracker: TrackerState,
+    /// Per-rank loader cursors, rank order.
+    pub loaders: Vec<RngState>,
+    pub params: Vec<Buffer>,
+    pub m: Vec<Buffer>,
+    pub v: Vec<Buffer>,
+}
+
+/// Borrowed view of everything [`save_state`] serializes: the saving side
+/// hands in its live buffers directly, so a checkpoint never clones the
+/// three model-sized tensor sets.
+pub struct TrainStateView<'a> {
+    pub model: &'a str,
+    pub seed: u64,
+    pub corpus_bytes: u64,
+    pub step: u64,
+    pub tokens: u64,
+    pub lr_scale: f64,
+    pub controller_last: usize,
+    pub tracker: TrackerState,
+    pub loaders: Vec<RngState>,
+    pub params: &'a [Buffer],
+    pub m: &'a [Buffer],
+    pub v: &'a [Buffer],
+}
+
+/// Exact f64 encoding: the IEEE-754 bit pattern as a hex string. Survives
+/// NaN/-0.0/subnormals, which `{}`-formatted JSON numbers cannot.
+fn f64_hex(x: f64) -> Value {
+    Value::Str(format!("0x{:016x}", x.to_bits()))
+}
+
+fn parse_f64_hex(v: &Value) -> Result<f64> {
+    let s = v.as_str()?;
+    let hex = s.strip_prefix("0x").ok_or_else(|| anyhow!("bad f64 bits {s:?}"))?;
+    Ok(f64::from_bits(u64::from_str_radix(hex, 16).context("bad f64 bits")?))
+}
+
+/// Exact u64 encoding as a decimal string (JSON numbers are f64: RNG
+/// words would lose bits).
+fn u64_str(x: u64) -> Value {
+    Value::Str(x.to_string())
+}
+
+fn parse_u64_str(v: &Value) -> Result<u64> {
+    v.as_str()?.parse::<u64>().context("bad u64 string")
+}
+
+fn ema_to_json(p: &EmaParts) -> Value {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("alpha".into(), f64_hex(p.alpha));
+    m.insert("state".into(), p.state.map(f64_hex).unwrap_or(Value::Null));
+    m.insert("t".into(), u64_str(p.t));
+    m.insert("bias_correct".into(), Value::Bool(p.bias_correct));
+    Value::Obj(m)
+}
+
+fn ema_from_json(v: &Value) -> Result<EmaParts> {
+    let state = match v.get("state")? {
+        Value::Null => None,
+        other => Some(parse_f64_hex(other)?),
+    };
+    Ok(EmaParts {
+        alpha: parse_f64_hex(v.get("alpha")?)?,
+        state,
+        t: parse_u64_str(v.get("t")?)?,
+        bias_correct: v.get("bias_correct")?.as_bool()?,
+    })
+}
+
+fn ema_vec_from_json(v: &Value) -> Result<Vec<EmaParts>> {
+    v.as_arr()?.iter().map(ema_from_json).collect()
+}
+
+fn rng_to_json(st: &RngState) -> Value {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("s".into(), Value::Arr(st.s.iter().map(|&w| u64_str(w)).collect()));
+    m.insert("spare".into(), st.spare.map(f64_hex).unwrap_or(Value::Null));
+    Value::Obj(m)
+}
+
+fn rng_from_json(v: &Value) -> Result<RngState> {
+    let words = v.get("s")?.as_arr()?;
+    ensure!(words.len() == 4, "loader cursor needs 4 RNG words");
+    let mut s = [0u64; 4];
+    for (d, w) in s.iter_mut().zip(words) {
+        *d = parse_u64_str(w)?;
+    }
+    let spare = match v.get("spare")? {
+        Value::Null => None,
+        other => Some(parse_f64_hex(other)?),
+    };
+    Ok(RngState { s, spare })
+}
+
+/// The `(group, tensors)` triplets a v2 checkpoint carries, in payload
+/// order.
+fn groups<'a>(st: &TrainStateView<'a>) -> [(&'static str, &'a [Buffer]); 3] {
+    [("params", st.params), ("m", st.m), ("v", st.v)]
+}
+
+fn header_json(st: &TrainStateView<'_>, entry: &ModelEntry) -> Result<Value> {
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("version".into(), Value::Num(VERSION_V2 as f64));
+    top.insert("model".into(), Value::Str(st.model.to_string()));
+    top.insert("seed".into(), u64_str(st.seed));
+    top.insert("corpus_bytes".into(), u64_str(st.corpus_bytes));
+    top.insert("step".into(), u64_str(st.step));
+    top.insert("tokens".into(), u64_str(st.tokens));
+    top.insert("lr_scale".into(), f64_hex(st.lr_scale));
+    top.insert("controller_last".into(), Value::Num(st.controller_last as f64));
+
+    let mut tr = std::collections::BTreeMap::new();
+    tr.insert(
+        "types".into(),
+        Value::Arr(st.tracker.types.iter().map(|t| Value::Str(t.clone())).collect()),
+    );
+    tr.insert("g_sq".into(), Value::Arr(st.tracker.g_sq.iter().map(ema_to_json).collect()));
+    tr.insert("s".into(), Value::Arr(st.tracker.s.iter().map(ema_to_json).collect()));
+    tr.insert("g_sq_total".into(), ema_to_json(&st.tracker.g_sq_total));
+    tr.insert("s_total".into(), ema_to_json(&st.tracker.s_total));
+    top.insert("tracker".into(), Value::Obj(tr));
+
+    top.insert("loaders".into(), Value::Arr(st.loaders.iter().map(rng_to_json).collect()));
+
+    let mut tensors = Vec::new();
+    for (group, bufs) in groups(st) {
+        ensure!(
+            bufs.len() == entry.params.len(),
+            "{group}: {} tensors, model has {}",
+            bufs.len(),
+            entry.params.len()
+        );
+        for (spec, buf) in entry.params.iter().zip(bufs) {
+            let t = buf.as_host().with_context(|| format!("{group}/{}", spec.name))?;
+            ensure!(t.shape == spec.shape, "{group}/{}: shape drift", spec.name);
+            let mut e = std::collections::BTreeMap::new();
+            e.insert("group".into(), Value::Str(group.into()));
+            e.insert("name".into(), Value::Str(spec.name.clone()));
+            e.insert(
+                "shape".into(),
+                Value::Arr(t.shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+            );
+            tensors.push(Value::Obj(e));
+        }
+    }
+    top.insert("tensors".into(), Value::Arr(tensors));
+    Ok(Value::Obj(top))
+}
+
+/// Write a full-state (v2) checkpoint.
+///
+/// The write is atomic against process crashes and kills: bytes go to a
+/// `.tmp` sibling which is fsynced and only then renamed over `path`, so
+/// an interrupted checkpoint never leaves a truncated file at the name a
+/// `--resume` points at. (Power-loss durability additionally depends on
+/// the filesystem journaling the rename.)
+pub fn save_state(
+    path: impl AsRef<Path>,
+    entry: &ModelEntry,
+    st: &TrainStateView<'_>,
+) -> Result<()> {
+    let path = path.as_ref();
+    let header = header_json(st, entry)?.to_string();
+    ensure!(header.len() <= MAX_HEADER_BYTES, "checkpoint header too large");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC_V2)?;
+        w.write_all(&(header.len() as u32).to_le_bytes())?;
+        w.write_all(header.as_bytes())?;
+        for (group, bufs) in groups(st) {
+            for (spec, buf) in entry.params.iter().zip(bufs) {
+                let t = buf.as_host().with_context(|| format!("{group}/{}", spec.name))?;
+                for v in &t.data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+        w.flush()?;
+        w.into_inner().map_err(|e| anyhow!("flushing checkpoint: {e}"))?.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing checkpoint {path:?}"))?;
+    Ok(())
+}
+
+/// Read a full-state (v2) checkpoint, validating the manifest against
+/// `entry` (tensor names, shapes, payload length).
+pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainState> {
+    let mut r = BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading checkpoint magic")?;
+    if &magic == MAGIC {
+        bail!("params-only (v1) checkpoint: use checkpoint::load, not load_state");
+    }
+    ensure!(&magic == MAGIC_V2, "bad checkpoint magic {magic:?}");
+    let mut buf4 = [0u8; 4];
+    r.read_exact(&mut buf4).context("reading header length")?;
+    let hlen = u32::from_le_bytes(buf4) as usize;
+    ensure!(hlen > 0 && hlen <= MAX_HEADER_BYTES, "implausible header length {hlen}");
+    let mut hbytes = vec![0u8; hlen];
+    r.read_exact(&mut hbytes).context("reading header (truncated checkpoint?)")?;
+    let header = Value::parse(std::str::from_utf8(&hbytes).context("header not UTF-8")?)
+        .context("parsing checkpoint header JSON")?;
+
+    let version = header.get("version")?.as_u64()?;
+    ensure!(version == VERSION_V2, "unsupported checkpoint version {version}");
+
+    let tracker_v = header.get("tracker")?;
+    let tracker = TrackerState {
+        types: tracker_v
+            .get("types")?
+            .as_arr()?
+            .iter()
+            .map(|t| Ok(t.as_str()?.to_string()))
+            .collect::<Result<_>>()?,
+        g_sq: ema_vec_from_json(tracker_v.get("g_sq")?)?,
+        s: ema_vec_from_json(tracker_v.get("s")?)?,
+        g_sq_total: ema_from_json(tracker_v.get("g_sq_total")?)?,
+        s_total: ema_from_json(tracker_v.get("s_total")?)?,
+    };
+    ensure!(
+        tracker.g_sq.len() == tracker.types.len() && tracker.s.len() == tracker.types.len(),
+        "tracker EMA arity mismatch"
+    );
+
+    let loaders = header
+        .get("loaders")?
+        .as_arr()?
+        .iter()
+        .map(rng_from_json)
+        .collect::<Result<Vec<_>>>()?;
+
+    // Tensor payload: listing must match the model manifest exactly, in
+    // (params, m, v) order.
+    let listing = header.get("tensors")?.as_arr()?;
+    ensure!(
+        listing.len() == 3 * entry.params.len(),
+        "checkpoint lists {} tensors, model needs {}",
+        listing.len(),
+        3 * entry.params.len()
+    );
+    let mut grouped: [Vec<Buffer>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (i, item) in listing.iter().enumerate() {
+        let gi = i / entry.params.len();
+        let spec = &entry.params[i % entry.params.len()];
+        let group = ["params", "m", "v"][gi];
+        ensure!(
+            item.get("group")?.as_str()? == group && item.get("name")?.as_str()? == spec.name,
+            "tensor {i}: expected {group}/{}, found {}/{}",
+            spec.name,
+            item.get("group")?.as_str().unwrap_or("?"),
+            item.get("name")?.as_str().unwrap_or("?")
+        );
+        let shape: Vec<usize> = item
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?;
+        ensure!(shape == spec.shape, "{group}/{}: checkpoint shape {shape:?}", spec.name);
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut raw = vec![0u8; numel * 4];
+        r.read_exact(&mut raw)
+            .with_context(|| format!("{group}/{}: truncated tensor payload", spec.name))?;
+        for (d, c) in data.iter_mut().zip(raw.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        grouped[gi].push(Buffer::from_tensor(Tensor::new(shape, data)?));
+    }
+    let mut extra = [0u8; 1];
+    ensure!(
+        matches!(r.read(&mut extra), Ok(0)),
+        "trailing bytes after checkpoint payload (corrupt file?)"
+    );
+    let [params, m, v] = grouped;
+
+    Ok(TrainState {
+        model: header.get("model")?.as_str()?.to_string(),
+        seed: parse_u64_str(header.get("seed")?)?,
+        corpus_bytes: parse_u64_str(header.get("corpus_bytes")?)?,
+        step: parse_u64_str(header.get("step")?)?,
+        tokens: parse_u64_str(header.get("tokens")?)?,
+        lr_scale: parse_f64_hex(header.get("lr_scale")?)?,
+        controller_last: header.get("controller_last")?.as_usize()?,
+        tracker,
+        loaders,
+        params,
+        m,
+        v,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact encodings must survive the values JSON numbers cannot:
+    /// NaN, -0.0, subnormals, full-width u64 RNG words.
+    #[test]
+    fn scalar_encodings_are_bitwise_exact() {
+        for x in [1.5f64, f64::NAN, -0.0, f64::MIN_POSITIVE / 2.0, f64::INFINITY] {
+            let v = f64_hex(x);
+            let text = v.to_string();
+            let back = parse_f64_hex(&Value::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        for n in [0u64, 1, u64::MAX, 0x9e3779b97f4a7c15] {
+            let v = u64_str(n);
+            let back = parse_u64_str(&Value::parse(&v.to_string()).unwrap()).unwrap();
+            assert_eq!(back, n);
+        }
+        assert!(parse_f64_hex(&Value::Str("not-hex".into())).is_err());
+        assert!(parse_u64_str(&Value::Str("-3".into())).is_err());
+    }
+
+    #[test]
+    fn rng_state_json_round_trip() {
+        let st = RngState { s: [u64::MAX, 0, 1, 0xdeadbeef], spare: Some(-0.0) };
+        let back = rng_from_json(&rng_to_json(&st)).unwrap();
+        assert_eq!(back.s, st.s);
+        assert_eq!(back.spare.unwrap().to_bits(), (-0.0f64).to_bits());
+        let none = RngState { s: [1, 2, 3, 4], spare: None };
+        assert_eq!(rng_from_json(&rng_to_json(&none)).unwrap(), none);
+    }
+
+    #[test]
+    fn ema_parts_json_round_trip() {
+        let p = EmaParts { alpha: 0.05, state: Some(f64::NAN), t: 7, bias_correct: true };
+        let back = ema_from_json(&ema_to_json(&p)).unwrap();
+        assert_eq!(back.alpha.to_bits(), p.alpha.to_bits());
+        assert_eq!(back.state.unwrap().to_bits(), p.state.unwrap().to_bits());
+        assert_eq!(back.t, 7);
+        assert!(back.bias_correct);
+    }
 }

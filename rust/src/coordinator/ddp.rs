@@ -1,97 +1,78 @@
-//! Simulated distributed-data-parallel GNS estimation (taxonomy: "DDP").
+//! Distributed-data-parallel GNS estimation (taxonomy: "DDP").
 //!
 //! In real DDP, each rank's gradient (over its local batch) is visible
 //! just before all-reduce; its norm gives a `||G_Bsmall||` observation
-//! with `B_small = local batch`. We reproduce those statistics exactly by
-//! running each rank's microbatches sequentially and taking per-rank
-//! gradient norms before averaging across ranks — the estimator sees the
-//! same random variables a real cluster would produce (DESIGN.md
-//! §Substitutions). Used by the Fig. 16 harness to cross-check the
-//! per-example LayerNorm estimator against the DDP method.
+//! with `B_small = local batch`. We reproduce those statistics exactly —
+//! and, since PR 5, with genuinely parallel ranks: each rank's
+//! accumulation loop runs on its own worker backend through
+//! [`ParallelExecutor::rank_step`], which also hands back every rank's
+//! pre-merge gradient squared norms. The estimator sees the same random
+//! variables a real cluster would produce (DESIGN.md §Substitutions),
+//! and the observation is bitwise identical for any
+//! `NANOGNS_RANK_WORKERS` setting. Used by the Fig. 16 harness to
+//! cross-check the per-example LayerNorm estimator against the DDP
+//! method.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::data::Loader;
-use crate::gns::{gns_components, GnsComponents};
-use crate::runtime::Buffer;
+use crate::gns::{gns_components, GnsAccumulator, GnsComponents};
+use crate::runtime::{Backend, Buffer};
 use crate::N_TYPES;
 
-use super::runner::ModelRunner;
+use super::parallel::ParallelExecutor;
 
-/// One DDP-style observation across `ranks` simulated workers.
+/// One DDP-style observation across `ranks` workers.
 pub struct DdpObservation {
     /// per-layer-type components from the DDP estimator
     pub per_type: Vec<GnsComponents>,
     pub total: GnsComponents,
     /// mean loss across all microbatches
     pub loss: f64,
-    /// the all-reduced (mean) gradient, for the optimizer to consume
+    /// the all-reduced gradient *sum* over every microbatch, for the
+    /// optimizer to consume (scale by `1 / (ranks * accum)` for the mean)
     pub mean_grads: Vec<Buffer>,
     pub b_big: f64,
     pub b_small: f64,
 }
 
-/// Run one step of simulated DDP: `ranks` workers, each accumulating
-/// `accum` microbatches, then "all-reduce" (average). Gradient norms are
-/// measured per-rank (B_small = microbatch * accum) and on the averaged
-/// gradient (B_big = B_small * ranks).
+/// Run one step of DDP: `loaders.len()` rank workers, each accumulating
+/// `accum` microbatches in parallel, then "all-reduce" (the engine's
+/// fixed-order tree merge). Gradient norms are measured per-rank
+/// (B_small = microbatch * accum) and on the merged gradient
+/// (B_big = B_small * ranks).
 pub fn ddp_step(
-    runner: &ModelRunner,
+    engine: &ParallelExecutor,
+    params: &[Buffer],
     loaders: &mut [Loader],
     accum: usize,
 ) -> Result<DdpObservation> {
-    let mut sink = crate::gns::GnsAccumulator::new(N_TYPES, runner.entry.microbatch);
-    ddp_step_with_stats(runner, loaders, accum, &mut sink)
+    let mut sink = GnsAccumulator::new(N_TYPES, engine.entry().microbatch);
+    ddp_step_with_stats(engine, params, loaders, accum, &mut sink)
 }
 
-/// [`ddp_step`] that also folds each microbatch's per-example stats vector
-/// into `gns_acc`, so the per-example and DDP estimators can be compared
-/// on identical sampled gradients (Fig. 16).
+/// [`ddp_step`] that also folds the merged per-example stats of every
+/// rank's microbatches into `gns_acc`, so the per-example and DDP
+/// estimators can be compared on identical sampled gradients (Fig. 16).
 pub fn ddp_step_with_stats(
-    runner: &ModelRunner,
+    engine: &ParallelExecutor,
+    params: &[Buffer],
     loaders: &mut [Loader],
     accum: usize,
-    gns_acc: &mut crate::gns::GnsAccumulator,
+    gns_acc: &mut GnsAccumulator,
 ) -> Result<DdpObservation> {
     let ranks = loaders.len();
-    assert!(ranks >= 2, "DDP estimator needs >= 2 ranks");
-    let mb = runner.entry.microbatch;
+    ensure!(ranks >= 2, "DDP estimator needs >= 2 ranks");
+    let mb = engine.entry().microbatch;
 
-    let mut rank_sqnorms: Vec<[f64; N_TYPES]> = Vec::with_capacity(ranks);
-    let mut all_acc: Option<Vec<Buffer>> = None;
-    let mut loss_sum = 0f64;
+    let out = engine.rank_step(params, loaders, accum, true)?;
+    gns_acc.merge(&out.stats);
+    let rank_sums = out.rank_sqnorms.expect("rank norms requested");
 
-    for loader in loaders.iter_mut() {
-        let mut acc = runner.lease_zero_grads()?;
-        for _ in 0..accum {
-            let batch = loader.next_batch(mb);
-            let out = runner.grad_microbatch(&batch)?;
-            loss_sum += out.loss as f64;
-            gns_acc.add_microbatch(&out.stats);
-            acc = runner.accumulate(acc, &out.grads)?;
-            runner.recycle_grads(out.grads);
-        }
-        // per-rank mean gradient norm: ||sum/accum||^2 = ||sum||^2/accum^2
-        let sums = runner.grad_sqnorms(&acc)?;
-        let scale = 1.0 / (accum as f64 * accum as f64);
-        let mut sq = [0f64; N_TYPES];
-        for (d, s) in sq.iter_mut().zip(sums) {
-            *d = s * scale;
-        }
-        rank_sqnorms.push(sq);
-        all_acc = Some(match all_acc {
-            None => acc,
-            Some(prev) => {
-                let merged = runner.accumulate(prev, &acc)?;
-                runner.recycle_grads(acc);
-                merged
-            }
-        });
-    }
-
-    let n_micro = (ranks * accum) as f64;
-    let mean_grads = all_acc.unwrap();
-    let total_sums = runner.grad_sqnorms(&mean_grads)?;
+    // per-rank mean gradient norm: ||sum/accum||^2 = ||sum||^2/accum^2
+    let rank_scale = 1.0 / (accum as f64 * accum as f64);
+    let n_micro = out.n_micro as f64;
+    let total_sums = engine.backend().grad_sqnorms(&out.grads)?;
     let b_small = (mb * accum) as f64;
     let b_big = b_small * ranks as f64;
 
@@ -100,7 +81,8 @@ pub fn ddp_step_with_stats(
     let mut tot_small = 0f64;
     for t in 0..N_TYPES {
         let big = total_sums[t] / (n_micro * n_micro); // norm of the mean grad
-        let small = rank_sqnorms.iter().map(|r| r[t]).sum::<f64>() / ranks as f64;
+        let small =
+            rank_sums.iter().map(|r| r[t] * rank_scale).sum::<f64>() / ranks as f64;
         per_type.push(gns_components(b_big, big, b_small, small));
         tot_big += big;
         tot_small += small;
@@ -110,8 +92,8 @@ pub fn ddp_step_with_stats(
     Ok(DdpObservation {
         per_type,
         total,
-        loss: loss_sum / n_micro,
-        mean_grads,
+        loss: out.loss_sum / n_micro,
+        mean_grads: out.grads,
         b_big,
         b_small,
     })

@@ -3,21 +3,28 @@
 //! * [`runner`] — owns a model's training state (params, Adam moments)
 //!   and dispatches it through the `runtime::Backend` trait (init /
 //!   grad_step / accumulate / adamw_update / grad_sqnorms / eval);
-//! * [`trainer`] — the optimizer-step loop: microbatch gradient
+//! * [`parallel`] — the rank-parallel execution engine: one backend
+//!   instance per worker thread, concurrent per-rank accumulation loops,
+//!   and a fixed-order tree reduction that keeps results bitwise
+//!   identical for any `NANOGNS_RANK_WORKERS` setting;
+//! * [`trainer`] — the optimizer-step loop: rank-parallel gradient
 //!   accumulation, online GNS tracking, LR + batch-size schedules,
-//!   telemetry, checkpoints;
-//! * [`ddp`] — simulated distributed-data-parallel ranks, providing the
-//!   taxonomy's *DDP* small-batch gradient-norm estimator to compare
-//!   against the per-example method (Fig. 16);
-//! * [`checkpoint`] — binary param snapshots.
+//!   telemetry, checkpoint/resume;
+//! * [`ddp`] — distributed-data-parallel ranks, providing the taxonomy's
+//!   *DDP* small-batch gradient-norm estimator to compare against the
+//!   per-example method (Fig. 16);
+//! * [`checkpoint`] — binary snapshots: params-only (v1) and full
+//!   training state for bitwise-exact interrupt/resume (v2).
 //!
 //! Python never appears here: the default backend is pure Rust, and the
 //! `pjrt` feature executes pre-compiled artifacts from disk.
 
 pub mod checkpoint;
 pub mod ddp;
+pub mod parallel;
 pub mod runner;
 pub mod trainer;
 
+pub use parallel::{rank_workers, ParallelExecutor, RankStepOut};
 pub use runner::ModelRunner;
 pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,387 @@
+//! Rank-parallel execution engine: genuinely concurrent data-parallel
+//! ranks with a deterministic, worker-count-invariant reduction.
+//!
+//! [`ParallelExecutor`] owns one [`Backend`] instance per worker thread
+//! (created through [`BackendFactory::create_for_rank`], so a device
+//! factory can map workers onto devices). One [`ParallelExecutor::rank_step`]
+//! call runs every rank's gradient-accumulation loop:
+//!
+//! * ranks are split into contiguous blocks, one block per worker, and the
+//!   blocks execute concurrently on scoped threads (the calling thread
+//!   runs block 0) — the same layout discipline as
+//!   [`crate::runtime::kernels::threads`];
+//! * each rank folds its `accum` microbatches left-to-right into a
+//!   rank-local gradient accumulator and a rank-local
+//!   [`GnsAccumulator`], exactly as the old sequential loop did within a
+//!   rank;
+//! * per-rank partials are then merged on the calling thread with a
+//!   **fixed-order binary tree reduction** over the rank index —
+//!   `(r0+r1) + (r2+r3), …` round by round, an odd tail passing through
+//!   unchanged — for gradients, stats, and loss alike.
+//!
+//! Because every rank's work depends only on (params, its loader stream)
+//! and the merge order depends only on the rank count, the result is
+//! **bitwise identical for any worker count**, including the fully
+//! sequential `workers = 1` execution. `NANOGNS_RANK_WORKERS` overrides
+//! the worker count (see [`rank_workers`]); the CI determinism matrix
+//! re-proves the invariance contract across thread/worker combinations.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::data::Loader;
+use crate::gns::GnsAccumulator;
+use crate::runtime::kernels::default_workers;
+use crate::runtime::{Backend, BackendFactory, Buffer, ModelEntry};
+use crate::N_TYPES;
+
+/// Rank-worker count from the environment (`NANOGNS_RANK_WORKERS`,
+/// clamped to `[1, ranks]`) or a machine-derived default that leaves the
+/// intra-op kernel threads their cores: `available / intra_op_workers`,
+/// clamped to `[1, ranks]`.
+pub fn rank_workers(ranks: usize) -> usize {
+    let ranks = ranks.max(1);
+    if let Ok(v) = std::env::var("NANOGNS_RANK_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, ranks);
+        }
+    }
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (avail / default_workers().max(1)).clamp(1, ranks)
+}
+
+/// Merged output of one rank-parallel accumulation pass.
+pub struct RankStepOut {
+    /// Tree-merged gradient **sum** over all `ranks * accum` microbatches
+    /// (the caller applies the `1/n_micro` mean scale, as before).
+    pub grads: Vec<Buffer>,
+    /// Merged per-example stats over every microbatch of every rank.
+    pub stats: GnsAccumulator,
+    /// Sum of per-microbatch losses (mean-per-token each).
+    pub loss_sum: f64,
+    /// Total microbatches executed (`ranks * accum`).
+    pub n_micro: usize,
+    /// Per-rank raw `sum ||grad||^2` of each rank's *unscaled* gradient
+    /// sum, in rank order — only when requested (the DDP estimator's
+    /// per-rank observation; `None` otherwise to skip the extra pass).
+    pub rank_sqnorms: Option<Vec<[f64; N_TYPES]>>,
+}
+
+/// One rank's partial result before the tree reduction.
+struct RankPartial {
+    grads: Vec<Buffer>,
+    stats: GnsAccumulator,
+    loss: f64,
+    n_micro: usize,
+    sqnorms: Option<[f64; N_TYPES]>,
+}
+
+/// Owns per-worker backend instances and runs rank loops concurrently.
+pub struct ParallelExecutor {
+    backends: Vec<Box<dyn Backend>>,
+    entry: ModelEntry,
+    workers: usize,
+    /// Reusable gradient buffer sets shared by all workers (leasing is
+    /// order-nondeterministic, but leased sets are re-zeroed, so reuse
+    /// never changes results — same contract as the runner's arena).
+    arena: Mutex<Vec<Vec<Buffer>>>,
+    arena_cap: usize,
+}
+
+impl ParallelExecutor {
+    /// Engine with `rank_workers(ranks)` workers (env-tunable default).
+    pub fn new(factory: &dyn BackendFactory, model: &str, ranks: usize) -> Result<Self> {
+        Self::with_workers(factory, model, ranks, rank_workers(ranks))
+    }
+
+    /// Engine with an explicit worker count (clamped to `[1, ranks]`).
+    pub fn with_workers(
+        factory: &dyn BackendFactory,
+        model: &str,
+        ranks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        let ranks = ranks.max(1);
+        let workers = workers.clamp(1, ranks);
+        let backends: Vec<Box<dyn Backend>> = (0..workers)
+            .map(|w| factory.create_for_rank(model, w))
+            .collect::<Result<_>>()?;
+        ensure!(!backends.is_empty(), "no worker backends created");
+        let entry = backends[0].entry().clone();
+        let arena_cap = 2 * ranks + 2;
+        Ok(Self { backends, entry, workers, arena: Mutex::new(Vec::new()), arena_cap })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// The primary worker backend (artifact calls that need no rank
+    /// parallelism: `grad_sqnorms`, `eval`, merges).
+    pub fn backend(&self) -> &dyn Backend {
+        self.backends[0].as_ref()
+    }
+
+    /// Zero gradient set from the shared arena (re-zeroed in place) or a
+    /// fresh backend allocation.
+    fn lease_zero(&self, be: &dyn Backend) -> Result<Vec<Buffer>> {
+        let reused = self.arena.lock().ok().and_then(|mut pool| pool.pop());
+        match reused {
+            Some(mut set) => {
+                for b in set.iter_mut() {
+                    match b {
+                        Buffer::Host(t) => t.data.fill(0.0),
+                        #[cfg(feature = "pjrt")]
+                        Buffer::Pjrt(_) => {}
+                    }
+                }
+                Ok(set)
+            }
+            None => be.zero_grads(),
+        }
+    }
+
+    /// Return a no-longer-needed gradient set for reuse. Only
+    /// host-resident sets matching this model's shapes are pooled.
+    pub fn recycle(&self, grads: Vec<Buffer>) {
+        let matches_model = grads.len() == self.entry.params.len()
+            && grads.iter().zip(&self.entry.params).all(|(b, spec)| match b {
+                Buffer::Host(t) => t.shape == spec.shape,
+                #[cfg(feature = "pjrt")]
+                Buffer::Pjrt(_) => false,
+            });
+        if !matches_model {
+            return;
+        }
+        if let Ok(mut pool) = self.arena.lock() {
+            if pool.len() < self.arena_cap {
+                pool.push(grads);
+            }
+        }
+    }
+
+    /// One rank's accumulation loop (runs on whichever worker owns it).
+    fn run_rank(
+        &self,
+        be: &dyn Backend,
+        params: &[Buffer],
+        loader: &mut Loader,
+        accum: usize,
+        collect_rank_norms: bool,
+    ) -> Result<RankPartial> {
+        let mb = self.entry.microbatch;
+        let mut acc = self.lease_zero(be)?;
+        let mut stats = GnsAccumulator::new(N_TYPES, mb);
+        let mut loss = 0f64;
+        for _ in 0..accum {
+            let batch = loader.next_batch(mb);
+            let out = be.grad_step(params, &batch)?;
+            stats.add_microbatch(&out.stats);
+            acc = be.accumulate(acc, &out.grads)?;
+            self.recycle(out.grads);
+            loss += out.loss as f64;
+        }
+        let sqnorms = if collect_rank_norms { Some(be.grad_sqnorms(&acc)?) } else { None };
+        Ok(RankPartial { grads: acc, stats, loss, n_micro: accum, sqnorms })
+    }
+
+    /// Run `accum` microbatches on each of `loaders.len()` ranks — rank
+    /// `r` consuming `loaders[r]` — and merge the per-rank partials with
+    /// the fixed-order tree reduction. Bitwise identical for any worker
+    /// count; `collect_rank_norms` additionally returns each rank's
+    /// pre-merge gradient squared norms (the DDP observation).
+    pub fn rank_step(
+        &self,
+        params: &[Buffer],
+        loaders: &mut [Loader],
+        accum: usize,
+        collect_rank_norms: bool,
+    ) -> Result<RankStepOut> {
+        let ranks = loaders.len();
+        ensure!(ranks > 0, "rank_step needs at least one rank loader");
+        ensure!(accum > 0, "rank_step needs accum >= 1");
+
+        let workers = self.workers.min(ranks);
+        let per = ranks.div_ceil(workers);
+        let mut slots: Vec<Option<Result<RankPartial>>> = (0..ranks).map(|_| None).collect();
+
+        std::thread::scope(|s| {
+            let mut rest_slots = &mut slots[..];
+            let mut rest_loaders = loaders;
+            // Carve off block 0 for the calling thread, spawn the rest.
+            let (first_slots, tail) = std::mem::take(&mut rest_slots).split_at_mut(per.min(ranks));
+            rest_slots = tail;
+            let (first_loaders, tail) =
+                std::mem::take(&mut rest_loaders).split_at_mut(per.min(ranks));
+            rest_loaders = tail;
+            let mut start = per.min(ranks);
+            let mut block = 1usize;
+            while start < ranks {
+                let end = (start + per).min(ranks);
+                let n = end - start;
+                let (bs, ts) = std::mem::take(&mut rest_slots).split_at_mut(n);
+                let (bl, tl) = std::mem::take(&mut rest_loaders).split_at_mut(n);
+                rest_slots = ts;
+                rest_loaders = tl;
+                let be = self.backends[block].as_ref();
+                s.spawn(move || {
+                    for (slot, loader) in bs.iter_mut().zip(bl.iter_mut()) {
+                        let r = self.run_rank(be, params, loader, accum, collect_rank_norms);
+                        let failed = r.is_err();
+                        *slot = Some(r);
+                        if failed {
+                            break;
+                        }
+                    }
+                });
+                start = end;
+                block += 1;
+            }
+            let be = self.backends[0].as_ref();
+            for (slot, loader) in first_slots.iter_mut().zip(first_loaders.iter_mut()) {
+                let r = self.run_rank(be, params, loader, accum, collect_rank_norms);
+                let failed = r.is_err();
+                *slot = Some(r);
+                if failed {
+                    break;
+                }
+            }
+        });
+
+        // Surface the first failure in rank order (later ranks in the same
+        // block were skipped after an error).
+        let mut partials: Vec<RankPartial> = Vec::with_capacity(ranks);
+        let mut failure: Option<anyhow::Error> = None;
+        for (rank, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(p)) => partials.push(p),
+                Some(Err(e)) => {
+                    if failure.is_none() {
+                        failure = Some(anyhow!("rank {rank} failed: {e}"));
+                    }
+                }
+                None => {
+                    if failure.is_none() {
+                        failure = Some(anyhow!("rank {rank} never executed"));
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for p in partials {
+                self.recycle(p.grads);
+            }
+            bail!(e);
+        }
+
+        let rank_sqnorms: Option<Vec<[f64; N_TYPES]>> = collect_rank_norms
+            .then(|| partials.iter().map(|p| p.sqnorms.unwrap_or([f64::NAN; N_TYPES])).collect());
+
+        // Fixed-order binary tree reduction over the rank index: pairwise
+        // rounds, odd tail passes through. Depends only on `ranks`, never
+        // on the worker layout.
+        let be = self.backends[0].as_ref();
+        while partials.len() > 1 {
+            let mut next = Vec::with_capacity(partials.len().div_ceil(2));
+            let mut it = partials.into_iter();
+            while let Some(mut a) = it.next() {
+                if let Some(b) = it.next() {
+                    a.grads = be.accumulate(a.grads, &b.grads)?;
+                    self.recycle(b.grads);
+                    a.stats.merge(&b.stats);
+                    a.loss += b.loss;
+                    a.n_micro += b.n_micro;
+                }
+                next.push(a);
+            }
+            partials = next;
+        }
+        let root = partials.pop().expect("non-empty rank set");
+        Ok(RankStepOut {
+            grads: root.grads,
+            stats: root.stats,
+            loss_sum: root.loss,
+            n_micro: root.n_micro,
+            rank_sqnorms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusGenerator;
+    use crate::runtime::ReferenceFactory;
+
+    fn loaders_for(entry: &ModelEntry, ranks: usize, seed: u64) -> Vec<Loader> {
+        let text = CorpusGenerator::new(seed).generate(1 << 16);
+        let base = Loader::new(&text, entry.seq_len, seed);
+        (0..ranks as u64).map(|r| base.for_rank(r)).collect()
+    }
+
+    #[test]
+    fn rank_workers_is_clamped() {
+        assert_eq!(rank_workers(1), 1);
+        assert!(rank_workers(4) >= 1 && rank_workers(4) <= 4);
+    }
+
+    #[test]
+    fn rank_step_counts_and_shapes() {
+        let ex = ParallelExecutor::with_workers(&ReferenceFactory, "nano", 3, 2).unwrap();
+        let be = ReferenceFactory.create("nano").unwrap();
+        let params = be.init(0).unwrap();
+        let mut loaders = loaders_for(ex.entry(), 3, 0);
+        let out = ex.rank_step(&params, &mut loaders, 2, true).unwrap();
+        assert_eq!(out.n_micro, 6);
+        assert_eq!(out.stats.n_examples(), 6 * ex.entry().microbatch);
+        assert_eq!(out.grads.len(), ex.entry().params.len());
+        assert_eq!(out.rank_sqnorms.as_ref().unwrap().len(), 3);
+        assert!(out.loss_sum.is_finite());
+    }
+
+    /// The engine-level invariance contract: identical outputs for any
+    /// worker count, including per-rank norms (integration tests extend
+    /// this through the Trainer and the DDP estimator).
+    #[test]
+    fn rank_step_is_bitwise_worker_invariant() {
+        let ranks = 5; // odd: exercises the tree's pass-through tail
+        let be = ReferenceFactory.create("nano").unwrap();
+        let params = be.init(1).unwrap();
+        let mut want: Option<(Vec<Vec<f32>>, Vec<f64>, u64)> = None;
+        for workers in [1usize, 2, 3, 5] {
+            let ex =
+                ParallelExecutor::with_workers(&ReferenceFactory, "nano", ranks, workers).unwrap();
+            let mut loaders = loaders_for(ex.entry(), ranks, 1);
+            let out = ex.rank_step(&params, &mut loaders, 2, false).unwrap();
+            let grads: Vec<Vec<f32>> =
+                out.grads.iter().map(|b| b.to_tensor().unwrap().data).collect();
+            let (small, _) = out.stats.finish();
+            let loss_bits = out.loss_sum.to_bits();
+            match &want {
+                None => want = Some((grads, small, loss_bits)),
+                Some((wg, ws, wl)) => {
+                    assert_eq!(&grads, wg, "workers={workers}: gradient drift");
+                    for (a, b) in small.iter().zip(ws) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}: stats drift");
+                    }
+                    assert_eq!(loss_bits, *wl, "workers={workers}: loss drift");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_empty_ranks_and_zero_accum() {
+        let ex = ParallelExecutor::with_workers(&ReferenceFactory, "nano", 2, 1).unwrap();
+        let be = ReferenceFactory.create("nano").unwrap();
+        let params = be.init(0).unwrap();
+        assert!(ex.rank_step(&params, &mut [], 1, false).is_err());
+        let mut loaders = loaders_for(ex.entry(), 1, 0);
+        assert!(ex.rank_step(&params, &mut loaders, 0, false).is_err());
+    }
+}

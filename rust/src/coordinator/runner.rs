@@ -89,13 +89,39 @@ impl ModelRunner {
         Ok(())
     }
 
-    /// Replace parameters (e.g. from a checkpoint); resets Adam state.
+    /// Replace parameters (e.g. from a params-only checkpoint); resets
+    /// Adam state.
     pub fn set_params(&mut self, params: Vec<Buffer>) -> Result<()> {
         ensure!(params.len() == self.entry.params.len(), "param count mismatch");
         self.m = self.backend.zero_grads()?;
         self.v = self.backend.zero_grads()?;
         self.params = params;
         self.step = 0;
+        Ok(())
+    }
+
+    /// Adam moment buffers `(m, v)`, for full-state checkpointing.
+    pub fn moments(&self) -> (&[Buffer], &[Buffer]) {
+        (&self.m, &self.v)
+    }
+
+    /// Replace the complete optimizer state (params, Adam moments, step
+    /// counter) — the full-state checkpoint restore path.
+    pub fn set_state(
+        &mut self,
+        params: Vec<Buffer>,
+        m: Vec<Buffer>,
+        v: Vec<Buffer>,
+        step: u64,
+    ) -> Result<()> {
+        let n = self.entry.params.len();
+        ensure!(params.len() == n, "param count mismatch: {} != {n}", params.len());
+        ensure!(m.len() == n, "m count mismatch: {} != {n}", m.len());
+        ensure!(v.len() == n, "v count mismatch: {} != {n}", v.len());
+        self.params = params;
+        self.m = m;
+        self.v = v;
+        self.step = step;
         Ok(())
     }
 

@@ -1,29 +1,38 @@
-//! The optimizer-step loop: gradient accumulation, GNS tracking,
-//! schedule-driven batch sizing, telemetry.
+//! The optimizer-step loop: rank-parallel gradient accumulation, GNS
+//! tracking, schedule-driven batch sizing, checkpointing, telemetry.
 //!
 //! One optimizer step (paper Sections 3–5):
 //! 1. Decide accumulation steps A from the batch-size schedule (possibly
 //!    GNS-adaptive).
-//! 2. Run A * ranks microbatches through `grad_step`, accumulating the
-//!    gradients on device and folding each stats vector into a
-//!    [`GnsAccumulator`] (the per-example ||G_Bsmall||^2 component).
+//! 2. Run A * ranks microbatches through the rank-parallel engine
+//!    ([`super::parallel::ParallelExecutor`]): each rank accumulates its
+//!    A microbatches concurrently, stats fold into per-rank
+//!    [`crate::gns::GnsAccumulator`]s, and the partials merge with a
+//!    fixed-order tree reduction (bitwise worker-count invariant).
 //! 3. Compute per-layer-type ||G_Bbig||^2 on the accumulated gradient via
 //!    `grad_sqnorms` (one cheap artifact call).
 //! 4. Update the [`GnsTracker`] (EMA of Eqs. 4/5 per layer type).
 //! 5. AdamW with grad_scale = 1/(A * ranks).
+//!
+//! With `checkpoint_dir`/`checkpoint_every` set, [`Trainer::run`] writes a
+//! full-state (v2) checkpoint every N steps; [`Trainer::resume`] rebuilds
+//! a trainer from one and replays the uninterrupted trajectory bitwise.
 
+use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{CorpusGenerator, Loader};
-use crate::gns::{GnsAccumulator, GnsTracker};
-use crate::runtime::BackendFactory;
+use crate::gns::{GnsComponents, GnsTracker};
+use crate::runtime::{Backend, BackendFactory};
 use crate::schedule::GnsController;
 use crate::telemetry::{CsvLogger, TRAIN_HEADER};
 use crate::{N_TYPES, STATS_ORDER};
 
+use super::checkpoint;
+use super::parallel::ParallelExecutor;
 use super::runner::ModelRunner;
 
 /// Per-step record kept in memory (mirrors the CSV schema).
@@ -54,6 +63,7 @@ pub struct TrainOutcome {
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub runner: ModelRunner,
+    engine: ParallelExecutor,
     loaders: Vec<Loader>,
     controller: GnsController,
     pub tracker: GnsTracker,
@@ -74,19 +84,115 @@ pub struct TrainerSnapshot {
 }
 
 impl Trainer {
+    /// Trainer with the env-default rank-worker count
+    /// (`NANOGNS_RANK_WORKERS`; see [`super::parallel::rank_workers`]).
     pub fn new(factory: &dyn BackendFactory, cfg: TrainConfig) -> Result<Self> {
+        let workers = super::parallel::rank_workers(cfg.ranks.max(1));
+        Self::with_rank_workers(factory, cfg, workers)
+    }
+
+    /// Trainer with an explicit rank-worker count (the invariance tests
+    /// compare worker counts without touching the environment).
+    pub fn with_rank_workers(
+        factory: &dyn BackendFactory,
+        cfg: TrainConfig,
+        workers: usize,
+    ) -> Result<Self> {
         let mut runner = ModelRunner::new(factory, &cfg.model)?;
         runner.init(cfg.seed as i32)?;
+        let ranks = cfg.ranks.max(1);
+        let engine = ParallelExecutor::with_workers(factory, &cfg.model, ranks, workers)?;
         let text = CorpusGenerator::new(cfg.seed).generate(cfg.corpus_bytes);
         let base = Loader::new(&text, runner.entry.seq_len, cfg.seed);
-        let loaders: Vec<Loader> = (0..cfg.ranks.max(1) as u64).map(|r| base.for_rank(r)).collect();
+        let loaders: Vec<Loader> = (0..ranks as u64).map(|r| base.for_rank(r)).collect();
         let controller = GnsController::new(cfg.batch_size.clone());
         let tracker = GnsTracker::new(&STATS_ORDER, cfg.gns_alpha);
-        Ok(Self { cfg, runner, loaders, controller, tracker, tokens: 0, lr_scale: 1.0 })
+        Ok(Self { cfg, runner, engine, loaders, controller, tracker, tokens: 0, lr_scale: 1.0 })
+    }
+
+    /// Rebuild a trainer from a full-state (v2) checkpoint; the resumed
+    /// run continues the interrupted trajectory bitwise-exactly.
+    pub fn resume(
+        factory: &dyn BackendFactory,
+        cfg: TrainConfig,
+        path: impl AsRef<Path>,
+    ) -> Result<Self> {
+        let mut tr = Self::new(factory, cfg)?;
+        tr.load_checkpoint(path)?;
+        Ok(tr)
     }
 
     pub fn tokens(&self) -> u64 {
         self.tokens
+    }
+
+    /// Rank-parallel worker threads in use.
+    pub fn rank_workers(&self) -> usize {
+        self.engine.workers()
+    }
+
+    /// Write a full-state (v2) checkpoint of this trainer (the
+    /// model-sized buffers are serialized in place, never cloned).
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        let (m, v) = self.runner.moments();
+        let state = checkpoint::TrainStateView {
+            model: &self.cfg.model,
+            seed: self.cfg.seed,
+            corpus_bytes: self.cfg.corpus_bytes as u64,
+            step: self.runner.step,
+            tokens: self.tokens,
+            lr_scale: self.lr_scale,
+            controller_last: self.controller.last(),
+            tracker: self.tracker.export_state(),
+            loaders: self.loaders.iter().map(Loader::cursor).collect(),
+            params: &self.runner.params,
+            m,
+            v,
+        };
+        checkpoint::save_state(path, &self.runner.entry, &state)
+    }
+
+    /// Restore this trainer's mutable state from a v2 checkpoint. The
+    /// trainer must have been built from the same config (model, ranks,
+    /// seed, schedules) as the checkpointed run.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let st = checkpoint::load_state(path, &self.runner.entry)?;
+        ensure!(
+            st.model == self.cfg.model,
+            "checkpoint is for model {:?}, config says {:?}",
+            st.model,
+            self.cfg.model
+        );
+        ensure!(
+            st.seed == self.cfg.seed && st.corpus_bytes == self.cfg.corpus_bytes as u64,
+            "checkpoint was trained with seed {} over {} corpus bytes; config says {} / {} — \
+             resuming would silently fork the data stream",
+            st.seed,
+            st.corpus_bytes,
+            self.cfg.seed,
+            self.cfg.corpus_bytes
+        );
+        ensure!(
+            st.loaders.len() == self.loaders.len(),
+            "checkpoint has {} rank cursors, config has {} ranks",
+            st.loaders.len(),
+            self.loaders.len()
+        );
+        ensure!(
+            st.tracker.types.as_slice() == self.tracker.types(),
+            "checkpoint tracker types {:?} do not match",
+            st.tracker.types
+        );
+        self.runner.set_state(st.params, st.m, st.v, st.step)?;
+        self.tracker = GnsTracker::from_state(st.tracker);
+        self.controller =
+            GnsController::with_start(self.cfg.batch_size.clone(), st.controller_last);
+        for (loader, cur) in self.loaders.iter_mut().zip(st.loaders) {
+            loader.restore_cursor(cur);
+        }
+        self.tokens = st.tokens;
+        self.lr_scale = st.lr_scale;
+        Ok(())
     }
 
     pub fn snapshot(&self) -> TrainerSnapshot {
@@ -125,25 +231,13 @@ impl Trainer {
         let accum = self.controller.decide(self.tokens, self.tracker.gns_total(), mb);
         let ranks = self.cfg.ranks.max(1);
 
-        // Leased from the runner's gradient arena: after the first step
-        // the accumulator is re-zeroed in place instead of reallocated
-        // (grad_step's own output buffers are still per-call — GradOut
-        // hands them to the caller by value).
-        let mut acc = self.runner.lease_zero_grads()?;
-        let mut gns_acc = GnsAccumulator::new(N_TYPES, mb);
-        let mut loss_sum = 0f64;
-        let mut n_micro = 0usize;
-        for rank in 0..ranks {
-            for _ in 0..accum {
-                let batch = self.loaders[rank].next_batch(mb);
-                let out = self.runner.grad_microbatch(&batch)?;
-                gns_acc.add_microbatch(&out.stats);
-                acc = self.runner.accumulate(acc, &out.grads)?;
-                self.runner.recycle_grads(out.grads);
-                loss_sum += out.loss as f64;
-                n_micro += 1;
-            }
-        }
+        // Rank-parallel accumulation: every rank's `accum` microbatches
+        // run concurrently on the engine's worker backends, and the
+        // per-rank gradient/stats partials merge with the fixed-order
+        // tree reduction (bitwise identical for any worker count).
+        let out = self.engine.rank_step(&self.runner.params, &mut self.loaders, accum, false)?;
+        let n_micro = out.n_micro;
+        let acc = out.grads;
         let scale = 1.0 / n_micro as f64;
 
         // Big-batch component: norms of the *mean* gradient = norms of the
@@ -153,26 +247,32 @@ impl Trainer {
         for (d, s) in big_sq.iter_mut().zip(sums) {
             *d = s * scale * scale;
         }
-        let (small_sq, _) = gns_acc.finish();
+        let (small_sq, _) = out.stats.finish();
         let b_big = (mb * accum * ranks) as f64;
         self.tracker.observe(b_big, &big_sq, &small_sq);
 
         let lr = self.cfg.lr.at(self.runner.step) * self.lr_scale;
         self.runner.adamw_update(&acc, lr, scale)?;
-        self.runner.recycle_grads(acc);
+        self.engine.recycle(acc);
         self.tokens += (n_micro * mb * seq) as u64;
 
-        let mut raw_g_sq = [0f64; N_TYPES];
-        let mut raw_s = [0f64; N_TYPES];
+        let mut raw_g_sq = [f64::NAN; N_TYPES];
+        let mut raw_s = [f64::NAN; N_TYPES];
         for (i, c) in self.tracker.last_raw.iter().enumerate() {
             raw_g_sq[i] = c.g_sq;
             raw_s[i] = c.s;
         }
-        let ct = self.tracker.last_raw_total.unwrap();
+        // A tracker that never observed anything reports NaN components
+        // (the estimator's degenerate-input convention) instead of
+        // panicking on the unwrap.
+        let ct = self
+            .tracker
+            .last_raw_total
+            .unwrap_or(GnsComponents { g_sq: f64::NAN, s: f64::NAN });
         Ok(StepRecord {
             step: self.runner.step,
             tokens: self.tokens,
-            loss: loss_sum / n_micro as f64,
+            loss: out.loss_sum / n_micro as f64,
             lr,
             accum,
             b_big,
@@ -186,31 +286,61 @@ impl Trainer {
         })
     }
 
-    /// Evaluation loss averaged over `n` held-out batches.
+    /// Evaluation loss averaged over `n` held-out batches. Runs on the
+    /// engine's primary worker backend so the runner's own backend never
+    /// pays for an activation workspace.
     pub fn eval(&mut self, n: usize) -> Result<f64> {
         let mb = self.runner.entry.microbatch;
         let mut loader = self.loaders[0].for_rank(u64::MAX); // held-out stream
         let mut sum = 0f64;
         for _ in 0..n {
-            sum += self.runner.eval(&loader.next_batch(mb))? as f64;
+            sum += self.engine.backend().eval(&self.runner.params, &loader.next_batch(mb))? as f64;
         }
         Ok(sum / n as f64)
     }
 
-    /// Full run per the config; logs CSV if configured.
+    /// Full run per the config; logs CSV if configured, and writes
+    /// full-state checkpoints every `checkpoint_every` steps when
+    /// `checkpoint_dir` is set (plus `latest.ckpt`, the `--resume`
+    /// convenience pointer). `cfg.steps` is the *total* step budget, so a
+    /// resumed trainer runs only the remaining steps.
     pub fn run(&mut self) -> Result<TrainOutcome> {
+        // A resumed run keeps the rows logged before the interruption,
+        // drops any logged *after* the checkpoint being resumed from
+        // (they will be re-executed), and appends.
         let mut logger = if self.cfg.metrics_path.is_empty() {
             None
+        } else if self.runner.step > 0 {
+            let at = self.runner.step as f64;
+            Some(CsvLogger::resume_file(&self.cfg.metrics_path, TRAIN_HEADER, at)?)
         } else {
             Some(CsvLogger::to_file(&self.cfg.metrics_path, TRAIN_HEADER)?)
         };
-        let mut records = Vec::with_capacity(self.cfg.steps as usize);
-        for _ in 0..self.cfg.steps {
+        let ckpt_every = self.cfg.checkpoint_every;
+        let ckpt_dir = self.cfg.checkpoint_dir.clone();
+        let remaining = self.cfg.steps.saturating_sub(self.runner.step) as usize;
+        let mut records = Vec::with_capacity(remaining);
+        while self.runner.step < self.cfg.steps {
             let rec = self.step()?;
             if let Some(log) = logger.as_mut() {
                 log.row(&record_row(&rec))?;
             }
+            let at_checkpoint = !ckpt_dir.is_empty()
+                && ckpt_every > 0
+                && (rec.step % ckpt_every == 0 || rec.step == self.cfg.steps);
             records.push(rec);
+            if at_checkpoint {
+                let step = self.runner.step;
+                let dir = Path::new(&ckpt_dir);
+                let path = dir.join(format!("step-{step:08}.ckpt"));
+                self.save_checkpoint(&path)?;
+                // latest.ckpt updates atomically too: a crash mid-copy
+                // must not clobber the previous good pointer.
+                let tmp = dir.join("latest.ckpt.tmp");
+                std::fs::copy(&path, &tmp)?;
+                std::fs::OpenOptions::new().write(true).open(&tmp)?.sync_all()?;
+                std::fs::rename(&tmp, dir.join("latest.ckpt"))?;
+            }
         }
         if let Some(log) = logger.as_mut() {
             log.flush()?;

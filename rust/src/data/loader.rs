@@ -4,7 +4,7 @@
 //! sampled at random offsets (seeded). Distinct DDP ranks get disjoint
 //! sample streams by deriving their seeds from (seed, rank).
 
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
 
 use super::tokenizer::ByteTokenizer;
 
@@ -44,6 +44,18 @@ impl Loader {
 
     pub fn n_tokens(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// Sampling cursor (the loader's RNG state). Together with the corpus
+    /// seed this pins the exact batch stream, so a checkpointed run can
+    /// resume on bitwise-identical data.
+    pub fn cursor(&self) -> RngState {
+        self.rng.state()
+    }
+
+    /// Restore a cursor captured by [`Self::cursor`].
+    pub fn restore_cursor(&mut self, st: RngState) {
+        self.rng = Rng::from_state(st);
     }
 
     /// Next `(B, T)` batch: inputs are windows, targets the same windows
@@ -105,6 +117,18 @@ mod tests {
         let mut r0 = base.for_rank(0);
         let mut r1 = base.for_rank(1);
         assert_ne!(r0.next_batch(2), r1.next_batch(2));
+    }
+
+    #[test]
+    fn cursor_round_trip_resumes_stream() {
+        let text = corpus();
+        let mut l = Loader::new(&text, 32, 11);
+        l.next_batch(3);
+        let cur = l.cursor();
+        let a = l.next_batch(3);
+        let mut m = Loader::new(&text, 32, 11);
+        m.restore_cursor(cur);
+        assert_eq!(a, m.next_batch(3));
     }
 
     #[test]

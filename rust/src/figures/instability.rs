@@ -18,7 +18,7 @@ use crate::telemetry::CsvLogger;
 struct TsHarness {
     teacher: Vec<Literal>,
     students: Vec<(String, Vec<Literal>)>,
-    exes: std::collections::HashMap<String, std::rc::Rc<crate::runtime::Executable>>,
+    exes: std::collections::HashMap<String, std::sync::Arc<crate::runtime::Executable>>,
     n: usize,
     shape: (usize, usize, usize),
     rng: Rng,

@@ -37,6 +37,9 @@ fn base_cfg(model: &str, steps: u64, seed: u64) -> TrainConfig {
         corpus_bytes: 1 << 19,
         eval_every: 0,
         metrics_path: String::new(),
+        checkpoint_dir: String::new(),
+        checkpoint_every: 0,
+        resume: String::new(),
     }
 }
 
@@ -360,6 +363,8 @@ pub fn fig16(f: &dyn BackendFactory, model: &str, steps: u64, ranks: usize) -> R
     let entry = f.describe(model)?;
     let mut runner = crate::coordinator::ModelRunner::new(f, model)?;
     runner.init(42)?;
+    // Rank-parallel engine: each DDP rank runs on its own worker backend.
+    let engine = crate::coordinator::ParallelExecutor::new(f, model, ranks)?;
     let text = CorpusGenerator::new(5).generate(1 << 19);
     let base = Loader::new(&text, entry.seq_len, 5);
     let mut loaders: Vec<Loader> = (0..ranks as u64).map(|r| base.for_rank(r)).collect();
@@ -387,12 +392,9 @@ pub fn fig16(f: &dyn BackendFactory, model: &str, steps: u64, ranks: usize) -> R
     for step in 1..=steps {
         // per-example stats ride along on each rank's microbatches
         let mut gns_acc = GnsAccumulator::new(N_TYPES, mb);
-        // DDP observation (runs the same microbatch streams)
-        let obs = {
-            // intercept per-example stats: ddp::ddp_step uses grad_microbatch
-            // internally; collect stats by running it ourselves here.
-            ddp::ddp_step_with_stats(&runner, &mut loaders, accum, &mut gns_acc)?
-        };
+        // DDP observation (runs the same microbatch streams, in parallel)
+        let obs =
+            ddp::ddp_step_with_stats(&engine, &runner.params, &mut loaders, accum, &mut gns_acc)?;
         let mut big = [0f64; N_TYPES];
         let n_micro = (ranks * accum) as f64;
         let sums = runner.grad_sqnorms(&obs.mean_grads)?;

@@ -15,6 +15,15 @@ pub struct Ema {
     bias_correct: bool,
 }
 
+/// Full serializable state of an [`Ema`] (checkpoint/resume).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EmaParts {
+    pub alpha: f64,
+    pub state: Option<f64>,
+    pub t: u64,
+    pub bias_correct: bool,
+}
+
 impl Ema {
     pub fn new(alpha: f64) -> Self {
         assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
@@ -31,6 +40,23 @@ impl Ema {
 
     pub fn alpha(&self) -> f64 {
         self.alpha
+    }
+
+    /// Capture the full smoother state (checkpointing).
+    pub fn parts(&self) -> EmaParts {
+        EmaParts {
+            alpha: self.alpha,
+            state: self.state,
+            t: self.t,
+            bias_correct: self.bias_correct,
+        }
+    }
+
+    /// Rebuild a smoother from captured [`EmaParts`]; resumed updates are
+    /// bitwise identical to an uninterrupted smoother.
+    pub fn from_parts(p: EmaParts) -> Self {
+        assert!(p.alpha > 0.0 && p.alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { alpha: p.alpha, state: p.state, t: p.t, bias_correct: p.bias_correct }
     }
 
     pub fn update(&mut self, x: f64) -> f64 {
@@ -99,6 +125,20 @@ mod tests {
     #[should_panic]
     fn rejects_zero_alpha() {
         Ema::new(0.0);
+    }
+
+    #[test]
+    fn parts_round_trip_resumes_bitwise() {
+        let mut e = Ema::with_bias_correction(0.07);
+        for x in [3.0, -1.5, 0.25] {
+            e.update(x);
+        }
+        let mut f = Ema::from_parts(e.parts());
+        for x in [9.0, 0.125, -7.0] {
+            let a = e.update(x);
+            let b = f.update(x);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     /// EMA of a constant series is that constant (fixed point).

@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use super::ema::Ema;
+use super::ema::{Ema, EmaParts};
 
 /// The two unbiased estimators and their ratio for one observation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -80,6 +80,21 @@ impl GnsAccumulator {
         self.n_examples
     }
 
+    /// Fold another accumulator over the *same* layer types and
+    /// microbatch size into this one (the rank-parallel reduction step).
+    /// Merging per-rank accumulators in a fixed order is the stats-side
+    /// analogue of the gradient tree reduction: each partial sum is a
+    /// plain f64 sum over its own microbatches, so `merge` preserves the
+    /// deterministic association the coordinator documents.
+    pub fn merge(&mut self, other: &GnsAccumulator) {
+        assert_eq!(self.perex_sum.len(), other.perex_sum.len(), "layer-type arity mismatch");
+        assert_eq!(self.microbatch, other.microbatch, "microbatch mismatch");
+        for (a, b) in self.perex_sum.iter_mut().zip(&other.perex_sum) {
+            *a += b;
+        }
+        self.n_examples += other.n_examples;
+    }
+
     /// Mean per-example squared norm per layer type (`||G_Bsmall||^2` with
     /// B_small = 1), plus the total.
     pub fn finish(&self) -> (Vec<f64>, f64) {
@@ -103,6 +118,20 @@ pub struct GnsTracker {
     /// Most recent raw (unsmoothed) components per type.
     pub last_raw: Vec<GnsComponents>,
     pub last_raw_total: Option<GnsComponents>,
+}
+
+/// Full serializable state of a [`GnsTracker`] (checkpoint/resume): every
+/// EMA's exact state, so a resumed tracker continues the smoothed series
+/// bitwise identically. The transient `last_raw*` fields are *not* part of
+/// the state — they are overwritten by the first `observe` after resume,
+/// before anything reads them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrackerState {
+    pub types: Vec<String>,
+    pub g_sq: Vec<EmaParts>,
+    pub s: Vec<EmaParts>,
+    pub g_sq_total: EmaParts,
+    pub s_total: EmaParts,
 }
 
 #[derive(Debug, Clone)]
@@ -129,6 +158,37 @@ impl GnsTracker {
             last_raw: Vec::new(),
             last_raw_total: None,
         }
+    }
+
+    /// Capture the tracker's full EMA state (checkpointing).
+    pub fn export_state(&self) -> TrackerState {
+        TrackerState {
+            types: self.types.clone(),
+            g_sq: self.ema_g_sq.iter().map(Ema::parts).collect(),
+            s: self.ema_s.iter().map(Ema::parts).collect(),
+            g_sq_total: self.ema_g_sq_total.parts(),
+            s_total: self.ema_s_total.parts(),
+        }
+    }
+
+    /// Rebuild a tracker from a captured [`TrackerState`].
+    pub fn from_state(st: TrackerState) -> Self {
+        assert_eq!(st.g_sq.len(), st.types.len(), "g_sq arity mismatch");
+        assert_eq!(st.s.len(), st.types.len(), "s arity mismatch");
+        Self {
+            types: st.types,
+            ema_g_sq: st.g_sq.into_iter().map(Ema::from_parts).collect(),
+            ema_s: st.s.into_iter().map(Ema::from_parts).collect(),
+            ema_g_sq_total: Ema::from_parts(st.g_sq_total),
+            ema_s_total: Ema::from_parts(st.s_total),
+            last_raw: Vec::new(),
+            last_raw_total: None,
+        }
+    }
+
+    /// Layer-type names in stats order.
+    pub fn types(&self) -> &[String] {
+        &self.types
     }
 
     /// Observe one optimizer step.
@@ -249,6 +309,46 @@ mod tests {
         assert!((per_type[1] - 2.0).abs() < 1e-12);
         assert!((total - 10.0).abs() < 1e-12);
         assert_eq!(acc.n_examples(), 8);
+    }
+
+    #[test]
+    fn accumulator_merge_matches_single_accumulator() {
+        let mut whole = GnsAccumulator::new(2, 4);
+        let mut left = GnsAccumulator::new(2, 4);
+        let mut right = GnsAccumulator::new(2, 4);
+        for (i, stats) in [[1.0f32, 0.5], [3.0, 0.25], [2.0, 0.125], [0.5, 8.0]]
+            .iter()
+            .enumerate()
+        {
+            whole.add_microbatch(stats);
+            if i < 2 {
+                left.add_microbatch(stats);
+            } else {
+                right.add_microbatch(stats);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.n_examples(), whole.n_examples());
+        let (a, at) = left.finish();
+        let (b, bt) = whole.finish();
+        // dyadic inputs: every partial sum is exact in f64, so the merged
+        // result is bitwise equal regardless of association
+        assert_eq!(a[0].to_bits(), b[0].to_bits());
+        assert_eq!(a[1].to_bits(), b[1].to_bits());
+        assert_eq!(at.to_bits(), bt.to_bits());
+    }
+
+    #[test]
+    fn tracker_state_round_trip_resumes_bitwise() {
+        let mut tr = GnsTracker::new(&["a", "b"], 0.25);
+        tr.observe(16.0, &[1.0, 2.0], &[5.0, 6.0]);
+        tr.observe(32.0, &[1.5, 2.5], &[4.0, 7.0]);
+        let mut resumed = GnsTracker::from_state(tr.export_state());
+        tr.observe(16.0, &[0.5, 0.25], &[3.0, 1.0]);
+        resumed.observe(16.0, &[0.5, 0.25], &[3.0, 1.0]);
+        assert_eq!(tr.gns_total().unwrap().to_bits(), resumed.gns_total().unwrap().to_bits());
+        assert_eq!(tr.gns_of("a").unwrap().to_bits(), resumed.gns_of("a").unwrap().to_bits());
+        assert_eq!(tr.types(), resumed.types());
     }
 
     #[test]

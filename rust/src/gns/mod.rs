@@ -21,8 +21,8 @@ pub mod regression;
 pub mod simulator;
 pub mod welford;
 
-pub use ema::Ema;
-pub use estimators::{gns_components, GnsAccumulator, GnsComponents, GnsTracker};
+pub use ema::{Ema, EmaParts};
+pub use estimators::{gns_components, GnsAccumulator, GnsComponents, GnsTracker, TrackerState};
 pub use jackknife::jackknife_ratio_stderr;
 pub use regression::{linreg, Regression};
 pub use simulator::{GnsSimulator, SimConfig};

@@ -23,6 +23,7 @@ repro — GNS-instrumented training coordinator (nanoGNS-rs)
 
 USAGE:
   repro train  [--config F.json] [--model NAME] [--steps N] [--seed N] [--metrics F.csv]
+               [--ranks N] [--checkpoint-dir DIR] [--checkpoint-every N] [--resume CKPT]
   repro figures (--fig N | --table N | --all) [--model NAME] [--steps N] [--seeds N] [--ranks N]
   repro info
   repro help
@@ -30,6 +31,17 @@ USAGE:
 GLOBAL:
   --backend NAME    execution backend: reference (default) | pjrt (needs --features pjrt)
   --artifacts DIR   artifact directory for the pjrt backend (default: artifacts)
+
+CHECKPOINT/RESUME:
+  --checkpoint-dir DIR   write full-state checkpoints (params, Adam moments, GNS EMAs,
+                         controller state, per-rank data cursors) under DIR
+  --checkpoint-every N   checkpoint every N optimizer steps (with --checkpoint-dir)
+  --resume CKPT          resume from a checkpoint file (e.g. DIR/latest.ckpt); the resumed
+                         run replays the uninterrupted trajectory bitwise and finishes the
+                         remaining --steps budget
+
+Data-parallel ranks run concurrently; NANOGNS_RANK_WORKERS caps the rank worker
+threads (results are bitwise identical for any setting).
 
 FIGURES: 2..16 map to the paper's figures (8 = `cargo bench --features pjrt --bench ln_kernel`;
 11..13 need the pjrt backend), tables 1..2.
@@ -139,10 +151,22 @@ fn main() -> Result<()> {
                     );
                     c.seed = args.get_num("seed", 0u64)?;
                     c.metrics_path = args.get_or("metrics", "");
+                    c.ranks = args.get_num("ranks", 1usize)?;
                     c
                 }
             };
             cfg.artifacts = artifacts.clone();
+            // Checkpoint flags always win over the config file.
+            if let Some(dir) = args.get("checkpoint-dir") {
+                cfg.checkpoint_dir = dir.to_string();
+            }
+            if let Some(every) = args.get("checkpoint-every") {
+                cfg.checkpoint_every = every.parse()?;
+            }
+            if let Some(r) = args.get("resume") {
+                cfg.resume = r.to_string();
+            }
+            let resume = cfg.resume.clone();
             println!(
                 "training {} ({:.2}M params) for {} steps on {}",
                 cfg.model,
@@ -150,7 +174,20 @@ fn main() -> Result<()> {
                 cfg.steps,
                 factory.platform()
             );
-            let mut tr = Trainer::new(factory.as_ref(), cfg)?;
+            let mut tr = if resume.is_empty() {
+                Trainer::new(factory.as_ref(), cfg)?
+            } else {
+                let tr = Trainer::resume(factory.as_ref(), cfg, &resume)?;
+                println!(
+                    "resumed from {resume} at step {} ({} tokens)",
+                    tr.runner.step,
+                    tr.tokens()
+                );
+                tr
+            };
+            if tr.cfg.ranks > 1 {
+                println!("ranks: {} on {} rank worker(s)", tr.cfg.ranks, tr.rank_workers());
+            }
             let out = tr.run()?;
             if let Some(r) = out.records.last() {
                 println!(

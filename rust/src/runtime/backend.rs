@@ -88,7 +88,15 @@ pub struct GradOut {
 }
 
 /// An execution engine for one model configuration.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the rank-parallel coordinator
+/// ([`crate::coordinator::parallel`]) drives one backend instance per
+/// worker thread and shares `&[Buffer]` parameter slices across those
+/// threads. Both in-tree backends are host-data structs (the reference
+/// backend guards its scratch workspace with a `Mutex`), so the bounds
+/// hold without unsafe code; a future device backend must either be
+/// thread-safe or wrap its client handle accordingly.
+pub trait Backend: Send + Sync {
     /// Short backend identifier ("reference", "pjrt").
     fn name(&self) -> &'static str;
 
@@ -143,6 +151,18 @@ pub trait Backend {
 pub trait BackendFactory {
     /// Instantiate a backend for a named model config.
     fn create(&self, model: &str) -> Result<Box<dyn Backend>>;
+
+    /// Instantiate a backend dedicated to one data-parallel rank worker.
+    ///
+    /// The default is rank-oblivious (every worker gets an identical
+    /// instance, which is exactly right for the CPU reference backend:
+    /// each instance is an independent workspace lease). A device factory
+    /// can override this to map ranks onto devices — e.g. the pjrt path
+    /// binding `rank -> PJRT device ordinal` — without the coordinator
+    /// changing.
+    fn create_for_rank(&self, model: &str, _rank: usize) -> Result<Box<dyn Backend>> {
+        self.create(model)
+    }
 
     /// Model metadata without paying for backend construction.
     fn describe(&self, model: &str) -> Result<ModelEntry>;

@@ -12,10 +12,9 @@
 //! stub, so it type-checks everywhere but executes only when the real
 //! `xla` crate is patched in (DESIGN.md §5).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
@@ -106,27 +105,32 @@ impl Executable {
     }
 }
 
-/// PJRT client + executable cache. Cheap to clone (shared internals).
+/// PJRT client + executable cache. Cheap to clone (shared internals,
+/// thread-safe: `Backend` requires `Send + Sync`).
 #[derive(Clone)]
 pub struct Runtime {
-    client: Rc<PjRtClient>,
-    cache: Rc<RefCell<HashMap<PathBuf, Rc<Executable>>>>,
+    client: Arc<PjRtClient>,
+    cache: Arc<Mutex<HashMap<PathBuf, Arc<Executable>>>>,
 }
 
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Self { client: Rc::new(client), cache: Rc::new(RefCell::new(HashMap::new())) })
+        Ok(Self { client: Arc::new(client), cache: Arc::new(Mutex::new(HashMap::new())) })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    fn cache(&self) -> Result<std::sync::MutexGuard<'_, HashMap<PathBuf, Arc<Executable>>>> {
+        self.cache.lock().map_err(|_| anyhow!("pjrt compile cache mutex poisoned"))
+    }
+
     /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
         let path = path.as_ref().to_path_buf();
-        if let Some(e) = self.cache.borrow().get(&path) {
+        if let Some(e) = self.cache()?.get(&path) {
             return Ok(e.clone());
         }
         let t0 = Instant::now();
@@ -134,12 +138,12 @@ impl Runtime {
             .map_err(|e| anyhow!("parse {path:?}: {e:?} (run `make artifacts`)"))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        let exe = Rc::new(Executable {
+        let exe = Arc::new(Executable {
             exe,
             path: path.clone(),
             compile_ms: t0.elapsed().as_millis(),
         });
-        self.cache.borrow_mut().insert(path, exe.clone());
+        self.cache()?.insert(path, exe.clone());
         Ok(exe)
     }
 
@@ -148,7 +152,7 @@ impl Runtime {
         &self,
         manifest: &Manifest,
         config: &str,
-    ) -> Result<HashMap<String, Rc<Executable>>> {
+    ) -> Result<HashMap<String, Arc<Executable>>> {
         let entry = manifest.config(config)?;
         let mut out = HashMap::new();
         for name in entry.artifacts.keys() {
@@ -199,7 +203,7 @@ fn wrap(lits: Vec<Literal>) -> Vec<Buffer> {
 /// [`Backend`] over the compiled artifacts of one model config.
 pub struct PjrtBackend {
     entry: ModelEntry,
-    exes: HashMap<String, Rc<Executable>>,
+    exes: HashMap<String, Arc<Executable>>,
 }
 
 impl PjrtBackend {
@@ -209,7 +213,7 @@ impl PjrtBackend {
         Ok(Self { entry, exes })
     }
 
-    fn exe(&self, name: &str) -> Result<&Rc<Executable>> {
+    fn exe(&self, name: &str) -> Result<&Arc<Executable>> {
         self.exes.get(name).ok_or_else(|| anyhow!("artifact {name} not loaded"))
     }
 

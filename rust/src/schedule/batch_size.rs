@@ -60,9 +60,16 @@ impl GnsController {
         Self { schedule, last: 1 }
     }
 
-    /// Controller whose hysteresis starts at `start` (mid-run forking).
+    /// Controller whose hysteresis starts at `start` (mid-run forking,
+    /// checkpoint resume).
     pub fn with_start(schedule: BatchSizeSchedule, start: usize) -> Self {
         Self { schedule, last: start.max(1) }
+    }
+
+    /// Current hysteresis anchor (the last decision), for checkpointing;
+    /// [`Self::with_start`] restores it.
+    pub fn last(&self) -> usize {
+        self.last
     }
 
     pub fn decide(&mut self, tokens: u64, gns: Option<f64>, microbatch_examples: usize) -> usize {

@@ -28,6 +28,53 @@ impl CsvLogger {
         Ok(Self { out, n_cols: header.len() })
     }
 
+    /// Append to an existing series (checkpoint resume): rows logged
+    /// before the interruption are kept and the header is written only
+    /// when the file does not exist yet or is empty.
+    pub fn append_to_file(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let fresh = std::fs::metadata(path.as_ref()).map(|m| m.len() == 0).unwrap_or(true);
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        let mut out: Box<dyn Write> = Box::new(BufWriter::new(file));
+        if fresh {
+            writeln!(out, "{}", header.join(","))?;
+        }
+        Ok(Self { out, n_cols: header.len() })
+    }
+
+    /// [`Self::append_to_file`] for resuming from a checkpoint that may
+    /// predate the interruption point: rows whose first column (the step)
+    /// exceeds `max_first_col` are dropped first, so steps the resumed
+    /// run will re-execute are not logged twice.
+    pub fn resume_file(
+        path: impl AsRef<Path>,
+        header: &[&str],
+        max_first_col: f64,
+    ) -> Result<Self> {
+        let path = path.as_ref();
+        if path.exists() && std::fs::metadata(path)?.len() > 0 {
+            let text = std::fs::read_to_string(path)?;
+            let mut kept = String::with_capacity(text.len());
+            for (i, line) in text.lines().enumerate() {
+                let keep = i == 0
+                    || line.trim().is_empty()
+                    || line
+                        .split(',')
+                        .next()
+                        .and_then(|tok| tok.parse::<f64>().ok())
+                        .is_none_or(|step| step <= max_first_col);
+                if keep {
+                    kept.push_str(line);
+                    kept.push('\n');
+                }
+            }
+            std::fs::write(path, kept)?;
+        }
+        Self::append_to_file(path, header)
+    }
+
     pub fn row(&mut self, values: &[f64]) -> Result<()> {
         ensure!(
             values.len() == self.n_cols,
@@ -119,6 +166,54 @@ mod tests {
         assert!((cols[1][1] + 1e-9).abs() < 1e-18);
         assert_eq!(column(&hdr, &cols, "b").unwrap().len(), 2);
         assert!(column(&hdr, &cols, "zz").is_err());
+    }
+
+    #[test]
+    fn append_keeps_existing_rows_and_skips_header() {
+        let dir = std::env::temp_dir().join("nanogns_test_telemetry3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume.csv");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut log = CsvLogger::append_to_file(&path, &["a", "b"]).unwrap();
+            log.row(&[1.0, 2.0]).unwrap();
+            log.flush().unwrap();
+        }
+        {
+            let mut log = CsvLogger::append_to_file(&path, &["a", "b"]).unwrap();
+            log.row(&[3.0, 4.0]).unwrap();
+            log.flush().unwrap();
+        }
+        let (hdr, cols) = read_csv(&path).unwrap();
+        assert_eq!(hdr, vec!["a", "b"]);
+        assert_eq!(cols[0], vec![1.0, 3.0]);
+        assert_eq!(cols[1], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn resume_drops_rows_past_the_checkpoint() {
+        let dir = std::env::temp_dir().join("nanogns_test_telemetry4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dup.csv");
+        std::fs::remove_file(&path).ok();
+        {
+            // interrupted run: logged through step 5, checkpoint at step 3
+            let mut log = CsvLogger::to_file(&path, &["step", "x"]).unwrap();
+            for s in 1..=5 {
+                log.row(&[s as f64, 10.0 * s as f64]).unwrap();
+            }
+            log.flush().unwrap();
+        }
+        {
+            let mut log = CsvLogger::resume_file(&path, &["step", "x"], 3.0).unwrap();
+            for s in 4..=6 {
+                log.row(&[s as f64, 10.0 * s as f64]).unwrap();
+            }
+            log.flush().unwrap();
+        }
+        let (_, cols) = read_csv(&path).unwrap();
+        assert_eq!(cols[0], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(cols[1][3], 40.0);
     }
 
     #[test]

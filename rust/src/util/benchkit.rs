@@ -190,6 +190,117 @@ impl BenchJson {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bench-report comparison (the CI bench-regression gate)
+// ---------------------------------------------------------------------------
+
+/// One entry's baseline-vs-current median comparison (informational: raw
+/// medians are machine-dependent, so they never gate).
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// `(current - baseline) / baseline`, in percent (positive = slower).
+    pub delta_pct: f64,
+}
+
+/// One group's fused-path gate verdict. The gated metric is the
+/// *within-run* speedup `per_example_median / fused_median`: both runs
+/// measure it on their own machine, so the ratio-of-ratios comparison is
+/// portable across CI hardware, unlike absolute nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchGate {
+    pub group: String,
+    pub baseline_speedup: f64,
+    pub current_speedup: f64,
+    /// Relative speedup loss in percent (positive = fused path regressed).
+    pub regress_pct: f64,
+    pub pass: bool,
+}
+
+/// Full outcome of comparing two `BENCH_*.json` reports.
+#[derive(Debug, Clone)]
+pub struct BenchCompare {
+    pub deltas: Vec<BenchDelta>,
+    pub gates: Vec<BenchGate>,
+}
+
+impl BenchCompare {
+    pub fn all_pass(&self) -> bool {
+        self.gates.iter().all(|g| g.pass)
+    }
+}
+
+const FUSED_ENTRY: &str = "grad_microbatch";
+const ORACLE_ENTRY: &str = "grad_microbatch_per_example";
+
+fn median_of(report: &Value, name: &str) -> Option<f64> {
+    let m = report.opt(name)?.opt("median_ns")?.as_f64().ok()?;
+    (m.is_finite() && m > 0.0).then_some(m)
+}
+
+/// Compare two bench reports: per-entry median deltas for every name
+/// present in both, plus the fused-path speedup gate per `step_*` group
+/// carrying both the fused and per-example entries in the baseline.
+/// A gate fails when the current speedup falls more than
+/// `max_regress_pct` percent below the baseline speedup. Every gateable
+/// baseline group **must** be present in the current report — a missing
+/// group is an error, not a silent pass, so a bench that crashes or
+/// renames entries cannot quietly weaken the gate.
+pub fn compare_bench_reports(
+    baseline: &Value,
+    current: &Value,
+    max_regress_pct: f64,
+) -> anyhow::Result<BenchCompare> {
+    let base_obj = baseline.as_obj()?;
+    let mut deltas = Vec::new();
+    let mut gates = Vec::new();
+    let mut missing: Vec<String> = Vec::new();
+    for (name, entry) in base_obj {
+        let Ok(b) = entry.get("median_ns").and_then(|v| v.as_f64()) else { continue };
+        if !(b.is_finite() && b > 0.0) {
+            continue;
+        }
+        if let Some(c) = median_of(current, name) {
+            deltas.push(BenchDelta {
+                name: name.clone(),
+                baseline_ns: b,
+                current_ns: c,
+                delta_pct: 100.0 * (c - b) / b,
+            });
+        }
+        // Gate accounting: driven by the *baseline's* fused/oracle pairs.
+        let Some(group) = name.strip_suffix(&format!("/{FUSED_ENTRY}")) else { continue };
+        let oracle = format!("{group}/{ORACLE_ENTRY}");
+        let Some(bo) = median_of(baseline, &oracle) else { continue };
+        let (Some(c), Some(co)) = (median_of(current, name), median_of(current, &oracle)) else {
+            missing.push(group.to_string());
+            continue;
+        };
+        let baseline_speedup = bo / b;
+        let current_speedup = co / c;
+        let regress_pct = 100.0 * (baseline_speedup - current_speedup) / baseline_speedup;
+        gates.push(BenchGate {
+            group: group.to_string(),
+            baseline_speedup,
+            current_speedup,
+            regress_pct,
+            pass: regress_pct <= max_regress_pct,
+        });
+    }
+    anyhow::ensure!(
+        missing.is_empty(),
+        "current report is missing gated groups {missing:?}: the bench dropped or renamed \
+         {FUSED_ENTRY}/{ORACLE_ENTRY} entries the baseline gates on"
+    );
+    anyhow::ensure!(
+        !gates.is_empty(),
+        "no gateable groups: baseline has no {FUSED_ENTRY}/{ORACLE_ENTRY} pairs"
+    );
+    Ok(BenchCompare { deltas, gates })
+}
+
 /// Nearest ancestor of `CARGO_MANIFEST_DIR` whose Cargo.toml declares
 /// `[workspace]` (the workspace root — anchoring on the declaration
 /// avoids over-climbing into an unrelated outer Rust project); falls
@@ -259,6 +370,107 @@ mod tests {
         assert!(s.median_ns.is_finite() && s.median_ns > 0.0);
         assert!(s.min_ns <= s.median_ns);
         assert_eq!(s.samples, 4);
+    }
+
+    fn report(entries: &[(&str, f64)]) -> Value {
+        let mut j = BenchJson::new();
+        for (name, median) in entries {
+            let stats = Stats {
+                name: name.to_string(),
+                mean_ns: *median,
+                std_ns: 0.0,
+                median_ns: *median,
+                min_ns: *median,
+                iters: 1,
+                samples: 3,
+            };
+            j.record(name, &stats, None);
+        }
+        j.to_value()
+    }
+
+    #[test]
+    fn compare_passes_when_speedup_holds() {
+        // baseline: 4x speedup; current: 3.8x on a machine 2x slower —
+        // absolute medians regress, the portable ratio barely moves.
+        let base = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let cur = report(&[
+            ("step_small/grad_microbatch", 2_000.0),
+            ("step_small/grad_microbatch_per_example", 7_600.0),
+        ]);
+        let out = compare_bench_reports(&base, &cur, 15.0).unwrap();
+        assert!(out.all_pass(), "{:?}", out.gates);
+        assert_eq!(out.gates.len(), 1);
+        let g = &out.gates[0];
+        assert_eq!(g.group, "step_small");
+        assert!((g.baseline_speedup - 4.0).abs() < 1e-9);
+        assert!((g.current_speedup - 3.8).abs() < 1e-9);
+        assert!((g.regress_pct - 5.0).abs() < 1e-9);
+        // the informational deltas still show the absolute 2x slowdown
+        let d = out.deltas.iter().find(|d| d.name.ends_with(FUSED_ENTRY)).unwrap();
+        assert!((d.delta_pct - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_fails_on_fused_path_regression() {
+        // fused path got 2x slower relative to the oracle: 4x -> 2x
+        let base = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let cur = report(&[
+            ("step_small/grad_microbatch", 2_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let out = compare_bench_reports(&base, &cur, 15.0).unwrap();
+        assert!(!out.all_pass());
+        assert!((out.gates[0].regress_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_rejects_reports_with_no_gateable_pairs() {
+        let base = report(&[("step_small/eval_step", 500.0)]);
+        let cur = report(&[("step_small/eval_step", 510.0)]);
+        assert!(compare_bench_reports(&base, &cur, 15.0).is_err());
+    }
+
+    #[test]
+    fn compare_rejects_current_missing_a_gated_group() {
+        // a bench that drops entries the baseline gates on must fail the
+        // gate loudly, not silently narrow its coverage
+        let base = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+            ("step_gone/grad_microbatch", 1_000.0),
+            ("step_gone/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let cur = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let err = compare_bench_reports(&base, &cur, 15.0).unwrap_err();
+        assert!(format!("{err}").contains("step_gone"), "{err}");
+    }
+
+    #[test]
+    fn compare_ignores_extra_current_entries() {
+        // new bench entries (e.g. parallel_rank_step_*) without baseline
+        // counterparts are informational, never gated
+        let base = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let cur = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+            ("step_small/parallel_rank_step_w4", 2_000.0),
+        ]);
+        let out = compare_bench_reports(&base, &cur, 15.0).unwrap();
+        assert_eq!(out.gates.len(), 1);
+        assert!(out.all_pass());
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Rank-parallel + checkpoint/resume integration tests (hermetic).
+//!
+//! These enforce PR 5's two contracts end-to-end:
+//! * the rank-parallel engine is **bitwise identical** to sequential
+//!   execution for any worker count (the CI determinism matrix re-runs
+//!   this suite across `NANOGNS_THREADS` × `NANOGNS_RANK_WORKERS`);
+//! * a run checkpointed at step k and resumed in a fresh `Trainer`
+//!   reproduces the uninterrupted trajectory exactly, and corrupted
+//!   checkpoints are rejected instead of silently mis-restoring.
+
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::trainer::StepRecord;
+use nanogns::coordinator::{checkpoint, Trainer};
+use nanogns::runtime::{BackendFactory, ReferenceFactory};
+use nanogns::schedule::{BatchSizeSchedule, LrSchedule};
+use nanogns::N_TYPES;
+
+/// A config that exercises every piece of resumable state: multiple
+/// ranks (loader cursors), a ramping schedule (controller hysteresis),
+/// and EMA smoothing (tracker state).
+fn multi_rank_cfg(steps: u64, ranks: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::quickstart("nano", steps);
+    cfg.ranks = ranks;
+    cfg.lr = LrSchedule { max_lr: 3e-3, min_lr: 3e-4, warmup_steps: 2, decay_steps: steps };
+    let tpa = {
+        let e = ReferenceFactory.describe("nano").unwrap();
+        (e.microbatch * e.seq_len) as u64
+    };
+    cfg.batch_size = BatchSizeSchedule::Linear {
+        min_accum: 1,
+        max_accum: 3,
+        ramp_tokens: steps * tpa,
+    };
+    cfg
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Bitwise record equality, `step_ms` excluded (wall clock).
+fn assert_records_eq(a: &StepRecord, b: &StepRecord, ctx: &str) {
+    assert_eq!(a.step, b.step, "{ctx}: step");
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.accum, b.accum, "{ctx}: accum");
+    assert_eq!(bits(a.loss), bits(b.loss), "{ctx}: loss {} vs {}", a.loss, b.loss);
+    assert_eq!(bits(a.lr), bits(b.lr), "{ctx}: lr");
+    assert_eq!(bits(a.b_big), bits(b.b_big), "{ctx}: b_big");
+    for t in 0..N_TYPES {
+        assert_eq!(bits(a.raw_g_sq[t]), bits(b.raw_g_sq[t]), "{ctx}: raw_g_sq[{t}]");
+        assert_eq!(bits(a.raw_s[t]), bits(b.raw_s[t]), "{ctx}: raw_s[{t}]");
+    }
+    assert_eq!(bits(a.raw_g_sq_total), bits(b.raw_g_sq_total), "{ctx}: raw_g_sq_total");
+    assert_eq!(bits(a.raw_s_total), bits(b.raw_s_total), "{ctx}: raw_s_total");
+    assert_eq!(bits(a.gns_layernorm), bits(b.gns_layernorm), "{ctx}: gns_layernorm");
+    assert_eq!(bits(a.gns_total), bits(b.gns_total), "{ctx}: gns_total");
+}
+
+fn run_steps(tr: &mut Trainer, n: usize) -> Vec<StepRecord> {
+    (0..n).map(|_| tr.step().unwrap()).collect()
+}
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nanogns_pr5_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The tentpole property: the whole training trajectory — loss, GNS
+/// components, schedule decisions — is bitwise identical for any
+/// rank-worker count, odd and even rank counts alike.
+#[test]
+fn trainer_trajectory_is_bitwise_invariant_to_rank_workers() {
+    for ranks in [3usize, 4] {
+        let mut reference: Option<Vec<StepRecord>> = None;
+        for workers in [1usize, 2, ranks] {
+            let cfg = multi_rank_cfg(4, ranks);
+            let mut tr = Trainer::with_rank_workers(&ReferenceFactory, cfg, workers).unwrap();
+            let records = run_steps(&mut tr, 4);
+            match &reference {
+                None => reference = Some(records),
+                Some(want) => {
+                    for (a, b) in records.iter().zip(want) {
+                        let ctx = format!("ranks={ranks} workers={workers} step={}", b.step);
+                        assert_records_eq(a, b, &ctx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The env-default engine (whatever `NANOGNS_RANK_WORKERS` the CI matrix
+/// sets) must agree with explicit single-worker execution.
+#[test]
+fn default_worker_engine_matches_explicit_single_worker() {
+    let mut seq = Trainer::with_rank_workers(&ReferenceFactory, multi_rank_cfg(3, 4), 1).unwrap();
+    let mut env = Trainer::new(&ReferenceFactory, multi_rank_cfg(3, 4)).unwrap();
+    let a = run_steps(&mut seq, 3);
+    let b = run_steps(&mut env, 3);
+    for (x, y) in a.iter().zip(&b) {
+        assert_records_eq(x, y, &format!("env-default workers={}", env.rank_workers()));
+    }
+}
+
+/// Train k steps, checkpoint, resume in a fresh Trainer: the next M
+/// records must be bitwise equal to the uninterrupted run's.
+#[test]
+fn checkpoint_resume_reproduces_trajectory_bitwise() {
+    let dir = temp_dir("resume");
+    let path = dir.join("mid.ckpt");
+
+    let mut full = Trainer::new(&ReferenceFactory, multi_rank_cfg(7, 2)).unwrap();
+    let all = run_steps(&mut full, 7);
+
+    let mut head = Trainer::new(&ReferenceFactory, multi_rank_cfg(7, 2)).unwrap();
+    let head_records = run_steps(&mut head, 4);
+    for (a, b) in head_records.iter().zip(&all) {
+        assert_records_eq(a, b, "pre-checkpoint divergence (test bug)");
+    }
+    head.save_checkpoint(&path).unwrap();
+    drop(head);
+
+    let mut resumed = Trainer::resume(&ReferenceFactory, multi_rank_cfg(7, 2), &path).unwrap();
+    assert_eq!(resumed.runner.step, 4);
+    let tail = run_steps(&mut resumed, 3);
+    for (a, b) in tail.iter().zip(&all[4..]) {
+        assert_records_eq(a, b, &format!("resumed step {}", b.step));
+    }
+}
+
+/// `run()` with checkpointing enabled writes periodic checkpoints plus
+/// `latest.ckpt`, and a resumed `run()` finishes exactly the remaining
+/// step budget with the uninterrupted trajectory.
+#[test]
+fn run_writes_checkpoints_and_resumes_remaining_budget() {
+    let dir = temp_dir("run_ckpt");
+    let mut cfg = multi_rank_cfg(6, 2);
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 2;
+
+    let mut full = Trainer::new(&ReferenceFactory, cfg.clone()).unwrap();
+    let out = full.run().unwrap();
+    assert_eq!(out.records.len(), 6);
+    for step in [2u64, 4, 6] {
+        assert!(dir.join(format!("step-{step:08}.ckpt")).exists(), "missing step {step}");
+    }
+    assert!(dir.join("latest.ckpt").exists());
+
+    let ckpt = dir.join("step-00000004.ckpt");
+    let mut resumed = Trainer::resume(&ReferenceFactory, cfg, &ckpt).unwrap();
+    let tail = resumed.run().unwrap();
+    assert_eq!(tail.records.len(), 2, "resume must run only the remaining steps");
+    for (a, b) in tail.records.iter().zip(&out.records[4..]) {
+        assert_records_eq(a, b, &format!("resumed run() step {}", b.step));
+    }
+    assert_eq!(resumed.tokens(), full.tokens());
+}
+
+/// Corrupted or mismatched checkpoints must be rejected with an error,
+/// never silently mis-restored.
+#[test]
+fn corrupted_checkpoints_are_rejected() {
+    let dir = temp_dir("corrupt");
+    let good = dir.join("good.ckpt");
+    let mut tr = Trainer::new(&ReferenceFactory, multi_rank_cfg(4, 2)).unwrap();
+    run_steps(&mut tr, 2);
+    tr.save_checkpoint(&good).unwrap();
+    let entry = ReferenceFactory.describe("nano").unwrap();
+    let blob = std::fs::read(&good).unwrap();
+
+    // truncated payload
+    let truncated = dir.join("truncated.ckpt");
+    std::fs::write(&truncated, &blob[..blob.len() - 64]).unwrap();
+    let err = checkpoint::load_state(&truncated, &entry).unwrap_err();
+    assert!(format!("{err}").contains("truncated"), "{err}");
+
+    // bad magic
+    let bad_magic = dir.join("bad_magic.ckpt");
+    let mut b = blob.clone();
+    b[0] ^= 0xff;
+    std::fs::write(&bad_magic, &b).unwrap();
+    assert!(checkpoint::load_state(&bad_magic, &entry).is_err());
+
+    // garbage header bytes
+    let bad_header = dir.join("bad_header.ckpt");
+    let mut b = blob.clone();
+    for byte in b.iter_mut().skip(12).take(16) {
+        *byte = 0xfe;
+    }
+    std::fs::write(&bad_header, &b).unwrap();
+    assert!(checkpoint::load_state(&bad_header, &entry).is_err());
+
+    // trailing junk after the payload
+    let trailing = dir.join("trailing.ckpt");
+    let mut b = blob.clone();
+    b.extend_from_slice(&[0u8; 8]);
+    std::fs::write(&trailing, &b).unwrap();
+    let err = checkpoint::load_state(&trailing, &entry).unwrap_err();
+    assert!(format!("{err}").contains("trailing"), "{err}");
+
+    // a v1 (params-only) file is not a resumable checkpoint
+    let v1 = dir.join("params_only.ckpt");
+    checkpoint::save(&v1, &tr.runner.entry, &tr.runner.params).unwrap();
+    let err = checkpoint::load_state(&v1, &entry).unwrap_err();
+    assert!(format!("{err}").contains("v1"), "{err}");
+
+    // model mismatch: a nano checkpoint cannot resume a micro config
+    let mut cfg = multi_rank_cfg(4, 2);
+    cfg.model = "micro".into();
+    assert!(Trainer::resume(&ReferenceFactory, cfg, &good).is_err());
+
+    // rank-count mismatch: 3-rank config vs 2-rank checkpoint
+    let cfg3 = multi_rank_cfg(4, 3);
+    assert!(Trainer::resume(&ReferenceFactory, cfg3, &good).is_err());
+
+    // seed mismatch: a different corpus/loader stream must be rejected,
+    // not silently forked
+    let mut cfg_seed = multi_rank_cfg(4, 2);
+    cfg_seed.seed += 1;
+    let err = Trainer::resume(&ReferenceFactory, cfg_seed, &good).unwrap_err();
+    assert!(format!("{err}").contains("seed"), "{err}");
+
+    // the intact file still loads
+    assert!(checkpoint::load_state(&good, &entry).is_ok());
+}
+
+/// A full-state checkpoint round-trips every scalar exactly (spot-check
+/// via the public load path on a trainer that has NaN-free state).
+#[test]
+fn checkpoint_state_round_trip_is_exact() {
+    let dir = temp_dir("exact");
+    let path = dir.join("state.ckpt");
+    let mut tr = Trainer::new(&ReferenceFactory, multi_rank_cfg(5, 2)).unwrap();
+    run_steps(&mut tr, 3);
+    tr.lr_scale = 1.25;
+    tr.save_checkpoint(&path).unwrap();
+    let entry = ReferenceFactory.describe("nano").unwrap();
+    let st = checkpoint::load_state(&path, &entry).unwrap();
+    assert_eq!(st.model, "nano");
+    assert_eq!(st.seed, tr.cfg.seed);
+    assert_eq!(st.corpus_bytes, tr.cfg.corpus_bytes as u64);
+    assert_eq!(st.step, 3);
+    assert_eq!(st.tokens, tr.tokens());
+    assert_eq!(st.lr_scale.to_bits(), 1.25f64.to_bits());
+    assert_eq!(st.loaders.len(), 2);
+    assert_eq!(st.tracker, tr.tracker.export_state());
+    let (m, _v) = tr.runner.moments();
+    for (a, b) in st.params.iter().zip(&tr.runner.params) {
+        assert_eq!(a.to_tensor().unwrap(), b.to_tensor().unwrap());
+    }
+    for (a, b) in st.m.iter().zip(m) {
+        assert_eq!(a.to_tensor().unwrap(), b.to_tensor().unwrap());
+    }
+}

@@ -1,7 +1,7 @@
 //! Trainer-level integration tests on the reference backend (hermetic).
 
 use nanogns::config::TrainConfig;
-use nanogns::coordinator::{ddp, ModelRunner, Trainer};
+use nanogns::coordinator::{ddp, ModelRunner, ParallelExecutor, Trainer};
 use nanogns::data::{CorpusGenerator, Loader};
 use nanogns::runtime::{BackendFactory, ReferenceFactory};
 use nanogns::schedule::{BatchSizeSchedule, LrSchedule};
@@ -97,6 +97,7 @@ fn ddp_estimator_agrees_with_per_example_in_scale() {
     let mut runner = ModelRunner::new(&factory, "nano").unwrap();
     runner.init(9).unwrap();
     let entry = runner.entry.clone();
+    let engine = ParallelExecutor::new(&factory, "nano", 4).unwrap();
     let text = CorpusGenerator::new(9).generate(1 << 16);
     let base = Loader::new(&text, entry.seq_len, 9);
     let mut loaders: Vec<Loader> = (0..4u64).map(|r| base.for_rank(r)).collect();
@@ -107,7 +108,9 @@ fn ddp_estimator_agrees_with_per_example_in_scale() {
     let accum = 2usize;
     for _ in 0..n {
         let mut acc = nanogns::gns::GnsAccumulator::new(nanogns::N_TYPES, entry.microbatch);
-        let obs = ddp::ddp_step_with_stats(&runner, &mut loaders, accum, &mut acc).unwrap();
+        let obs =
+            ddp::ddp_step_with_stats(&engine, &runner.params, &mut loaders, accum, &mut acc)
+                .unwrap();
         ddp_g += obs.total.g_sq / n as f64;
         // per-example estimator on the same gradients
         let sums = runner.grad_sqnorms(&obs.mean_grads).unwrap();
