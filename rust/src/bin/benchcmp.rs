@@ -5,16 +5,20 @@
 //! committed baseline (`bench/baseline.json`) and fails when the fused
 //! path regressed.
 //!
-//! The gated metric is the *within-run* speedup of the fused batched
-//! `grad_microbatch` over the retained per-example oracle: absolute
-//! nanoseconds differ wildly across CI machines, but the fused/oracle
-//! ratio measures the same kernels on the same hardware in the same run,
-//! so it transfers. Raw median deltas are printed for information only.
+//! The primary gated metric is the *within-run* speedup of the fused
+//! batched `grad_microbatch` over the retained per-example oracle:
+//! absolute nanoseconds differ wildly across CI machines, but the
+//! fused/oracle ratio measures the same kernels on the same hardware in
+//! the same run, so it transfers. When the baseline was recorded on the
+//! CI hardware pool itself (`_meta.recorded = true`, stamped by the
+//! record-baseline workflow), `kernel_*` microbench medians are
+//! additionally gated on absolute time under `--max-abs-regress-pct`.
+//! Raw median deltas are printed for information only.
 //!
 //! ```sh
 //! cargo run --release --bin benchcmp -- \
 //!   --baseline bench/baseline.json --current BENCH_train_step.json \
-//!   --max-regress-pct 15
+//!   --max-regress-pct 15 --max-abs-regress-pct 50
 //! ```
 //!
 //! Exit code 0 = all gates pass, 1 = regression, 2 = usage/IO error.
@@ -27,7 +31,7 @@ benchcmp — compare BENCH_*.json reports and gate fused-path regressions
 
 USAGE:
   benchcmp --baseline bench/baseline.json --current BENCH_train_step.json
-           [--max-regress-pct 15]
+           [--max-regress-pct 15] [--max-abs-regress-pct 50]
 ";
 
 fn run() -> Result<BenchCompare, String> {
@@ -35,6 +39,7 @@ fn run() -> Result<BenchCompare, String> {
     let mut baseline_path = None;
     let mut current_path = None;
     let mut max_regress_pct = 15.0f64;
+    let mut max_abs_regress_pct = 50.0f64;
     let mut i = 0;
     while i < args.len() {
         let key = args[i].clone();
@@ -47,6 +52,11 @@ fn run() -> Result<BenchCompare, String> {
                 max_regress_pct = need(val)?
                     .parse()
                     .map_err(|e| format!("--max-regress-pct: {e}\n{USAGE}"))?
+            }
+            "--max-abs-regress-pct" => {
+                max_abs_regress_pct = need(val)?
+                    .parse()
+                    .map_err(|e| format!("--max-abs-regress-pct: {e}\n{USAGE}"))?
             }
             "--help" | "-h" => return Err(USAGE.to_string()),
             other => return Err(format!("unknown flag {other:?}\n{USAGE}")),
@@ -64,7 +74,7 @@ fn run() -> Result<BenchCompare, String> {
     let baseline = read(&baseline_path)?;
     let current = read(&current_path)?;
 
-    let out = compare_bench_reports(&baseline, &current, max_regress_pct)
+    let out = compare_bench_reports(&baseline, &current, max_regress_pct, max_abs_regress_pct)
         .map_err(|e| format!("{e}"))?;
 
     println!("benchcmp: {baseline_path} vs {current_path}");
@@ -90,6 +100,28 @@ fn run() -> Result<BenchCompare, String> {
             g.regress_pct
         );
     }
+    println!();
+    if out.baseline_recorded {
+        println!("absolute kernel gates (recorded baseline, {max_abs_regress_pct}% budget):");
+        for g in &out.abs_gates {
+            println!(
+                "  {} {:<44} {} -> {} ({:+.1}%)",
+                if g.pass { "PASS" } else { "FAIL" },
+                g.name,
+                fmt_ns(g.baseline_ns),
+                fmt_ns(g.current_ns),
+                g.regress_pct
+            );
+        }
+        if out.abs_gates.is_empty() {
+            println!("  (baseline has no kernel_* entries)");
+        }
+    } else {
+        println!(
+            "absolute kernel gates: skipped (baseline not stamped _meta.recorded; \
+             run the record-baseline workflow to arm them)"
+        );
+    }
     Ok(out)
 }
 
@@ -97,7 +129,7 @@ fn main() {
     match run() {
         Ok(out) if out.all_pass() => {}
         Ok(_) => {
-            eprintln!("benchcmp: fused path regressed beyond the budget");
+            eprintln!("benchcmp: a perf gate failed (fused-path ratio or absolute kernel median)");
             std::process::exit(1);
         }
         Err(msg) => {

@@ -39,6 +39,12 @@ pub struct TrainConfig {
     pub checkpoint_every: u64,
     /// Resume from this full-state checkpoint file ("" = fresh run).
     pub resume: String,
+    /// Intra-op kernel worker threads (0 = derive from `NANOGNS_THREADS`
+    /// or the machine's available parallelism).
+    pub threads: usize,
+    /// Pin every kernel to the scalar oracle tier (`NANOGNS_FORCE_SCALAR`),
+    /// e.g. to cross-check a SIMD result on the same machine.
+    pub force_scalar: bool,
 }
 
 impl TrainConfig {
@@ -94,6 +100,14 @@ impl TrainConfig {
                 Some(r) => r.as_str()?.to_string(),
                 None => String::new(),
             },
+            threads: match v.opt("threads") {
+                Some(t) => t.as_usize()?,
+                None => 0,
+            },
+            force_scalar: match v.opt("force_scalar") {
+                Some(f) => f.as_bool()?,
+                None => false,
+            },
         })
     }
 
@@ -114,6 +128,8 @@ impl TrainConfig {
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             resume: String::new(),
+            threads: 0,
+            force_scalar: false,
         }
     }
 }
@@ -161,13 +177,17 @@ mod tests {
             "lr": {"max_lr": 6e-4, "min_lr": 6e-5, "warmup_steps": 10, "decay_steps": 90},
             "batch_size": {"kind": "linear", "min_accum": 1, "max_accum": 8, "ramp_tokens": 100000},
             "gns_alpha": 0.02,
-            "metrics_path": "results/run.csv"
+            "metrics_path": "results/run.csv",
+            "threads": 4,
+            "force_scalar": true
         }"#;
         let cfg = TrainConfig::from_json_text(text).unwrap();
         assert_eq!(cfg.model, "small");
         assert_eq!(cfg.ranks, 2);
         assert!((cfg.gns_alpha - 0.02).abs() < 1e-12);
         assert!(matches!(cfg.batch_size, BatchSizeSchedule::Linear { max_accum: 8, .. }));
+        assert_eq!(cfg.threads, 4);
+        assert!(cfg.force_scalar);
     }
 
     #[test]
@@ -181,6 +201,8 @@ mod tests {
         assert_eq!(cfg.ranks, 1);
         assert_eq!(cfg.corpus_bytes, 1 << 20);
         assert_eq!(cfg.metrics_path, "");
+        assert_eq!(cfg.threads, 0);
+        assert!(!cfg.force_scalar);
     }
 
     #[test]

@@ -40,6 +40,8 @@ fn base_cfg(model: &str, steps: u64, seed: u64) -> TrainConfig {
         checkpoint_dir: String::new(),
         checkpoint_every: 0,
         resume: String::new(),
+        threads: 0,
+        force_scalar: false,
     }
 }
 

@@ -41,7 +41,9 @@ CHECKPOINT/RESUME:
                          remaining --steps budget
 
 Data-parallel ranks run concurrently; NANOGNS_RANK_WORKERS caps the rank worker
-threads (results are bitwise identical for any setting).
+threads (results are bitwise identical for any setting). NANOGNS_THREADS sizes
+the per-backend kernel worker pool; NANOGNS_FORCE_SCALAR=1 pins every kernel to
+the scalar oracle tier (config keys `threads` / `force_scalar` do the same).
 
 FIGURES: 2..16 map to the paper's figures (8 = `cargo bench --features pjrt --bench ln_kernel`;
 11..13 need the pjrt backend), tables 1..2.
@@ -165,6 +167,15 @@ fn main() -> Result<()> {
             }
             if let Some(r) = args.get("resume") {
                 cfg.resume = r.to_string();
+            }
+            // Kernel knobs must be exported before the first backend is
+            // built: the worker-pool size and SIMD tier are read once,
+            // lazily, on first use. Explicit env vars still win.
+            if cfg.threads > 0 && std::env::var("NANOGNS_THREADS").is_err() {
+                std::env::set_var("NANOGNS_THREADS", cfg.threads.to_string());
+            }
+            if cfg.force_scalar && std::env::var("NANOGNS_FORCE_SCALAR").is_err() {
+                std::env::set_var("NANOGNS_FORCE_SCALAR", "1");
             }
             let resume = cfg.resume.clone();
             println!(

@@ -17,15 +17,16 @@
 //! gradient contracts are reread for the norms, so the norms ride along
 //! with the backward at near-zero extra cost.
 
-use super::matmul::dot;
-use super::threads::par_row_blocks;
+use super::simd;
+use super::threads::{par_row_blocks, WorkerPool};
 
 /// Per-example squared weight-gradient norms via the Gram contraction.
 /// `x: [bsz·t, k]`, `delta: [bsz·t, n]`; writes `||x_b^T δ_b||²` into
 /// `out[b]`. Threaded over examples; cross terms accumulate in f64 and in
-/// fixed `(t, t')` order, so results are worker-count invariant.
+/// fixed `(t, t')` order, so results are worker-count invariant. Dot
+/// products dispatch through the SIMD tier (see `simd`).
 pub fn weight_sqnorms(
-    workers: usize,
+    pool: &WorkerPool,
     x: &[f32],
     delta: &[f32],
     bsz: usize,
@@ -35,7 +36,8 @@ pub fn weight_sqnorms(
     out: &mut [f64],
 ) {
     assert!(x.len() >= bsz * t * k && delta.len() >= bsz * t * n && out.len() >= bsz);
-    par_row_blocks(workers, bsz, 1, out, |b0, b1, ob| {
+    let tier = simd::tier();
+    par_row_blocks(pool, bsz, 1, out, |b0, b1, ob| {
         for b in b0..b1 {
             let xb = &x[b * t * k..(b + 1) * t * k];
             let db = &delta[b * t * n..(b + 1) * t * n];
@@ -43,11 +45,11 @@ pub fn weight_sqnorms(
             for ti in 0..t {
                 let xi = &xb[ti * k..(ti + 1) * k];
                 let di = &db[ti * n..(ti + 1) * n];
-                s += dot(xi, xi) as f64 * dot(di, di) as f64;
+                s += simd::dot_tier(tier, xi, xi) as f64 * simd::dot_tier(tier, di, di) as f64;
                 for tj in ti + 1..t {
-                    let gx = dot(xi, &xb[tj * k..(tj + 1) * k]);
+                    let gx = simd::dot_tier(tier, xi, &xb[tj * k..(tj + 1) * k]);
                     if gx != 0.0 {
-                        let gd = dot(di, &db[tj * n..(tj + 1) * n]);
+                        let gd = simd::dot_tier(tier, di, &db[tj * n..(tj + 1) * n]);
                         s += 2.0 * gx as f64 * gd as f64;
                     }
                 }
@@ -60,8 +62,12 @@ pub fn weight_sqnorms(
 /// Per-example bias gradients and their squared norms. Example `b`'s bias
 /// gradient is the column sum of its delta rows; this accumulates the
 /// *batch* bias gradient into `db` (fixed example order — deterministic)
-/// and writes `||δ_b column-sum||²` into `out[b]`. `scratch` needs `n`
-/// elements. Serial: the whole pass is `O(bsz·t·n)` adds.
+/// and, when `out` is `Some`, writes `||δ_b column-sum||²` into `out[b]`.
+/// Passing `None` skips only the norm emission — the `db` accumulation
+/// order is unchanged, so gradients stay bitwise identical (this is the
+/// norms-off backward used to measure the paper's overhead claim).
+/// `scratch` needs `n` elements. Serial: the whole pass is `O(bsz·t·n)`
+/// adds.
 pub fn bias_sqnorms_acc(
     delta: &[f32],
     bsz: usize,
@@ -69,10 +75,12 @@ pub fn bias_sqnorms_acc(
     n: usize,
     db: &mut [f32],
     scratch: &mut [f32],
-    out: &mut [f64],
+    mut out: Option<&mut [f64]>,
 ) {
     assert!(delta.len() >= bsz * t * n && db.len() >= n && scratch.len() >= n);
-    assert!(out.len() >= bsz);
+    if let Some(o) = out.as_deref() {
+        assert!(o.len() >= bsz);
+    }
     for b in 0..bsz {
         let rows = &delta[b * t * n..(b + 1) * t * n];
         let acc = &mut scratch[..n];
@@ -83,12 +91,18 @@ pub fn bias_sqnorms_acc(
                 acc[j] += r[j];
             }
         }
-        let mut sq = 0f64;
-        for j in 0..n {
-            sq += acc[j] as f64 * acc[j] as f64;
-            db[j] += acc[j];
+        if let Some(o) = out.as_deref_mut() {
+            let mut sq = 0f64;
+            for j in 0..n {
+                sq += acc[j] as f64 * acc[j] as f64;
+                db[j] += acc[j];
+            }
+            o[b] = sq;
+        } else {
+            for j in 0..n {
+                db[j] += acc[j];
+            }
         }
-        out[b] = sq;
     }
 }
 
@@ -117,11 +131,12 @@ mod tests {
     #[test]
     fn gram_matches_materialized_norms() {
         let mut rng = Rng::seed_from_u64(7);
+        let pool = WorkerPool::new(2);
         for (bsz, t, k, n) in [(1, 1, 3, 4), (2, 1, 5, 2), (3, 6, 4, 8), (4, 8, 7, 5)] {
             let x = randv(&mut rng, bsz * t * k);
             let d = randv(&mut rng, bsz * t * n);
             let mut out = vec![0f64; bsz];
-            weight_sqnorms(2, &x, &d, bsz, t, k, n, &mut out);
+            weight_sqnorms(&pool, &x, &d, bsz, t, k, n, &mut out);
             for b in 0..bsz {
                 let want = naive_weight_sqnorm(
                     &x[b * t * k..(b + 1) * t * k],
@@ -147,8 +162,8 @@ mod tests {
         let d = randv(&mut rng, bsz * t * n);
         let mut a = vec![0f64; bsz];
         let mut b = vec![0f64; bsz];
-        weight_sqnorms(1, &x, &d, bsz, t, k, n, &mut a);
-        weight_sqnorms(4, &x, &d, bsz, t, k, n, &mut b);
+        weight_sqnorms(&WorkerPool::new(1), &x, &d, bsz, t, k, n, &mut a);
+        weight_sqnorms(&WorkerPool::new(4), &x, &d, bsz, t, k, n, &mut b);
         assert_eq!(a, b);
     }
 
@@ -160,7 +175,7 @@ mod tests {
         let mut db = vec![0.5f32; n]; // pre-seeded: must accumulate
         let mut scratch = vec![0f32; n];
         let mut out = vec![0f64; bsz];
-        bias_sqnorms_acc(&d, bsz, t, n, &mut db, &mut scratch, &mut out);
+        bias_sqnorms_acc(&d, bsz, t, n, &mut db, &mut scratch, Some(&mut out));
         for b in 0..bsz {
             let mut col = vec![0f64; n];
             for ti in 0..t {
@@ -183,5 +198,20 @@ mod tests {
         for j in 0..n {
             assert!((db[j] as f64 - total[j]).abs() <= 1e-4 * total[j].abs().max(1.0));
         }
+    }
+
+    #[test]
+    fn bias_norms_off_keeps_gradients_bitwise() {
+        let mut rng = Rng::seed_from_u64(10);
+        let (bsz, t, n) = (4, 3, 9);
+        let d = randv(&mut rng, bsz * t * n);
+        let mut db_on = vec![0.25f32; n];
+        let mut db_off = vec![0.25f32; n];
+        let mut scratch = vec![0f32; n];
+        let mut out = vec![0f64; bsz];
+        bias_sqnorms_acc(&d, bsz, t, n, &mut db_on, &mut scratch, Some(&mut out));
+        bias_sqnorms_acc(&d, bsz, t, n, &mut db_off, &mut scratch, None);
+        assert_eq!(db_on, db_off, "norm emission must not perturb the gradient");
+        assert!(out.iter().all(|&v| v >= 0.0));
     }
 }

@@ -6,16 +6,21 @@
 //! partial sums the batch reduction has to form anyway, so the norms are
 //! free — this is the zero-overhead LN kernel of Gray et al. §3, in Rust.
 //!
+//! Row passes dispatch through [`super::simd`] (AVX2/FMA, NEON, or the
+//! scalar oracle under `NANOGNS_FORCE_SCALAR=1`).
+//!
 //! Thread-determinism contract: workers own disjoint example blocks
 //! (disjoint `dx` rows and per-example scratch slots); the `dγ`/`dβ`
 //! accumulation and the norm emission run on the calling thread in fixed
 //! example order after the join.
 
-use super::threads::par_row_blocks2;
+use super::simd;
+use super::threads::{par_row_blocks2, WorkerPool};
 
 /// Row-wise LayerNorm over `rows` rows of width `d`. Writes the output,
 /// the normalized activations `xhat` and the per-row reciprocal stddev
-/// `rstd` (both needed by the backward). Serial: `O(rows·d)`.
+/// `rstd` (both needed by the backward). Serial over rows, SIMD within
+/// each row: `O(rows·d)`.
 pub fn ln_fwd(
     x: &[f32],
     gamma: &[f32],
@@ -29,38 +34,39 @@ pub fn ln_fwd(
 ) {
     assert!(x.len() >= rows * d && out.len() >= rows * d && xhat.len() >= rows * d);
     assert!(rstd.len() >= rows && gamma.len() >= d && beta.len() >= d);
+    let tier = simd::tier();
     for r in 0..rows {
         let row = &x[r * d..(r + 1) * d];
-        let mut mean = 0f32;
-        for &v in row {
-            mean += v;
-        }
-        mean /= d as f32;
-        let mut var = 0f32;
-        for &v in row {
-            var += (v - mean) * (v - mean);
-        }
-        var /= d as f32;
+        let mean = simd::sum(tier, row) / d as f32;
+        let var = simd::sq_dev_sum(tier, row, mean) / d as f32;
         let rs = 1.0 / (var + eps).sqrt();
         rstd[r] = rs;
-        for j in 0..d {
-            let xh = (row[j] - mean) * rs;
-            xhat[r * d + j] = xh;
-            out[r * d + j] = gamma[j] * xh + beta[j];
-        }
+        simd::ln_fwd_row(
+            tier,
+            row,
+            &gamma[..d],
+            &beta[..d],
+            mean,
+            rs,
+            &mut xhat[r * d..(r + 1) * d],
+            &mut out[r * d..(r + 1) * d],
+        );
     }
 }
 
 /// Fused LayerNorm backward over a `[bsz, t, d]` batch.
 ///
-/// Computes `dx`, accumulates the batch `dgamma`/`dbeta`, and writes each
-/// example's `||dγ_b||² + ||dβ_b||²` into `per_ex_sq[b]` — both LN
-/// parameters carry the `layernorm` stats tag, so one slot per example
-/// covers the pair. `scratch` needs `bsz * 2d` elements (per-example
-/// `dγ_b` then `dβ_b`).
+/// Computes `dx`, accumulates the batch `dgamma`/`dbeta`, and — when
+/// `per_ex_sq` is `Some` — writes each example's `||dγ_b||² + ||dβ_b||²`
+/// into `per_ex_sq[b]`; both LN parameters carry the `layernorm` stats
+/// tag, so one slot per example covers the pair. Passing `None` skips
+/// only the norm emission: the `dγ`/`dβ` accumulation order is
+/// unchanged, keeping gradients bitwise identical (the norms-off
+/// backward used to measure the paper's overhead claim). `scratch` needs
+/// `bsz * 2d` elements (per-example `dγ_b` then `dβ_b`).
 #[allow(clippy::too_many_arguments)]
 pub fn ln_bwd_fused(
-    workers: usize,
+    pool: &WorkerPool,
     dout: &[f32],
     xhat: &[f32],
     rstd: &[f32],
@@ -72,52 +78,57 @@ pub fn ln_bwd_fused(
     scratch: &mut [f32],
     dgamma: &mut [f32],
     dbeta: &mut [f32],
-    per_ex_sq: &mut [f64],
+    per_ex_sq: Option<&mut [f64]>,
 ) {
     let m = bsz * t;
     assert!(dout.len() >= m * d && xhat.len() >= m * d && rstd.len() >= m);
     assert!(dx.len() >= m * d && scratch.len() >= bsz * 2 * d);
-    assert!(dgamma.len() >= d && dbeta.len() >= d && per_ex_sq.len() >= bsz);
-    par_row_blocks2(workers, bsz, t * d, dx, 2 * d, scratch, |b0, b1, dxb, scb| {
+    assert!(dgamma.len() >= d && dbeta.len() >= d);
+    if let Some(pes) = per_ex_sq.as_deref() {
+        assert!(pes.len() >= bsz);
+    }
+    let tier = simd::tier();
+    par_row_blocks2(pool, bsz, t * d, dx, 2 * d, scratch, |b0, b1, dxb, scb| {
         for b in b0..b1 {
             let sl = &mut scb[(b - b0) * 2 * d..(b - b0 + 1) * 2 * d];
             sl.fill(0.0);
+            let (slg, slb) = sl.split_at_mut(d);
             for ti in 0..t {
                 let r = b * t + ti;
                 let dyr = &dout[r * d..(r + 1) * d];
                 let xhr = &xhat[r * d..(r + 1) * d];
-                let mut m1 = 0f32; // mean(dxhat)
-                let mut m2 = 0f32; // mean(dxhat * xhat)
-                for j in 0..d {
-                    let dy = dyr[j];
-                    let xh = xhr[j];
-                    sl[j] += dy * xh; // dγ_b
-                    sl[d + j] += dy; // dβ_b
-                    let dxh = dy * gamma[j];
-                    m1 += dxh;
-                    m2 += dxh * xh;
-                }
-                m1 /= d as f32;
-                m2 /= d as f32;
+                let (s1, s2) = simd::ln_bwd_row_acc(tier, dyr, xhr, &gamma[..d], slg, slb);
+                let m1 = s1 / d as f32;
+                let m2 = s2 / d as f32;
                 let rs = rstd[r];
                 let dxr = &mut dxb[((b - b0) * t + ti) * d..((b - b0) * t + ti + 1) * d];
-                for j in 0..d {
-                    let dxh = dyr[j] * gamma[j];
-                    dxr[j] = rs * (dxh - m1 - xhr[j] * m2);
-                }
+                simd::ln_dx_row(tier, dyr, xhr, &gamma[..d], rs, m1, m2, dxr);
             }
         }
     });
     // Batch reduction + norm emission, fixed example order (deterministic).
-    for b in 0..bsz {
-        let sl = &scratch[b * 2 * d..(b + 1) * 2 * d];
-        let mut sq = 0f64;
-        for j in 0..d {
-            dgamma[j] += sl[j];
-            dbeta[j] += sl[d + j];
-            sq += sl[j] as f64 * sl[j] as f64 + sl[d + j] as f64 * sl[d + j] as f64;
+    match per_ex_sq {
+        Some(pes) => {
+            for b in 0..bsz {
+                let sl = &scratch[b * 2 * d..(b + 1) * 2 * d];
+                let mut sq = 0f64;
+                for j in 0..d {
+                    dgamma[j] += sl[j];
+                    dbeta[j] += sl[d + j];
+                    sq += sl[j] as f64 * sl[j] as f64 + sl[d + j] as f64 * sl[d + j] as f64;
+                }
+                pes[b] = sq;
+            }
         }
-        per_ex_sq[b] = sq;
+        None => {
+            for b in 0..bsz {
+                let sl = &scratch[b * 2 * d..(b + 1) * 2 * d];
+                for j in 0..d {
+                    dgamma[j] += sl[j];
+                    dbeta[j] += sl[d + j];
+                }
+            }
+        }
     }
 }
 
@@ -170,6 +181,7 @@ mod tests {
     #[test]
     fn fused_backward_matches_reference_and_emits_norms() {
         let mut rng = Rng::seed_from_u64(11);
+        let pool = WorkerPool::new(2);
         for (bsz, t, d) in [(1, 1, 4), (2, 3, 8), (4, 5, 6)] {
             let rows = bsz * t;
             let x = randv(&mut rng, rows * d);
@@ -190,8 +202,8 @@ mod tests {
             let mut db = vec![0f32; d];
             let mut sq = vec![0f64; bsz];
             ln_bwd_fused(
-                2, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch, &mut dg,
-                &mut db, &mut sq,
+                &pool, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch, &mut dg,
+                &mut db, Some(&mut sq),
             );
             for (a, b) in dx.iter().zip(&dx_ref) {
                 assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-3));
@@ -232,17 +244,43 @@ mod tests {
         let gamma = randv(&mut rng, d);
         let dout = randv(&mut rng, rows * d);
         let run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
             let mut dx = vec![0f32; rows * d];
             let mut scratch = vec![0f32; bsz * 2 * d];
             let mut dg = vec![0f32; d];
             let mut db = vec![0f32; d];
             let mut sq = vec![0f64; bsz];
             ln_bwd_fused(
-                workers, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch,
-                &mut dg, &mut db, &mut sq,
+                &pool, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch,
+                &mut dg, &mut db, Some(&mut sq),
             );
             (dx, dg, db, sq)
         };
         assert_eq!(run(1), run(3));
+    }
+
+    #[test]
+    fn norms_off_backward_keeps_gradients_bitwise() {
+        let mut rng = Rng::seed_from_u64(13);
+        let pool = WorkerPool::new(3);
+        let (bsz, t, d) = (4, 2, 12);
+        let rows = bsz * t;
+        let xhat = randv(&mut rng, rows * d);
+        let rstd: Vec<f32> = (0..rows).map(|_| 1.0 + rng.f64() as f32).collect();
+        let gamma = randv(&mut rng, d);
+        let dout = randv(&mut rng, rows * d);
+        let run = |pes: bool| {
+            let mut dx = vec![0f32; rows * d];
+            let mut scratch = vec![0f32; bsz * 2 * d];
+            let mut dg = vec![0f32; d];
+            let mut db = vec![0f32; d];
+            let mut sq = vec![0f64; bsz];
+            ln_bwd_fused(
+                &pool, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch,
+                &mut dg, &mut db, if pes { Some(&mut sq) } else { None },
+            );
+            (dx, dg, db)
+        };
+        assert_eq!(run(true), run(false), "norm emission must not perturb gradients");
     }
 }

@@ -10,36 +10,35 @@
 //! * [`matmul_at_b_acc`] — `dw += x^T @ dy` from a pre-transposed
 //!   `xt: [K, B·T]`, threaded over disjoint rows of `dw`.
 //!
-//! Dot products run over eight independent accumulator lanes ([`dot`]) so
-//! LLVM can vectorize the f32 reduction (a naive `sum` is a serial
-//! dependency chain the compiler must not reorder). Lane order is fixed,
-//! so results are bitwise deterministic for any worker count — each
-//! parallel region writes disjoint output rows and reduces inside a row
-//! sequentially (see `threads`).
+//! Inner loops dispatch through [`super::simd`]: explicit AVX2/FMA or
+//! NEON dot/axpy kernels, with the original 8-lane scalar code as the
+//! always-compiled oracle (`NANOGNS_FORCE_SCALAR=1`). The two dot-product
+//! matmuls are register-blocked four output columns at a time
+//! ([`super::simd::dots4`] shares each `x` load across four accumulator
+//! chains) and tiled over output columns so the active slice of the
+//! packed weight stays cache-resident while it is reused by every row of
+//! the block ([`tile_cols`]).
+//!
+//! Determinism: each output element's reduction association depends only
+//! on the operand length and the dispatch tier — never on worker count
+//! or tile boundaries — so results are bitwise identical for any worker
+//! count within a tier (see `threads`).
 
-use super::threads::par_row_blocks;
+use super::simd::{self, Tier};
+use super::threads::{par_row_blocks, WorkerPool};
 
-/// Eight-lane blocked dot product. Deterministic (fixed association) and
-/// autovectorizable: the eight partial sums have no cross-iteration
-/// dependency, unlike a single running f32 sum.
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len(), "dot operand length mismatch");
-    let n = a.len().min(b.len());
-    let chunks = n / 8;
-    let mut acc = [0f32; 8];
-    for c in 0..chunks {
-        let ao = &a[c * 8..c * 8 + 8];
-        let bo = &b[c * 8..c * 8 + 8];
-        for l in 0..8 {
-            acc[l] += ao[l] * bo[l];
-        }
-    }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
+pub use super::simd::dot;
+
+/// Output-column tile width for the dot-product matmuls: the widest
+/// multiple of four whose packed-weight slice (`cols × k` f32) fits in
+/// ~256 KiB — roughly half a typical per-core L2, leaving room for the
+/// streamed activation rows. Tiling changes only the *visit order* of
+/// `(row, col)` pairs, never a reduction, so it cannot affect values.
+fn tile_cols(k: usize) -> usize {
+    const TILE_BYTES: usize = 256 * 1024;
+    let per_col = 4 * k.max(1);
+    let jt = (TILE_BYTES / per_col).max(8);
+    (jt / 4) * 4
 }
 
 /// `dst = src^T`: `src` is `[rows, cols]` row-major, `dst` becomes
@@ -59,9 +58,9 @@ pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
 /// disjoint destination-row blocks (a pure scatter, no reductions), so
 /// the result is bitwise identical to the serial version for any worker
 /// count. Weight packs stay on the serial path — they are tiny.
-pub fn transpose_par(workers: usize, src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+pub fn transpose_par(pool: &WorkerPool, src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     assert!(src.len() >= rows * cols && dst.len() >= rows * cols);
-    par_row_blocks(workers, cols, rows, dst, |c0, c1, db| {
+    par_row_blocks(pool, cols, rows, dst, |c0, c1, db| {
         for c in c0..c1 {
             let drow = &mut db[(c - c0) * rows..(c - c0 + 1) * rows];
             for r in 0..rows {
@@ -71,10 +70,57 @@ pub fn transpose_par(workers: usize, src: &[f32], rows: usize, cols: usize, dst:
     });
 }
 
+/// Shared inner loop of the two dot-product matmuls: fill `yrow[j0..j1]`
+/// with `xrow · op_rows[j]` (+ optional bias), register-blocked four
+/// columns at a time. `op` is the packed operand whose row `j` has
+/// length `k`.
+#[inline]
+fn dot_row_block(
+    t: Tier,
+    xrow: &[f32],
+    op: &[f32],
+    k: usize,
+    bias: Option<&[f32]>,
+    j0: usize,
+    j1: usize,
+    yrow: &mut [f32],
+) {
+    let mut j = j0;
+    while j + 4 <= j1 {
+        let mut o = [0f32; 4];
+        simd::dots4(
+            t,
+            xrow,
+            &op[j * k..(j + 1) * k],
+            &op[(j + 1) * k..(j + 2) * k],
+            &op[(j + 2) * k..(j + 3) * k],
+            &op[(j + 3) * k..(j + 4) * k],
+            &mut o,
+        );
+        if let Some(b) = bias {
+            for c in 0..4 {
+                o[c] += b[j + c];
+            }
+        }
+        yrow[j..j + 4].copy_from_slice(&o);
+        j += 4;
+    }
+    while j < j1 {
+        let mut v = simd::dot_tier(t, xrow, &op[j * k..(j + 1) * k]);
+        if let Some(b) = bias {
+            v += b[j];
+        }
+        yrow[j] = v;
+        j += 1;
+    }
+}
+
 /// `y = x @ w (+ bias)` with `x: [m, k]`, `wt = w^T: [n, k]`, `y: [m, n]`.
 /// Threaded over row blocks of `y`; each element is one contiguous dot.
+/// Column-tiled so the `[jt, k]` slice of `wt` stays in cache across the
+/// whole row block.
 pub fn matmul_xwt(
-    workers: usize,
+    pool: &WorkerPool,
     x: &[f32],
     wt: &[f32],
     bias: Option<&[f32]>,
@@ -84,25 +130,27 @@ pub fn matmul_xwt(
     y: &mut [f32],
 ) {
     assert!(x.len() >= m * k && wt.len() >= n * k && y.len() >= m * n);
-    par_row_blocks(workers, m, n, y, |r0, r1, yb| {
-        for r in r0..r1 {
-            let xrow = &x[r * k..(r + 1) * k];
-            let yrow = &mut yb[(r - r0) * n..(r - r0 + 1) * n];
-            for j in 0..n {
-                let mut v = dot(xrow, &wt[j * k..(j + 1) * k]);
-                if let Some(b) = bias {
-                    v += b[j];
-                }
-                yrow[j] = v;
+    let t = simd::tier();
+    let jt = tile_cols(k);
+    par_row_blocks(pool, m, n, y, |r0, r1, yb| {
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + jt).min(n);
+            for r in r0..r1 {
+                let xrow = &x[r * k..(r + 1) * k];
+                let yrow = &mut yb[(r - r0) * n..(r - r0 + 1) * n];
+                dot_row_block(t, xrow, wt, k, bias, j0, j1, yrow);
             }
+            j0 = j1;
         }
     });
 }
 
 /// `dx = dy @ w^T` with `dy: [m, n]`, `w: [k, n]` (natural layout),
-/// `dx: [m, k]`. Threaded over row blocks of `dx`.
+/// `dx: [m, k]`. Threaded over row blocks of `dx`, tiled over the `k`
+/// output columns (rows of `w`).
 pub fn matmul_xw_t(
-    workers: usize,
+    pool: &WorkerPool,
     dy: &[f32],
     w: &[f32],
     m: usize,
@@ -111,13 +159,18 @@ pub fn matmul_xw_t(
     dx: &mut [f32],
 ) {
     assert!(dy.len() >= m * n && w.len() >= k * n && dx.len() >= m * k);
-    par_row_blocks(workers, m, k, dx, |r0, r1, db| {
-        for r in r0..r1 {
-            let dyr = &dy[r * n..(r + 1) * n];
-            let drow = &mut db[(r - r0) * k..(r - r0 + 1) * k];
-            for kk in 0..k {
-                drow[kk] = dot(dyr, &w[kk * n..(kk + 1) * n]);
+    let t = simd::tier();
+    let kt = tile_cols(n);
+    par_row_blocks(pool, m, k, dx, |r0, r1, db| {
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + kt).min(k);
+            for r in r0..r1 {
+                let dyr = &dy[r * n..(r + 1) * n];
+                let drow = &mut db[(r - r0) * k..(r - r0 + 1) * k];
+                dot_row_block(t, dyr, w, n, None, k0, k1, drow);
             }
+            k0 = k1;
         }
     });
 }
@@ -126,9 +179,9 @@ pub fn matmul_xw_t(
 /// Threaded over disjoint row blocks of `dw`; within each row the
 /// reduction over the `m` batch rows runs in fixed order (deterministic).
 /// Rows are processed four at a time so each streamed `dy` row updates
-/// four output rows.
+/// four output rows via SIMD axpy.
 pub fn matmul_at_b_acc(
-    workers: usize,
+    pool: &WorkerPool,
     xt: &[f32],
     dy: &[f32],
     m: usize,
@@ -137,7 +190,8 @@ pub fn matmul_at_b_acc(
     dw: &mut [f32],
 ) {
     assert!(xt.len() >= k * m && dy.len() >= m * n && dw.len() >= k * n);
-    par_row_blocks(workers, k, n, dw, |k0, k1, dwb| {
+    let t = simd::tier();
+    par_row_blocks(pool, k, n, dw, |k0, k1, dwb| {
         let mut kk = k0;
         while kk < k1 {
             let kb = (k1 - kk).min(4);
@@ -147,9 +201,7 @@ pub fn matmul_at_b_acc(
                     let xv = xt[(kk + kr) * m + r];
                     if xv != 0.0 {
                         let dwr = &mut dwb[(kk + kr - k0) * n..(kk + kr - k0 + 1) * n];
-                        for j in 0..n {
-                            dwr[j] += xv * dyr[j];
-                        }
+                        simd::axpy(t, xv, dyr, dwr);
                     }
                 }
             }
@@ -202,6 +254,8 @@ mod tests {
     #[test]
     fn forward_matches_naive_and_is_worker_invariant() {
         let mut rng = Rng::seed_from_u64(2);
+        let pool1 = WorkerPool::new(1);
+        let pool3 = WorkerPool::new(3);
         for (m, k, n) in [(1, 1, 1), (3, 5, 7), (16, 8, 12), (33, 17, 9)] {
             let x = randv(&mut rng, m * k);
             let w = randv(&mut rng, k * n);
@@ -213,10 +267,10 @@ mod tests {
                 *v += b;
             }
             let mut y1 = vec![0f32; m * n];
-            matmul_xwt(1, &x, &wt, Some(&bias), m, k, n, &mut y1);
+            matmul_xwt(&pool1, &x, &wt, Some(&bias), m, k, n, &mut y1);
             assert_close(&y1, &want, 1e-4);
             let mut y3 = vec![0f32; m * n];
-            matmul_xwt(3, &x, &wt, Some(&bias), m, k, n, &mut y3);
+            matmul_xwt(&pool3, &x, &wt, Some(&bias), m, k, n, &mut y3);
             assert_eq!(y1, y3, "worker count changed the result");
         }
     }
@@ -224,6 +278,7 @@ mod tests {
     #[test]
     fn backward_dx_matches_naive() {
         let mut rng = Rng::seed_from_u64(3);
+        let pool = WorkerPool::new(2);
         let (m, k, n) = (9, 6, 11);
         let dy = randv(&mut rng, m * n);
         let w = randv(&mut rng, k * n);
@@ -232,13 +287,15 @@ mod tests {
         transpose(&w, k, n, &mut wt);
         let want = naive_mm(&dy, &wt, m, n, k);
         let mut dx = vec![0f32; m * k];
-        matmul_xw_t(2, &dy, &w, m, k, n, &mut dx);
+        matmul_xw_t(&pool, &dy, &w, m, k, n, &mut dx);
         assert_close(&dx, &want, 1e-4);
     }
 
     #[test]
     fn backward_dw_accumulates_and_is_worker_invariant() {
         let mut rng = Rng::seed_from_u64(4);
+        let pool1 = WorkerPool::new(1);
+        let pool3 = WorkerPool::new(3);
         let (m, k, n) = (13, 10, 7);
         let x = randv(&mut rng, m * k);
         let dy = randv(&mut rng, m * n);
@@ -247,12 +304,48 @@ mod tests {
         // want = x^T @ dy == naive_mm(xt, dy) with xt as [k, m]
         let want = naive_mm(&xt, &dy, k, m, n);
         let mut dw1 = vec![1f32; k * n]; // pre-seeded: kernel must accumulate
-        matmul_at_b_acc(1, &xt, &dy, m, k, n, &mut dw1);
+        matmul_at_b_acc(&pool1, &xt, &dy, m, k, n, &mut dw1);
         let mut dw3 = vec![1f32; k * n];
-        matmul_at_b_acc(3, &xt, &dy, m, k, n, &mut dw3);
+        matmul_at_b_acc(&pool3, &xt, &dy, m, k, n, &mut dw3);
         assert_eq!(dw1, dw3);
         let shifted: Vec<f32> = want.iter().map(|v| v + 1.0).collect();
         assert_close(&dw1, &shifted, 1e-4);
+    }
+
+    #[test]
+    fn column_tiling_never_changes_values() {
+        // Shapes straddling the quad boundary and (via tiny k) multiple
+        // tiles; compare against an untiled per-element dot_tier oracle.
+        let mut rng = Rng::seed_from_u64(40);
+        let pool = WorkerPool::new(2);
+        let t = simd::tier();
+        for (m, k, n) in [(3, 2, 130), (5, 7, 66), (2, 1, 9), (1, 16, 4)] {
+            let x = randv(&mut rng, m * k);
+            let wt = randv(&mut rng, n * k);
+            let mut y = vec![0f32; m * n];
+            matmul_xwt(&pool, &x, &wt, None, m, k, n, &mut y);
+            for r in 0..m {
+                for j in 0..n {
+                    let mut o = [0f32; 4];
+                    let q = j / 4 * 4;
+                    let want = if q + 4 <= n {
+                        simd::dots4(
+                            t,
+                            &x[r * k..(r + 1) * k],
+                            &wt[q * k..(q + 1) * k],
+                            &wt[(q + 1) * k..(q + 2) * k],
+                            &wt[(q + 2) * k..(q + 3) * k],
+                            &wt[(q + 3) * k..(q + 4) * k],
+                            &mut o,
+                        );
+                        o[j - q]
+                    } else {
+                        simd::dot_tier(t, &x[r * k..(r + 1) * k], &wt[j * k..(j + 1) * k])
+                    };
+                    assert_eq!(y[r * n + j].to_bits(), want.to_bits(), "r={r} j={j}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -275,8 +368,9 @@ mod tests {
             let mut serial = vec![0f32; r * c];
             transpose(&src, r, c, &mut serial);
             for workers in [1, 2, 5] {
+                let pool = WorkerPool::new(workers);
                 let mut par = vec![0f32; r * c];
-                transpose_par(workers, &src, r, c, &mut par);
+                transpose_par(&pool, &src, r, c, &mut par);
                 assert_eq!(serial, par, "r={r} c={c} workers={workers}");
             }
         }

@@ -5,17 +5,24 @@
 //! contraction at near-zero extra FLOPs. This module is that method in
 //! pure Rust, replacing the naive one-example-at-a-time backward:
 //!
+//! * [`simd`] — runtime-dispatched AVX2/FMA and NEON inner loops with
+//!   the original scalar code as the always-compiled oracle
+//!   (`NANOGNS_FORCE_SCALAR=1` pins it; see the tier table in
+//!   DESIGN.md §2);
 //! * [`matmul`] — blocked, transposed-B batched matmuls (`[B·T, K] ×
-//!   [K, N]`) shared by every linear layer, with eight-lane vectorizable
-//!   dot products;
+//!   [K, N]`) shared by every linear layer, register-blocked four output
+//!   columns at a time and tiled so the packed weight slice stays
+//!   cache-resident;
 //! * [`gram`] — Goodfellow's trick: per-example squared weight-gradient
 //!   norms from activation/delta Gram matrices, never materializing a
 //!   per-example weight gradient (Eqs. 4–5 inputs);
 //! * [`layernorm`] — the §3 fused LayerNorm backward that emits
 //!   per-example `||dγ_b||² + ||dβ_b||²` inside the same reduction pass;
-//! * [`threads`] — `std::thread::scope` data parallelism whose outputs
-//!   are always disjoint row blocks, making every kernel bitwise
-//!   deterministic for any worker count.
+//! * [`threads`] — the persistent [`WorkerPool`]: parked workers, one
+//!   spawn per pool lifetime (counted by [`total_threads_spawned`]),
+//!   allocation-free dispatch, and outputs that are always disjoint row
+//!   blocks, making every kernel bitwise deterministic for any worker
+//!   count within a dispatch tier.
 //!
 //! DESIGN.md §2 "Kernels" maps each kernel to the paper equation it
 //! implements.
@@ -27,9 +34,13 @@
 pub mod gram;
 pub mod layernorm;
 pub mod matmul;
+pub mod simd;
 pub mod threads;
 
 pub use gram::{bias_sqnorms_acc, weight_sqnorms};
 pub use layernorm::{ln_bwd_fused, ln_fwd};
 pub use matmul::{dot, matmul_at_b_acc, matmul_xw_t, matmul_xwt, transpose, transpose_par};
-pub use threads::{default_workers, par_row_blocks, par_row_blocks2};
+pub use simd::{tier, Tier};
+pub use threads::{
+    default_workers, par_row_blocks, par_row_blocks2, total_threads_spawned, WorkerPool,
+};

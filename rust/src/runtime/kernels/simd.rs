@@ -1,0 +1,1075 @@
+//! Runtime-dispatched SIMD primitives with an always-compiled scalar
+//! oracle.
+//!
+//! Every hot inner loop in the kernels (dot products, axpy updates, the
+//! LayerNorm row passes) funnels through this module. A dispatch *tier*
+//! is picked once per process:
+//!
+//! | tier      | arch      | gate                                      |
+//! |-----------|-----------|-------------------------------------------|
+//! | `Avx2Fma` | x86_64    | `is_x86_feature_detected!("avx2"+"fma")`  |
+//! | `Neon`    | aarch64   | baseline (NEON is mandatory on aarch64)   |
+//! | `Scalar`  | any       | fallback, or `NANOGNS_FORCE_SCALAR=1`     |
+//!
+//! The scalar functions are byte-for-byte the pre-SIMD kernels (the
+//! 8-lane blocked dot, the serial LayerNorm row loops), kept compiled on
+//! every arch as the oracle: property tests assert each SIMD tier agrees
+//! with the scalar tier to tight relative error, and
+//! `NANOGNS_FORCE_SCALAR=1` runs the entire suite through the oracle.
+//!
+//! Determinism: within one tier every function uses a fixed reduction
+//! association for a given input length, so kernel results remain
+//! bitwise worker-count invariant *per tier*. Across tiers results may
+//! differ by rounding (FMA contracts the multiply-add), which is why the
+//! CI determinism matrix pins the tier via `NANOGNS_FORCE_SCALAR`.
+
+use std::sync::OnceLock;
+
+/// Instruction-set tier the kernels dispatch to. All variants exist on
+/// every arch (so tables/logs can name them); `detect` only ever returns
+/// a tier the current CPU can execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Always-compiled oracle: the pre-SIMD autovectorizable loops.
+    Scalar,
+    /// x86_64 with AVX2 + FMA (256-bit, 8 × f32 lanes).
+    Avx2Fma,
+    /// aarch64 NEON (128-bit, 4 × f32 lanes).
+    Neon,
+}
+
+impl Tier {
+    /// Stable lowercase name for logs and bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2Fma => "avx2+fma",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+static TIER: OnceLock<Tier> = OnceLock::new();
+
+/// The process-wide dispatch tier: detected once, honoring
+/// `NANOGNS_FORCE_SCALAR` (set to `1`/`true` to pin the scalar oracle).
+/// Cached — changing the environment after the first call has no effect.
+pub fn tier() -> Tier {
+    *TIER.get_or_init(detect)
+}
+
+/// The best tier this CPU can execute, ignoring `NANOGNS_FORCE_SCALAR`.
+/// `None` when only the scalar oracle is available. Tests use this to
+/// exercise the native tier even inside a force-scalar run.
+pub fn native_tier() -> Option<Tier> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            Some(Tier::Avx2Fma)
+        } else {
+            None
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Some(Tier::Neon)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        None
+    }
+}
+
+fn detect() -> Tier {
+    if let Ok(v) = std::env::var("NANOGNS_FORCE_SCALAR") {
+        let v = v.trim();
+        if v == "1" || v.eq_ignore_ascii_case("true") {
+            return Tier::Scalar;
+        }
+    }
+    native_tier().unwrap_or(Tier::Scalar)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar oracle (the pre-SIMD kernels, unchanged bit-for-bit)
+// ---------------------------------------------------------------------------
+
+/// Eight-lane blocked dot product. Deterministic (fixed association) and
+/// autovectorizable: the eight partial sums have no cross-iteration
+/// dependency, unlike a single running f32 sum.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot operand length mismatch");
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let ao = &a[c * 8..c * 8 + 8];
+        let bo = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += ao[l] * bo[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    for j in 0..n {
+        y[j] += a * x[j];
+    }
+}
+
+#[inline]
+fn sum_scalar(a: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for &v in a {
+        s += v;
+    }
+    s
+}
+
+#[inline]
+fn sq_dev_sum_scalar(a: &[f32], mean: f32) -> f32 {
+    let mut s = 0f32;
+    for &v in a {
+        s += (v - mean) * (v - mean);
+    }
+    s
+}
+
+#[inline]
+fn ln_fwd_row_scalar(
+    row: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: f32,
+    rs: f32,
+    xhat: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = row.len();
+    for j in 0..d {
+        let xh = (row[j] - mean) * rs;
+        xhat[j] = xh;
+        out[j] = gamma[j] * xh + beta[j];
+    }
+}
+
+/// Accumulates `slg[j] += dy·xh`, `slb[j] += dy` and returns the raw
+/// sums `(Σ dy·γ, Σ (dy·γ)·xh)` — the caller divides by `d`.
+#[inline]
+fn ln_bwd_row_acc_scalar(
+    dy: &[f32],
+    xh: &[f32],
+    gamma: &[f32],
+    slg: &mut [f32],
+    slb: &mut [f32],
+) -> (f32, f32) {
+    let d = dy.len();
+    let mut m1 = 0f32;
+    let mut m2 = 0f32;
+    for j in 0..d {
+        let dyj = dy[j];
+        let xhj = xh[j];
+        slg[j] += dyj * xhj;
+        slb[j] += dyj;
+        let dxh = dyj * gamma[j];
+        m1 += dxh;
+        m2 += dxh * xhj;
+    }
+    (m1, m2)
+}
+
+#[inline]
+fn ln_dx_row_scalar(
+    dy: &[f32],
+    xh: &[f32],
+    gamma: &[f32],
+    rs: f32,
+    m1: f32,
+    m2: f32,
+    dx: &mut [f32],
+) {
+    let d = dy.len();
+    for j in 0..d {
+        let dxh = dy[j] * gamma[j];
+        dx[j] = rs * (dxh - m1 - xh[j] * m2);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of the 8 lanes in a fixed tree order.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 16)),
+                _mm256_loadu_ps(bp.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 24)),
+                _mm256_loadu_ps(bp.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        let mut s = hsum8(acc);
+        while i < n {
+            s = (*ap.add(i)).mul_add(*bp.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    /// Four dot products against one shared `x` row: each `x` load feeds
+    /// four FMA chains, quadrupling arithmetic intensity per load.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dots4(
+        x: &[f32],
+        w0: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        w3: &[f32],
+        out: &mut [f32; 4],
+    ) {
+        let k = x.len();
+        let xp = x.as_ptr();
+        let (p0, p1, p2, p3) = (w0.as_ptr(), w1.as_ptr(), w2.as_ptr(), w3.as_ptr());
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= k {
+            let xv = _mm256_loadu_ps(xp.add(i));
+            a0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p0.add(i)), a0);
+            a1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p1.add(i)), a1);
+            a2 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p2.add(i)), a2);
+            a3 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p3.add(i)), a3);
+            i += 8;
+        }
+        let mut s0 = hsum8(a0);
+        let mut s1 = hsum8(a1);
+        let mut s2 = hsum8(a2);
+        let mut s3 = hsum8(a3);
+        while i < k {
+            let xv = *xp.add(i);
+            s0 = xv.mul_add(*p0.add(i), s0);
+            s1 = xv.mul_add(*p1.add(i), s1);
+            s2 = xv.mul_add(*p2.add(i), s2);
+            s3 = xv.mul_add(*p3.add(i), s3);
+            i += 1;
+        }
+        *out = [s0, s1, s2, s3];
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let yv = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), yv);
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) = a.mul_add(*xp.add(i), *yp.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum(a: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(ap.add(i)));
+            i += 8;
+        }
+        let mut s = hsum8(acc);
+        while i < n {
+            s += *ap.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sq_dev_sum(a: &[f32], mean: f32) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let vm = _mm256_set1_ps(mean);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(i)), vm);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum8(acc);
+        while i < n {
+            let d = *ap.add(i) - mean;
+            s = d.mul_add(d, s);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn ln_fwd_row(
+        row: &[f32],
+        gamma: &[f32],
+        beta: &[f32],
+        mean: f32,
+        rs: f32,
+        xhat: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = row.len();
+        let rp = row.as_ptr();
+        let gp = gamma.as_ptr();
+        let bp = beta.as_ptr();
+        let xhp = xhat.as_mut_ptr();
+        let op = out.as_mut_ptr();
+        let vm = _mm256_set1_ps(mean);
+        let vrs = _mm256_set1_ps(rs);
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let xh = _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(rp.add(i)), vm), vrs);
+            _mm256_storeu_ps(xhp.add(i), xh);
+            let o = _mm256_fmadd_ps(_mm256_loadu_ps(gp.add(i)), xh, _mm256_loadu_ps(bp.add(i)));
+            _mm256_storeu_ps(op.add(i), o);
+            i += 8;
+        }
+        while i < d {
+            let xh = (*rp.add(i) - mean) * rs;
+            *xhp.add(i) = xh;
+            *op.add(i) = (*gp.add(i)).mul_add(xh, *bp.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn ln_bwd_row_acc(
+        dy: &[f32],
+        xh: &[f32],
+        gamma: &[f32],
+        slg: &mut [f32],
+        slb: &mut [f32],
+    ) -> (f32, f32) {
+        let d = dy.len();
+        let dp = dy.as_ptr();
+        let xp = xh.as_ptr();
+        let gp = gamma.as_ptr();
+        let sgp = slg.as_mut_ptr();
+        let sbp = slb.as_mut_ptr();
+        let mut m1 = _mm256_setzero_ps();
+        let mut m2 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let vdy = _mm256_loadu_ps(dp.add(i));
+            let vxh = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(sgp.add(i), _mm256_fmadd_ps(vdy, vxh, _mm256_loadu_ps(sgp.add(i))));
+            _mm256_storeu_ps(sbp.add(i), _mm256_add_ps(vdy, _mm256_loadu_ps(sbp.add(i))));
+            let dxh = _mm256_mul_ps(vdy, _mm256_loadu_ps(gp.add(i)));
+            m1 = _mm256_add_ps(m1, dxh);
+            m2 = _mm256_fmadd_ps(dxh, vxh, m2);
+            i += 8;
+        }
+        let mut s1 = hsum8(m1);
+        let mut s2 = hsum8(m2);
+        while i < d {
+            let dyj = *dp.add(i);
+            let xhj = *xp.add(i);
+            *sgp.add(i) = dyj.mul_add(xhj, *sgp.add(i));
+            *sbp.add(i) += dyj;
+            let dxh = dyj * *gp.add(i);
+            s1 += dxh;
+            s2 = dxh.mul_add(xhj, s2);
+            i += 1;
+        }
+        (s1, s2)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn ln_dx_row(
+        dy: &[f32],
+        xh: &[f32],
+        gamma: &[f32],
+        rs: f32,
+        m1: f32,
+        m2: f32,
+        dx: &mut [f32],
+    ) {
+        let d = dy.len();
+        let dp = dy.as_ptr();
+        let xp = xh.as_ptr();
+        let gp = gamma.as_ptr();
+        let op = dx.as_mut_ptr();
+        let vm1 = _mm256_set1_ps(m1);
+        let vm2 = _mm256_set1_ps(m2);
+        let vrs = _mm256_set1_ps(rs);
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let dxh = _mm256_mul_ps(_mm256_loadu_ps(dp.add(i)), _mm256_loadu_ps(gp.add(i)));
+            let t = _mm256_sub_ps(
+                _mm256_sub_ps(dxh, vm1),
+                _mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), vm2),
+            );
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(vrs, t));
+            i += 8;
+        }
+        while i < d {
+            let dxh = *dp.add(i) * *gp.add(i);
+            *op.add(i) = rs * (dxh - m1 - *xp.add(i) * m2);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+            acc2 = vfmaq_f32(acc2, vld1q_f32(ap.add(i + 8)), vld1q_f32(bp.add(i + 8)));
+            acc3 = vfmaq_f32(acc3, vld1q_f32(ap.add(i + 12)), vld1q_f32(bp.add(i + 12)));
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            i += 4;
+        }
+        let acc = vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3));
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s = (*ap.add(i)).mul_add(*bp.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dots4(
+        x: &[f32],
+        w0: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        w3: &[f32],
+        out: &mut [f32; 4],
+    ) {
+        let k = x.len();
+        let xp = x.as_ptr();
+        let (p0, p1, p2, p3) = (w0.as_ptr(), w1.as_ptr(), w2.as_ptr(), w3.as_ptr());
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= k {
+            let xv = vld1q_f32(xp.add(i));
+            a0 = vfmaq_f32(a0, xv, vld1q_f32(p0.add(i)));
+            a1 = vfmaq_f32(a1, xv, vld1q_f32(p1.add(i)));
+            a2 = vfmaq_f32(a2, xv, vld1q_f32(p2.add(i)));
+            a3 = vfmaq_f32(a3, xv, vld1q_f32(p3.add(i)));
+            i += 4;
+        }
+        let mut s0 = vaddvq_f32(a0);
+        let mut s1 = vaddvq_f32(a1);
+        let mut s2 = vaddvq_f32(a2);
+        let mut s3 = vaddvq_f32(a3);
+        while i < k {
+            let xv = *xp.add(i);
+            s0 = xv.mul_add(*p0.add(i), s0);
+            s1 = xv.mul_add(*p1.add(i), s1);
+            s2 = xv.mul_add(*p2.add(i), s2);
+            s3 = xv.mul_add(*p3.add(i), s3);
+            i += 1;
+        }
+        *out = [s0, s1, s2, s3];
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let va = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(yp.add(i), vfmaq_f32(vld1q_f32(yp.add(i)), va, vld1q_f32(xp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) = a.mul_add(*xp.add(i), *yp.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum(a: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = vaddq_f32(acc, vld1q_f32(ap.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s += *ap.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sq_dev_sum(a: &[f32], mean: f32) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let vm = vdupq_n_f32(mean);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = vsubq_f32(vld1q_f32(ap.add(i)), vm);
+            acc = vfmaq_f32(acc, d, d);
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            let d = *ap.add(i) - mean;
+            s = d.mul_add(d, s);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn ln_fwd_row(
+        row: &[f32],
+        gamma: &[f32],
+        beta: &[f32],
+        mean: f32,
+        rs: f32,
+        xhat: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = row.len();
+        let rp = row.as_ptr();
+        let gp = gamma.as_ptr();
+        let bp = beta.as_ptr();
+        let xhp = xhat.as_mut_ptr();
+        let op = out.as_mut_ptr();
+        let vm = vdupq_n_f32(mean);
+        let vrs = vdupq_n_f32(rs);
+        let mut i = 0usize;
+        while i + 4 <= d {
+            let xh = vmulq_f32(vsubq_f32(vld1q_f32(rp.add(i)), vm), vrs);
+            vst1q_f32(xhp.add(i), xh);
+            let o = vfmaq_f32(vld1q_f32(bp.add(i)), vld1q_f32(gp.add(i)), xh);
+            vst1q_f32(op.add(i), o);
+            i += 4;
+        }
+        while i < d {
+            let xh = (*rp.add(i) - mean) * rs;
+            *xhp.add(i) = xh;
+            *op.add(i) = (*gp.add(i)).mul_add(xh, *bp.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn ln_bwd_row_acc(
+        dy: &[f32],
+        xh: &[f32],
+        gamma: &[f32],
+        slg: &mut [f32],
+        slb: &mut [f32],
+    ) -> (f32, f32) {
+        let d = dy.len();
+        let dp = dy.as_ptr();
+        let xp = xh.as_ptr();
+        let gp = gamma.as_ptr();
+        let sgp = slg.as_mut_ptr();
+        let sbp = slb.as_mut_ptr();
+        let mut m1 = vdupq_n_f32(0.0);
+        let mut m2 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= d {
+            let vdy = vld1q_f32(dp.add(i));
+            let vxh = vld1q_f32(xp.add(i));
+            vst1q_f32(sgp.add(i), vfmaq_f32(vld1q_f32(sgp.add(i)), vdy, vxh));
+            vst1q_f32(sbp.add(i), vaddq_f32(vld1q_f32(sbp.add(i)), vdy));
+            let dxh = vmulq_f32(vdy, vld1q_f32(gp.add(i)));
+            m1 = vaddq_f32(m1, dxh);
+            m2 = vfmaq_f32(m2, dxh, vxh);
+            i += 4;
+        }
+        let mut s1 = vaddvq_f32(m1);
+        let mut s2 = vaddvq_f32(m2);
+        while i < d {
+            let dyj = *dp.add(i);
+            let xhj = *xp.add(i);
+            *sgp.add(i) = dyj.mul_add(xhj, *sgp.add(i));
+            *sbp.add(i) += dyj;
+            let dxh = dyj * *gp.add(i);
+            s1 += dxh;
+            s2 = dxh.mul_add(xhj, s2);
+            i += 1;
+        }
+        (s1, s2)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn ln_dx_row(
+        dy: &[f32],
+        xh: &[f32],
+        gamma: &[f32],
+        rs: f32,
+        m1: f32,
+        m2: f32,
+        dx: &mut [f32],
+    ) {
+        let d = dy.len();
+        let dp = dy.as_ptr();
+        let xp = xh.as_ptr();
+        let gp = gamma.as_ptr();
+        let op = dx.as_mut_ptr();
+        let vm1 = vdupq_n_f32(m1);
+        let vm2 = vdupq_n_f32(m2);
+        let vrs = vdupq_n_f32(rs);
+        let mut i = 0usize;
+        while i + 4 <= d {
+            let dxh = vmulq_f32(vld1q_f32(dp.add(i)), vld1q_f32(gp.add(i)));
+            let t = vsubq_f32(vsubq_f32(dxh, vm1), vmulq_f32(vld1q_f32(xp.add(i)), vm2));
+            vst1q_f32(op.add(i), vmulq_f32(vrs, t));
+            i += 4;
+        }
+        while i < d {
+            let dxh = *dp.add(i) * *gp.add(i);
+            *op.add(i) = rs * (dxh - m1 - *xp.add(i) * m2);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier dispatch
+// ---------------------------------------------------------------------------
+
+/// Dot product under the process-wide [`tier`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_tier(tier(), a, b)
+}
+
+/// Dot product under an explicit tier.
+#[inline]
+pub fn dot_tier(t: Tier, a: &[f32], b: &[f32]) -> f32 {
+    match t {
+        Tier::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `tier()`/`native_tier()` only yield Avx2Fma when the
+        // CPU reports avx2+fma (same for Neon on aarch64 below).
+        Tier::Avx2Fma => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Four dot products of one `x` row against four weight rows (register
+/// blocking for the matmuls). Scalar tier degrades to four independent
+/// [`dot_scalar`] calls, keeping it bitwise identical to the unblocked
+/// kernel.
+#[inline]
+pub fn dots4(
+    t: Tier,
+    x: &[f32],
+    w0: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    out: &mut [f32; 4],
+) {
+    match t {
+        Tier::Scalar => {
+            out[0] = dot_scalar(x, w0);
+            out[1] = dot_scalar(x, w1);
+            out[2] = dot_scalar(x, w2);
+            out[3] = dot_scalar(x, w3);
+        }
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::dots4(x, w0, w1, w2, w3, out) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::dots4(x, w0, w1, w2, w3, out) },
+        _ => {
+            out[0] = dot_scalar(x, w0);
+            out[1] = dot_scalar(x, w1);
+            out[2] = dot_scalar(x, w2);
+            out[3] = dot_scalar(x, w3);
+        }
+    }
+}
+
+/// `y[j] += a · x[j]`.
+#[inline]
+pub fn axpy(t: Tier, a: f32, x: &[f32], y: &mut [f32]) {
+    match t {
+        Tier::Scalar => axpy_scalar(a, x, y),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::axpy(a, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::axpy(a, x, y) },
+        _ => axpy_scalar(a, x, y),
+    }
+}
+
+/// `Σ a[j]` (LayerNorm mean numerator).
+#[inline]
+pub fn sum(t: Tier, a: &[f32]) -> f32 {
+    match t {
+        Tier::Scalar => sum_scalar(a),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::sum(a) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::sum(a) },
+        _ => sum_scalar(a),
+    }
+}
+
+/// `Σ (a[j] − mean)²` (LayerNorm variance numerator).
+#[inline]
+pub fn sq_dev_sum(t: Tier, a: &[f32], mean: f32) -> f32 {
+    match t {
+        Tier::Scalar => sq_dev_sum_scalar(a, mean),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::sq_dev_sum(a, mean) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::sq_dev_sum(a, mean) },
+        _ => sq_dev_sum_scalar(a, mean),
+    }
+}
+
+/// LayerNorm forward for one row: writes `xhat` and `γ·xhat + β`.
+#[inline]
+pub fn ln_fwd_row(
+    t: Tier,
+    row: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: f32,
+    rs: f32,
+    xhat: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert!(xhat.len() >= row.len() && out.len() >= row.len());
+    debug_assert!(gamma.len() >= row.len() && beta.len() >= row.len());
+    match t {
+        Tier::Scalar => ln_fwd_row_scalar(row, gamma, beta, mean, rs, xhat, out),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::ln_fwd_row(row, gamma, beta, mean, rs, xhat, out) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::ln_fwd_row(row, gamma, beta, mean, rs, xhat, out) },
+        _ => ln_fwd_row_scalar(row, gamma, beta, mean, rs, xhat, out),
+    }
+}
+
+/// LayerNorm backward pass 1 for one row: accumulates the per-example
+/// `dγ`/`dβ` partial sums and returns the raw `(Σ dxhat, Σ dxhat·xhat)`.
+#[inline]
+pub fn ln_bwd_row_acc(
+    t: Tier,
+    dy: &[f32],
+    xh: &[f32],
+    gamma: &[f32],
+    slg: &mut [f32],
+    slb: &mut [f32],
+) -> (f32, f32) {
+    debug_assert!(xh.len() >= dy.len() && gamma.len() >= dy.len());
+    debug_assert!(slg.len() >= dy.len() && slb.len() >= dy.len());
+    match t {
+        Tier::Scalar => ln_bwd_row_acc_scalar(dy, xh, gamma, slg, slb),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::ln_bwd_row_acc(dy, xh, gamma, slg, slb) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::ln_bwd_row_acc(dy, xh, gamma, slg, slb) },
+        _ => ln_bwd_row_acc_scalar(dy, xh, gamma, slg, slb),
+    }
+}
+
+/// LayerNorm backward pass 2 for one row:
+/// `dx = rs · (dy·γ − m1 − xhat·m2)`.
+#[inline]
+pub fn ln_dx_row(
+    t: Tier,
+    dy: &[f32],
+    xh: &[f32],
+    gamma: &[f32],
+    rs: f32,
+    m1: f32,
+    m2: f32,
+    dx: &mut [f32],
+) {
+    debug_assert!(xh.len() >= dy.len() && gamma.len() >= dy.len() && dx.len() >= dy.len());
+    match t {
+        Tier::Scalar => ln_dx_row_scalar(dy, xh, gamma, rs, m1, m2, dx),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::ln_dx_row(dy, xh, gamma, rs, m1, m2, dx) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::ln_dx_row(dy, xh, gamma, rs, m1, m2, dx) },
+        _ => ln_dx_row_scalar(dy, xh, gamma, rs, m1, m2, dx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Tiers to exercise: the scalar oracle always, plus the native tier
+    /// when the CPU has one (regardless of NANOGNS_FORCE_SCALAR — the
+    /// instructions are still executable, only the dispatch is pinned).
+    fn tiers() -> Vec<Tier> {
+        let mut v = vec![Tier::Scalar];
+        if let Some(t) = native_tier() {
+            v.push(t);
+        }
+        v
+    }
+
+    /// Lengths crossing every lane boundary: empty, sub-lane, 4/8/16/32
+    /// multiples and their ±1 neighbours (the tails).
+    const LENS: [usize; 18] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 100];
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn dot_all_tiers_match_f64_reference() {
+        let mut rng = Rng::seed_from_u64(21);
+        for n in LENS {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            for t in tiers() {
+                let got = dot_tier(t, &a, &b) as f64;
+                assert!(rel_close(got, want, 1e-4), "tier={} n={n}: {got} vs {want}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dots4_matches_single_dots_per_tier() {
+        let mut rng = Rng::seed_from_u64(22);
+        for k in LENS {
+            let x = randv(&mut rng, k);
+            let ws: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut rng, k)).collect();
+            for t in tiers() {
+                let mut out = [0f32; 4];
+                dots4(t, &x, &ws[0], &ws[1], &ws[2], &ws[3], &mut out);
+                for c in 0..4 {
+                    let single = dot_tier(t, &x, &ws[c]) as f64;
+                    assert!(
+                        rel_close(out[c] as f64, single, 1e-5),
+                        "tier={} k={k} c={c}",
+                        t.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dots4_is_bitwise_single_dot() {
+        let mut rng = Rng::seed_from_u64(23);
+        for k in LENS {
+            let x = randv(&mut rng, k);
+            let ws: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut rng, k)).collect();
+            let mut out = [0f32; 4];
+            dots4(Tier::Scalar, &x, &ws[0], &ws[1], &ws[2], &ws[3], &mut out);
+            for c in 0..4 {
+                assert_eq!(out[c].to_bits(), dot_scalar(&x, &ws[c]).to_bits(), "k={k} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_all_tiers_match_f64_reference() {
+        let mut rng = Rng::seed_from_u64(24);
+        for n in LENS {
+            let x = randv(&mut rng, n);
+            let y0 = randv(&mut rng, n);
+            let a = rng.normal() as f32;
+            for t in tiers() {
+                let mut y = y0.clone();
+                axpy(t, a, &x, &mut y);
+                for j in 0..n {
+                    let want = y0[j] as f64 + a as f64 * x[j] as f64;
+                    assert!(
+                        rel_close(y[j] as f64, want, 1e-5),
+                        "tier={} n={n} j={j}",
+                        t.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sums_all_tiers_match_f64_reference() {
+        let mut rng = Rng::seed_from_u64(25);
+        for n in LENS {
+            let a = randv(&mut rng, n);
+            let want: f64 = a.iter().map(|&v| v as f64).sum();
+            let mean = if n == 0 { 0.0 } else { (want / n as f64) as f32 };
+            let want_sq: f64 = a.iter().map(|&v| (v as f64 - mean as f64).powi(2)).sum();
+            for t in tiers() {
+                assert!(rel_close(sum(t, &a) as f64, want, 1e-4), "sum tier={} n={n}", t.name());
+                assert!(
+                    rel_close(sq_dev_sum(t, &a, mean) as f64, want_sq, 1e-4),
+                    "sq_dev tier={} n={n}",
+                    t.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ln_rows_all_tiers_match_scalar_oracle() {
+        let mut rng = Rng::seed_from_u64(26);
+        for d in LENS {
+            if d == 0 {
+                continue;
+            }
+            let row = randv(&mut rng, d);
+            let gamma: Vec<f32> = (0..d).map(|j| 1.0 + 0.05 * j as f32).collect();
+            let beta = randv(&mut rng, d);
+            let dy = randv(&mut rng, d);
+            let mean = sum_scalar(&row) / d as f32;
+            let rs = 1.0 / (sq_dev_sum_scalar(&row, mean) / d as f32 + 1e-5).sqrt();
+
+            let mut xh_ref = vec![0f32; d];
+            let mut out_ref = vec![0f32; d];
+            ln_fwd_row_scalar(&row, &gamma, &beta, mean, rs, &mut xh_ref, &mut out_ref);
+            let mut slg_ref = vec![0.1f32; d];
+            let mut slb_ref = vec![0.2f32; d];
+            let (s1_ref, s2_ref) =
+                ln_bwd_row_acc_scalar(&dy, &xh_ref, &gamma, &mut slg_ref, &mut slb_ref);
+            let mut dx_ref = vec![0f32; d];
+            let (m1_ref, m2_ref) = (s1_ref / d as f32, s2_ref / d as f32);
+            ln_dx_row_scalar(&dy, &xh_ref, &gamma, rs, m1_ref, m2_ref, &mut dx_ref);
+
+            for t in tiers() {
+                let mut xh = vec![0f32; d];
+                let mut out = vec![0f32; d];
+                ln_fwd_row(t, &row, &gamma, &beta, mean, rs, &mut xh, &mut out);
+                let mut slg = vec![0.1f32; d];
+                let mut slb = vec![0.2f32; d];
+                let (s1, s2) = ln_bwd_row_acc(t, &dy, &xh, &gamma, &mut slg, &mut slb);
+                let mut dx = vec![0f32; d];
+                ln_dx_row(t, &dy, &xh, &gamma, rs, s1 / d as f32, s2 / d as f32, &mut dx);
+                let checks: [(&str, &[f32], &[f32], f64); 5] = [
+                    ("xh", &xh, &xh_ref, 1e-5),
+                    ("out", &out, &out_ref, 1e-5),
+                    ("slg", &slg, &slg_ref, 1e-4),
+                    ("slb", &slb, &slb_ref, 1e-4),
+                    ("dx", &dx, &dx_ref, 1e-3),
+                ];
+                for (what, got, want, tol) in checks {
+                    for j in 0..d {
+                        assert!(
+                            rel_close(got[j] as f64, want[j] as f64, tol),
+                            "{what} tier={} d={d} j={j}",
+                            t.name()
+                        );
+                    }
+                }
+                assert!(rel_close(s1 as f64, s1_ref as f64, 1e-3), "s1 tier={} d={d}", t.name());
+                assert!(rel_close(s2 as f64, s2_ref as f64, 1e-3), "s2 tier={} d={d}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tier_detection_is_cached_and_valid() {
+        let t = tier();
+        assert_eq!(t, tier(), "tier must be stable across calls");
+        match t {
+            Tier::Scalar => {}
+            native => assert_eq!(Some(native), native_tier(), "dispatched tier must be executable"),
+        }
+        assert!(!t.name().is_empty());
+    }
+}

@@ -20,14 +20,20 @@
 //! fused path — like the Pallas kernels in `python/compile/kernels/` — is
 //! validated against, and the "before" baseline in the train_step bench.
 //!
-//! The hot path is data-parallel over examples and output rows via
-//! `std::thread` scoped threads (`NANOGNS_THREADS` overrides the worker
-//! count); every reduction has a fixed order, so results are bitwise
-//! identical for any worker count. Activation workspaces are pre-allocated
-//! once and reused across steps; [`workspace_bytes`] estimates their size
-//! and construction fails with a clear error when it would exceed the
-//! configurable cap (`NANOGNS_WS_CAP_MB`, default 1 GiB) instead of
-//! OOMing mid-run.
+//! The hot path is data-parallel over examples and output rows via a
+//! persistent [`WorkerPool`] owned by the backend (`NANOGNS_THREADS`
+//! overrides the worker count): threads are spawned once at construction
+//! and parked between parallel regions, so steady-state training creates
+//! zero threads (`kernels::threads::total_threads_spawned`) and the
+//! dispatch itself allocates nothing. Inner loops dispatch through
+//! `kernels::simd` (AVX2/FMA, NEON, or the scalar oracle under
+//! `NANOGNS_FORCE_SCALAR=1`); every reduction has a fixed order, so
+//! results are bitwise identical for any worker count within a dispatch
+//! tier. Activation workspaces are pre-allocated once and reused across
+//! steps — workers write disjoint row blocks of the same pinned buffers;
+//! [`workspace_bytes`] estimates their size and construction fails with
+//! a clear error when it would exceed the configurable cap
+//! (`NANOGNS_WS_CAP_MB`, default 1 GiB) instead of OOMing mid-run.
 //!
 //! Conventions match the PJRT artifacts (see DESIGN.md §3):
 //! * `grad_step` returns gradients of the **mean-microbatch** loss, i.e.
@@ -50,6 +56,7 @@ use crate::runtime::kernels::matmul::dot as vdot;
 use crate::runtime::kernels::{
     bias_sqnorms_acc, default_workers, ln_bwd_fused, ln_fwd, matmul_at_b_acc, matmul_xw_t,
     matmul_xwt, par_row_blocks, par_row_blocks2, transpose, transpose_par, weight_sqnorms,
+    WorkerPool,
 };
 use crate::runtime::manifest::{AdamHypers, ModelEntry, ParamSpec};
 use crate::runtime::tensor::Tensor;
@@ -496,8 +503,8 @@ fn sqnorm64(v: &[f32]) -> f64 {
 }
 
 /// Elementwise GELU over `rows × row_len`, threaded over row blocks.
-fn gelu_batched(workers: usize, pre: &[f32], rows: usize, row_len: usize, act: &mut [f32]) {
-    par_row_blocks(workers, rows, row_len, act, |r0, r1, ab| {
+fn gelu_batched(pool: &WorkerPool, pre: &[f32], rows: usize, row_len: usize, act: &mut [f32]) {
+    par_row_blocks(pool, rows, row_len, act, |r0, r1, ab| {
         let src = &pre[r0 * row_len..r1 * row_len];
         for (a, &u) in ab.iter_mut().zip(src) {
             *a = gelu(u);
@@ -506,8 +513,8 @@ fn gelu_batched(workers: usize, pre: &[f32], rows: usize, row_len: usize, act: &
 }
 
 /// In-place `dact *= gelu'(pre)`, threaded over row blocks.
-fn gelu_bwd_batched(workers: usize, pre: &[f32], rows: usize, row_len: usize, dact: &mut [f32]) {
-    par_row_blocks(workers, rows, row_len, dact, |r0, r1, db| {
+fn gelu_bwd_batched(pool: &WorkerPool, pre: &[f32], rows: usize, row_len: usize, dact: &mut [f32]) {
+    par_row_blocks(pool, rows, row_len, dact, |r0, r1, db| {
         let src = &pre[r0 * row_len..r1 * row_len];
         for (g, &u) in db.iter_mut().zip(src) {
             *g *= gelu_grad(u);
@@ -519,7 +526,7 @@ fn gelu_bwd_batched(workers: usize, pre: &[f32], rows: usize, row_len: usize, da
 /// Writes softmax weights (`att_p`, lower triangle) and concatenated head
 /// outputs (`att_out`).
 fn attention_forward(
-    workers: usize,
+    pool: &WorkerPool,
     qkv: &[f32],
     bsz: usize,
     t: usize,
@@ -530,7 +537,7 @@ fn attention_forward(
     att_out: &mut [f32],
 ) {
     let hd = d / heads;
-    par_row_blocks2(workers, bsz, heads * t * t, att_p, t * d, att_out, |b0, b1, pch, och| {
+    par_row_blocks2(pool, bsz, heads * t * t, att_p, t * d, att_out, |b0, b1, pch, och| {
         let mut srow = vec![0f32; t];
         for b in b0..b1 {
             let q = &qkv[b * t * 3 * d..(b + 1) * t * 3 * d];
@@ -574,7 +581,7 @@ fn attention_forward(
 /// Reads the cached `qkv`/`att_p` and the output-projection gradient
 /// `datt_out`; writes `dqkv`.
 fn attention_backward(
-    workers: usize,
+    pool: &WorkerPool,
     qkv: &[f32],
     att_p: &[f32],
     datt_out: &[f32],
@@ -586,7 +593,7 @@ fn attention_backward(
     dqkv: &mut [f32],
 ) {
     let hd = d / heads;
-    par_row_blocks(workers, bsz, t * 3 * d, dqkv, |b0, b1, dqb| {
+    par_row_blocks(pool, bsz, t * 3 * d, dqkv, |b0, b1, dqb| {
         let mut dp = vec![0f32; t];
         for b in b0..b1 {
             let q = &qkv[b * t * 3 * d..(b + 1) * t * 3 * d];
@@ -635,7 +642,7 @@ fn attention_backward(
 /// In-place softmax over `[bsz·t, v]` logits plus mean-token cross-entropy
 /// per example, threaded over examples. Targets must be pre-validated.
 fn softmax_ce(
-    workers: usize,
+    pool: &WorkerPool,
     targets: &[i32],
     bsz: usize,
     t: usize,
@@ -643,7 +650,7 @@ fn softmax_ce(
     logits: &mut [f32],
     losses: &mut [f32],
 ) {
-    par_row_blocks2(workers, bsz, t * v, logits, 1, losses, |b0, b1, lch, lossb| {
+    par_row_blocks2(pool, bsz, t * v, logits, 1, losses, |b0, b1, lch, lossb| {
         for b in b0..b1 {
             let rows = &mut lch[(b - b0) * t * v..(b - b0 + 1) * t * v];
             let mut lsum = 0f64;
@@ -703,9 +710,10 @@ pub struct ReferenceBackend {
     entry: ModelEntry,
     /// Per-parameter index into `STATS_ORDER`.
     ltype_idx: Vec<usize>,
-    /// Worker threads for the fused hot path (results are worker-count
+    /// Persistent worker pool for the fused hot path: threads spawn once
+    /// here and park between parallel regions (results are worker-count
     /// invariant; see `runtime::kernels::threads`).
-    workers: usize,
+    pool: WorkerPool,
     /// Workspace size cap in bytes (`None` = uncapped).
     ws_cap: Option<u64>,
     /// Lazily built, reused activation workspace.
@@ -765,7 +773,7 @@ impl ReferenceBackend {
             cfg,
             entry,
             ltype_idx,
-            workers: workers.max(1),
+            pool: WorkerPool::new(workers.max(1)),
             ws_cap,
             ws: Mutex::new(None),
         })
@@ -1121,7 +1129,7 @@ impl ReferenceBackend {
         let scale = 1.0 / (hd as f32).sqrt();
         let bsz = batch.batch;
         let m = bsz * t;
-        let nw = self.workers;
+        let nw = &self.pool;
         let gi = self.lnf_g_idx();
 
         let Workspace { x, delta, wt, probs, lnf_xhat, lnf_rstd, lnf_out, ex_losses, blocks, .. } =
@@ -1203,7 +1211,11 @@ impl ReferenceBackend {
     /// Batched backward with fused per-example norm emission (the paper's
     /// "simultaneous" method). Consumes the forward caches in `ws`;
     /// accumulates gradients of the mean-microbatch loss into `grads` and
-    /// `sum_b ||w'_b||²` into `stats` per layer type.
+    /// `sum_b ||w'_b||²` into `stats` per layer type. With
+    /// `with_stats = false` every norm contraction and stats reduction is
+    /// skipped while the gradient accumulation order stays bitwise
+    /// identical — the norms-off backward that measures the paper's
+    /// near-zero-overhead claim.
     fn batched_backward(
         &self,
         ps: &[&[f32]],
@@ -1211,6 +1223,7 @@ impl ReferenceBackend {
         ws: &mut Workspace,
         grads: &mut [Vec<f32>],
         stats: &mut [f64; N_TYPES],
+        with_stats: bool,
     ) {
         let d = self.cfg.d_model;
         let t = self.cfg.seq_len;
@@ -1220,7 +1233,7 @@ impl ReferenceBackend {
         let scale = 1.0 / (hd as f32).sqrt();
         let bsz = batch.batch;
         let m = bsz * t;
-        let nw = self.workers;
+        let nw = &self.pool;
         let gi = self.lnf_g_idx();
 
         let Workspace {
@@ -1255,8 +1268,10 @@ impl ReferenceBackend {
         }
 
         // lm_head (no bias): Gram norms + batched dw + dx.
-        weight_sqnorms(nw, lnf_out, probs, bsz, t, d, v, per_ex);
-        add_stats(stats, self.ltype_idx[gi + 2], per_ex, bsz);
+        if with_stats {
+            weight_sqnorms(nw, lnf_out, probs, bsz, t, d, v, per_ex);
+            add_stats(stats, self.ltype_idx[gi + 2], per_ex, bsz);
+        }
         transpose_par(nw, lnf_out, m, d, xt);
         matmul_at_b_acc(nw, xt, probs, m, d, v, &mut grads[gi + 2]);
         matmul_xw_t(nw, probs, ps[gi + 2], m, d, v, tmp1);
@@ -1265,29 +1280,67 @@ impl ReferenceBackend {
         {
             let (dg, db) = two_mut(grads, gi, gi + 1);
             ln_bwd_fused(
-                nw, tmp1, lnf_xhat, lnf_rstd, ps[gi], bsz, t, d, dx, ex_scratch, dg, db, per_ex,
+                nw,
+                tmp1,
+                lnf_xhat,
+                lnf_rstd,
+                ps[gi],
+                bsz,
+                t,
+                d,
+                dx,
+                ex_scratch,
+                dg,
+                db,
+                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
             );
         }
-        add_stats(stats, self.ltype_idx[gi], per_ex, bsz);
+        if with_stats {
+            add_stats(stats, self.ltype_idx[gi], per_ex, bsz);
+        }
 
         for i in (0..self.cfg.n_layers).rev() {
             let base = self.block_base(i);
             let blk = &blocks[i];
 
             // MLP branch: x_out = x_mid + proj(gelu(fc(ln2(x_mid)))).
-            weight_sqnorms(nw, &blk.fc_act, dx, bsz, t, 4 * d, d, per_ex);
-            add_stats(stats, self.ltype_idx[base + W_PROJ], per_ex, bsz);
-            bias_sqnorms_acc(dx, bsz, t, d, &mut grads[base + B_PROJ], bias_scratch, per_ex);
-            add_stats(stats, self.ltype_idx[base + B_PROJ], per_ex, bsz);
+            if with_stats {
+                weight_sqnorms(nw, &blk.fc_act, dx, bsz, t, 4 * d, d, per_ex);
+                add_stats(stats, self.ltype_idx[base + W_PROJ], per_ex, bsz);
+            }
+            bias_sqnorms_acc(
+                dx,
+                bsz,
+                t,
+                d,
+                &mut grads[base + B_PROJ],
+                bias_scratch,
+                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+            );
+            if with_stats {
+                add_stats(stats, self.ltype_idx[base + B_PROJ], per_ex, bsz);
+            }
             transpose_par(nw, &blk.fc_act, m, 4 * d, xt);
             matmul_at_b_acc(nw, xt, dx, m, 4 * d, d, &mut grads[base + W_PROJ]);
             matmul_xw_t(nw, dx, ps[base + W_PROJ], m, 4 * d, d, delta);
             gelu_bwd_batched(nw, &blk.fc_pre, m, 4 * d, delta);
 
-            weight_sqnorms(nw, &blk.ln2_out, delta, bsz, t, d, 4 * d, per_ex);
-            add_stats(stats, self.ltype_idx[base + W_FC], per_ex, bsz);
-            bias_sqnorms_acc(delta, bsz, t, 4 * d, &mut grads[base + B_FC], bias_scratch, per_ex);
-            add_stats(stats, self.ltype_idx[base + B_FC], per_ex, bsz);
+            if with_stats {
+                weight_sqnorms(nw, &blk.ln2_out, delta, bsz, t, d, 4 * d, per_ex);
+                add_stats(stats, self.ltype_idx[base + W_FC], per_ex, bsz);
+            }
+            bias_sqnorms_acc(
+                delta,
+                bsz,
+                t,
+                4 * d,
+                &mut grads[base + B_FC],
+                bias_scratch,
+                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+            );
+            if with_stats {
+                add_stats(stats, self.ltype_idx[base + B_FC], per_ex, bsz);
+            }
             transpose_par(nw, &blk.ln2_out, m, d, xt);
             matmul_at_b_acc(nw, xt, delta, m, d, 4 * d, &mut grads[base + W_FC]);
             matmul_xw_t(nw, delta, ps[base + W_FC], m, d, 4 * d, tmp1);
@@ -1307,27 +1360,53 @@ impl ReferenceBackend {
                     ex_scratch,
                     dg,
                     db,
-                    per_ex,
+                    if with_stats { Some(per_ex.as_mut_slice()) } else { None },
                 );
             }
-            add_stats(stats, self.ltype_idx[base + LN2_G], per_ex, bsz);
+            if with_stats {
+                add_stats(stats, self.ltype_idx[base + LN2_G], per_ex, bsz);
+            }
             add_into(&mut dx[..m * d], &tmp2[..m * d]);
 
             // Attention branch: x_mid = x_in + w_o(att(ln1(x_in))).
-            weight_sqnorms(nw, &blk.att_out, dx, bsz, t, d, d, per_ex);
-            add_stats(stats, self.ltype_idx[base + W_O], per_ex, bsz);
-            bias_sqnorms_acc(dx, bsz, t, d, &mut grads[base + B_O], bias_scratch, per_ex);
-            add_stats(stats, self.ltype_idx[base + B_O], per_ex, bsz);
+            if with_stats {
+                weight_sqnorms(nw, &blk.att_out, dx, bsz, t, d, d, per_ex);
+                add_stats(stats, self.ltype_idx[base + W_O], per_ex, bsz);
+            }
+            bias_sqnorms_acc(
+                dx,
+                bsz,
+                t,
+                d,
+                &mut grads[base + B_O],
+                bias_scratch,
+                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+            );
+            if with_stats {
+                add_stats(stats, self.ltype_idx[base + B_O], per_ex, bsz);
+            }
             transpose_par(nw, &blk.att_out, m, d, xt);
             matmul_at_b_acc(nw, xt, dx, m, d, d, &mut grads[base + W_O]);
             matmul_xw_t(nw, dx, ps[base + W_O], m, d, d, tmp1);
 
             attention_backward(nw, &blk.qkv, &blk.att_p, tmp1, bsz, t, d, heads, scale, delta);
 
-            weight_sqnorms(nw, &blk.ln1_out, delta, bsz, t, d, 3 * d, per_ex);
-            add_stats(stats, self.ltype_idx[base + W_QKV], per_ex, bsz);
-            bias_sqnorms_acc(delta, bsz, t, 3 * d, &mut grads[base + B_QKV], bias_scratch, per_ex);
-            add_stats(stats, self.ltype_idx[base + B_QKV], per_ex, bsz);
+            if with_stats {
+                weight_sqnorms(nw, &blk.ln1_out, delta, bsz, t, d, 3 * d, per_ex);
+                add_stats(stats, self.ltype_idx[base + W_QKV], per_ex, bsz);
+            }
+            bias_sqnorms_acc(
+                delta,
+                bsz,
+                t,
+                3 * d,
+                &mut grads[base + B_QKV],
+                bias_scratch,
+                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+            );
+            if with_stats {
+                add_stats(stats, self.ltype_idx[base + B_QKV], per_ex, bsz);
+            }
             transpose_par(nw, &blk.ln1_out, m, d, xt);
             matmul_at_b_acc(nw, xt, delta, m, d, 3 * d, &mut grads[base + W_QKV]);
             matmul_xw_t(nw, delta, ps[base + W_QKV], m, d, 3 * d, tmp1);
@@ -1347,45 +1426,49 @@ impl ReferenceBackend {
                     ex_scratch,
                     dg,
                     db,
-                    per_ex,
+                    if with_stats { Some(per_ex.as_mut_slice()) } else { None },
                 );
             }
-            add_stats(stats, self.ltype_idx[base + LN1_G], per_ex, bsz);
+            if with_stats {
+                add_stats(stats, self.ltype_idx[base + LN1_G], per_ex, bsz);
+            }
             add_into(&mut dx[..m * d], &tmp2[..m * d]);
         }
 
         // Embedding: per-example norms need token-id grouping for wte
         // (rows hitting the same id sum before the norm); wpe rows are hit
         // once per example, so its per-example norm is just Σ_t ||dx_t||².
-        let emb_idx = self.ltype_idx[0];
-        for b in 0..bsz {
-            let mut nslots = 0usize;
-            for ti in 0..t {
-                let r = b * t + ti;
-                let id = batch.inputs[r] as usize;
-                let src = &dx[r * d..(r + 1) * d];
-                let slot = emb_slot[id];
-                if slot == usize::MAX {
-                    emb_slot[id] = nslots;
-                    emb_rows[nslots * d..(nslots + 1) * d].copy_from_slice(src);
-                    nslots += 1;
-                } else {
-                    let dst = &mut emb_rows[slot * d..(slot + 1) * d];
-                    for j in 0..d {
-                        dst[j] += src[j];
+        if with_stats {
+            let emb_idx = self.ltype_idx[0];
+            for b in 0..bsz {
+                let mut nslots = 0usize;
+                for ti in 0..t {
+                    let r = b * t + ti;
+                    let id = batch.inputs[r] as usize;
+                    let src = &dx[r * d..(r + 1) * d];
+                    let slot = emb_slot[id];
+                    if slot == usize::MAX {
+                        emb_slot[id] = nslots;
+                        emb_rows[nslots * d..(nslots + 1) * d].copy_from_slice(src);
+                        nslots += 1;
+                    } else {
+                        let dst = &mut emb_rows[slot * d..(slot + 1) * d];
+                        for j in 0..d {
+                            dst[j] += src[j];
+                        }
                     }
                 }
+                let mut sq = 0f64;
+                for s in 0..nslots {
+                    sq += sqnorm64(&emb_rows[s * d..(s + 1) * d]);
+                }
+                for ti in 0..t {
+                    let r = b * t + ti;
+                    emb_slot[batch.inputs[r] as usize] = usize::MAX;
+                    sq += sqnorm64(&dx[r * d..(r + 1) * d]); // wpe
+                }
+                stats[emb_idx] += sq;
             }
-            let mut sq = 0f64;
-            for s in 0..nslots {
-                sq += sqnorm64(&emb_rows[s * d..(s + 1) * d]);
-            }
-            for ti in 0..t {
-                let r = b * t + ti;
-                emb_slot[batch.inputs[r] as usize] = usize::MAX;
-                sq += sqnorm64(&dx[r * d..(r + 1) * d]); // wpe
-            }
-            stats[emb_idx] += sq;
         }
         for r in 0..m {
             let id = batch.inputs[r] as usize;
@@ -1408,6 +1491,48 @@ fn two_mut(eg: &mut [Vec<f32>], a: usize, b: usize) -> (&mut [f32], &mut [f32]) 
     assert!(a < b);
     let (lo, hi) = eg.split_at_mut(b);
     (&mut lo[a], &mut hi[0])
+}
+
+impl ReferenceBackend {
+    fn grad_step_impl(
+        &self,
+        params: &[Buffer],
+        batch: &Batch,
+        with_stats: bool,
+    ) -> Result<GradOut> {
+        self.check_batch(batch)?;
+        let ps = self.host_params(params)?;
+        let mut guard =
+            self.ws.lock().map_err(|_| anyhow!("reference workspace mutex poisoned"))?;
+        let ws = self.ensure_workspace(&mut *guard, batch.batch)?;
+
+        let mut acc: Vec<Vec<f32>> =
+            self.entry.params.iter().map(|p| vec![0f32; p.numel()]).collect();
+        let mut stats = [0f64; N_TYPES];
+        let loss = self.batched_forward(&ps, batch, ws)?;
+        self.batched_backward(&ps, batch, ws, &mut acc, &mut stats, with_stats);
+        drop(guard);
+
+        let grads = acc
+            .into_iter()
+            .zip(&self.entry.params)
+            .map(|(data, p)| Ok(Buffer::Host(Tensor::new(p.shape.clone(), data)?)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut stats32 = [0f32; N_TYPES];
+        for (dst, src) in stats32.iter_mut().zip(stats) {
+            *dst = src as f32;
+        }
+        Ok(GradOut { loss, grads, stats: stats32 })
+    }
+
+    /// [`Backend::grad_step`] with every per-example norm contraction
+    /// skipped (`stats` comes back all zero); gradients and loss are
+    /// bitwise identical to the full step. This is the norms-off baseline
+    /// the benches use to measure the paper's overhead claim (§3:
+    /// per-example norms at near-zero extra cost).
+    pub fn grad_step_no_stats(&self, params: &[Buffer], batch: &Batch) -> Result<GradOut> {
+        self.grad_step_impl(params, batch, false)
+    }
 }
 
 impl Backend for ReferenceBackend {
@@ -1452,29 +1577,7 @@ impl Backend for ReferenceBackend {
     /// stats vector come out of one pass over `[B·T, ...]` tensors
     /// (the paper's §3 "simultaneous" method; see `runtime::kernels`).
     fn grad_step(&self, params: &[Buffer], batch: &Batch) -> Result<GradOut> {
-        self.check_batch(batch)?;
-        let ps = self.host_params(params)?;
-        let mut guard =
-            self.ws.lock().map_err(|_| anyhow!("reference workspace mutex poisoned"))?;
-        let ws = self.ensure_workspace(&mut *guard, batch.batch)?;
-
-        let mut acc: Vec<Vec<f32>> =
-            self.entry.params.iter().map(|p| vec![0f32; p.numel()]).collect();
-        let mut stats = [0f64; N_TYPES];
-        let loss = self.batched_forward(&ps, batch, ws)?;
-        self.batched_backward(&ps, batch, ws, &mut acc, &mut stats);
-        drop(guard);
-
-        let grads = acc
-            .into_iter()
-            .zip(&self.entry.params)
-            .map(|(data, p)| Ok(Buffer::Host(Tensor::new(p.shape.clone(), data)?)))
-            .collect::<Result<Vec<_>>>()?;
-        let mut stats32 = [0f32; N_TYPES];
-        for (dst, src) in stats32.iter_mut().zip(stats) {
-            *dst = src as f32;
-        }
-        Ok(GradOut { loss, grads, stats: stats32 })
+        self.grad_step_impl(params, batch, true)
     }
 
     fn accumulate(&self, acc: Vec<Buffer>, grads: &[Buffer]) -> Result<Vec<Buffer>> {
@@ -1915,6 +2018,24 @@ mod tests {
                 be.eval(&params, &batch).unwrap(),
                 "workers={w}"
             );
+        }
+    }
+
+    /// The norms-off backward (`grad_step_no_stats`, the overhead-bench
+    /// baseline) must return bitwise-identical loss and gradients — only
+    /// the stats vector goes to zero.
+    #[test]
+    fn no_stats_step_keeps_gradients_bitwise_invariant() {
+        let be = ReferenceBackend::new(tiny_cfg(3)).unwrap();
+        let params = be.init(21).unwrap();
+        let batch = tiny_batch(3, 6, 11, 17);
+        let full = be.grad_step(&params, &batch).unwrap();
+        let bare = be.grad_step_no_stats(&params, &batch).unwrap();
+        assert_eq!(full.loss, bare.loss);
+        assert!(full.stats.iter().any(|&s| s > 0.0));
+        assert!(bare.stats.iter().all(|&s| s == 0.0));
+        for (x, y) in full.grads.iter().zip(&bare.grads) {
+            assert_eq!(x.as_host().unwrap(), y.as_host().unwrap());
         }
     }
 

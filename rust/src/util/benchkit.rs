@@ -135,11 +135,21 @@ impl Bench {
 #[derive(Default)]
 pub struct BenchJson {
     entries: BTreeMap<String, (f64, usize, f64)>,
+    meta: BTreeMap<String, Value>,
 }
 
 impl BenchJson {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Stamp the report as a *recorded* baseline (written by the
+    /// record-baseline workflow on real CI hardware). Absolute-median
+    /// gates in [`compare_bench_reports`] only arm against recorded
+    /// baselines; hand-written floors leave this off.
+    pub fn set_recorded(&mut self, source: &str) {
+        self.meta.insert("recorded".to_string(), Value::Bool(true));
+        self.meta.insert("source".to_string(), Value::Str(source.to_string()));
     }
 
     /// Record one benchmark under `name` (conventionally
@@ -153,6 +163,9 @@ impl BenchJson {
 
     pub fn to_value(&self) -> Value {
         let mut top = BTreeMap::new();
+        if !self.meta.is_empty() {
+            top.insert("_meta".to_string(), Value::Obj(self.meta.clone()));
+        }
         for (name, (median, samples, thr)) in &self.entries {
             let mut e = BTreeMap::new();
             e.insert("median_ns".to_string(), Value::Num(*median));
@@ -219,21 +232,43 @@ pub struct BenchGate {
     pub pass: bool,
 }
 
+/// One kernel entry's absolute-median gate verdict. Unlike the portable
+/// ratio gate, absolute medians only mean something against a baseline
+/// recorded on the same CI hardware pool, so these gates arm only when
+/// the baseline carries `_meta.recorded = true` (stamped by the
+/// record-baseline workflow).
+#[derive(Debug, Clone)]
+pub struct BenchAbsGate {
+    pub name: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// `(current - baseline) / baseline`, in percent (positive = slower).
+    pub regress_pct: f64,
+    pub pass: bool,
+}
+
 /// Full outcome of comparing two `BENCH_*.json` reports.
 #[derive(Debug, Clone)]
 pub struct BenchCompare {
     pub deltas: Vec<BenchDelta>,
     pub gates: Vec<BenchGate>,
+    pub abs_gates: Vec<BenchAbsGate>,
+    /// Whether the baseline was a recorded run (arms the absolute gates).
+    pub baseline_recorded: bool,
 }
 
 impl BenchCompare {
     pub fn all_pass(&self) -> bool {
-        self.gates.iter().all(|g| g.pass)
+        self.gates.iter().all(|g| g.pass) && self.abs_gates.iter().all(|g| g.pass)
     }
 }
 
 const FUSED_ENTRY: &str = "grad_microbatch";
 const ORACLE_ENTRY: &str = "grad_microbatch_per_example";
+/// Bench groups gated on absolute medians (kernel microbenches: small,
+/// allocation-free, low-variance — the only entries where an absolute
+/// wall-clock budget is meaningful on fixed CI hardware).
+const ABS_GATE_PREFIX: &str = "kernel_";
 
 fn median_of(report: &Value, name: &str) -> Option<f64> {
     let m = report.opt(name)?.opt("median_ns")?.as_f64().ok()?;
@@ -244,20 +279,36 @@ fn median_of(report: &Value, name: &str) -> Option<f64> {
 /// present in both, plus the fused-path speedup gate per `step_*` group
 /// carrying both the fused and per-example entries in the baseline.
 /// A gate fails when the current speedup falls more than
-/// `max_regress_pct` percent below the baseline speedup. Every gateable
-/// baseline group **must** be present in the current report — a missing
-/// group is an error, not a silent pass, so a bench that crashes or
-/// renames entries cannot quietly weaken the gate.
+/// `max_regress_pct` percent below the baseline speedup.
+///
+/// When the baseline carries `_meta.recorded = true` (i.e. it came from
+/// a real run on the CI hardware pool, not a hand-written floor), every
+/// `kernel_*` entry is additionally gated on its *absolute* median:
+/// current may be at most `max_abs_regress_pct` percent slower.
+///
+/// Every gateable baseline group **must** be present in the current
+/// report — a missing group is an error, not a silent pass, so a bench
+/// that crashes or renames entries cannot quietly weaken the gate.
 pub fn compare_bench_reports(
     baseline: &Value,
     current: &Value,
     max_regress_pct: f64,
+    max_abs_regress_pct: f64,
 ) -> anyhow::Result<BenchCompare> {
     let base_obj = baseline.as_obj()?;
+    let baseline_recorded = baseline
+        .opt("_meta")
+        .and_then(|m| m.opt("recorded"))
+        .and_then(|v| v.as_bool().ok())
+        .unwrap_or(false);
     let mut deltas = Vec::new();
     let mut gates = Vec::new();
+    let mut abs_gates = Vec::new();
     let mut missing: Vec<String> = Vec::new();
     for (name, entry) in base_obj {
+        if name.starts_with('_') {
+            continue; // _meta / _note annotations, not bench entries
+        }
         let Ok(b) = entry.get("median_ns").and_then(|v| v.as_f64()) else { continue };
         if !(b.is_finite() && b > 0.0) {
             continue;
@@ -270,7 +321,24 @@ pub fn compare_bench_reports(
                 delta_pct: 100.0 * (c - b) / b,
             });
         }
-        // Gate accounting: driven by the *baseline's* fused/oracle pairs.
+        // Absolute gate: kernel microbench medians vs a recorded baseline.
+        if baseline_recorded && name.starts_with(ABS_GATE_PREFIX) {
+            match median_of(current, name) {
+                Some(c) => {
+                    let regress_pct = 100.0 * (c - b) / b;
+                    abs_gates.push(BenchAbsGate {
+                        name: name.clone(),
+                        baseline_ns: b,
+                        current_ns: c,
+                        regress_pct,
+                        pass: regress_pct <= max_abs_regress_pct,
+                    });
+                }
+                None => missing.push(name.clone()),
+            }
+        }
+        // Ratio gate accounting: driven by the *baseline's* fused/oracle
+        // pairs.
         let Some(group) = name.strip_suffix(&format!("/{FUSED_ENTRY}")) else { continue };
         let oracle = format!("{group}/{ORACLE_ENTRY}");
         let Some(bo) = median_of(baseline, &oracle) else { continue };
@@ -291,14 +359,14 @@ pub fn compare_bench_reports(
     }
     anyhow::ensure!(
         missing.is_empty(),
-        "current report is missing gated groups {missing:?}: the bench dropped or renamed \
-         {FUSED_ENTRY}/{ORACLE_ENTRY} entries the baseline gates on"
+        "current report is missing gated entries {missing:?}: the bench dropped or renamed \
+         entries the baseline gates on"
     );
     anyhow::ensure!(
         !gates.is_empty(),
         "no gateable groups: baseline has no {FUSED_ENTRY}/{ORACLE_ENTRY} pairs"
     );
-    Ok(BenchCompare { deltas, gates })
+    Ok(BenchCompare { deltas, gates, abs_gates, baseline_recorded })
 }
 
 /// Nearest ancestor of `CARGO_MANIFEST_DIR` whose Cargo.toml declares
@@ -401,9 +469,10 @@ mod tests {
             ("step_small/grad_microbatch", 2_000.0),
             ("step_small/grad_microbatch_per_example", 7_600.0),
         ]);
-        let out = compare_bench_reports(&base, &cur, 15.0).unwrap();
+        let out = compare_bench_reports(&base, &cur, 15.0, 50.0).unwrap();
         assert!(out.all_pass(), "{:?}", out.gates);
         assert_eq!(out.gates.len(), 1);
+        assert!(!out.baseline_recorded && out.abs_gates.is_empty());
         let g = &out.gates[0];
         assert_eq!(g.group, "step_small");
         assert!((g.baseline_speedup - 4.0).abs() < 1e-9);
@@ -425,7 +494,7 @@ mod tests {
             ("step_small/grad_microbatch", 2_000.0),
             ("step_small/grad_microbatch_per_example", 4_000.0),
         ]);
-        let out = compare_bench_reports(&base, &cur, 15.0).unwrap();
+        let out = compare_bench_reports(&base, &cur, 15.0, 50.0).unwrap();
         assert!(!out.all_pass());
         assert!((out.gates[0].regress_pct - 50.0).abs() < 1e-9);
     }
@@ -434,7 +503,7 @@ mod tests {
     fn compare_rejects_reports_with_no_gateable_pairs() {
         let base = report(&[("step_small/eval_step", 500.0)]);
         let cur = report(&[("step_small/eval_step", 510.0)]);
-        assert!(compare_bench_reports(&base, &cur, 15.0).is_err());
+        assert!(compare_bench_reports(&base, &cur, 15.0, 50.0).is_err());
     }
 
     #[test]
@@ -451,7 +520,7 @@ mod tests {
             ("step_small/grad_microbatch", 1_000.0),
             ("step_small/grad_microbatch_per_example", 4_000.0),
         ]);
-        let err = compare_bench_reports(&base, &cur, 15.0).unwrap_err();
+        let err = compare_bench_reports(&base, &cur, 15.0, 50.0).unwrap_err();
         assert!(format!("{err}").contains("step_gone"), "{err}");
     }
 
@@ -468,9 +537,88 @@ mod tests {
             ("step_small/grad_microbatch_per_example", 4_000.0),
             ("step_small/parallel_rank_step_w4", 2_000.0),
         ]);
-        let out = compare_bench_reports(&base, &cur, 15.0).unwrap();
+        let out = compare_bench_reports(&base, &cur, 15.0, 50.0).unwrap();
         assert_eq!(out.gates.len(), 1);
         assert!(out.all_pass());
+    }
+
+    /// Same entries, baseline stamped as recorded: kernel_* medians gate
+    /// on absolute time, step_* entries never do.
+    fn recorded_report(entries: &[(&str, f64)]) -> Value {
+        let mut v = report(entries);
+        if let Value::Obj(m) = &mut v {
+            let mut meta = std::collections::BTreeMap::new();
+            meta.insert("recorded".to_string(), Value::Bool(true));
+            meta.insert("source".to_string(), Value::Str("test".to_string()));
+            m.insert("_meta".to_string(), Value::Obj(meta));
+        }
+        v
+    }
+
+    #[test]
+    fn abs_gates_arm_only_against_recorded_baselines() {
+        let entries: &[(&str, f64)] = &[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+            ("kernel_matmul/xwt_64x64", 10_000.0),
+        ];
+        // kernel entry 3x slower in current
+        let cur = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+            ("kernel_matmul/xwt_64x64", 30_000.0),
+        ]);
+        // unrecorded baseline: informational only, still passes
+        let out = compare_bench_reports(&report(entries), &cur, 15.0, 50.0).unwrap();
+        assert!(out.abs_gates.is_empty() && out.all_pass());
+        // recorded baseline: the 200% regression trips the 50% budget
+        let out = compare_bench_reports(&recorded_report(entries), &cur, 15.0, 50.0).unwrap();
+        assert!(out.baseline_recorded);
+        assert_eq!(out.abs_gates.len(), 1);
+        assert!(!out.all_pass());
+        assert!((out.abs_gates[0].regress_pct - 200.0).abs() < 1e-9);
+        // within budget passes
+        let ok = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+            ("kernel_matmul/xwt_64x64", 12_000.0),
+        ]);
+        let out = compare_bench_reports(&recorded_report(entries), &ok, 15.0, 50.0).unwrap();
+        assert!(out.all_pass());
+    }
+
+    #[test]
+    fn abs_gates_error_on_missing_kernel_entry() {
+        let base = recorded_report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+            ("kernel_gram/weight_sqnorms_8x16", 5_000.0),
+        ]);
+        let cur = report(&[
+            ("step_small/grad_microbatch", 1_000.0),
+            ("step_small/grad_microbatch_per_example", 4_000.0),
+        ]);
+        let err = compare_bench_reports(&base, &cur, 15.0, 50.0).unwrap_err();
+        assert!(format!("{err}").contains("kernel_gram"), "{err}");
+    }
+
+    #[test]
+    fn set_recorded_round_trips_through_json() {
+        let mut j = BenchJson::new();
+        j.set_recorded("ci-ubuntu-latest");
+        let stats = Stats {
+            name: "x".into(),
+            mean_ns: 1.0,
+            std_ns: 0.0,
+            median_ns: 1.0,
+            min_ns: 1.0,
+            iters: 1,
+            samples: 1,
+        };
+        j.record("kernel_matmul/xwt_64x64", &stats, None);
+        let v = Value::parse(&j.to_value().to_string()).unwrap();
+        assert!(v.get("_meta").unwrap().get("recorded").unwrap().as_bool().unwrap());
+        assert!(v.opt("kernel_matmul/xwt_64x64").is_some());
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Persistent worker-pool lifecycle contract (the tentpole's steady-state
+//! guarantee): threads are spawned once per `ReferenceBackend`, at
+//! construction — repeated training steps never create another.
+//!
+//! The spawn counter is process-global, so every test here runs under one
+//! mutex: a concurrently constructed pool in another test of this binary
+//! would otherwise move the counter mid-assertion. (Other test binaries
+//! are separate processes and cannot interfere.)
+
+use std::sync::Mutex;
+
+use nanogns::data::{CorpusGenerator, Loader};
+use nanogns::runtime::kernels::{total_threads_spawned, WorkerPool};
+use nanogns::runtime::{Backend, RefModelConfig, ReferenceBackend};
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn tiny_cfg() -> RefModelConfig {
+    RefModelConfig {
+        d_model: 8,
+        n_layers: 1,
+        n_heads: 2,
+        seq_len: 6,
+        vocab: 11,
+        microbatch: 2,
+    }
+}
+
+#[test]
+fn spawn_counter_stays_flat_across_100_steps() {
+    let _g = COUNTER_LOCK.lock().unwrap();
+    let be = ReferenceBackend::with_threads(tiny_cfg(), 4).unwrap();
+    let params = be.init(0).unwrap();
+    let text = CorpusGenerator::new(0).generate(1 << 12);
+    let mut loader = Loader::new(&text, 6, 0);
+
+    // Warmup: first step builds the workspace and exercises every kernel.
+    let batch = loader.next_batch(2);
+    be.grad_step(&params, &batch).unwrap();
+
+    let spawned = total_threads_spawned();
+    for _ in 0..100 {
+        let batch = loader.next_batch(2);
+        let out = be.grad_step(&params, &batch).unwrap();
+        assert!(out.loss.is_finite());
+    }
+    assert_eq!(
+        total_threads_spawned(),
+        spawned,
+        "steady-state grad steps must not spawn threads"
+    );
+}
+
+#[test]
+fn pool_construction_is_the_only_spawn_site() {
+    let _g = COUNTER_LOCK.lock().unwrap();
+    let before = total_threads_spawned();
+    let pool = WorkerPool::new(3);
+    let after_build = total_threads_spawned();
+    assert_eq!(after_build - before, 2, "N workers = N-1 spawned threads + the caller");
+
+    let n_tasks = 64usize;
+    for _ in 0..50 {
+        let hits = std::sync::atomic::AtomicU64::new(0);
+        pool.run(n_tasks, &|ti| {
+            hits.fetch_add(1 + ti as u64, std::sync::atomic::Ordering::Relaxed);
+        });
+        // every task index ran exactly once: Σ (1 + ti)
+        let want = n_tasks as u64 + (n_tasks as u64 * (n_tasks as u64 - 1)) / 2;
+        assert_eq!(hits.load(std::sync::atomic::Ordering::Relaxed), want);
+    }
+    // 50 dispatches later: still only the construction-time spawns.
+    assert_eq!(total_threads_spawned(), after_build, "run() must never spawn");
+}
+
+/// A second backend gets its own pool (counter moves at construction,
+/// by exactly workers-1), and dropping it joins the threads without
+/// disturbing the counter.
+#[test]
+fn each_backend_owns_one_pool() {
+    let _g = COUNTER_LOCK.lock().unwrap();
+    let before = total_threads_spawned();
+    let be = ReferenceBackend::with_threads(tiny_cfg(), 3).unwrap();
+    assert_eq!(total_threads_spawned() - before, 2);
+    drop(be);
+    assert_eq!(total_threads_spawned() - before, 2, "drop joins, never spawns");
+    let single = ReferenceBackend::with_threads(tiny_cfg(), 1).unwrap();
+    assert_eq!(total_threads_spawned() - before, 2, "1-worker pool spawns nothing");
+    drop(single);
+}
