@@ -1,0 +1,576 @@
+//! Typed per-subcommand argument structs for the `repro` launcher.
+//!
+//! Each subcommand owns a struct with a `parse(&[String]) -> Result<Self>`
+//! constructor over a declared flag spec: which flags take a value, which
+//! are switches, whether positionals are allowed. Declaring the spec up
+//! front fixes the two failure modes of the old stringly parser:
+//!
+//! * **unknown flags fail loudly** — `repro train --step 100` errors with
+//!   a "did you mean `--steps`?" suggestion instead of silently training
+//!   the default 50 steps;
+//! * **no `--key --switch` mis-tokenization** — a valued flag followed by
+//!   another flag is a missing-value error, and a switch never swallows
+//!   the token after it (the old lookahead guessed, and guessed wrong
+//!   for `--metrics --json`).
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// Per-command usage text (shown on `--help` and embedded in parse errors)
+// ---------------------------------------------------------------------------
+
+pub const TRAIN_USAGE: &str = "\
+USAGE: repro train [--config F.json] [--model NAME] [--steps N] [--seed N]
+                   [--metrics F.csv] [--ranks N] [--checkpoint-dir DIR]
+                   [--checkpoint-every N] [--resume CKPT]
+                   [--backend reference|pjrt] [--artifacts DIR] [--json]
+  --json    emit a machine-readable run summary on stdout (human logs go
+            to stderr)
+";
+
+pub const SERVE_USAGE: &str = "\
+USAGE: repro serve [train flags ...] [--port N] [--bind ADDR] [--ring-capacity N]
+  Runs the training job like `repro train` and serves live telemetry over
+  HTTP until POST /shutdown. Endpoints: /health /status /gns/layers
+  /schedule /records?since=S&limit=N /metrics (Prometheus) /shutdown.
+  --port N            listen port (default 7878; 0 = ephemeral)
+  --bind ADDR         bind address (default 127.0.0.1)
+  --ring-capacity N   in-memory record ring size (default 4096)
+";
+
+pub const FIGURES_USAGE: &str = "\
+USAGE: repro figures (--fig N | --table N | --all) [--model NAME] [--steps N]
+                     [--seeds N] [--ranks N] [--backend reference|pjrt]
+                     [--artifacts DIR] [--json]
+  Figures 2..16 map to the paper (8 = bench-only; 11..13 need pjrt),
+  tables 1..2. Exactly one of --fig/--table/--all must be given.
+  --json    print the generated artifact paths as JSON on stdout
+";
+
+pub const INFO_USAGE: &str = "\
+USAGE: repro info [--backend reference|pjrt] [--artifacts DIR] [--json]
+  Lists the available model configs for the selected backend.
+";
+
+pub const INSPECT_USAGE: &str = "\
+USAGE: repro inspect PATH [--kind checkpoint|bench|tracker] [--field NAME] [--json]
+  Inspects an on-disk artifact without loading tensors or a backend:
+    checkpoint  v2 checkpoint header (step, tokens, seed, lr-scale, ...)
+    bench       BENCH_*.json / bench/baseline.json report (medians, ...)
+    tracker     GNS tracker state embedded in a v2 checkpoint
+  The kind is sniffed from the file when --kind is omitted. With --field,
+  prints that one field; with --json, prints the full object as JSON;
+  with neither, prints every field as `name = value` lines.
+";
+
+// ---------------------------------------------------------------------------
+// Spec-driven lexer
+// ---------------------------------------------------------------------------
+
+/// Flag spec for one subcommand (names without the leading `--`).
+struct Spec {
+    valued: &'static [&'static str],
+    switches: &'static [&'static str],
+    positionals: bool,
+    usage: &'static str,
+}
+
+/// Lexed argv: resolved `--key value` pairs, switches, positionals.
+struct Parsed {
+    values: Vec<(String, String)>,
+    switches: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    /// Last occurrence wins, shell-convention style.
+    fn value(&self, key: &str) -> Option<&str> {
+        self.values.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn value_or(&self, key: &str, default: &str) -> String {
+        self.value(key).unwrap_or(default).to_string()
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_num(key)?.unwrap_or(default))
+    }
+
+    fn opt_num<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.value(key) {
+            None => Ok(None),
+            Some(s) => {
+                s.parse::<T>().map(Some).map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}"))
+            }
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn lex(argv: &[String], spec: &Spec) -> Result<Parsed> {
+    let mut out =
+        Parsed { values: Vec::new(), switches: Vec::new(), positionals: Vec::new() };
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        let body = match a.strip_prefix("--") {
+            Some(b) if !b.is_empty() => b,
+            _ if a == "-h" => "help",
+            _ => {
+                if spec.positionals {
+                    out.positionals.push(a.clone());
+                    i += 1;
+                    continue;
+                }
+                bail!("unexpected argument {a:?}\n\n{}", spec.usage);
+            }
+        };
+        // `--key=value` binds unambiguously, even to flag-looking values.
+        if let Some((k, v)) = body.split_once('=') {
+            if spec.switches.contains(&k) {
+                bail!("--{k} is a switch and takes no value\n\n{}", spec.usage);
+            }
+            if !spec.valued.contains(&k) {
+                bail!("{}", unknown_flag(k, spec));
+            }
+            out.values.push((k.to_string(), v.to_string()));
+            i += 1;
+        } else if spec.valued.contains(&body) {
+            match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    out.values.push((body.to_string(), v.clone()));
+                    i += 2;
+                }
+                Some(v) => bail!(
+                    "missing value for --{body}: next argument {v:?} is a flag \
+                     (use --{body}=VALUE to pass a value starting with --)\n\n{}",
+                    spec.usage
+                ),
+                None => bail!("missing value for --{body}\n\n{}", spec.usage),
+            }
+        } else if spec.switches.contains(&body) {
+            out.switches.push(body.to_string());
+            i += 1;
+        } else {
+            bail!("{}", unknown_flag(body, spec));
+        }
+    }
+    Ok(out)
+}
+
+fn unknown_flag(name: &str, spec: &Spec) -> String {
+    let hint = spec
+        .valued
+        .iter()
+        .chain(spec.switches)
+        .map(|cand| (levenshtein(name, cand), *cand))
+        .min()
+        .filter(|(d, _)| *d <= 2 && *d < name.len())
+        .map(|(_, cand)| format!(" (did you mean --{cand}?)"))
+        .unwrap_or_default();
+    format!("unknown flag --{name}{hint}\n\n{}", spec.usage)
+}
+
+/// Classic two-row edit distance; flag names are short, so O(a*b) is fine.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+// ---------------------------------------------------------------------------
+// repro train
+// ---------------------------------------------------------------------------
+
+const TRAIN_VALUED: &[&str] = &[
+    "config",
+    "model",
+    "steps",
+    "seed",
+    "metrics",
+    "ranks",
+    "checkpoint-dir",
+    "checkpoint-every",
+    "resume",
+    "backend",
+    "artifacts",
+];
+const TRAIN_SWITCHES: &[&str] = &["json", "help"];
+
+#[derive(Debug, Clone)]
+pub struct TrainArgs {
+    pub config: Option<String>,
+    pub model: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub metrics: String,
+    pub ranks: usize,
+    pub checkpoint_dir: Option<String>,
+    pub checkpoint_every: Option<u64>,
+    pub resume: Option<String>,
+    pub backend: String,
+    pub artifacts: String,
+    pub json: bool,
+    pub help: bool,
+}
+
+impl TrainArgs {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let spec = Spec {
+            valued: TRAIN_VALUED,
+            switches: TRAIN_SWITCHES,
+            positionals: false,
+            usage: TRAIN_USAGE,
+        };
+        Self::from_parsed(&lex(argv, &spec)?)
+    }
+
+    fn from_parsed(p: &Parsed) -> Result<Self> {
+        Ok(Self {
+            config: p.value("config").map(str::to_string),
+            model: p.value_or("model", "small"),
+            steps: p.num("steps", 50u64)?,
+            seed: p.num("seed", 0u64)?,
+            metrics: p.value_or("metrics", ""),
+            ranks: p.num("ranks", 1usize)?,
+            checkpoint_dir: p.value("checkpoint-dir").map(str::to_string),
+            checkpoint_every: p.opt_num("checkpoint-every")?,
+            resume: p.value("resume").map(str::to_string),
+            backend: p.value_or("backend", "reference"),
+            artifacts: p.value_or("artifacts", "artifacts"),
+            json: p.has("json"),
+            help: p.has("help"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repro serve (train flags + daemon flags)
+// ---------------------------------------------------------------------------
+
+const SERVE_VALUED: &[&str] = &[
+    "config",
+    "model",
+    "steps",
+    "seed",
+    "metrics",
+    "ranks",
+    "checkpoint-dir",
+    "checkpoint-every",
+    "resume",
+    "backend",
+    "artifacts",
+    "port",
+    "bind",
+    "ring-capacity",
+];
+const SERVE_SWITCHES: &[&str] = &["help"];
+
+#[derive(Debug, Clone)]
+pub struct ServeArgs {
+    pub train: TrainArgs,
+    /// CLI overrides for [`crate::config::ServeConfig`]; `None` keeps the
+    /// config-file (or default) value.
+    pub port: Option<u16>,
+    pub bind: Option<String>,
+    pub ring_capacity: Option<usize>,
+}
+
+impl ServeArgs {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let spec = Spec {
+            valued: SERVE_VALUED,
+            switches: SERVE_SWITCHES,
+            positionals: false,
+            usage: SERVE_USAGE,
+        };
+        let p = lex(argv, &spec)?;
+        let ring_capacity = p.opt_num::<usize>("ring-capacity")?;
+        if ring_capacity == Some(0) {
+            bail!("--ring-capacity must be positive\n\n{SERVE_USAGE}");
+        }
+        Ok(Self {
+            train: TrainArgs::from_parsed(&p)?,
+            port: p.opt_num("port")?,
+            bind: p.value("bind").map(str::to_string),
+            ring_capacity,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repro figures
+// ---------------------------------------------------------------------------
+
+const FIGURES_VALUED: &[&str] =
+    &["fig", "table", "model", "steps", "seeds", "ranks", "backend", "artifacts"];
+const FIGURES_SWITCHES: &[&str] = &["all", "json", "help"];
+
+#[derive(Debug, Clone)]
+pub struct FiguresArgs {
+    pub fig: Option<u32>,
+    pub table: Option<u32>,
+    pub all: bool,
+    pub model: String,
+    pub steps: u64,
+    pub seeds: u64,
+    pub ranks: usize,
+    pub backend: String,
+    pub artifacts: String,
+    pub json: bool,
+    pub help: bool,
+}
+
+impl FiguresArgs {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let spec = Spec {
+            valued: FIGURES_VALUED,
+            switches: FIGURES_SWITCHES,
+            positionals: false,
+            usage: FIGURES_USAGE,
+        };
+        let p = lex(argv, &spec)?;
+        let out = Self {
+            fig: p.opt_num("fig")?,
+            table: p.opt_num("table")?,
+            all: p.has("all"),
+            model: p.value_or("model", "micro"),
+            steps: p.num("steps", 60u64)?,
+            seeds: p.num("seeds", 3u64)?,
+            ranks: p.num("ranks", 4usize)?,
+            backend: p.value_or("backend", "reference"),
+            artifacts: p.value_or("artifacts", "artifacts"),
+            json: p.has("json"),
+            help: p.has("help"),
+        };
+        if !out.help {
+            let selectors = usize::from(out.fig.is_some())
+                + usize::from(out.table.is_some())
+                + usize::from(out.all);
+            if selectors != 1 {
+                bail!("pass exactly one of --fig N, --table N, or --all\n\n{FIGURES_USAGE}");
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repro info
+// ---------------------------------------------------------------------------
+
+const INFO_VALUED: &[&str] = &["backend", "artifacts"];
+const INFO_SWITCHES: &[&str] = &["json", "help"];
+
+#[derive(Debug, Clone)]
+pub struct InfoArgs {
+    pub backend: String,
+    pub artifacts: String,
+    pub json: bool,
+    pub help: bool,
+}
+
+impl InfoArgs {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let spec = Spec {
+            valued: INFO_VALUED,
+            switches: INFO_SWITCHES,
+            positionals: false,
+            usage: INFO_USAGE,
+        };
+        let p = lex(argv, &spec)?;
+        Ok(Self {
+            backend: p.value_or("backend", "reference"),
+            artifacts: p.value_or("artifacts", "artifacts"),
+            json: p.has("json"),
+            help: p.has("help"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repro inspect
+// ---------------------------------------------------------------------------
+
+const INSPECT_VALUED: &[&str] = &["kind", "field"];
+const INSPECT_SWITCHES: &[&str] = &["json", "help"];
+
+#[derive(Debug, Clone)]
+pub struct InspectArgs {
+    /// Path to the artifact (positional).
+    pub path: String,
+    /// Artifact kind; `None` sniffs from the file contents.
+    pub kind: Option<String>,
+    /// Field name to print (see the field enums in [`super::inspect`]).
+    pub field: Option<String>,
+    pub json: bool,
+    pub help: bool,
+}
+
+impl InspectArgs {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let spec = Spec {
+            valued: INSPECT_VALUED,
+            switches: INSPECT_SWITCHES,
+            positionals: true,
+            usage: INSPECT_USAGE,
+        };
+        let p = lex(argv, &spec)?;
+        let help = p.has("help");
+        let path = match p.positionals.as_slice() {
+            [one] => one.clone(),
+            [] if help => String::new(),
+            [] => bail!("inspect needs a PATH argument\n\n{INSPECT_USAGE}"),
+            many => bail!("inspect takes exactly one PATH, got {many:?}\n\n{INSPECT_USAGE}"),
+        };
+        Ok(Self {
+            path,
+            kind: p.value("kind").map(str::to_string),
+            field: p.value("field").map(str::to_string),
+            json: p.has("json"),
+            help,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn train_defaults_and_values() {
+        let a = TrainArgs::parse(&v(&[])).unwrap();
+        assert_eq!(a.model, "small");
+        assert_eq!(a.steps, 50);
+        assert!(!a.json);
+        let a = TrainArgs::parse(&v(&[
+            "--model", "nano", "--steps", "7", "--metrics", "m.csv", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(
+            (a.model.as_str(), a.steps, a.metrics.as_str(), a.json),
+            ("nano", 7, "m.csv", true)
+        );
+    }
+
+    #[test]
+    fn train_unknown_flag_suggests() {
+        let err = TrainArgs::parse(&v(&["--step", "100"])).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --step"), "{err}");
+        assert!(err.contains("did you mean --steps?"), "{err}");
+        assert!(err.contains("USAGE"), "{err}");
+        // far-off names get no bogus suggestion
+        let err = TrainArgs::parse(&v(&["--zzzzzzzz"])).unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn train_missing_value_not_mistokenized() {
+        // the old parser turned `--metrics --json` into switch soup
+        let err = TrainArgs::parse(&v(&["--metrics", "--json"])).unwrap_err().to_string();
+        assert!(err.contains("missing value for --metrics"), "{err}");
+        let err = TrainArgs::parse(&v(&["--metrics"])).unwrap_err().to_string();
+        assert!(err.contains("missing value for --metrics"), "{err}");
+        // the = form still lets a value start with --
+        let a = TrainArgs::parse(&v(&["--metrics=--weird.csv"])).unwrap();
+        assert_eq!(a.metrics, "--weird.csv");
+    }
+
+    #[test]
+    fn train_bad_number_and_switch_with_value() {
+        let err = TrainArgs::parse(&v(&["--steps", "many"])).unwrap_err().to_string();
+        assert!(err.contains("--steps"), "{err}");
+        let err = TrainArgs::parse(&v(&["--json=1"])).unwrap_err().to_string();
+        assert!(err.contains("takes no value"), "{err}");
+        let err = TrainArgs::parse(&v(&["positional"])).unwrap_err().to_string();
+        assert!(err.contains("unexpected argument"), "{err}");
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = TrainArgs::parse(&v(&["--steps", "5", "--steps", "9"])).unwrap();
+        assert_eq!(a.steps, 9);
+    }
+
+    #[test]
+    fn serve_extends_train() {
+        let a = ServeArgs::parse(&v(&["--steps", "30", "--port", "0", "--bind", "0.0.0.0"]))
+            .unwrap();
+        assert_eq!(a.train.steps, 30);
+        assert_eq!(a.port, Some(0));
+        assert_eq!(a.bind.as_deref(), Some("0.0.0.0"));
+        assert_eq!(a.ring_capacity, None);
+        let err = ServeArgs::parse(&v(&["--ring-capacity", "0"])).unwrap_err().to_string();
+        assert!(err.contains("positive"), "{err}");
+        // train does NOT accept serve flags
+        let err = TrainArgs::parse(&v(&["--port", "7878"])).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --port"), "{err}");
+    }
+
+    #[test]
+    fn figures_selector_validation() {
+        assert!(FiguresArgs::parse(&v(&["--fig", "5"])).unwrap().fig == Some(5));
+        assert!(FiguresArgs::parse(&v(&["--all"])).unwrap().all);
+        let err = FiguresArgs::parse(&v(&[])).unwrap_err().to_string();
+        assert!(err.contains("exactly one"), "{err}");
+        let err = FiguresArgs::parse(&v(&["--all", "--fig", "5"])).unwrap_err().to_string();
+        assert!(err.contains("exactly one"), "{err}");
+        // --help short-circuits the selector requirement
+        assert!(FiguresArgs::parse(&v(&["--help"])).unwrap().help);
+    }
+
+    #[test]
+    fn inspect_positional_and_flags() {
+        let a = InspectArgs::parse(&v(&["run/latest.ckpt", "--field", "step"])).unwrap();
+        assert_eq!(a.path, "run/latest.ckpt");
+        assert_eq!(a.field.as_deref(), Some("step"));
+        let err = InspectArgs::parse(&v(&[])).unwrap_err().to_string();
+        assert!(err.contains("needs a PATH"), "{err}");
+        let err = InspectArgs::parse(&v(&["a", "b"])).unwrap_err().to_string();
+        assert!(err.contains("exactly one"), "{err}");
+        assert!(InspectArgs::parse(&v(&["--help"])).unwrap().help);
+    }
+
+    #[test]
+    fn info_json_switch() {
+        assert!(InfoArgs::parse(&v(&["--json"])).unwrap().json);
+        let err = InfoArgs::parse(&v(&["--jsno"])).unwrap_err().to_string();
+        assert!(err.contains("did you mean --json?"), "{err}");
+    }
+
+    #[test]
+    fn levenshtein_sanity() {
+        assert_eq!(levenshtein("step", "steps"), 1);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("same", "same"), 0);
+    }
+
+    #[test]
+    fn short_help_alias() {
+        assert!(TrainArgs::parse(&v(&["-h"])).unwrap().help);
+    }
+}

@@ -1,0 +1,448 @@
+//! `repro inspect`: read-only views over on-disk artifacts.
+//!
+//! Foundry-style field selection: each artifact kind carries an enum of
+//! its inspectable fields with `Display` (canonical kebab-case name) and
+//! `FromStr` (accepting underscore and shorthand aliases), so
+//! `repro inspect run/latest.ckpt --field lr-scale` and `--field lr_scale`
+//! both work, and an unknown field errors with the full menu. No backend,
+//! manifest, or tensor payload is touched — a checkpoint inspect reads
+//! only the v2 JSON header.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::gns::{EmaParts, TrackerState};
+use crate::util::json::Value;
+
+use super::args::InspectArgs;
+
+// ---------------------------------------------------------------------------
+// Artifact kinds
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// v2 checkpoint header (`NGNSCKP2`).
+    Checkpoint,
+    /// `BENCH_*.json` / `bench/baseline.json` report.
+    Bench,
+    /// GNS tracker state embedded in a v2 checkpoint.
+    Tracker,
+}
+
+impl fmt::Display for Kind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Kind::Checkpoint => "checkpoint",
+            Kind::Bench => "bench",
+            Kind::Tracker => "tracker",
+        })
+    }
+}
+
+impl FromStr for Kind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "checkpoint" | "ckpt" => Ok(Kind::Checkpoint),
+            "bench" | "report" => Ok(Kind::Bench),
+            "tracker" | "gns" => Ok(Kind::Tracker),
+            other => bail!("unknown kind {other:?} (checkpoint|bench|tracker)"),
+        }
+    }
+}
+
+/// Decide what a file is from its first bytes: checkpoint magic wins,
+/// anything that parses as JSON is a bench report.
+pub fn sniff_kind(path: &str) -> Result<Kind> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.starts_with(b"NGNSCKP2") || bytes.starts_with(b"NANOGNS1") {
+        return Ok(Kind::Checkpoint);
+    }
+    let text = std::str::from_utf8(&bytes)
+        .map_err(|_| anyhow!("{path:?} is neither a checkpoint nor JSON"))?;
+    Value::parse(text)
+        .map(|_| Kind::Bench)
+        .map_err(|_| anyhow!("{path:?} is neither a checkpoint nor JSON"))
+}
+
+// ---------------------------------------------------------------------------
+// Field enums
+// ---------------------------------------------------------------------------
+
+macro_rules! field_enum {
+    ($name:ident { $($variant:ident => $canon:literal [$($alias:literal),*]),+ $(,)? }) => {
+        #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+        pub enum $name {
+            $($variant,)+
+        }
+
+        impl $name {
+            pub const ALL: &[$name] = &[$($name::$variant,)+];
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str(match self {
+                    $($name::$variant => $canon,)+
+                })
+            }
+        }
+
+        impl FromStr for $name {
+            type Err = anyhow::Error;
+            fn from_str(s: &str) -> Result<Self> {
+                match s {
+                    $($canon $(| $alias)* => Ok($name::$variant),)+
+                    other => {
+                        let menu = [$($canon,)+].join(", ");
+                        bail!("unknown field {other:?} (one of: {menu})")
+                    }
+                }
+            }
+        }
+    };
+}
+
+field_enum!(CheckpointField {
+    Version => "version" [],
+    Model => "model" [],
+    Seed => "seed" [],
+    CorpusBytes => "corpus-bytes" ["corpus_bytes", "corpus"],
+    Step => "step" [],
+    Tokens => "tokens" [],
+    LrScale => "lr-scale" ["lr_scale", "lr"],
+    ControllerLast => "controller-last" ["controller_last", "controller", "accum"],
+    Loaders => "loaders" ["cursors", "ranks"],
+    Tensors => "tensors" [],
+    Tracker => "tracker" ["gns"],
+});
+
+field_enum!(BenchField {
+    Recorded => "recorded" [],
+    Source => "source" [],
+    Entries => "entries" ["count"],
+    Medians => "medians" ["median", "median-ns", "median_ns"],
+    Throughput => "throughput" ["thr"],
+});
+
+field_enum!(GnsField {
+    Alpha => "alpha" [],
+    Types => "types" [],
+    Total => "total" [],
+    Embedding => "embedding" ["embed"],
+    Layernorm => "layernorm" ["ln"],
+    Attention => "attention" ["attn"],
+    Mlp => "mlp" [],
+    LmHead => "lm-head" ["lm_head", "lmhead"],
+});
+
+// ---------------------------------------------------------------------------
+// Field extraction
+// ---------------------------------------------------------------------------
+
+/// Decode the checkpoint header's exact `0x…` f64 bit-pattern encoding.
+fn f64_from_hex(v: &Value) -> Result<f64> {
+    let s = v.as_str()?;
+    let hex = s.strip_prefix("0x").ok_or_else(|| anyhow!("bad f64 bits {s:?}"))?;
+    Ok(f64::from_bits(u64::from_str_radix(hex, 16).context("bad f64 bits")?))
+}
+
+pub fn checkpoint_field(header: &Value, field: CheckpointField) -> Result<Value> {
+    Ok(match field {
+        CheckpointField::Version => header.get("version")?.clone(),
+        CheckpointField::Model => header.get("model")?.clone(),
+        // seed/step/tokens/corpus-bytes are exact decimal strings in the
+        // header; pass them through untouched (no f64 round-trip).
+        CheckpointField::Seed => header.get("seed")?.clone(),
+        CheckpointField::CorpusBytes => header.get("corpus_bytes")?.clone(),
+        CheckpointField::Step => header.get("step")?.clone(),
+        CheckpointField::Tokens => header.get("tokens")?.clone(),
+        CheckpointField::LrScale => {
+            let x = f64_from_hex(header.get("lr_scale")?)?;
+            if x.is_finite() {
+                Value::Num(x)
+            } else {
+                header.get("lr_scale")?.clone()
+            }
+        }
+        CheckpointField::ControllerLast => header.get("controller_last")?.clone(),
+        CheckpointField::Loaders => Value::Num(header.get("loaders")?.as_arr()?.len() as f64),
+        CheckpointField::Tensors => Value::Num(header.get("tensors")?.as_arr()?.len() as f64),
+        CheckpointField::Tracker => header.get("tracker")?.clone(),
+    })
+}
+
+pub fn bench_field(report: &Value, field: BenchField) -> Result<Value> {
+    let meta = report.opt("_meta");
+    let entries = || -> Result<Vec<(&String, &Value)>> {
+        Ok(report.as_obj()?.iter().filter(|(k, _)| !k.starts_with('_')).collect())
+    };
+    Ok(match field {
+        BenchField::Recorded => Value::Bool(
+            meta.and_then(|m| m.opt("recorded"))
+                .and_then(|v| v.as_bool().ok())
+                .unwrap_or(false),
+        ),
+        BenchField::Source => meta
+            .and_then(|m| m.opt("source"))
+            .cloned()
+            .unwrap_or(Value::Null),
+        BenchField::Entries => Value::Num(entries()?.len() as f64),
+        BenchField::Medians => {
+            let mut m = BTreeMap::new();
+            for (name, e) in entries()? {
+                m.insert(name.clone(), e.opt("median_ns").cloned().unwrap_or(Value::Null));
+            }
+            Value::Obj(m)
+        }
+        BenchField::Throughput => {
+            let mut m = BTreeMap::new();
+            for (name, e) in entries()? {
+                m.insert(name.clone(), e.opt("throughput").cloned().unwrap_or(Value::Null));
+            }
+            Value::Obj(m)
+        }
+    })
+}
+
+/// Smoothed `{g_sq, s, gns}` triple from a pair of exported EMAs.
+fn ema_pair_json(g_sq: &EmaParts, s: &EmaParts) -> Value {
+    let mut m = BTreeMap::new();
+    let g = g_sq.state;
+    let sv = s.state;
+    m.insert("g_sq".into(), g.map(Value::finite_or_null).unwrap_or(Value::Null));
+    m.insert("s".into(), sv.map(Value::finite_or_null).unwrap_or(Value::Null));
+    let gns = match (g, sv) {
+        (Some(g), Some(sv)) if g != 0.0 => Value::finite_or_null(sv / g),
+        _ => Value::Null,
+    };
+    m.insert("gns".into(), gns);
+    m.insert("observations".into(), Value::Num(g_sq.t as f64));
+    Value::Obj(m)
+}
+
+/// The full tracker view `repro inspect --kind tracker` prints: smoothed
+/// per-type and total components with their GNS ratios.
+pub fn tracker_object(st: &TrackerState) -> Value {
+    let mut per = BTreeMap::new();
+    for (i, t) in st.types.iter().enumerate() {
+        per.insert(t.clone(), ema_pair_json(&st.g_sq[i], &st.s[i]));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("alpha".into(), Value::finite_or_null(st.g_sq_total.alpha));
+    top.insert(
+        "types".into(),
+        Value::Arr(st.types.iter().map(|t| Value::Str(t.clone())).collect()),
+    );
+    top.insert("per_type".into(), Value::Obj(per));
+    top.insert("total".into(), ema_pair_json(&st.g_sq_total, &st.s_total));
+    Value::Obj(top)
+}
+
+pub fn gns_field(st: &TrackerState, field: GnsField) -> Result<Value> {
+    let by_type = |name: &str| -> Result<Value> {
+        let i = st
+            .types
+            .iter()
+            .position(|t| t == name)
+            .ok_or_else(|| anyhow!("tracker has no type {name:?} (has {:?})", st.types))?;
+        Ok(ema_pair_json(&st.g_sq[i], &st.s[i]))
+    };
+    Ok(match field {
+        GnsField::Alpha => Value::finite_or_null(st.g_sq_total.alpha),
+        GnsField::Types => Value::Arr(st.types.iter().map(|t| Value::Str(t.clone())).collect()),
+        GnsField::Total => ema_pair_json(&st.g_sq_total, &st.s_total),
+        GnsField::Embedding => by_type("embedding")?,
+        GnsField::Layernorm => by_type("layernorm")?,
+        GnsField::Attention => by_type("attention")?,
+        GnsField::Mlp => by_type("mlp")?,
+        GnsField::LmHead => by_type("lm_head")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------------
+
+/// Render one scalar-or-structure for output: bare strings print
+/// unquoted (shell-friendly), everything else prints as JSON.
+fn render(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+/// Run the inspection and return the text to print on stdout.
+pub fn run(args: &InspectArgs) -> Result<String> {
+    let kind = match args.kind.as_deref() {
+        Some(k) => k.parse::<Kind>()?,
+        None => sniff_kind(&args.path)?,
+    };
+    match kind {
+        Kind::Checkpoint => {
+            let header = checkpoint::read_header(&args.path)?;
+            match (&args.field, args.json) {
+                (Some(f), _) => Ok(render(&checkpoint_field(&header, f.parse()?)?)),
+                (None, true) => Ok(header.to_string()),
+                (None, false) => {
+                    let mut out = String::new();
+                    for f in CheckpointField::ALL {
+                        let v = checkpoint_field(&header, *f)?;
+                        out.push_str(&format!("{f} = {}\n", render(&v)));
+                    }
+                    Ok(out)
+                }
+            }
+        }
+        Kind::Bench => {
+            let text = std::fs::read_to_string(&args.path)
+                .with_context(|| format!("reading {:?}", args.path))?;
+            let report = Value::parse(&text)
+                .with_context(|| format!("parsing {:?} as a bench report", args.path))?;
+            match (&args.field, args.json) {
+                (Some(f), _) => Ok(render(&bench_field(&report, f.parse()?)?)),
+                (None, true) => Ok(report.to_string()),
+                (None, false) => {
+                    let mut out = String::new();
+                    for f in BenchField::ALL {
+                        let v = bench_field(&report, *f)?;
+                        out.push_str(&format!("{f} = {}\n", render(&v)));
+                    }
+                    Ok(out)
+                }
+            }
+        }
+        Kind::Tracker => {
+            let header = checkpoint::read_header(&args.path)?;
+            let state = checkpoint::tracker_from_header(&header)?;
+            match (&args.field, args.json) {
+                (Some(f), _) => Ok(render(&gns_field(&state, f.parse()?)?)),
+                (None, true) => Ok(tracker_object(&state).to_string()),
+                (None, false) => {
+                    let mut out = String::new();
+                    for f in GnsField::ALL {
+                        let v = gns_field(&state, *f)?;
+                        out.push_str(&format!("{f} = {}\n", render(&v)));
+                    }
+                    Ok(out)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_names_round_trip_display_fromstr() {
+        for f in CheckpointField::ALL {
+            assert_eq!(f.to_string().parse::<CheckpointField>().unwrap(), *f);
+        }
+        for f in BenchField::ALL {
+            assert_eq!(f.to_string().parse::<BenchField>().unwrap(), *f);
+        }
+        for f in GnsField::ALL {
+            assert_eq!(f.to_string().parse::<GnsField>().unwrap(), *f);
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!("lr_scale".parse::<CheckpointField>().unwrap(), CheckpointField::LrScale);
+        assert_eq!("lr".parse::<CheckpointField>().unwrap(), CheckpointField::LrScale);
+        assert_eq!("gns".parse::<CheckpointField>().unwrap(), CheckpointField::Tracker);
+        assert_eq!("ln".parse::<GnsField>().unwrap(), GnsField::Layernorm);
+        assert_eq!("lm_head".parse::<GnsField>().unwrap(), GnsField::LmHead);
+        assert_eq!("median_ns".parse::<BenchField>().unwrap(), BenchField::Medians);
+        let err = "bogus".parse::<CheckpointField>().unwrap_err().to_string();
+        assert!(err.contains("one of:") && err.contains("lr-scale"), "{err}");
+    }
+
+    #[test]
+    fn kind_parse_and_sniff() {
+        assert_eq!("ckpt".parse::<Kind>().unwrap(), Kind::Checkpoint);
+        assert_eq!("gns".parse::<Kind>().unwrap(), Kind::Tracker);
+        assert!("nope".parse::<Kind>().is_err());
+
+        let dir = std::env::temp_dir().join(format!("nanogns-sniff-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("x.ckpt");
+        std::fs::write(&ckpt, b"NGNSCKP2rest").unwrap();
+        assert_eq!(sniff_kind(ckpt.to_str().unwrap()).unwrap(), Kind::Checkpoint);
+        let bench = dir.join("BENCH_x.json");
+        std::fs::write(&bench, "{}").unwrap();
+        assert_eq!(sniff_kind(bench.to_str().unwrap()).unwrap(), Kind::Bench);
+        let junk = dir.join("junk.bin");
+        std::fs::write(&junk, b"not json at all").unwrap();
+        assert!(sniff_kind(junk.to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn sample_report() -> Value {
+        Value::parse(
+            r#"{
+                "_meta": {"recorded": true, "source": "ci-run-1"},
+                "step_small/grad_microbatch": {"median_ns": 1000, "samples": 5, "throughput": 2.0},
+                "kernel_matmul/xwt": {"median_ns": 10, "samples": 5, "throughput": 9.0}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bench_fields_extract() {
+        let r = sample_report();
+        assert_eq!(bench_field(&r, BenchField::Recorded).unwrap(), Value::Bool(true));
+        assert_eq!(bench_field(&r, BenchField::Source).unwrap(), Value::Str("ci-run-1".into()));
+        assert_eq!(bench_field(&r, BenchField::Entries).unwrap(), Value::Num(2.0));
+        let med = bench_field(&r, BenchField::Medians).unwrap();
+        assert_eq!(med.get("kernel_matmul/xwt").unwrap(), &Value::Num(10.0));
+        // report with no _meta: recorded defaults false
+        let bare = Value::parse(r#"{"a":{"median_ns":1}}"#).unwrap();
+        assert_eq!(bench_field(&bare, BenchField::Recorded).unwrap(), Value::Bool(false));
+    }
+
+    fn sample_tracker() -> TrackerState {
+        let ema = |state: Option<f64>| EmaParts { alpha: 0.05, state, t: 3, bias_correct: false };
+        TrackerState {
+            types: vec!["embedding".into(), "layernorm".into(), "lm_head".into()],
+            g_sq: vec![ema(Some(2.0)), ema(Some(4.0)), ema(None)],
+            s: vec![ema(Some(6.0)), ema(Some(2.0)), ema(None)],
+            g_sq_total: ema(Some(10.0)),
+            s_total: ema(Some(5.0)),
+        }
+    }
+
+    #[test]
+    fn tracker_fields_extract() {
+        let st = sample_tracker();
+        let total = gns_field(&st, GnsField::Total).unwrap();
+        assert_eq!(total.get("gns").unwrap(), &Value::Num(0.5));
+        let ln = gns_field(&st, GnsField::Layernorm).unwrap();
+        assert_eq!(ln.get("gns").unwrap(), &Value::Num(0.5));
+        // un-observed EMA: null components, null ratio
+        let head = gns_field(&st, GnsField::LmHead).unwrap();
+        assert_eq!(head.get("gns").unwrap(), &Value::Null);
+        // type missing from this tracker
+        assert!(gns_field(&st, GnsField::Mlp).is_err());
+        let obj = tracker_object(&st);
+        assert_eq!(obj.get("types").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(obj.get("alpha").unwrap(), &Value::Num(0.05));
+    }
+
+    #[test]
+    fn render_strings_bare_rest_json() {
+        assert_eq!(render(&Value::Str("micro".into())), "micro");
+        assert_eq!(render(&Value::Num(3.0)), "3");
+        assert_eq!(render(&Value::Bool(true)), "true");
+        assert_eq!(render(&Value::parse(r#"{"a":1}"#).unwrap()), r#"{"a":1}"#);
+    }
+}

@@ -1,0 +1,16 @@
+//! Typed CLI surface for the `repro` binary.
+//!
+//! [`args`] holds one argument struct per subcommand over a shared
+//! spec-driven lexer (unknown flags error with a suggestion; valued
+//! flags never swallow a following `--flag`). [`inspect`] implements
+//! `repro inspect`'s field-selection enums over on-disk artifacts. The
+//! binary's `main` is a thin dispatcher over these types, so every
+//! parse rule is unit-testable without spawning a process.
+
+pub mod args;
+pub mod inspect;
+
+pub use args::{
+    FiguresArgs, InfoArgs, InspectArgs, ServeArgs, TrainArgs, FIGURES_USAGE, INFO_USAGE,
+    INSPECT_USAGE, SERVE_USAGE, TRAIN_USAGE,
+};

@@ -45,6 +45,54 @@ pub struct TrainConfig {
     /// Pin every kernel to the scalar oracle tier (`NANOGNS_FORCE_SCALAR`),
     /// e.g. to cross-check a SIMD result on the same machine.
     pub force_scalar: bool,
+    /// Telemetry daemon settings (`repro serve`); inert for plain `train`.
+    pub serve: ServeConfig,
+}
+
+/// `repro serve` daemon settings, settable from the `"serve"` config
+/// object and overridable per-flag (`--port`, `--bind`,
+/// `--ring-capacity`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// TCP port to listen on (0 = kernel-assigned ephemeral port).
+    pub port: u16,
+    /// Bind address (loopback by default: the daemon is unauthenticated).
+    pub bind: String,
+    /// Capacity of the in-memory `StepRecord` ring served by `/records`.
+    pub ring_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { port: 7878, bind: "127.0.0.1".into(), ring_capacity: 4096 }
+    }
+}
+
+fn parse_serve(v: &Value) -> Result<ServeConfig> {
+    let d = ServeConfig::default();
+    let port = match v.opt("port") {
+        Some(p) => {
+            let p = p.as_u64()?;
+            anyhow::ensure!(p <= u16::MAX as u64, "serve.port {p} out of range");
+            p as u16
+        }
+        None => d.port,
+    };
+    Ok(ServeConfig {
+        port,
+        bind: match v.opt("bind") {
+            Some(b) => b.as_str()?.to_string(),
+            None => d.bind,
+        },
+        ring_capacity: match v.opt("ring_capacity") {
+            Some(r) => {
+                let r = r.as_usize()?;
+                anyhow::ensure!(r > 0, "serve.ring_capacity must be positive");
+                r
+            }
+            None => d.ring_capacity,
+        },
+    })
 }
 
 impl TrainConfig {
@@ -108,6 +156,10 @@ impl TrainConfig {
                 Some(f) => f.as_bool()?,
                 None => false,
             },
+            serve: match v.opt("serve") {
+                Some(s) => parse_serve(s)?,
+                None => ServeConfig::default(),
+            },
         })
     }
 
@@ -130,6 +182,7 @@ impl TrainConfig {
             resume: String::new(),
             threads: 0,
             force_scalar: false,
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -211,6 +264,47 @@ mod tests {
             "model": "nano", "steps": 5, "seed": 0,
             "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
             "batch_size": {"kind": "exponential", "accum": 2}
+        }"#;
+        assert!(TrainConfig::from_json_text(text).is_err());
+    }
+
+    #[test]
+    fn serve_keys_parse_and_default() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "serve": {"port": 9000, "bind": "0.0.0.0", "ring_capacity": 128}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.serve.port, 9000);
+        assert_eq!(cfg.serve.bind, "0.0.0.0");
+        assert_eq!(cfg.serve.ring_capacity, 128);
+
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+        assert_eq!(cfg.serve.bind, "127.0.0.1");
+    }
+
+    #[test]
+    fn serve_keys_rejected_out_of_range() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "serve": {"port": 70000}
+        }"#;
+        assert!(TrainConfig::from_json_text(text).is_err());
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "serve": {"ring_capacity": 0}
         }"#;
         assert!(TrainConfig::from_json_text(text).is_err());
     }

@@ -306,16 +306,13 @@ pub fn save_state(
     Ok(())
 }
 
-/// Read a full-state (v2) checkpoint, validating the manifest against
-/// `entry` (tensor names, shapes, payload length).
-pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainState> {
-    let mut r = BufReader::new(
-        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
-    );
+/// Read the magic + JSON header of a v2 checkpoint from a stream,
+/// leaving the reader positioned at the start of the tensor payload.
+fn read_header_from(r: &mut impl Read) -> Result<Value> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("reading checkpoint magic")?;
     if &magic == MAGIC {
-        bail!("params-only (v1) checkpoint: use checkpoint::load, not load_state");
+        bail!("params-only (v1) checkpoint has no header manifest");
     }
     ensure!(&magic == MAGIC_V2, "bad checkpoint magic {magic:?}");
     let mut buf4 = [0u8; 4];
@@ -326,10 +323,23 @@ pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainSta
     r.read_exact(&mut hbytes).context("reading header (truncated checkpoint?)")?;
     let header = Value::parse(std::str::from_utf8(&hbytes).context("header not UTF-8")?)
         .context("parsing checkpoint header JSON")?;
-
     let version = header.get("version")?.as_u64()?;
     ensure!(version == VERSION_V2, "unsupported checkpoint version {version}");
+    Ok(header)
+}
 
+/// Read only the JSON header manifest of a v2 checkpoint — no tensor
+/// payload is touched or validated, so no model manifest is needed.
+/// This is the `repro inspect checkpoint` entry point.
+pub fn read_header(path: impl AsRef<Path>) -> Result<Value> {
+    let mut r = BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    read_header_from(&mut r)
+}
+
+/// Parse the GNS tracker state out of a v2 header ([`read_header`]).
+pub fn tracker_from_header(header: &Value) -> Result<TrackerState> {
     let tracker_v = header.get("tracker")?;
     let tracker = TrackerState {
         types: tracker_v
@@ -347,6 +357,17 @@ pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainSta
         tracker.g_sq.len() == tracker.types.len() && tracker.s.len() == tracker.types.len(),
         "tracker EMA arity mismatch"
     );
+    Ok(tracker)
+}
+
+/// Read a full-state (v2) checkpoint, validating the manifest against
+/// `entry` (tensor names, shapes, payload length).
+pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainState> {
+    let mut r = BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let header = read_header_from(&mut r)?;
+    let tracker = tracker_from_header(&header)?;
 
     let loaders = header
         .get("loaders")?

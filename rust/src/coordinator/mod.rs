@@ -27,4 +27,4 @@ pub mod trainer;
 
 pub use parallel::{rank_workers, ParallelExecutor, RankStepOut};
 pub use runner::ModelRunner;
-pub use trainer::{TrainOutcome, Trainer};
+pub use trainer::{StepObservation, StepObserver, TrainOutcome, Trainer};

@@ -60,6 +60,33 @@ pub struct TrainOutcome {
     pub tokens: u64,
 }
 
+/// What a [`StepObserver`] sees after each optimizer step: the step's
+/// record plus the smoothed tracker/controller state the record alone
+/// does not carry (per-layer GNS EMAs, hysteresis anchor).
+pub struct StepObservation<'a> {
+    pub record: &'a StepRecord,
+    pub gns: crate::gns::GnsSnapshot,
+    /// Batch-size controller hysteresis anchor after this step.
+    pub accum: usize,
+    /// Total step budget of the run (`cfg.steps`).
+    pub total_steps: u64,
+}
+
+/// Step-by-step consumer of a training run ([`Trainer::run_with_observer`]).
+///
+/// The observer is called *after* the step's CSV row is logged and any
+/// due checkpoint is written, so attaching one cannot perturb the
+/// run's on-disk telemetry; a `serve` daemon publishing live state is
+/// just one observer, not a special case in the loop. Returning `true`
+/// from [`StepObserver::stop_requested`] ends the run gracefully at the
+/// next step boundary (the outcome keeps every completed step).
+pub trait StepObserver: Sync {
+    fn on_step(&self, obs: &StepObservation<'_>);
+    fn stop_requested(&self) -> bool {
+        false
+    }
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub runner: ModelRunner,
@@ -195,6 +222,26 @@ impl Trainer {
         Ok(())
     }
 
+    /// Write a `step-XXXXXXXX.ckpt` full-state checkpoint under
+    /// `cfg.checkpoint_dir` and atomically refresh the `latest.ckpt`
+    /// pointer; returns the step-file path. Used by the run loop's
+    /// periodic checkpoints and by the serve daemon's graceful
+    /// checkpoint-then-exit shutdown.
+    pub fn checkpoint_now(&self) -> Result<std::path::PathBuf> {
+        ensure!(!self.cfg.checkpoint_dir.is_empty(), "no checkpoint_dir configured");
+        let step = self.runner.step;
+        let dir = Path::new(&self.cfg.checkpoint_dir);
+        let path = dir.join(format!("step-{step:08}.ckpt"));
+        self.save_checkpoint(&path)?;
+        // latest.ckpt updates atomically too: a crash mid-copy must not
+        // clobber the previous good pointer.
+        let tmp = dir.join("latest.ckpt.tmp");
+        std::fs::copy(&path, &tmp)?;
+        std::fs::OpenOptions::new().write(true).open(&tmp)?.sync_all()?;
+        std::fs::rename(&tmp, dir.join("latest.ckpt"))?;
+        Ok(path)
+    }
+
     pub fn snapshot(&self) -> TrainerSnapshot {
         TrainerSnapshot {
             runner: self.runner.snapshot(),
@@ -305,6 +352,15 @@ impl Trainer {
     /// convenience pointer). `cfg.steps` is the *total* step budget, so a
     /// resumed trainer runs only the remaining steps.
     pub fn run(&mut self) -> Result<TrainOutcome> {
+        self.run_with_observer(None)
+    }
+
+    /// [`Self::run`] with an optional per-step observer (see
+    /// [`StepObserver`] for the call ordering and stop contract).
+    pub fn run_with_observer(
+        &mut self,
+        observer: Option<&dyn StepObserver>,
+    ) -> Result<TrainOutcome> {
         // A resumed run keeps the rows logged before the interruption,
         // drops any logged *after* the checkpoint being resumed from
         // (they will be re-executed), and appends.
@@ -330,16 +386,19 @@ impl Trainer {
                 && (rec.step % ckpt_every == 0 || rec.step == self.cfg.steps);
             records.push(rec);
             if at_checkpoint {
-                let step = self.runner.step;
-                let dir = Path::new(&ckpt_dir);
-                let path = dir.join(format!("step-{step:08}.ckpt"));
-                self.save_checkpoint(&path)?;
-                // latest.ckpt updates atomically too: a crash mid-copy
-                // must not clobber the previous good pointer.
-                let tmp = dir.join("latest.ckpt.tmp");
-                std::fs::copy(&path, &tmp)?;
-                std::fs::OpenOptions::new().write(true).open(&tmp)?.sync_all()?;
-                std::fs::rename(&tmp, dir.join("latest.ckpt"))?;
+                self.checkpoint_now()?;
+            }
+            if let Some(obs) = observer {
+                let rec = records.last().expect("just pushed");
+                obs.on_step(&StepObservation {
+                    record: rec,
+                    gns: self.tracker.snapshot(),
+                    accum: self.controller.last(),
+                    total_steps: self.cfg.steps,
+                });
+                if obs.stop_requested() {
+                    break;
+                }
             }
         }
         if let Some(log) = logger.as_mut() {
@@ -348,6 +407,31 @@ impl Trainer {
         let final_loss = records.last().map(|r| r.loss).unwrap_or(f64::NAN);
         Ok(TrainOutcome { final_loss, tokens: self.tokens, records })
     }
+}
+
+/// JSON object for one [`StepRecord`], keyed by the `TRAIN_HEADER`
+/// column names so scripted consumers see one schema across the CSV,
+/// `train --json`, and the serve daemon. Non-finite values (degenerate
+/// GNS estimates) serialize as `null`, never as invalid JSON.
+pub fn record_json(r: &StepRecord) -> crate::util::json::Value {
+    use crate::util::json::Value;
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("step".into(), Value::Num(r.step as f64));
+    m.insert("tokens".into(), Value::Num(r.tokens as f64));
+    m.insert("loss".into(), Value::finite_or_null(r.loss));
+    m.insert("lr".into(), Value::finite_or_null(r.lr));
+    m.insert("accum".into(), Value::Num(r.accum as f64));
+    m.insert("b_big".into(), Value::Num(r.b_big));
+    for (i, t) in STATS_ORDER.iter().enumerate() {
+        m.insert(format!("gsq_{t}"), Value::finite_or_null(r.raw_g_sq[i]));
+        m.insert(format!("s_{t}"), Value::finite_or_null(r.raw_s[i]));
+    }
+    m.insert("gsq_total".into(), Value::finite_or_null(r.raw_g_sq_total));
+    m.insert("s_total".into(), Value::finite_or_null(r.raw_s_total));
+    m.insert("gns_layernorm".into(), Value::finite_or_null(r.gns_layernorm));
+    m.insert("gns_total".into(), Value::finite_or_null(r.gns_total));
+    m.insert("step_ms".into(), Value::Num(r.step_ms));
+    Value::Obj(m)
 }
 
 /// CSV row in `TRAIN_HEADER` order.

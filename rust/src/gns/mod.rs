@@ -22,7 +22,10 @@ pub mod simulator;
 pub mod welford;
 
 pub use ema::{Ema, EmaParts};
-pub use estimators::{gns_components, GnsAccumulator, GnsComponents, GnsTracker, TrackerState};
+pub use estimators::{
+    gns_components, GnsAccumulator, GnsComponents, GnsSnapshot, GnsTracker, TrackerState,
+    TypeSnapshot,
+};
 pub use jackknife::jackknife_ratio_stderr;
 pub use regression::{linreg, Regression};
 pub use simulator::{GnsSimulator, SimConfig};

@@ -21,6 +21,7 @@
 // that need it (`runtime::reference`, the `Backend` trait).
 #![allow(clippy::needless_range_loop)]
 
+pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
@@ -29,6 +30,7 @@ pub mod figures;
 pub mod gns;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod telemetry;
 pub mod util;
 

@@ -2,43 +2,50 @@
 //!
 //! Subcommands:
 //! * `train`   — run a training job from a JSON config (or quick flags);
+//! * `serve`   — run a training job with a live HTTP telemetry daemon;
 //! * `figures` — regenerate any paper figure/table (see DESIGN.md §4);
 //! * `info`    — inspect the available model configs;
+//! * `inspect` — read fields out of checkpoints / bench reports;
 //! * `help`.
 //!
-//! The default backend is the hermetic pure-Rust reference transformer, so
-//! the binary works on a bare machine. `--backend pjrt` (with the `pjrt`
-//! cargo feature and `make artifacts`) switches to the AOT HLO path.
-//! (CLI parsing is hand-rolled: this build is offline, no clap.)
+//! Argument parsing lives in [`nanogns::cli`]: one typed struct per
+//! subcommand over a spec-driven lexer, so unknown flags fail loudly
+//! (with a "did you mean" suggestion) instead of silently training the
+//! defaults. The default backend is the hermetic pure-Rust reference
+//! transformer, so the binary works on a bare machine; `--backend pjrt`
+//! (with the `pjrt` cargo feature and `make artifacts`) switches to the
+//! AOT HLO path. (CLI parsing is hand-rolled: this build is offline,
+//! no clap.)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use nanogns::cli::{self, FiguresArgs, InfoArgs, InspectArgs, ServeArgs, TrainArgs};
 use nanogns::config::TrainConfig;
-use nanogns::coordinator::Trainer;
+use nanogns::coordinator::{TrainOutcome, Trainer};
 use nanogns::figures;
 use nanogns::runtime::{BackendFactory, ReferenceFactory};
+use nanogns::serve::{self, Server, TelemetryHub};
+use nanogns::util::json::Value;
 
 const USAGE: &str = "\
 repro — GNS-instrumented training coordinator (nanoGNS-rs)
 
 USAGE:
-  repro train  [--config F.json] [--model NAME] [--steps N] [--seed N] [--metrics F.csv]
-               [--ranks N] [--checkpoint-dir DIR] [--checkpoint-every N] [--resume CKPT]
-  repro figures (--fig N | --table N | --all) [--model NAME] [--steps N] [--seeds N] [--ranks N]
-  repro info
+  repro train    [--config F.json] [--model NAME] [--steps N] [...] [--json]
+  repro serve    [train flags ...] [--port N] [--bind ADDR] [--ring-capacity N]
+  repro figures  (--fig N | --table N | --all) [...] [--json]
+  repro info     [--json]
+  repro inspect  PATH [--kind checkpoint|bench|tracker] [--field NAME] [--json]
   repro help
 
-GLOBAL:
+Run `repro <subcommand> --help` for the full per-command flag list.
+
+GLOBAL (train/serve/figures/info):
   --backend NAME    execution backend: reference (default) | pjrt (needs --features pjrt)
   --artifacts DIR   artifact directory for the pjrt backend (default: artifacts)
-
-CHECKPOINT/RESUME:
-  --checkpoint-dir DIR   write full-state checkpoints (params, Adam moments, GNS EMAs,
-                         controller state, per-rank data cursors) under DIR
-  --checkpoint-every N   checkpoint every N optimizer steps (with --checkpoint-dir)
-  --resume CKPT          resume from a checkpoint file (e.g. DIR/latest.ckpt); the resumed
-                         run replays the uninterrupted trajectory bitwise and finishes the
-                         remaining --steps budget
 
 Data-parallel ranks run concurrently; NANOGNS_RANK_WORKERS caps the rank worker
 threads (results are bitwise identical for any setting). NANOGNS_THREADS sizes
@@ -48,57 +55,6 @@ the scalar oracle tier (config keys `threads` / `force_scalar` do the same).
 FIGURES: 2..16 map to the paper's figures (8 = `cargo bench --features pjrt --bench ln_kernel`;
 11..13 need the pjrt backend), tables 1..2.
 ";
-
-/// Tiny flag parser: --key value pairs after the subcommand.
-struct Args {
-    flags: std::collections::HashMap<String, String>,
-    switches: std::collections::HashSet<String>,
-}
-
-impl Args {
-    fn parse(argv: &[String]) -> Result<Self> {
-        let mut flags = std::collections::HashMap::new();
-        let mut switches = std::collections::HashSet::new();
-        let mut i = 0;
-        while i < argv.len() {
-            let a = &argv[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(key.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    switches.insert(key.to_string());
-                    i += 1;
-                }
-            } else {
-                bail!("unexpected argument {a:?}\n{USAGE}");
-            }
-        }
-        Ok(Self { flags, switches })
-    }
-
-    fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
-    }
-
-    fn get_or(&self, key: &str, default: &str) -> String {
-        self.get(key).unwrap_or(default).to_string()
-    }
-
-    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
-    where
-        T::Err: std::fmt::Display,
-    {
-        match self.get(key) {
-            None => Ok(default),
-            Some(s) => s.parse::<T>().map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
-        }
-    }
-
-    fn has(&self, key: &str) -> bool {
-        self.switches.contains(key)
-    }
-}
 
 #[allow(unused_variables)]
 fn make_factory(backend: &str, artifacts: &str) -> Result<Box<dyn BackendFactory>> {
@@ -130,163 +86,386 @@ fn fig_instability(_which: u32, _artifacts: &str, _steps: u64) -> Result<()> {
     bail!("figures 11-13 need the teacher-student HLO artifacts: rebuild with --features pjrt")
 }
 
+/// Resolve a [`TrainConfig`] from typed train flags: config file (or
+/// quickstart) plus flag overrides, then export the kernel knobs. The
+/// env vars must be set before the first backend is built — the
+/// worker-pool size and SIMD tier are read once, lazily, on first use;
+/// explicit env vars still win over config keys.
+fn build_train_config(t: &TrainArgs) -> Result<TrainConfig> {
+    let mut cfg = match &t.config {
+        Some(path) => TrainConfig::from_file(path)?,
+        None => {
+            let mut c = TrainConfig::quickstart(&t.model, t.steps);
+            c.seed = t.seed;
+            c.metrics_path = t.metrics.clone();
+            c.ranks = t.ranks;
+            c
+        }
+    };
+    cfg.artifacts = t.artifacts.clone();
+    // Checkpoint flags always win over the config file.
+    if let Some(dir) = &t.checkpoint_dir {
+        cfg.checkpoint_dir = dir.clone();
+    }
+    if let Some(every) = t.checkpoint_every {
+        cfg.checkpoint_every = every;
+    }
+    if let Some(r) = &t.resume {
+        cfg.resume = r.clone();
+    }
+    if cfg.threads > 0 && std::env::var("NANOGNS_THREADS").is_err() {
+        std::env::set_var("NANOGNS_THREADS", cfg.threads.to_string());
+    }
+    if cfg.force_scalar && std::env::var("NANOGNS_FORCE_SCALAR").is_err() {
+        std::env::set_var("NANOGNS_FORCE_SCALAR", "1");
+    }
+    Ok(cfg)
+}
+
+/// Build a trainer (fresh or resumed), echoing progress through `say`
+/// so `--json` runs keep stdout machine-readable.
+fn build_trainer(
+    factory: &dyn BackendFactory,
+    cfg: TrainConfig,
+    say: &dyn Fn(String),
+) -> Result<Trainer> {
+    let resume = cfg.resume.clone();
+    say(format!(
+        "training {} ({:.2}M params) for {} steps on {}",
+        cfg.model,
+        factory.describe(&cfg.model)?.n_params as f64 / 1e6,
+        cfg.steps,
+        factory.platform()
+    ));
+    let tr = if resume.is_empty() {
+        Trainer::new(factory, cfg)?
+    } else {
+        let tr = Trainer::resume(factory, cfg, &resume)?;
+        say(format!("resumed from {resume} at step {} ({} tokens)", tr.runner.step, tr.tokens()));
+        tr
+    };
+    if tr.cfg.ranks > 1 {
+        say(format!("ranks: {} on {} rank worker(s)", tr.cfg.ranks, tr.rank_workers()));
+    }
+    Ok(tr)
+}
+
+fn final_line(out: &TrainOutcome) -> Option<String> {
+    out.records.last().map(|r| {
+        format!(
+            "final: step {} loss {:.4} gns_total {:.2} gns_ln {:.2} ({} tokens)",
+            r.step, r.loss, r.gns_total, r.gns_layernorm, out.tokens
+        )
+    })
+}
+
+fn gns_triple(s: &nanogns::gns::TypeSnapshot) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("g_sq".to_string(), Value::finite_or_null(s.g_sq));
+    m.insert("s".to_string(), Value::finite_or_null(s.s));
+    m.insert("gns".to_string(), s.gns.map(Value::finite_or_null).unwrap_or(Value::Null));
+    Value::Obj(m)
+}
+
+fn str_or_null(s: &str) -> Value {
+    if s.is_empty() {
+        Value::Null
+    } else {
+        Value::Str(s.to_string())
+    }
+}
+
+/// The `repro train --json` run summary printed on stdout.
+fn train_summary(tr: &Trainer, out: &TrainOutcome, backend: &str) -> String {
+    let snap = tr.tracker.snapshot();
+    let mut per = BTreeMap::new();
+    for (t, s) in &snap.per_type {
+        per.insert(t.clone(), gns_triple(s));
+    }
+    let mut gns = BTreeMap::new();
+    gns.insert("per_type".to_string(), Value::Obj(per));
+    gns.insert("total".to_string(), gns_triple(&snap.total));
+
+    let mut m = BTreeMap::new();
+    m.insert("model".to_string(), Value::Str(tr.cfg.model.clone()));
+    m.insert("backend".to_string(), Value::Str(backend.to_string()));
+    m.insert("step".to_string(), Value::Num(tr.runner.step as f64));
+    m.insert("total_steps".to_string(), Value::Num(tr.cfg.steps as f64));
+    m.insert("tokens".to_string(), Value::Num(out.tokens as f64));
+    m.insert("final_loss".to_string(), Value::finite_or_null(out.final_loss));
+    m.insert("gns".to_string(), Value::Obj(gns));
+    m.insert("checkpoint_dir".to_string(), str_or_null(&tr.cfg.checkpoint_dir));
+    m.insert("metrics_path".to_string(), str_or_null(&tr.cfg.metrics_path));
+    Value::Obj(m).to_string()
+}
+
+/// CSV artifacts a figure writes under `results/` (empty for the
+/// stdout-only figures/tables). Used by `repro figures --json`.
+fn fig_outputs(n: u32) -> &'static [&'static str] {
+    match n {
+        2 => &["results/fig2_stderr.csv"],
+        3 => &["results/fig3_flops.csv"],
+        4 => &["results/fig4_io.csv"],
+        5 => &["results/fig5_phase.csv"],
+        6 => &["results/fig6_temperature.csv"],
+        7 => &["results/fig7_run.csv", "results/fig7_regression.csv"],
+        9 => &["results/fig9_schedule.csv"],
+        10 => &["results/fig10_sweep.csv"],
+        11 | 12 => &["results/fig12_teacher_student.csv"],
+        13 => &["results/fig13_cosine.csv"],
+        14 => &["results/fig14_phase_linear.csv"],
+        15 => &["results/fig15_schedule.csv"],
+        16 => &["results/fig16_ddp_vs_perex.csv"],
+        _ => &[],
+    }
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = TrainArgs::parse(argv)?;
+    if a.help {
+        print!("{}", cli::TRAIN_USAGE);
+        return Ok(());
+    }
+    let json = a.json;
+    // With --json, stdout carries exactly one JSON document; the human
+    // progress lines move to stderr.
+    let say: Box<dyn Fn(String)> = if json {
+        Box::new(|s| eprintln!("{s}"))
+    } else {
+        Box::new(|s| println!("{s}"))
+    };
+    let cfg = build_train_config(&a)?;
+    let factory = make_factory(&a.backend, &cfg.artifacts)?;
+    let mut tr = build_trainer(factory.as_ref(), cfg, say.as_ref())?;
+    let out = tr.run()?;
+    if let Some(line) = final_line(&out) {
+        say(line);
+    }
+    if json {
+        println!("{}", train_summary(&tr, &out, &a.backend));
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = ServeArgs::parse(argv)?;
+    if a.train.help {
+        print!("{}", cli::SERVE_USAGE);
+        return Ok(());
+    }
+    let mut cfg = build_train_config(&a.train)?;
+    if let Some(p) = a.port {
+        cfg.serve.port = p;
+    }
+    if let Some(b) = &a.bind {
+        cfg.serve.bind = b.clone();
+    }
+    if let Some(rc) = a.ring_capacity {
+        cfg.serve.ring_capacity = rc;
+    }
+    let serve_cfg = cfg.serve.clone();
+    let factory = make_factory(&a.train.backend, &cfg.artifacts)?;
+    let say: Box<dyn Fn(String)> = Box::new(|s| println!("{s}"));
+    let mut tr = build_trainer(factory.as_ref(), cfg, say.as_ref())?;
+
+    let hub = Arc::new(TelemetryHub::new(
+        serve::hub_meta(&tr, std::path::Path::new(".")),
+        serve_cfg.ring_capacity,
+    ));
+    let server = Server::bind(&serve_cfg.bind, serve_cfg.port, Arc::clone(&hub))?;
+    let addr = server.local_addr()?;
+    println!("serving telemetry on http://{addr} (POST /shutdown to stop)");
+    let server_thread = std::thread::Builder::new()
+        .name("serve-accept".to_string())
+        .spawn(move || server.serve())?;
+
+    // The trainer keeps the main thread; the hub is marked terminal no
+    // matter how the run ends.
+    let result = serve::train_and_publish(&mut tr, &hub);
+    match &result {
+        Err(_) => {
+            // A failed run must not leave a zombie daemon: flip the
+            // shutdown flag (the state is already Failed) so the accept
+            // loop unwinds and join() below returns.
+            hub.request_shutdown();
+        }
+        Ok(_) if !hub.shutdown_requested() => {
+            println!("run finished; telemetry stays up until POST /shutdown");
+        }
+        Ok(_) => {}
+    }
+    match server_thread.join() {
+        Ok(r) => r?,
+        Err(_) => bail!("telemetry server thread panicked"),
+    }
+    let out = result?;
+    if let Some(line) = final_line(&out) {
+        println!("{line}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> Result<()> {
+    let a = FiguresArgs::parse(argv)?;
+    if a.help {
+        print!("{}", cli::FIGURES_USAGE);
+        return Ok(());
+    }
+    let factory = make_factory(&a.backend, &a.artifacts)?;
+    let f = factory.as_ref();
+    let run_fig = |n: u32| -> Result<()> {
+        match n {
+            2 => figures::simulation::fig2(4096, 8),
+            3 => figures::costs::fig3(),
+            4 => figures::costs::fig4(),
+            5 => figures::training::fig5(f, &a.model, a.steps, false),
+            6 => figures::training::fig6(f, &a.model, a.steps),
+            7 => figures::training::fig7(f, &a.model, a.steps),
+            8 => {
+                println!("Fig. 8 is the LayerNorm kernel timing benchmark:");
+                println!("  cargo bench --features pjrt --bench ln_kernel");
+                Ok(())
+            }
+            9 => figures::training::fig9(f, &a.model, a.steps, a.seeds),
+            10 => figures::training::fig10(f, a.steps),
+            11 | 12 | 13 => fig_instability(n, &a.artifacts, a.steps),
+            14 => figures::training::fig5(f, &a.model, a.steps, true),
+            15 => figures::training::fig15(f, &a.model, a.steps),
+            16 => figures::training::fig16(f, &a.model, a.steps, a.ranks),
+            _ => bail!("unknown figure {n} (2..16)"),
+        }
+    };
+    let run_table = |n: u32| -> Result<()> {
+        match n {
+            1 => figures::costs::table1(),
+            2 => figures::costs::table2(),
+            _ => bail!("unknown table {n} (1..2)"),
+        }
+    };
+
+    // Figure ids that actually ran, for the --json artifact listing.
+    let mut ran: Vec<u32> = Vec::new();
+    if a.all {
+        for t in 1..=2 {
+            run_table(t)?;
+            println!();
+        }
+        for fign in [2u32, 3, 4, 5, 6, 7, 9, 10, 14, 15, 16] {
+            run_fig(fign)?;
+            ran.push(fign);
+            println!();
+        }
+        // Figs. 12/13 need the teacher-student HLO artifacts; keep
+        // --all usable on hermetic builds by skipping, not failing.
+        if cfg!(feature = "pjrt") {
+            for fign in [12u32, 13] {
+                match run_fig(fign) {
+                    Ok(()) => ran.push(fign),
+                    Err(e) => eprintln!("skipping fig {fign}: {e}"),
+                }
+                println!();
+            }
+        }
+    } else if let Some(t) = a.table {
+        run_table(t)?;
+    } else if let Some(n) = a.fig {
+        run_fig(n)?;
+        ran.push(n);
+    }
+
+    if a.json {
+        let outputs: Vec<Value> = ran
+            .iter()
+            .flat_map(|n| fig_outputs(*n))
+            .filter(|p| std::path::Path::new(p).exists())
+            .map(|p| Value::Str(p.to_string()))
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("outputs".to_string(), Value::Arr(outputs));
+        // Printed last so `repro figures --json ... | tail -n1` is clean
+        // JSON even though figure generators log to stdout.
+        let doc = Value::Obj(m).to_string();
+        println!("{doc}");
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let a = InfoArgs::parse(argv)?;
+    if a.help {
+        print!("{}", cli::INFO_USAGE);
+        return Ok(());
+    }
+    let factory = make_factory(&a.backend, &a.artifacts)?;
+    if a.json {
+        let mut models = Vec::new();
+        for name in factory.models() {
+            let c = factory.describe(&name)?;
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Value::Str(name.clone()));
+            m.insert("d_model".to_string(), Value::Num(c.d_model as f64));
+            m.insert("n_layers".to_string(), Value::Num(c.n_layers as f64));
+            m.insert("n_heads".to_string(), Value::Num(c.n_heads as f64));
+            m.insert("seq_len".to_string(), Value::Num(c.seq_len as f64));
+            m.insert("vocab".to_string(), Value::Num(c.vocab as f64));
+            m.insert("microbatch".to_string(), Value::Num(c.microbatch as f64));
+            m.insert("n_params".to_string(), Value::Num(c.n_params as f64));
+            models.push(Value::Obj(m));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("backend".to_string(), Value::Str(a.backend.clone()));
+        top.insert("platform".to_string(), Value::Str(factory.platform()));
+        top.insert("models".to_string(), Value::Arr(models));
+        let doc = Value::Obj(top).to_string();
+        println!("{doc}");
+    } else {
+        println!("backend: {} ({})", a.backend, factory.platform());
+        for name in factory.models() {
+            let c = factory.describe(&name)?;
+            println!(
+                "  {name}: d={} L={} heads={} T={} vocab={} microbatch={} params={:.2}M",
+                c.d_model,
+                c.n_layers,
+                c.n_heads,
+                c.seq_len,
+                c.vocab,
+                c.microbatch,
+                c.n_params as f64 / 1e6
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let a = InspectArgs::parse(argv)?;
+    if a.help {
+        print!("{}", cli::INSPECT_USAGE);
+        return Ok(());
+    }
+    let text = cli::inspect::run(&a)?;
+    if text.ends_with('\n') {
+        print!("{text}");
+    } else {
+        println!("{text}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(&argv[1..])?;
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let backend = args.get_or("backend", "reference");
-
+    let rest = &argv[1..];
     match cmd.as_str() {
         "help" | "--help" | "-h" => print!("{USAGE}"),
-        "train" => {
-            let factory = make_factory(&backend, &artifacts)?;
-            let mut cfg = match args.get("config") {
-                Some(path) => TrainConfig::from_file(path)?,
-                None => {
-                    let mut c = TrainConfig::quickstart(
-                        &args.get_or("model", "small"),
-                        args.get_num("steps", 50u64)?,
-                    );
-                    c.seed = args.get_num("seed", 0u64)?;
-                    c.metrics_path = args.get_or("metrics", "");
-                    c.ranks = args.get_num("ranks", 1usize)?;
-                    c
-                }
-            };
-            cfg.artifacts = artifacts.clone();
-            // Checkpoint flags always win over the config file.
-            if let Some(dir) = args.get("checkpoint-dir") {
-                cfg.checkpoint_dir = dir.to_string();
-            }
-            if let Some(every) = args.get("checkpoint-every") {
-                cfg.checkpoint_every = every.parse()?;
-            }
-            if let Some(r) = args.get("resume") {
-                cfg.resume = r.to_string();
-            }
-            // Kernel knobs must be exported before the first backend is
-            // built: the worker-pool size and SIMD tier are read once,
-            // lazily, on first use. Explicit env vars still win.
-            if cfg.threads > 0 && std::env::var("NANOGNS_THREADS").is_err() {
-                std::env::set_var("NANOGNS_THREADS", cfg.threads.to_string());
-            }
-            if cfg.force_scalar && std::env::var("NANOGNS_FORCE_SCALAR").is_err() {
-                std::env::set_var("NANOGNS_FORCE_SCALAR", "1");
-            }
-            let resume = cfg.resume.clone();
-            println!(
-                "training {} ({:.2}M params) for {} steps on {}",
-                cfg.model,
-                factory.describe(&cfg.model)?.n_params as f64 / 1e6,
-                cfg.steps,
-                factory.platform()
-            );
-            let mut tr = if resume.is_empty() {
-                Trainer::new(factory.as_ref(), cfg)?
-            } else {
-                let tr = Trainer::resume(factory.as_ref(), cfg, &resume)?;
-                println!(
-                    "resumed from {resume} at step {} ({} tokens)",
-                    tr.runner.step,
-                    tr.tokens()
-                );
-                tr
-            };
-            if tr.cfg.ranks > 1 {
-                println!("ranks: {} on {} rank worker(s)", tr.cfg.ranks, tr.rank_workers());
-            }
-            let out = tr.run()?;
-            if let Some(r) = out.records.last() {
-                println!(
-                    "final: step {} loss {:.4} gns_total {:.2} gns_ln {:.2} ({} tokens)",
-                    r.step, r.loss, r.gns_total, r.gns_layernorm, out.tokens
-                );
-            }
-        }
-        "figures" => {
-            let factory = make_factory(&backend, &artifacts)?;
-            let f = factory.as_ref();
-            let model = args.get_or("model", "micro");
-            let steps = args.get_num("steps", 60u64)?;
-            let seeds = args.get_num("seeds", 3u64)?;
-            let ranks = args.get_num("ranks", 4usize)?;
-            let run_fig = |n: u32| -> Result<()> {
-                match n {
-                    2 => figures::simulation::fig2(4096, 8),
-                    3 => figures::costs::fig3(),
-                    4 => figures::costs::fig4(),
-                    5 => figures::training::fig5(f, &model, steps, false),
-                    6 => figures::training::fig6(f, &model, steps),
-                    7 => figures::training::fig7(f, &model, steps),
-                    8 => {
-                        println!("Fig. 8 is the LayerNorm kernel timing benchmark:");
-                        println!("  cargo bench --features pjrt --bench ln_kernel");
-                        Ok(())
-                    }
-                    9 => figures::training::fig9(f, &model, steps, seeds),
-                    10 => figures::training::fig10(f, steps),
-                    11 | 12 | 13 => fig_instability(n, &artifacts, steps),
-                    14 => figures::training::fig5(f, &model, steps, true),
-                    15 => figures::training::fig15(f, &model, steps),
-                    16 => figures::training::fig16(f, &model, steps, ranks),
-                    _ => bail!("unknown figure {n} (2..16)"),
-                }
-            };
-            let run_table = |n: u32| -> Result<()> {
-                match n {
-                    1 => figures::costs::table1(),
-                    2 => figures::costs::table2(),
-                    _ => bail!("unknown table {n} (1..2)"),
-                }
-            };
-            if args.has("all") {
-                for t in 1..=2 {
-                    run_table(t)?;
-                    println!();
-                }
-                for fign in [2u32, 3, 4, 5, 6, 7, 9, 10, 14, 15, 16] {
-                    run_fig(fign)?;
-                    println!();
-                }
-                // Figs. 12/13 need the teacher-student HLO artifacts; keep
-                // --all usable on hermetic builds by skipping, not failing.
-                if cfg!(feature = "pjrt") {
-                    for fign in [12u32, 13] {
-                        if let Err(e) = run_fig(fign) {
-                            eprintln!("skipping fig {fign}: {e}");
-                        }
-                        println!();
-                    }
-                }
-            } else if let Some(t) = args.get("table") {
-                run_table(t.parse()?)?;
-            } else if let Some(fign) = args.get("fig") {
-                run_fig(fign.parse()?)?;
-            } else {
-                bail!("pass --fig N, --table N, or --all\n{USAGE}");
-            }
-        }
-        "info" => {
-            let factory = make_factory(&backend, &artifacts)?;
-            println!("backend: {} ({})", backend, factory.platform());
-            for name in factory.models() {
-                let c = factory.describe(&name)?;
-                println!(
-                    "  {name}: d={} L={} heads={} T={} vocab={} microbatch={} params={:.2}M",
-                    c.d_model,
-                    c.n_layers,
-                    c.n_heads,
-                    c.seq_len,
-                    c.vocab,
-                    c.microbatch,
-                    c.n_params as f64 / 1e6
-                );
-            }
-        }
+        "train" => cmd_train(rest)?,
+        "serve" => cmd_serve(rest)?,
+        "figures" => cmd_figures(rest)?,
+        "info" => cmd_info(rest)?,
+        "inspect" => cmd_inspect(rest)?,
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
     Ok(())

@@ -10,7 +10,7 @@
 //! [`PjrtBackend`] adapts the artifact dispatch to the [`Backend`] trait;
 //! the offline workspace compiles this module against the `vendor/xla`
 //! stub, so it type-checks everywhere but executes only when the real
-//! `xla` crate is patched in (DESIGN.md §5).
+//! `xla` crate is patched in (DESIGN.md §6).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

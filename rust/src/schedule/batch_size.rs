@@ -17,6 +17,33 @@ pub enum BatchSizeSchedule {
 }
 
 impl BatchSizeSchedule {
+    /// JSON description of the schedule, mirroring the config-file
+    /// encoding (`{"kind": ..., ...}`) so the serve daemon's
+    /// `/schedule` endpoint and `TrainConfig` speak the same shape.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            Self::Fixed { accum } => {
+                m.insert("kind".into(), Value::Str("fixed".into()));
+                m.insert("accum".into(), Value::Num(*accum as f64));
+            }
+            Self::Linear { min_accum, max_accum, ramp_tokens } => {
+                m.insert("kind".into(), Value::Str("linear".into()));
+                m.insert("min_accum".into(), Value::Num(*min_accum as f64));
+                m.insert("max_accum".into(), Value::Num(*max_accum as f64));
+                m.insert("ramp_tokens".into(), Value::Num(*ramp_tokens as f64));
+            }
+            Self::Adaptive { min_accum, max_accum, gain } => {
+                m.insert("kind".into(), Value::Str("adaptive".into()));
+                m.insert("min_accum".into(), Value::Num(*min_accum as f64));
+                m.insert("max_accum".into(), Value::Num(*max_accum as f64));
+                m.insert("gain".into(), Value::Num(*gain));
+            }
+        }
+        Value::Obj(m)
+    }
+
     /// Accumulation steps for the next optimizer step.
     ///
     /// * `tokens_processed` — total tokens consumed so far;

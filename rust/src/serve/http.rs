@@ -1,0 +1,247 @@
+//! Just-enough HTTP/1.1 for a localhost telemetry daemon: parse one
+//! request head off a `TcpStream`, write one `Connection: close`
+//! response. No keep-alive, no chunked bodies, no TLS — pollers issue
+//! short-lived GETs and the interesting concurrency lives in the hub,
+//! not the protocol layer.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{ensure, Context, Result};
+
+/// Upper bound on accepted request heads; anything larger is hostile
+/// or broken (our longest legitimate request line is ~60 bytes).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// A parsed request head: method, path (query split off), query pairs.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    query: Vec<(String, String)>,
+}
+
+impl Request {
+    /// First query value for `key`, if present.
+    pub fn query(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse a query parameter with `FromStr`, erroring (for a 400) on
+    /// malformed values and falling back to `default` when absent.
+    pub fn query_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.query(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("bad query parameter {key}={raw:?}")),
+        }
+    }
+}
+
+/// Read and parse one request head (request line + headers). The body,
+/// if any, is drained per `Content-Length` and discarded — the daemon's
+/// only non-GET endpoint (`POST /shutdown`) takes no payload.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    ensure!(!line.is_empty(), "empty request");
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or_default();
+    ensure!(version.starts_with("HTTP/1."), "unsupported protocol {version:?}");
+    ensure!(!method.is_empty() && target.starts_with('/'), "malformed request line");
+
+    let mut content_length = 0usize;
+    let mut head_bytes = line.len();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading header")?;
+        head_bytes += h.len();
+        ensure!(head_bytes <= MAX_HEAD_BYTES, "request head too large");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    if content_length > 0 {
+        ensure!(content_length <= MAX_HEAD_BYTES, "request body too large");
+        let mut sink = vec![0u8; content_length];
+        reader.read_exact(&mut sink).context("draining body")?;
+    }
+
+    let (path, query_raw) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q),
+        None => (target.clone(), ""),
+    };
+    let query = query_raw
+        .split('&')
+        .filter(|s| !s.is_empty())
+        .map(|pair| match pair.split_once('=') {
+            Some((k, v)) => (pct_decode(k), pct_decode(v)),
+            None => (pct_decode(pair), String::new()),
+        })
+        .collect();
+    Ok(Request { method, path, query })
+}
+
+/// Minimal percent-decoding (cursors and limits are plain digits, but a
+/// polite client may still encode them).
+fn pct_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'%' {
+            if let (Some(hi), Some(lo)) = (
+                b.get(i + 1).and_then(|c| (*c as char).to_digit(16)),
+                b.get(i + 2).and_then(|c| (*c as char).to_digit(16)),
+            ) {
+                out.push((hi * 16 + lo) as u8);
+                i += 3;
+                continue;
+            }
+        }
+        out.push(if b[i] == b'+' { b' ' } else { b[i] });
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// One response to write back; always `Connection: close`.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: ResponseBody,
+}
+
+/// Bodies are either borrowed from the hub's cache (`Shared`) or built
+/// per-request (`Owned`); both write without copying into a new buffer.
+pub enum ResponseBody {
+    Owned(String),
+    Shared(std::sync::Arc<String>),
+}
+
+impl ResponseBody {
+    fn as_bytes(&self) -> &[u8] {
+        match self {
+            ResponseBody::Owned(s) => s.as_bytes(),
+            ResponseBody::Shared(s) => s.as_bytes(),
+        }
+    }
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Self {
+        Self { status, content_type: "application/json", body: ResponseBody::Owned(body) }
+    }
+
+    pub fn json_shared(status: u16, body: std::sync::Arc<String>) -> Self {
+        Self { status, content_type: "application/json", body: ResponseBody::Shared(body) }
+    }
+
+    pub fn text(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: ResponseBody::Owned(body),
+        }
+    }
+
+    /// JSON error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, msg: &str) -> Self {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".to_string(), crate::util::json::Value::Str(msg.to_string()));
+        Self::json(status, crate::util::json::Value::Obj(m).to_string())
+    }
+
+    pub fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
+        let body = self.body.as_bytes();
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+        Ok(())
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Parse-or-400 helper used by the router: turns a parse error into a
+/// client-visible 400 instead of a dropped connection.
+pub fn bad_request(err: &anyhow::Error) -> Response {
+    Response::error(400, &format!("{err:#}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Round-trip one raw request through a real socket pair.
+    fn parse_raw(raw: &str) -> Result<Request> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(raw.as_bytes()).unwrap();
+        client.flush().unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        read_request(&mut server_side)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let req = parse_raw("GET /records?since=42&limit=10 HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/records");
+        assert_eq!(req.query("since"), Some("42"));
+        assert_eq!(req.query_num::<u64>("limit", 0).unwrap(), 10);
+        assert_eq!(req.query_num::<u64>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_query_number_and_garbage() {
+        let req = parse_raw("GET /records?since=abc HTTP/1.1\r\n\r\n").unwrap();
+        assert!(req.query_num::<u64>("since", 0).is_err());
+        assert!(parse_raw("NONSENSE\r\n\r\n").is_err());
+        assert!(parse_raw("GET /x SPDY/9\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn drains_post_body() {
+        let req =
+            parse_raw("POST /shutdown HTTP/1.1\r\nContent-Length: 2\r\n\r\nok").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/shutdown");
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(pct_decode("a%20b+c"), "a b c");
+        assert_eq!(pct_decode("plain"), "plain");
+        assert_eq!(pct_decode("bad%zz"), "bad%zz");
+    }
+}

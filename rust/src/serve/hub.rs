@@ -1,0 +1,527 @@
+//! The lock-light seam between one training thread and many pollers.
+//!
+//! The trainer publishes each step once ([`TelemetryHub`] implements
+//! [`StepObserver`]); every HTTP worker reads *cached serialized
+//! responses*. The concurrency contract:
+//!
+//! * the training thread takes the inner lock once per step, for the
+//!   time it takes to push one pre-serialized record and update a few
+//!   scalars — never proportional to poller traffic;
+//! * pollers hit a version-stamped response cache; at most **one**
+//!   rebuild per endpoint per published step reaches the inner state,
+//!   no matter how many clients poll. Heavy traffic therefore costs
+//!   `Arc<String>` clones, not JSON serialization and not trainer time;
+//! * `/records` is parameterized by cursor so it reads the ring
+//!   directly, but the ring stores records already serialized — the
+//!   read assembles byte fragments only.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::trainer::{record_json, StepObservation, StepObserver, StepRecord};
+use crate::gns::GnsSnapshot;
+use crate::telemetry::summary::Decimated;
+use crate::util::json::Value;
+
+use super::ring::{RecordRing, RingSlice};
+
+/// Maximum decimated loss-curve points carried by `/status`.
+const LOSS_CURVE_MAX: usize = 1024;
+
+/// Lifecycle of the run the hub fronts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    Running,
+    /// Ran its full step budget.
+    Finished,
+    /// Stopped early by a graceful `POST /shutdown`.
+    Stopped,
+    /// Training thread returned an error (details in `/status.error`).
+    Failed,
+}
+
+impl RunState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunState::Running => "running",
+            RunState::Finished => "finished",
+            RunState::Stopped => "stopped",
+            RunState::Failed => "failed",
+        }
+    }
+}
+
+/// Immutable run facts captured at daemon start.
+#[derive(Debug, Clone)]
+pub struct HubMeta {
+    pub model: String,
+    pub platform: String,
+    pub total_steps: u64,
+    pub n_params: u64,
+    pub ranks: usize,
+    pub microbatch: usize,
+    /// `BatchSizeSchedule::to_json` of the configured schedule.
+    pub schedule: Value,
+    pub checkpoint_dir: String,
+    pub metrics_path: String,
+    /// Medians harvested from `BENCH_*.json` reports, if any were found.
+    pub bench: Option<Value>,
+}
+
+struct HubInner {
+    ring: RecordRing,
+    last: Option<StepRecord>,
+    gns: Option<GnsSnapshot>,
+    /// Controller hysteresis anchor after the last step.
+    accum: usize,
+    loss_curve: Decimated,
+    state: RunState,
+    error: Option<String>,
+    final_checkpoint: Option<String>,
+}
+
+pub struct TelemetryHub {
+    meta: HubMeta,
+    inner: Mutex<HubInner>,
+    /// Bumped on every state change; response caches key off it.
+    version: AtomicU64,
+    cache: Mutex<BTreeMap<&'static str, (u64, Arc<String>)>>,
+    shutdown: AtomicBool,
+    started: Instant,
+    /// HTTP requests served (exposed on `/metrics`).
+    pub requests: AtomicU64,
+}
+
+impl TelemetryHub {
+    pub fn new(meta: HubMeta, ring_capacity: usize) -> Self {
+        Self {
+            meta,
+            inner: Mutex::new(HubInner {
+                ring: RecordRing::new(ring_capacity),
+                last: None,
+                gns: None,
+                accum: 0,
+                loss_curve: Decimated::new(LOSS_CURVE_MAX),
+                state: RunState::Running,
+                error: None,
+                final_checkpoint: None,
+            }),
+            version: AtomicU64::new(0),
+            cache: Mutex::new(BTreeMap::new()),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn meta(&self) -> &HubMeta {
+        &self.meta
+    }
+
+    fn lock_inner(&self) -> std::sync::MutexGuard<'_, HubInner> {
+        // A poisoned lock means a panic mid-publish; telemetry is
+        // advisory, so serve the last consistent-enough state rather
+        // than cascading the panic into every HTTP worker.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn bump(&self) {
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    // -- trainer side ------------------------------------------------------
+
+    /// Publish one completed step (the [`StepObserver`] path).
+    pub fn publish(&self, obs: &StepObservation<'_>) {
+        // Serialize outside the lock: pollers and the cache rebuild are
+        // never blocked on float formatting.
+        let json = Arc::new(record_json(obs.record).to_string());
+        let mut inner = self.lock_inner();
+        inner.ring.push(obs.record.step, json);
+        inner.loss_curve.push(obs.record.step as f64, obs.record.loss);
+        inner.last = Some(obs.record.clone());
+        inner.gns = Some(obs.gns.clone());
+        inner.accum = obs.accum;
+        drop(inner);
+        self.bump();
+    }
+
+    /// Terminal state transition, called once by the training thread
+    /// when `Trainer::run` returns (or dies).
+    pub fn mark_done(&self, state: RunState, error: Option<String>, final_ckpt: Option<String>) {
+        let mut inner = self.lock_inner();
+        inner.state = state;
+        inner.error = error;
+        inner.final_checkpoint = final_ckpt;
+        drop(inner);
+        self.bump();
+    }
+
+    // -- shutdown handshake ------------------------------------------------
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.bump();
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    pub fn run_state(&self) -> RunState {
+        self.lock_inner().state
+    }
+
+    /// The accept loop exits once shutdown was requested *and* the
+    /// training thread has reached a terminal state (so the graceful
+    /// checkpoint has been written and `/status` reflects it).
+    pub fn server_should_exit(&self) -> bool {
+        self.shutdown_requested() && self.run_state() != RunState::Running
+    }
+
+    // -- poller side -------------------------------------------------------
+
+    /// Version-stamped response cache: returns the cached body when it
+    /// matches the current hub version, else rebuilds via `build` and
+    /// caches. `name` must be unique per endpoint.
+    pub fn cached(&self, name: &'static str, build: impl FnOnce() -> String) -> Arc<String> {
+        let v = self.version();
+        {
+            let cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some((cv, body)) = cache.get(name) {
+                if *cv == v {
+                    return Arc::clone(body);
+                }
+            }
+        }
+        let body = Arc::new(build());
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        cache.insert(name, (v, Arc::clone(&body)));
+        body
+    }
+
+    pub fn body_health(&self) -> String {
+        let inner = self.lock_inner();
+        let mut m = BTreeMap::new();
+        m.insert("status".into(), Value::Str("ok".into()));
+        m.insert("state".into(), Value::Str(inner.state.as_str().into()));
+        m.insert(
+            "step".into(),
+            Value::Num(inner.last.as_ref().map(|r| r.step).unwrap_or(0) as f64),
+        );
+        drop(inner);
+        m.insert("uptime_s".into(), Value::Num(self.started.elapsed().as_secs_f64()));
+        Value::Obj(m).to_string()
+    }
+
+    pub fn body_status(&self) -> String {
+        let inner = self.lock_inner();
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Value::Str(self.meta.model.clone()));
+        m.insert("platform".into(), Value::Str(self.meta.platform.clone()));
+        m.insert("state".into(), Value::Str(inner.state.as_str().into()));
+        m.insert("total_steps".into(), Value::Num(self.meta.total_steps as f64));
+        m.insert("n_params".into(), Value::Num(self.meta.n_params as f64));
+        m.insert("ranks".into(), Value::Num(self.meta.ranks as f64));
+        m.insert("microbatch".into(), Value::Num(self.meta.microbatch as f64));
+        m.insert("uptime_s".into(), Value::Num(self.started.elapsed().as_secs_f64()));
+        m.insert("shutdown_requested".into(), Value::Bool(self.shutdown_requested()));
+        m.insert("checkpoint_dir".into(), Value::Str(self.meta.checkpoint_dir.clone()));
+        m.insert("metrics_path".into(), Value::Str(self.meta.metrics_path.clone()));
+        m.insert(
+            "error".into(),
+            inner.error.as_ref().map(|e| Value::Str(e.clone())).unwrap_or(Value::Null),
+        );
+        m.insert(
+            "final_checkpoint".into(),
+            inner
+                .final_checkpoint
+                .as_ref()
+                .map(|p| Value::Str(p.clone()))
+                .unwrap_or(Value::Null),
+        );
+        m.insert("last".into(), inner.last.as_ref().map(record_json).unwrap_or(Value::Null));
+        let curve: Vec<Value> = inner
+            .loss_curve
+            .points()
+            .iter()
+            .map(|&(s, l)| Value::Arr(vec![Value::Num(s), Value::finite_or_null(l)]))
+            .collect();
+        m.insert("loss_curve".into(), Value::Arr(curve));
+        m.insert("loss_curve_stride".into(), Value::Num(inner.loss_curve.stride() as f64));
+        let mut ring = BTreeMap::new();
+        ring.insert("capacity".into(), Value::Num(inner.ring.capacity() as f64));
+        ring.insert("len".into(), Value::Num(inner.ring.len() as f64));
+        ring.insert("dropped".into(), Value::Num(inner.ring.dropped() as f64));
+        ring.insert(
+            "first_step".into(),
+            inner.ring.first_step().map(|s| Value::Num(s as f64)).unwrap_or(Value::Null),
+        );
+        ring.insert(
+            "last_step".into(),
+            inner.ring.last_step().map(|s| Value::Num(s as f64)).unwrap_or(Value::Null),
+        );
+        m.insert("ring".into(), Value::Obj(ring));
+        m.insert("bench".into(), self.meta.bench.clone().unwrap_or(Value::Null));
+        Value::Obj(m).to_string()
+    }
+
+    pub fn body_gns_layers(&self) -> String {
+        let inner = self.lock_inner();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "step".into(),
+            Value::Num(inner.last.as_ref().map(|r| r.step).unwrap_or(0) as f64),
+        );
+        match inner.gns.as_ref() {
+            None => {
+                m.insert("per_layer".into(), Value::Obj(BTreeMap::new()));
+                m.insert("total".into(), Value::Null);
+            }
+            Some(snap) => {
+                let mut per = BTreeMap::new();
+                for (t, s) in &snap.per_type {
+                    per.insert(t.clone(), type_snapshot_json(s));
+                }
+                m.insert("per_layer".into(), Value::Obj(per));
+                m.insert("total".into(), type_snapshot_json(&snap.total));
+            }
+        }
+        Value::Obj(m).to_string()
+    }
+
+    pub fn body_schedule(&self) -> String {
+        let inner = self.lock_inner();
+        let mut m = BTreeMap::new();
+        m.insert("schedule".into(), self.meta.schedule.clone());
+        m.insert("accum".into(), Value::Num(inner.accum as f64));
+        m.insert(
+            "b_big".into(),
+            inner.last.as_ref().map(|r| Value::Num(r.b_big)).unwrap_or(Value::Null),
+        );
+        m.insert("microbatch".into(), Value::Num(self.meta.microbatch as f64));
+        m.insert("ranks".into(), Value::Num(self.meta.ranks as f64));
+        m.insert(
+            "gns_total".into(),
+            inner
+                .last
+                .as_ref()
+                .map(|r| Value::finite_or_null(r.gns_total))
+                .unwrap_or(Value::Null),
+        );
+        Value::Obj(m).to_string()
+    }
+
+    /// Prometheus text exposition (`text/plain`). NaN is a legal sample
+    /// value in this format, so raw floats go out unguarded.
+    pub fn body_metrics(&self) -> String {
+        use std::fmt::Write as _;
+        fn gauge(out: &mut String, name: &str, labels: &str, v: f64) {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name}{labels} {v}");
+        }
+        let inner = self.lock_inner();
+        let mut out = String::with_capacity(1024);
+        if let Some(r) = inner.last.as_ref() {
+            gauge(&mut out, "nanogns_step", "", r.step as f64);
+            gauge(&mut out, "nanogns_tokens", "", r.tokens as f64);
+            gauge(&mut out, "nanogns_loss", "", r.loss);
+            gauge(&mut out, "nanogns_lr", "", r.lr);
+            gauge(&mut out, "nanogns_accum", "", r.accum as f64);
+            gauge(&mut out, "nanogns_b_big", "", r.b_big);
+            gauge(&mut out, "nanogns_gns_total", "", r.gns_total);
+            gauge(&mut out, "nanogns_step_ms", "", r.step_ms);
+        }
+        if let Some(snap) = inner.gns.as_ref() {
+            let _ = writeln!(out, "# TYPE nanogns_gns gauge");
+            for (t, s) in &snap.per_type {
+                let v = s.gns.unwrap_or(f64::NAN);
+                let _ = writeln!(out, "nanogns_gns{{layer=\"{t}\"}} {v}");
+            }
+        }
+        gauge(&mut out, "nanogns_ring_dropped", "", inner.ring.dropped() as f64);
+        let state = inner.state;
+        drop(inner);
+        gauge(&mut out, "nanogns_uptime_seconds", "", self.started.elapsed().as_secs_f64());
+        gauge(
+            &mut out,
+            "nanogns_http_requests_total",
+            "",
+            self.requests.load(Ordering::Relaxed) as f64,
+        );
+        gauge(
+            &mut out,
+            "nanogns_run_finished",
+            "",
+            if state == RunState::Running { 0.0 } else { 1.0 },
+        );
+        out
+    }
+
+    /// `/records?since=&limit=` body: assembled from the ring's
+    /// pre-serialized fragments — no per-request float formatting.
+    pub fn body_records(&self, since: u64, limit: usize) -> String {
+        let slice: RingSlice;
+        let (dropped, capacity, state) = {
+            let inner = self.lock_inner();
+            slice = inner.ring.since(since, limit);
+            (inner.ring.dropped(), inner.ring.capacity(), inner.state)
+        };
+        let frag_bytes: usize = slice.entries.iter().map(|e| e.json.len() + 1).sum();
+        let mut out = String::with_capacity(64 + frag_bytes);
+        out.push_str("{\"records\":[");
+        for (i, e) in slice.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&e.json);
+        }
+        out.push_str("],\"next_since\":");
+        out.push_str(&slice.next_since.to_string());
+        out.push_str(",\"truncated\":");
+        out.push_str(if slice.truncated { "true" } else { "false" });
+        out.push_str(",\"dropped\":");
+        out.push_str(&dropped.to_string());
+        out.push_str(",\"ring_capacity\":");
+        out.push_str(&capacity.to_string());
+        out.push_str(",\"state\":\"");
+        out.push_str(state.as_str());
+        out.push_str("\"}");
+        out
+    }
+}
+
+fn type_snapshot_json(s: &crate::gns::TypeSnapshot) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("g_sq".into(), Value::finite_or_null(s.g_sq));
+    m.insert("s".into(), Value::finite_or_null(s.s));
+    m.insert("gns".into(), s.gns.map(Value::finite_or_null).unwrap_or(Value::Null));
+    Value::Obj(m)
+}
+
+impl StepObserver for TelemetryHub {
+    fn on_step(&self, obs: &StepObservation<'_>) {
+        self.publish(obs);
+    }
+
+    fn stop_requested(&self) -> bool {
+        self.shutdown_requested()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_meta() -> HubMeta {
+        HubMeta {
+            model: "nano".into(),
+            platform: "test".into(),
+            total_steps: 10,
+            n_params: 123,
+            ranks: 1,
+            microbatch: 4,
+            schedule: crate::schedule::BatchSizeSchedule::Fixed { accum: 2 }.to_json(),
+            checkpoint_dir: String::new(),
+            metrics_path: String::new(),
+            bench: None,
+        }
+    }
+
+    fn rec(step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            tokens: step * 64,
+            loss: 5.0 - step as f64 * 0.1,
+            lr: 1e-3,
+            accum: 2,
+            b_big: 8.0,
+            raw_g_sq: [1.0; crate::N_TYPES],
+            raw_s: [2.0; crate::N_TYPES],
+            raw_g_sq_total: 5.0,
+            raw_s_total: 10.0,
+            gns_layernorm: 2.0,
+            gns_total: 2.0,
+            step_ms: 1.0,
+        }
+    }
+
+    fn publish(hub: &TelemetryHub, step: u64) {
+        let r = rec(step);
+        let mut tracker = crate::gns::GnsTracker::new(&crate::STATS_ORDER, 0.5);
+        tracker.observe(8.0, &[1.0; crate::N_TYPES], &[3.0; crate::N_TYPES]);
+        hub.publish(&StepObservation {
+            record: &r,
+            gns: tracker.snapshot(),
+            accum: 2,
+            total_steps: 10,
+        });
+    }
+
+    #[test]
+    fn bodies_are_valid_json_and_track_state() {
+        let hub = TelemetryHub::new(test_meta(), 8);
+        // pre-first-step bodies parse too
+        let bodies =
+            [hub.body_health(), hub.body_status(), hub.body_gns_layers(), hub.body_schedule()];
+        for body in bodies {
+            Value::parse(&body).unwrap();
+        }
+        publish(&hub, 1);
+        publish(&hub, 2);
+        let st = Value::parse(&hub.body_status()).unwrap();
+        assert_eq!(st.get("state").unwrap().as_str().unwrap(), "running");
+        assert_eq!(st.get("last").unwrap().get("step").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(st.get("loss_curve").unwrap().as_arr().unwrap().len(), 2);
+        let gl = Value::parse(&hub.body_gns_layers()).unwrap();
+        assert_eq!(gl.get("per_layer").unwrap().as_obj().unwrap().len(), crate::N_TYPES);
+        let recs = Value::parse(&hub.body_records(0, 100)).unwrap();
+        assert_eq!(recs.get("records").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(recs.get("next_since").unwrap().as_u64().unwrap(), 2);
+        hub.mark_done(RunState::Finished, None, None);
+        let st = Value::parse(&hub.body_status()).unwrap();
+        assert_eq!(st.get("state").unwrap().as_str().unwrap(), "finished");
+    }
+
+    #[test]
+    fn cache_serves_same_arc_until_version_bump() {
+        let hub = TelemetryHub::new(test_meta(), 8);
+        publish(&hub, 1);
+        let a = hub.cached("status", || hub.body_status());
+        let b = hub.cached("status", || panic!("must not rebuild at same version"));
+        assert!(Arc::ptr_eq(&a, &b));
+        publish(&hub, 2);
+        let c = hub.cached("status", || hub.body_status());
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn shutdown_handshake_gates_server_exit() {
+        let hub = TelemetryHub::new(test_meta(), 8);
+        assert!(!hub.server_should_exit());
+        hub.request_shutdown();
+        // training thread has not stopped yet
+        assert!(!hub.server_should_exit());
+        assert!(hub.stop_requested());
+        hub.mark_done(RunState::Stopped, None, None);
+        assert!(hub.server_should_exit());
+    }
+
+    #[test]
+    fn metrics_exposition_contains_core_series() {
+        let hub = TelemetryHub::new(test_meta(), 8);
+        publish(&hub, 3);
+        let m = hub.body_metrics();
+        let needles =
+            ["nanogns_step 3", "nanogns_gns{layer=\"layernorm\"}", "nanogns_uptime_seconds"];
+        for needle in needles {
+            assert!(m.contains(needle), "missing {needle} in:\n{m}");
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! `repro serve`: a live telemetry daemon over a training run.
+//!
+//! Architecture (DESIGN.md §5): the trainer runs on one background
+//! thread and publishes each completed step into a [`TelemetryHub`] via
+//! the [`StepObserver`](crate::coordinator::StepObserver) hook; a small
+//! HTTP/1.1 server ([`Server`]) answers pollers from the hub's cached
+//! serialized responses. Three invariants the split buys:
+//!
+//! 1. **The run is untouched.** The observer fires after the CSV row is
+//!    logged and any due checkpoint is written, so a served run's
+//!    on-disk telemetry is identical (modulo wall-clock columns) to the
+//!    same run without the daemon.
+//! 2. **Pollers never block training.** The trainer's publish path takes
+//!    one short lock; GET traffic reads version-keyed cached bodies.
+//! 3. **Shutdown is graceful by construction.** `POST /shutdown` flips a
+//!    flag the trainer polls at step boundaries; the trainer parks a
+//!    final checkpoint (when configured) before the accept loop is
+//!    allowed to exit.
+//!
+//! Endpoints: `/health`, `/status`, `/gns/layers`, `/schedule`,
+//! `/records?since=&limit=`, `/metrics` (Prometheus text), and
+//! `POST /shutdown`. See README "Live telemetry".
+
+pub mod http;
+pub mod hub;
+pub mod ring;
+pub mod server;
+
+pub use hub::{HubMeta, RunState, TelemetryHub};
+pub use ring::{RecordRing, RingEntry, RingSlice};
+pub use server::Server;
+
+use anyhow::Result;
+
+use crate::coordinator::{TrainOutcome, Trainer};
+use crate::util::json::Value;
+
+/// Build the hub's immutable run metadata from a constructed trainer.
+/// `bench_dir` (usually the workspace root) is scanned for `BENCH_*.json`
+/// reports so `/status` can carry the machine's last known perf medians.
+pub fn hub_meta(trainer: &Trainer, bench_dir: &std::path::Path) -> HubMeta {
+    HubMeta {
+        model: trainer.cfg.model.clone(),
+        platform: trainer.runner.backend_name().to_string(),
+        total_steps: trainer.cfg.steps,
+        n_params: trainer.runner.entry.n_params,
+        ranks: trainer.cfg.ranks.max(1),
+        microbatch: trainer.runner.entry.microbatch,
+        schedule: trainer.cfg.batch_size.to_json(),
+        checkpoint_dir: trainer.cfg.checkpoint_dir.clone(),
+        metrics_path: trainer.cfg.metrics_path.clone(),
+        bench: load_bench_reports(bench_dir),
+    }
+}
+
+/// Collect `BENCH_*.json` reports from `dir` into one object keyed by
+/// report stem (`BENCH_train_step.json` → `"train_step"`). Unparseable
+/// files are skipped — stale perf data must not stop a daemon.
+pub fn load_bench_reports(dir: &std::path::Path) -> Option<Value> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut out = std::collections::BTreeMap::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(stem) = name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json")) else {
+            continue;
+        };
+        let Ok(text) = std::fs::read_to_string(entry.path()) else { continue };
+        if let Ok(v) = Value::parse(&text) {
+            out.insert(stem.to_string(), v);
+        }
+    }
+    (!out.is_empty()).then_some(Value::Obj(out))
+}
+
+/// Run the trainer to completion on the *current* thread, publishing
+/// into `hub`, and leave the hub in a terminal state no matter how the
+/// run ends (finished, gracefully stopped, errored, or panicked). This
+/// is the body of the daemon's training thread, shared with the
+/// integration tests.
+pub fn train_and_publish(trainer: &mut Trainer, hub: &TelemetryHub) -> Result<TrainOutcome> {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        trainer.run_with_observer(Some(hub))
+    }));
+    match result {
+        Ok(Ok(outcome)) => {
+            let stopped_early = hub.shutdown_requested() && trainer.runner.step < trainer.cfg.steps;
+            // Park a final checkpoint on graceful early stop so the run
+            // is resumable from its exact exit point (a full run already
+            // wrote its last periodic checkpoint, if configured).
+            let final_ckpt = if stopped_early && !trainer.cfg.checkpoint_dir.is_empty() {
+                match trainer.checkpoint_now() {
+                    Ok(p) => Some(p.display().to_string()),
+                    Err(e) => {
+                        hub.mark_done(
+                            RunState::Failed,
+                            Some(format!("final checkpoint failed: {e:#}")),
+                            None,
+                        );
+                        return Err(e);
+                    }
+                }
+            } else {
+                None
+            };
+            let state = if stopped_early { RunState::Stopped } else { RunState::Finished };
+            hub.mark_done(state, None, final_ckpt);
+            Ok(outcome)
+        }
+        Ok(Err(e)) => {
+            hub.mark_done(RunState::Failed, Some(format!("{e:#}")), None);
+            Err(e)
+        }
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "training thread panicked".to_string());
+            hub.mark_done(RunState::Failed, Some(msg.clone()), None);
+            Err(anyhow::anyhow!("training thread panicked: {msg}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_load_and_skip_garbage() {
+        let dir = std::env::temp_dir().join(format!("nanogns-bench-scan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("BENCH_train_step.json"), r#"{"a":{"median_ns":1}}"#).unwrap();
+        std::fs::write(dir.join("BENCH_broken.json"), "{nope").unwrap();
+        std::fs::write(dir.join("unrelated.json"), "{}").unwrap();
+        let v = load_bench_reports(&dir).unwrap();
+        let obj = v.as_obj().unwrap();
+        assert!(obj.contains_key("train_step"));
+        assert!(!obj.contains_key("broken"));
+        assert_eq!(obj.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_reports_none_when_absent() {
+        let dir = std::env::temp_dir().join(format!("nanogns-bench-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load_bench_reports(&dir).is_none());
+        assert!(load_bench_reports(std::path::Path::new("/nonexistent-xyz")).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

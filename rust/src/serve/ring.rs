@@ -1,0 +1,148 @@
+//! Fixed-capacity ring of recent step records, pre-serialized.
+//!
+//! The trainer publishes each step exactly once; pollers read any suffix
+//! of the ring via a `since` cursor (`GET /records?since=STEP`). Records
+//! are stored as `Arc<String>` JSON fragments serialized *at publish
+//! time*, so serving N concurrent pollers costs N buffer copies and
+//! zero float formatting — the hot path for "many dashboards, one run".
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// One ring slot: the record's step plus its serialized JSON object.
+#[derive(Debug, Clone)]
+pub struct RingEntry {
+    pub step: u64,
+    pub json: Arc<String>,
+}
+
+/// Result of a cursor read ([`RecordRing::since`]).
+#[derive(Debug, Clone)]
+pub struct RingSlice {
+    pub entries: Vec<RingEntry>,
+    /// Cursor for the next poll: the last returned step, or the request
+    /// cursor when nothing new was available. Strictly monotone across
+    /// polls of a live run.
+    pub next_since: u64,
+    /// True when `limit` cut the result short (more records are ready).
+    pub truncated: bool,
+}
+
+#[derive(Debug)]
+pub struct RecordRing {
+    cap: usize,
+    buf: VecDeque<RingEntry>,
+    /// Records evicted over the ring's lifetime (a poller whose cursor
+    /// fell behind by more than `cap` steps can detect the gap).
+    dropped: u64,
+}
+
+impl RecordRing {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        Self { cap, buf: VecDeque::with_capacity(cap), dropped: 0 }
+    }
+
+    /// Append a record. Steps must arrive strictly increasing (the
+    /// trainer's step counter); the oldest record is evicted when full.
+    pub fn push(&mut self, step: u64, json: Arc<String>) {
+        if let Some(last) = self.buf.back() {
+            debug_assert!(step > last.step, "ring pushes must be monotone");
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(RingEntry { step, json });
+    }
+
+    /// Records with `step > since`, oldest first, at most `limit`.
+    pub fn since(&self, since: u64, limit: usize) -> RingSlice {
+        let start = self.buf.partition_point(|e| e.step <= since);
+        let avail = self.buf.len() - start;
+        let take = avail.min(limit);
+        let entries: Vec<RingEntry> = self.buf.iter().skip(start).take(take).cloned().collect();
+        let next_since = entries.last().map(|e| e.step).unwrap_or(since);
+        RingSlice { entries, next_since, truncated: take < avail }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn first_step(&self) -> Option<u64> {
+        self.buf.front().map(|e| e.step)
+    }
+
+    pub fn last_step(&self) -> Option<u64> {
+        self.buf.back().map(|e| e.step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: u64) -> Arc<String> {
+        Arc::new(format!("{{\"step\":{n}}}"))
+    }
+
+    #[test]
+    fn since_returns_suffix_with_monotone_cursor() {
+        let mut r = RecordRing::new(16);
+        for s in 1..=10 {
+            r.push(s, mk(s));
+        }
+        let a = r.since(0, 100);
+        assert_eq!(a.entries.len(), 10);
+        assert_eq!(a.next_since, 10);
+        assert!(!a.truncated);
+        let b = r.since(7, 100);
+        assert_eq!(b.entries.iter().map(|e| e.step).collect::<Vec<_>>(), vec![8, 9, 10]);
+        // caught up: cursor sticks
+        let c = r.since(10, 100);
+        assert!(c.entries.is_empty());
+        assert_eq!(c.next_since, 10);
+    }
+
+    #[test]
+    fn limit_truncates_and_cursor_resumes() {
+        let mut r = RecordRing::new(16);
+        for s in 1..=10 {
+            r.push(s, mk(s));
+        }
+        let a = r.since(0, 4);
+        assert_eq!(a.entries.len(), 4);
+        assert_eq!(a.next_since, 4);
+        assert!(a.truncated);
+        let b = r.since(a.next_since, 4);
+        assert_eq!(b.entries.first().unwrap().step, 5);
+    }
+
+    #[test]
+    fn eviction_counts_dropped_and_keeps_newest() {
+        let mut r = RecordRing::new(4);
+        for s in 1..=10 {
+            r.push(s, mk(s));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.first_step(), Some(7));
+        assert_eq!(r.last_step(), Some(10));
+        // a cursor that fell behind the ring resumes at the oldest kept
+        let a = r.since(2, 100);
+        assert_eq!(a.entries.first().unwrap().step, 7);
+    }
+}

@@ -1,0 +1,168 @@
+//! The daemon's network half: a nonblocking accept loop feeding a small
+//! worker pool over an mpsc channel. Workers route requests against the
+//! [`TelemetryHub`]; the accept loop polls `hub.server_should_exit()`
+//! between accepts so a graceful `POST /shutdown` unwinds the whole
+//! daemon once the training thread has parked its final checkpoint.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::http::{bad_request, read_request, Request, Response};
+use super::hub::TelemetryHub;
+
+/// Workers serving requests concurrently. Small on purpose: responses
+/// are cached `Arc<String>` clones, so per-request work is socket I/O.
+const WORKERS: usize = 4;
+
+/// Accept-loop poll interval while the listener has no pending client.
+const IDLE_POLL: Duration = Duration::from_millis(5);
+
+/// Per-connection socket deadline so one stalled client cannot wedge a
+/// worker forever.
+const IO_TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// Default and maximum `limit` for `GET /records`.
+const RECORDS_DEFAULT_LIMIT: usize = 256;
+const RECORDS_MAX_LIMIT: usize = 4096;
+
+pub struct Server {
+    listener: TcpListener,
+    hub: Arc<TelemetryHub>,
+}
+
+impl Server {
+    /// Bind `bind:port` (port 0 picks an ephemeral port — used by the
+    /// integration tests) and report the bound address.
+    pub fn bind(bind: &str, port: u16, hub: Arc<TelemetryHub>) -> Result<Self> {
+        let listener = TcpListener::bind((bind, port))
+            .with_context(|| format!("binding telemetry server to {bind}:{port}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        Ok(Self { listener, hub })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until [`TelemetryHub::server_should_exit`] turns true:
+    /// shutdown was requested *and* the training thread reached a
+    /// terminal state (its graceful checkpoint is on disk).
+    pub fn serve(self) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(WORKERS);
+        for w in 0..WORKERS {
+            let rx = Arc::clone(&rx);
+            let hub = Arc::clone(&self.hub);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(&rx, &hub))
+                    .context("spawning serve worker")?,
+            );
+        }
+
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+                    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+                    if tx.send(stream).is_err() {
+                        break; // all workers gone (unreachable in practice)
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if self.hub.server_should_exit() {
+                        break;
+                    }
+                    thread::sleep(IDLE_POLL);
+                }
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+        }
+
+        // Dropping the sender disconnects the channel; workers drain any
+        // queued connections, observe the disconnect, and exit.
+        drop(tx);
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<mpsc::Receiver<TcpStream>>>, hub: &Arc<TelemetryHub>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        let Ok(mut stream) = stream else { return };
+        hub.requests.fetch_add(1, Ordering::Relaxed);
+        let response = match read_request(&mut stream) {
+            Ok(req) => route(hub, &req),
+            Err(e) => bad_request(&e),
+        };
+        // The client may already be gone; that's its problem, not ours.
+        let _ = response.write_to(&mut stream);
+    }
+}
+
+/// Map one request to a response. GET endpoints funnel through the
+/// hub's version-keyed cache; only `/records` (cursor-parameterized)
+/// and `/metrics` (carries the live request counter) rebuild per call.
+pub fn route(hub: &TelemetryHub, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            Response::json_shared(200, hub.cached("health", || hub.body_health()))
+        }
+        ("GET", "/status") => {
+            Response::json_shared(200, hub.cached("status", || hub.body_status()))
+        }
+        ("GET", "/gns/layers") => {
+            Response::json_shared(200, hub.cached("gns_layers", || hub.body_gns_layers()))
+        }
+        ("GET", "/schedule") => {
+            Response::json_shared(200, hub.cached("schedule", || hub.body_schedule()))
+        }
+        ("GET", "/records") => {
+            let since = match req.query_num::<u64>("since", 0) {
+                Ok(v) => v,
+                Err(e) => return bad_request(&e),
+            };
+            let limit = match req.query_num::<usize>("limit", RECORDS_DEFAULT_LIMIT) {
+                Ok(v) => v.clamp(1, RECORDS_MAX_LIMIT),
+                Err(e) => return bad_request(&e),
+            };
+            Response::json(200, hub.body_records(since, limit))
+        }
+        ("GET", "/metrics") => Response::text(200, hub.body_metrics()),
+        ("POST", "/shutdown") => {
+            hub.request_shutdown();
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("ok".to_string(), crate::util::json::Value::Bool(true));
+            m.insert(
+                "state".to_string(),
+                crate::util::json::Value::Str(hub.run_state().as_str().to_string()),
+            );
+            m.insert(
+                "checkpointing".to_string(),
+                crate::util::json::Value::Bool(!hub.meta().checkpoint_dir.is_empty()),
+            );
+            Response::json(200, crate::util::json::Value::Obj(m).to_string())
+        }
+        ("GET", "/shutdown") => Response::error(405, "use POST /shutdown"),
+        (m, p) if p == "/health" || p == "/status" || p == "/gns/layers" || p == "/schedule"
+            || p == "/records" || p == "/metrics" || p == "/shutdown" =>
+        {
+            Response::error(405, &format!("{m} not allowed on {p}"))
+        }
+        (_, p) => Response::error(404, &format!("no such endpoint {p}")),
+    }
+}

@@ -2,6 +2,63 @@
 //! token-grid interpolation, running-min smoothing, tokens-to-loss and
 //! tokens-saved computations (the Fig. 9 right panel).
 
+/// Bounded-memory curve decimator: keeps at most `max` points of an
+/// append-only series by doubling its sampling stride whenever the
+/// buffer fills. The kept points are always an evenly strided subsample
+/// (every `stride()`-th appended point, starting from the first), so a
+/// decimated loss curve stays faithful in shape no matter how long the
+/// run gets. Used by the serve daemon to cap `/status` payloads at
+/// ≤`max` loss-curve points.
+#[derive(Debug, Clone)]
+pub struct Decimated {
+    pts: Vec<(f64, f64)>,
+    stride: u64,
+    /// Points appended so far (kept or not).
+    seen: u64,
+    max: usize,
+}
+
+impl Decimated {
+    pub fn new(max: usize) -> Self {
+        assert!(max >= 2, "decimation needs at least 2 points");
+        Self { pts: Vec::new(), stride: 1, seen: 0, max }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        if self.seen % self.stride == 0 {
+            if self.pts.len() == self.max {
+                // compact: keep even positions (appended indices that are
+                // multiples of the doubled stride), halving the buffer
+                let mut i = 0;
+                self.pts.retain(|_| {
+                    let keep = i % 2 == 0;
+                    i += 1;
+                    keep
+                });
+                self.stride *= 2;
+                if self.seen % self.stride != 0 {
+                    self.seen += 1;
+                    return;
+                }
+            }
+            self.pts.push((x, y));
+        }
+        self.seen += 1;
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.pts
+    }
+
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
 /// Linear interpolation of a (tokens, loss) series at `tok`.
 pub fn interp(series: &[(u64, f64)], tok: u64) -> f64 {
     assert!(!series.is_empty());
@@ -58,6 +115,34 @@ mod tests {
 
     fn line(n: u64, slope: f64, offset: f64) -> Vec<(u64, f64)> {
         (1..=n).map(|i| (i * 100, offset - slope * i as f64)).collect()
+    }
+
+    #[test]
+    fn decimated_caps_length_and_keeps_strided_subsample() {
+        let mut d = Decimated::new(8);
+        for i in 0..1000u64 {
+            d.push(i as f64, (i * 10) as f64);
+        }
+        assert!(d.points().len() <= 8, "{}", d.points().len());
+        assert_eq!(d.seen(), 1000);
+        // every kept point is an original point at a stride-multiple index
+        let k = d.stride() as f64;
+        for (j, &(x, y)) in d.points().iter().enumerate() {
+            assert_eq!(x, j as f64 * k, "point {j}");
+            assert_eq!(y, x * 10.0);
+        }
+        // first point always survives
+        assert_eq!(d.points()[0].0, 0.0);
+    }
+
+    #[test]
+    fn decimated_short_series_kept_verbatim() {
+        let mut d = Decimated::new(100);
+        for i in 0..20u64 {
+            d.push(i as f64, -(i as f64));
+        }
+        assert_eq!(d.points().len(), 20);
+        assert_eq!(d.stride(), 1);
     }
 
     #[test]

@@ -26,6 +26,17 @@ impl Value {
         Ok(v)
     }
 
+    /// `Num` for finite floats, `Null` otherwise. JSON has no NaN/inf
+    /// literal, so telemetry serializers must degrade to null rather
+    /// than emit unparseable output.
+    pub fn finite_or_null(x: f64) -> Value {
+        if x.is_finite() {
+            Value::Num(x)
+        } else {
+            Value::Null
+        }
+    }
+
     // -- typed accessors ---------------------------------------------------
 
     pub fn get(&self, key: &str) -> Result<&Value> {

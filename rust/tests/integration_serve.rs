@@ -1,0 +1,284 @@
+//! End-to-end tests for the `repro serve` telemetry daemon (hermetic,
+//! real sockets on loopback).
+//!
+//! These enforce PR 7's contracts:
+//! * concurrent pollers walking `/records?since=` see every step exactly
+//!   once, with monotone cursors and valid JSON, while training runs;
+//! * `POST /shutdown` stops the run gracefully at a step boundary and
+//!   parks a final checkpoint before the daemon exits;
+//! * attaching the daemon — even under heavy poller traffic — leaves the
+//!   run's metrics CSV byte-identical (modulo the wall-clock `step_ms`
+//!   column) to the same run without a server.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::Trainer;
+use nanogns::runtime::ReferenceFactory;
+use nanogns::serve::{self, HubMeta, RunState, Server, TelemetryHub};
+use nanogns::util::json::Value;
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nanogns_pr7_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Issue one raw HTTP request and return (status, body).
+fn http(addr: SocketAddr, request: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str) -> (u16, String) {
+    http(addr, &format!("POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n"))
+}
+
+/// Build trainer + hub + bound server (ephemeral port) and spawn the
+/// accept loop. The trainer stays on the caller's thread.
+fn boot(
+    cfg: TrainConfig,
+    ring: usize,
+) -> (Trainer, Arc<TelemetryHub>, SocketAddr, thread::JoinHandle<anyhow::Result<()>>) {
+    let tr = Trainer::new(&ReferenceFactory, cfg).unwrap();
+    let hub = Arc::new(TelemetryHub::new(serve::hub_meta(&tr, std::path::Path::new(".")), ring));
+    let server = Server::bind("127.0.0.1", 0, Arc::clone(&hub)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = thread::spawn(move || server.serve());
+    (tr, hub, addr, handle)
+}
+
+#[test]
+fn concurrent_pollers_see_every_step_exactly_once() {
+    const STEPS: u64 = 12;
+    let cfg = TrainConfig::quickstart("nano", STEPS);
+    let (mut tr, hub, addr, server) = boot(cfg, 64);
+
+    // 4 clients poll the cursor API concurrently with training; each
+    // must reconstruct the full, gap-free step sequence.
+    let pollers: Vec<_> = (0..4)
+        .map(|_| {
+            thread::spawn(move || {
+                let mut since = 0u64;
+                let mut seen: Vec<u64> = Vec::new();
+                loop {
+                    let (code, body) = get(addr, &format!("/records?since={since}&limit=5"));
+                    assert_eq!(code, 200, "{body}");
+                    let v = Value::parse(&body).expect("records body is valid JSON");
+                    let next = v.get("next_since").unwrap().as_u64().unwrap();
+                    assert!(next >= since, "cursor went backwards: {next} < {since}");
+                    let records = v.get("records").unwrap().as_arr().unwrap();
+                    let mut prev = since;
+                    for r in records {
+                        let s = r.get("step").unwrap().as_u64().unwrap();
+                        assert!(s > prev, "duplicate or out-of-order step {s} (cursor {prev})");
+                        prev = s;
+                        seen.push(s);
+                    }
+                    // `truncated` and `state` are part of the contract.
+                    v.get("truncated").unwrap().as_bool().unwrap();
+                    let state = v.get("state").unwrap().as_str().unwrap().to_string();
+                    since = next;
+                    if state != "running" && records.is_empty() {
+                        return seen;
+                    }
+                    thread::sleep(Duration::from_millis(1));
+                }
+            })
+        })
+        .collect();
+
+    let out = serve::train_and_publish(&mut tr, &hub).unwrap();
+    assert_eq!(out.records.len(), STEPS as usize);
+
+    for p in pollers {
+        let seen = p.join().unwrap();
+        assert_eq!(seen.len(), STEPS as usize, "poller missed records: {seen:?}");
+        for w in seen.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "gap in step sequence: {seen:?}");
+        }
+        assert_eq!(*seen.last().unwrap(), out.records.last().unwrap().step);
+    }
+
+    // Natural finish keeps the daemon up until an explicit shutdown.
+    let (code, body) = get(addr, "/status");
+    assert_eq!(code, 200);
+    let st = Value::parse(&body).unwrap();
+    assert_eq!(st.get("state").unwrap().as_str().unwrap(), "finished");
+    assert_eq!(st.get("last").unwrap().get("step").unwrap().as_u64().unwrap(), STEPS);
+
+    let (code, body) = post(addr, "/shutdown");
+    assert_eq!(code, 200);
+    let v = Value::parse(&body).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap());
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn post_shutdown_stops_run_early_and_parks_checkpoint() {
+    let dir = temp_dir("graceful");
+    let mut cfg = TrainConfig::quickstart("nano", 500);
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    let (mut tr, hub, addr, server) = boot(cfg, 64);
+
+    // Client thread: wait for training to make visible progress, then
+    // ask the daemon to stop.
+    let poster = thread::spawn(move || loop {
+        let (code, body) = get(addr, "/health");
+        assert_eq!(code, 200);
+        let v = Value::parse(&body).unwrap();
+        if v.get("step").unwrap().as_u64().unwrap() >= 2 {
+            let (code, body) = post(addr, "/shutdown");
+            assert_eq!(code, 200);
+            let v = Value::parse(&body).unwrap();
+            assert!(v.get("ok").unwrap().as_bool().unwrap());
+            assert!(v.get("checkpointing").unwrap().as_bool().unwrap());
+            return;
+        }
+        thread::sleep(Duration::from_millis(2));
+    });
+
+    let out = serve::train_and_publish(&mut tr, &hub).unwrap();
+    poster.join().unwrap();
+    server.join().unwrap().unwrap();
+
+    assert_eq!(hub.run_state(), RunState::Stopped);
+    assert!(
+        (out.records.len() as u64) < 500,
+        "run was supposed to stop early, did {} steps",
+        out.records.len()
+    );
+    assert!((out.records.len() as u64) >= 2);
+    // The graceful stop parked a resumable checkpoint.
+    assert!(dir.join("latest.ckpt").is_file(), "no final checkpoint in {dir:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Strip the wall-clock `step_ms` column (located via the header) from
+/// a metrics CSV so two runs can be compared bitwise.
+fn strip_step_ms(csv: &str) -> String {
+    let mut lines = csv.lines();
+    let header = lines.next().expect("csv has a header");
+    let drop_idx = header
+        .split(',')
+        .position(|c| c == "step_ms")
+        .expect("header has step_ms");
+    let mut out = String::new();
+    for line in std::iter::once(header).chain(lines) {
+        let kept: Vec<&str> = line
+            .split(',')
+            .enumerate()
+            .filter(|(i, _)| *i != drop_idx)
+            .map(|(_, c)| c)
+            .collect();
+        out.push_str(&kept.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn metrics_csv_identical_under_32_poller_load() {
+    const STEPS: u64 = 8;
+    let dir = temp_dir("csv");
+    let quiet_csv = dir.join("quiet.csv");
+    let served_csv = dir.join("served.csv");
+
+    // Reference run: no daemon attached.
+    let mut cfg = TrainConfig::quickstart("nano", STEPS);
+    cfg.metrics_path = quiet_csv.to_string_lossy().into_owned();
+    let mut tr = Trainer::new(&ReferenceFactory, cfg).unwrap();
+    tr.run().unwrap();
+
+    // Served run: identical config, 32 clients hammering every endpoint.
+    let mut cfg = TrainConfig::quickstart("nano", STEPS);
+    cfg.metrics_path = served_csv.to_string_lossy().into_owned();
+    let (mut tr, hub, addr, server) = boot(cfg, 64);
+    const PATHS: [&str; 6] =
+        ["/records?since=0", "/status", "/gns/layers", "/metrics", "/schedule", "/health"];
+    let stop = Arc::new(AtomicBool::new(false));
+    let pollers: Vec<_> = (0..32usize)
+        .map(|i| {
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                let mut n = 0usize;
+                while !stop.load(Ordering::Acquire) {
+                    let (code, _body) = get(addr, PATHS[(i + n) % PATHS.len()]);
+                    assert_eq!(code, 200);
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+
+    serve::train_and_publish(&mut tr, &hub).unwrap();
+    stop.store(true, Ordering::Release);
+    let total: usize = pollers.into_iter().map(|p| p.join().unwrap()).sum();
+    assert!(total > 0, "pollers served no requests");
+    hub.request_shutdown();
+    server.join().unwrap().unwrap();
+
+    let quiet = std::fs::read_to_string(&quiet_csv).unwrap();
+    let served = std::fs::read_to_string(&served_csv).unwrap();
+    assert_eq!(
+        strip_step_ms(&quiet),
+        strip_step_ms(&served),
+        "serving telemetry perturbed the run's CSV"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn router_rejects_unknown_paths_methods_and_bad_queries() {
+    // A bare hub (no trainer) is enough to exercise the router edges.
+    let hub = Arc::new(TelemetryHub::new(
+        HubMeta {
+            model: "nano".into(),
+            platform: "test".into(),
+            total_steps: 1,
+            n_params: 1,
+            ranks: 1,
+            microbatch: 1,
+            schedule: Value::Null,
+            checkpoint_dir: String::new(),
+            metrics_path: String::new(),
+            bench: None,
+        },
+        8,
+    ));
+    let server = Server::bind("127.0.0.1", 0, Arc::clone(&hub)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = thread::spawn(move || server.serve());
+
+    let (code, body) = get(addr, "/nope");
+    assert_eq!(code, 404);
+    assert!(Value::parse(&body).unwrap().get("error").is_ok());
+    let (code, _) = get(addr, "/shutdown");
+    assert_eq!(code, 405);
+    let (code, body) = get(addr, "/records?since=abc");
+    assert_eq!(code, 400, "{body}");
+    let (code, _) = post(addr, "/status");
+    assert_eq!(code, 405);
+    let (code, _) = get(addr, "/health");
+    assert_eq!(code, 200);
+
+    hub.mark_done(RunState::Stopped, None, None);
+    let (code, _) = post(addr, "/shutdown");
+    assert_eq!(code, 200);
+    handle.join().unwrap().unwrap();
+}

@@ -5,7 +5,7 @@
 //! `pjrt` feature *compiling* so the PJRT execution path stays type-checked;
 //! every operation that would need the native runtime returns an error at
 //! run time. To actually execute HLO artifacts, patch the workspace to the
-//! real crate (see DESIGN.md §5).
+//! real crate (see DESIGN.md §6).
 //!
 //! `Literal` is implemented functionally (it is plain host data), so
 //! host-side conversions and round-trips work even under the stub.
