@@ -20,7 +20,10 @@
 //!   absolute `kernel_*` median gates, which are meaningless unless the
 //!   numbers came from the CI hardware pool itself.
 
-use nanogns::coordinator::{ModelRunner, ParallelExecutor};
+use std::time::Instant;
+
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::{ModelRunner, ParallelExecutor, Trainer};
 use nanogns::data::{CorpusGenerator, Loader};
 use nanogns::runtime::kernels::{
     ln_bwd_fused, ln_fwd, matmul_at_b_acc, matmul_xw_t, matmul_xwt, tier, transpose,
@@ -108,6 +111,52 @@ fn bench_kernels(report: &mut BenchJson, target_ms: u64, samples: usize) {
         );
     });
     report.record(&format!("kernel_layernorm/bwd_fused_{lb}x{lt}x{ld}"), &s, Some(lb as f64));
+}
+
+/// Async-checkpoint latency gate (PR 8): `Trainer::checkpoint_now` is an
+/// encode plus a writer-thread handoff, so submitting a checkpoint must
+/// cost less than a training step — otherwise the writer thread is
+/// silently back on the hot path. This asserts rather than records: a
+/// regression here is a broken double-buffer contract, not a perf trend.
+fn assert_async_checkpoint_latency(samples: usize) {
+    let dir = std::env::temp_dir().join(format!("nanogns_bench_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = TrainConfig::quickstart("nano", 1 << 20);
+    cfg.checkpoint_dir = dir.display().to_string();
+    let mut tr = Trainer::new(&ReferenceFactory, cfg).unwrap();
+
+    let mut step_ns = Vec::with_capacity(samples);
+    let mut submit_ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        tr.step().unwrap();
+        step_ns.push(t0.elapsed().as_nanos() as f64);
+        // Drain the writer first so the timed window is the pure encode
+        // + channel handoff, never a block on a previous write.
+        tr.wait_checkpoints().unwrap();
+        let t0 = Instant::now();
+        tr.checkpoint_now().unwrap();
+        submit_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    tr.wait_checkpoints().unwrap();
+    drop(tr);
+    let med = |v: &mut Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let (step, submit) = (med(&mut step_ns), med(&mut submit_ns));
+    println!(
+        "ckpt_async: submit median {:.3} ms vs step median {:.3} ms",
+        submit / 1e6,
+        step / 1e6
+    );
+    assert!(
+        submit < step,
+        "checkpoint submit ({:.3} ms) must be cheaper than a training step ({:.3} ms)",
+        submit / 1e6,
+        step / 1e6
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 fn main() {
@@ -239,6 +288,8 @@ fn main() {
             report.record(&format!("{group}/parallel_rank_step_w{workers}"), &s, Some(rank_tokens));
         }
     }
+
+    assert_async_checkpoint_latency(samples);
 
     if json_mode {
         report.write_or_exit("BENCH_train_step.json");

@@ -21,9 +21,12 @@ use anyhow::{bail, Result};
 
 pub const TRAIN_USAGE: &str = "\
 USAGE: repro train [--config F.json] [--model NAME] [--steps N] [--seed N]
-                   [--metrics F.csv] [--ranks N] [--checkpoint-dir DIR]
-                   [--checkpoint-every N] [--resume CKPT]
+                   [--metrics F.csv] [--ranks N] [--rank-mode threads|process]
+                   [--checkpoint-dir DIR] [--checkpoint-every N] [--resume CKPT]
                    [--backend reference|pjrt] [--artifacts DIR] [--json]
+  --rank-mode  how data-parallel ranks execute: scoped threads in this
+               process (threads, default) or supervised child processes
+               with crash reconciliation (process)
   --json    emit a machine-readable run summary on stdout (human logs go
             to stderr)
 ";
@@ -32,7 +35,7 @@ pub const SERVE_USAGE: &str = "\
 USAGE: repro serve [train flags ...] [--port N] [--bind ADDR] [--ring-capacity N]
   Runs the training job like `repro train` and serves live telemetry over
   HTTP until POST /shutdown. Endpoints: /health /status /gns/layers
-  /schedule /records?since=S&limit=N /metrics (Prometheus) /shutdown.
+  /schedule /ranks /records?since=S&limit=N /metrics (Prometheus) /shutdown.
   --port N            listen port (default 7878; 0 = ephemeral)
   --bind ADDR         bind address (default 127.0.0.1)
   --ring-capacity N   in-memory record ring size (default 4096)
@@ -208,6 +211,7 @@ const TRAIN_VALUED: &[&str] = &[
     "seed",
     "metrics",
     "ranks",
+    "rank-mode",
     "checkpoint-dir",
     "checkpoint-every",
     "resume",
@@ -224,6 +228,8 @@ pub struct TrainArgs {
     pub seed: u64,
     pub metrics: String,
     pub ranks: usize,
+    /// `threads` or `process`; `None` keeps the config-file value.
+    pub rank_mode: Option<String>,
     pub checkpoint_dir: Option<String>,
     pub checkpoint_every: Option<u64>,
     pub resume: Option<String>,
@@ -252,6 +258,7 @@ impl TrainArgs {
             seed: p.num("seed", 0u64)?,
             metrics: p.value_or("metrics", ""),
             ranks: p.num("ranks", 1usize)?,
+            rank_mode: p.value("rank-mode").map(str::to_string),
             checkpoint_dir: p.value("checkpoint-dir").map(str::to_string),
             checkpoint_every: p.opt_num("checkpoint-every")?,
             resume: p.value("resume").map(str::to_string),
@@ -274,6 +281,7 @@ const SERVE_VALUED: &[&str] = &[
     "seed",
     "metrics",
     "ranks",
+    "rank-mode",
     "checkpoint-dir",
     "checkpoint-every",
     "resume",
@@ -452,6 +460,46 @@ impl InspectArgs {
     }
 }
 
+// ---------------------------------------------------------------------------
+// repro rank-worker (hidden; spawned by the elastic coordinator)
+// ---------------------------------------------------------------------------
+
+pub const RANK_WORKER_USAGE: &str = "\
+USAGE: repro rank-worker --connect unix:PATH|tcp:ADDR --worker N
+  Internal: an elastic rank worker child process. Spawned by the
+  coordinator when rank_mode = process; not meant to be run by hand.
+";
+
+const RANK_WORKER_VALUED: &[&str] = &["connect", "worker"];
+const RANK_WORKER_SWITCHES: &[&str] = &["help"];
+
+#[derive(Debug, Clone)]
+pub struct RankWorkerArgs {
+    /// Coordinator endpoint: `unix:/path/to.sock` or `tcp:127.0.0.1:PORT`.
+    pub connect: String,
+    /// Worker slot index assigned by the coordinator.
+    pub worker: usize,
+    pub help: bool,
+}
+
+impl RankWorkerArgs {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let spec = Spec {
+            valued: RANK_WORKER_VALUED,
+            switches: RANK_WORKER_SWITCHES,
+            positionals: false,
+            usage: RANK_WORKER_USAGE,
+        };
+        let p = lex(argv, &spec)?;
+        let help = p.has("help");
+        let connect = p.value_or("connect", "");
+        if connect.is_empty() && !help {
+            bail!("rank-worker needs --connect\n\n{RANK_WORKER_USAGE}");
+        }
+        Ok(Self { connect, worker: p.num("worker", 0usize)?, help })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -572,5 +620,32 @@ mod tests {
     #[test]
     fn short_help_alias() {
         assert!(TrainArgs::parse(&v(&["-h"])).unwrap().help);
+    }
+
+    #[test]
+    fn train_rank_mode_passthrough() {
+        let a = TrainArgs::parse(&v(&[])).unwrap();
+        assert_eq!(a.rank_mode, None);
+        let a = TrainArgs::parse(&v(&["--rank-mode", "process", "--ranks", "3"])).unwrap();
+        assert_eq!(a.rank_mode.as_deref(), Some("process"));
+        assert_eq!(a.ranks, 3);
+        let a = ServeArgs::parse(&v(&["--rank-mode", "threads"])).unwrap();
+        assert_eq!(a.train.rank_mode.as_deref(), Some("threads"));
+    }
+
+    #[test]
+    fn rank_worker_requires_connect() {
+        let a = RankWorkerArgs::parse(&v(&[
+            "--connect",
+            "unix:/tmp/x.sock",
+            "--worker",
+            "2",
+        ]))
+        .unwrap();
+        assert_eq!(a.connect, "unix:/tmp/x.sock");
+        assert_eq!(a.worker, 2);
+        let err = RankWorkerArgs::parse(&v(&[])).unwrap_err().to_string();
+        assert!(err.contains("--connect"), "{err}");
+        assert!(RankWorkerArgs::parse(&v(&["--help"])).unwrap().help);
     }
 }

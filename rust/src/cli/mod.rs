@@ -11,6 +11,6 @@ pub mod args;
 pub mod inspect;
 
 pub use args::{
-    FiguresArgs, InfoArgs, InspectArgs, ServeArgs, TrainArgs, FIGURES_USAGE, INFO_USAGE,
-    INSPECT_USAGE, SERVE_USAGE, TRAIN_USAGE,
+    FiguresArgs, InfoArgs, InspectArgs, RankWorkerArgs, ServeArgs, TrainArgs, FIGURES_USAGE,
+    INFO_USAGE, INSPECT_USAGE, RANK_WORKER_USAGE, SERVE_USAGE, TRAIN_USAGE,
 };

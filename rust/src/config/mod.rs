@@ -45,8 +45,104 @@ pub struct TrainConfig {
     /// Pin every kernel to the scalar oracle tier (`NANOGNS_FORCE_SCALAR`),
     /// e.g. to cross-check a SIMD result on the same machine.
     pub force_scalar: bool,
+    /// How rank workers execute: scoped threads in-process (default) or
+    /// supervised child processes (`coordinator::elastic`).
+    pub rank_mode: RankMode,
+    /// Process-mode supervision knobs; inert in thread mode.
+    pub elastic: ElasticConfig,
     /// Telemetry daemon settings (`repro serve`); inert for plain `train`.
     pub serve: ServeConfig,
+}
+
+/// Rank-worker execution mode. Both modes are bitwise interchangeable at
+/// equal rank count; process mode additionally survives a rank dying
+/// mid-run (drop to survivors and continue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RankMode {
+    /// Scoped threads in one process (`coordinator::parallel`).
+    #[default]
+    Threads,
+    /// Supervised child processes (`coordinator::elastic`).
+    Process,
+}
+
+impl RankMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" | "thread" => Ok(RankMode::Threads),
+            "process" => Ok(RankMode::Process),
+            other => bail!("unknown rank mode {other:?} (threads|process)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RankMode::Threads => "threads",
+            RankMode::Process => "process",
+        }
+    }
+}
+
+/// Supervision knobs for elastic process mode (`"elastic"` config
+/// object). Defaults suit local runs; CI fault injection tightens them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticConfig {
+    /// Worker heartbeat period in milliseconds.
+    pub heartbeat_ms: u64,
+    /// Per-step wall-clock deadline in seconds; a rank that blows it is
+    /// declared dead and dropped.
+    pub step_timeout_s: f64,
+    /// How long to wait for a spawned worker to connect and handshake.
+    pub spawn_timeout_s: f64,
+    /// Executable to spawn as `rank-worker` ("" = the current
+    /// executable). Integration tests point this at the `repro` binary,
+    /// since their own test binary has no `rank-worker` subcommand.
+    pub worker_exe: String,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat_ms: 250,
+            step_timeout_s: 300.0,
+            spawn_timeout_s: 30.0,
+            worker_exe: String::new(),
+        }
+    }
+}
+
+fn parse_elastic(v: &Value) -> Result<ElasticConfig> {
+    let d = ElasticConfig::default();
+    Ok(ElasticConfig {
+        heartbeat_ms: match v.opt("heartbeat_ms") {
+            Some(h) => {
+                let h = h.as_u64()?;
+                anyhow::ensure!(h > 0, "elastic.heartbeat_ms must be positive");
+                h
+            }
+            None => d.heartbeat_ms,
+        },
+        step_timeout_s: match v.opt("step_timeout_s") {
+            Some(t) => {
+                let t = t.as_f64()?;
+                anyhow::ensure!(t > 0.0, "elastic.step_timeout_s must be positive");
+                t
+            }
+            None => d.step_timeout_s,
+        },
+        spawn_timeout_s: match v.opt("spawn_timeout_s") {
+            Some(t) => {
+                let t = t.as_f64()?;
+                anyhow::ensure!(t > 0.0, "elastic.spawn_timeout_s must be positive");
+                t
+            }
+            None => d.spawn_timeout_s,
+        },
+        worker_exe: match v.opt("worker_exe") {
+            Some(w) => w.as_str()?.to_string(),
+            None => d.worker_exe,
+        },
+    })
 }
 
 /// `repro serve` daemon settings, settable from the `"serve"` config
@@ -156,6 +252,14 @@ impl TrainConfig {
                 Some(f) => f.as_bool()?,
                 None => false,
             },
+            rank_mode: match v.opt("rank_mode") {
+                Some(m) => RankMode::parse(m.as_str()?)?,
+                None => RankMode::Threads,
+            },
+            elastic: match v.opt("elastic") {
+                Some(e) => parse_elastic(e)?,
+                None => ElasticConfig::default(),
+            },
             serve: match v.opt("serve") {
                 Some(s) => parse_serve(s)?,
                 None => ServeConfig::default(),
@@ -182,6 +286,8 @@ impl TrainConfig {
             resume: String::new(),
             threads: 0,
             force_scalar: false,
+            rank_mode: RankMode::Threads,
+            elastic: ElasticConfig::default(),
             serve: ServeConfig::default(),
         }
     }
@@ -305,6 +411,50 @@ mod tests {
             "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
             "batch_size": {"kind": "fixed", "accum": 2},
             "serve": {"ring_capacity": 0}
+        }"#;
+        assert!(TrainConfig::from_json_text(text).is_err());
+    }
+
+    #[test]
+    fn rank_mode_and_elastic_keys_parse() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "rank_mode": "process",
+            "elastic": {"heartbeat_ms": 50, "step_timeout_s": 12.5, "spawn_timeout_s": 5.0}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.rank_mode, RankMode::Process);
+        assert_eq!(cfg.elastic.heartbeat_ms, 50);
+        assert!((cfg.elastic.step_timeout_s - 12.5).abs() < 1e-12);
+        assert!((cfg.elastic.spawn_timeout_s - 5.0).abs() < 1e-12);
+        assert_eq!(cfg.elastic.worker_exe, "");
+
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.rank_mode, RankMode::Threads);
+        assert_eq!(cfg.elastic, ElasticConfig::default());
+    }
+
+    #[test]
+    fn rank_mode_rejects_unknown_and_bad_elastic() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "rank_mode": "fibers"
+        }"#;
+        assert!(TrainConfig::from_json_text(text).is_err());
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "elastic": {"heartbeat_ms": 0}
         }"#;
         assert!(TrainConfig::from_json_text(text).is_err());
     }

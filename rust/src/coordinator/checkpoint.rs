@@ -14,9 +14,15 @@
 //! integers) so a resumed run replays a **bitwise-identical** trajectory
 //! — JSON numbers would round u64 RNG words through f64 and silently
 //! fork the data stream. Little-endian throughout.
+//!
+//! Publication is crash-safe (`.tmp` → fsync → rename → parent-dir
+//! fsync), and [`CkptWriter`] moves the disk work off the training
+//! thread: the trainer serializes into an idle buffer ([`encode_state`])
+//! and hands it to a double-buffered writer thread.
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -267,43 +273,230 @@ fn header_json(st: &TrainStateView<'_>, entry: &ModelEntry) -> Result<Value> {
     Ok(Value::Obj(top))
 }
 
-/// Write a full-state (v2) checkpoint.
-///
-/// The write is atomic against process crashes and kills: bytes go to a
-/// `.tmp` sibling which is fsynced and only then renamed over `path`, so
-/// an interrupted checkpoint never leaves a truncated file at the name a
-/// `--resume` points at. (Power-loss durability additionally depends on
-/// the filesystem journaling the rename.)
-pub fn save_state(
-    path: impl AsRef<Path>,
-    entry: &ModelEntry,
-    st: &TrainStateView<'_>,
-) -> Result<()> {
-    let path = path.as_ref();
+/// Serialize a full v2 checkpoint image into `out` (cleared first). The
+/// bytes are exactly what [`publish_bytes`] expects — splitting the two
+/// lets the writer thread own the disk I/O while the training thread only
+/// pays for serialization into a recycled buffer.
+pub fn encode_state(entry: &ModelEntry, st: &TrainStateView<'_>, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
     let header = header_json(st, entry)?.to_string();
     ensure!(header.len() <= MAX_HEADER_BYTES, "checkpoint header too large");
+    out.extend_from_slice(MAGIC_V2);
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for (group, bufs) in groups(st) {
+        for (spec, buf) in entry.params.iter().zip(bufs) {
+            let t = buf.as_host().with_context(|| format!("{group}/{}", spec.name))?;
+            for v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Crash-safely publish an encoded checkpoint image at `path`: bytes go
+/// to a `.ckpt.tmp` sibling which is fsynced and only then renamed over
+/// `path`, and finally the parent directory is fsynced so the rename
+/// itself survives power loss — without the directory sync, a crashed
+/// machine can come back with the old name pointing at nothing.
+pub fn publish_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let tmp = path.with_extension("ckpt.tmp");
     {
         let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
-        w.write_all(MAGIC_V2)?;
-        w.write_all(&(header.len() as u32).to_le_bytes())?;
-        w.write_all(header.as_bytes())?;
-        for (group, bufs) in groups(st) {
-            for (spec, buf) in entry.params.iter().zip(bufs) {
-                let t = buf.as_host().with_context(|| format!("{group}/{}", spec.name))?;
-                for v in &t.data {
-                    w.write_all(&v.to_le_bytes())?;
-                }
-            }
-        }
+        w.write_all(bytes)?;
         w.flush()?;
         w.into_inner().map_err(|e| anyhow!("flushing checkpoint: {e}"))?.sync_all()?;
     }
     std::fs::rename(&tmp, path).with_context(|| format!("publishing checkpoint {path:?}"))?;
+    fsync_parent_dir(path)
+}
+
+/// Fsync the directory holding `path` (unix only; a no-op elsewhere).
+fn fsync_parent_dir(path: &Path) -> Result<()> {
+    #[cfg(unix)]
+    if let Some(dir) = path.parent() {
+        let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsyncing checkpoint dir {dir:?}"))?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
     Ok(())
+}
+
+/// Remove leftover `*.ckpt.tmp` files from checkpoint writes interrupted
+/// mid-stream (crash or kill between create and rename). Returns the
+/// removed paths, sorted; a missing directory is fine (nothing to clean).
+pub fn clean_stale_tmps(dir: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+    let dir = dir.as_ref();
+    let mut removed = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(removed),
+        Err(e) => return Err(e).with_context(|| format!("scanning {dir:?}")),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let is_tmp = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.ends_with(".ckpt.tmp"));
+        if is_tmp {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing stale checkpoint tmp {path:?}"))?;
+            removed.push(path);
+        }
+    }
+    removed.sort();
+    Ok(removed)
+}
+
+/// Write a full-state (v2) checkpoint synchronously:
+/// [`encode_state`] + [`publish_bytes`] on the calling thread.
+pub fn save_state(
+    path: impl AsRef<Path>,
+    entry: &ModelEntry,
+    st: &TrainStateView<'_>,
+) -> Result<()> {
+    let mut bytes = Vec::new();
+    encode_state(entry, st, &mut bytes)?;
+    publish_bytes(path, &bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Async writer
+// ---------------------------------------------------------------------------
+
+/// Double-buffered background checkpoint writer.
+///
+/// The training thread serializes into an idle buffer
+/// ([`CkptWriter::take_buffer`]) and hands it off ([`CkptWriter::submit`]);
+/// a dedicated thread runs the crash-safe [`publish_bytes`] for every
+/// target path (one encode can publish both `step%08d.ckpt` and
+/// `latest.ckpt`), then recycles the buffer. With the channel bound of
+/// one, `submit` only blocks when two writes are already outstanding, so
+/// steady-state training never waits on disk. Write errors are sticky:
+/// the first failure is surfaced by every later [`CkptWriter::submit`] or
+/// [`CkptWriter::wait_idle`] call.
+pub struct CkptWriter {
+    tx: Option<std::sync::mpsc::SyncSender<CkptJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<CkptShared>,
+}
+
+struct CkptJob {
+    bytes: Vec<u8>,
+    paths: Vec<PathBuf>,
+}
+
+struct CkptShared {
+    state: Mutex<CkptState>,
+    idle: Condvar,
+}
+
+#[derive(Default)]
+struct CkptState {
+    pending: usize,
+    pool: Vec<Vec<u8>>,
+    error: Option<String>,
+}
+
+impl CkptWriter {
+    pub fn new() -> Self {
+        let shared =
+            Arc::new(CkptShared { state: Mutex::new(CkptState::default()), idle: Condvar::new() });
+        let (tx, rx) = std::sync::mpsc::sync_channel::<CkptJob>(1);
+        let worker = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || {
+                for job in rx {
+                    let mut failure = None;
+                    for path in &job.paths {
+                        if let Err(e) = publish_bytes(path, &job.bytes) {
+                            failure = Some(format!("{path:?}: {e}"));
+                            break;
+                        }
+                    }
+                    let mut st = worker.state.lock().expect("ckpt writer state");
+                    st.pending -= 1;
+                    if st.error.is_none() {
+                        st.error = failure;
+                    }
+                    if st.pool.len() < 2 {
+                        let mut bytes = job.bytes;
+                        bytes.clear();
+                        st.pool.push(bytes);
+                    }
+                    worker.idle.notify_all();
+                }
+            })
+            .expect("spawning checkpoint writer thread");
+        Self { tx: Some(tx), handle: Some(handle), shared }
+    }
+
+    /// An idle serialization buffer — recycled from a finished write when
+    /// one is available, so steady state allocates nothing per checkpoint.
+    pub fn take_buffer(&self) -> Vec<u8> {
+        let mut st = self.shared.state.lock().expect("ckpt writer state");
+        st.pool.pop().unwrap_or_default()
+    }
+
+    /// Queue an encoded image for crash-safe publication at every path in
+    /// `paths`. Returns immediately unless two writes are already
+    /// outstanding; surfaces any earlier write failure.
+    pub fn submit(&self, bytes: Vec<u8>, paths: Vec<PathBuf>) -> Result<()> {
+        {
+            let mut st = self.shared.state.lock().expect("ckpt writer state");
+            Self::check_error(&st)?;
+            st.pending += 1;
+        }
+        let tx = self.tx.as_ref().expect("ckpt writer running");
+        if tx.send(CkptJob { bytes, paths }).is_err() {
+            let mut st = self.shared.state.lock().expect("ckpt writer state");
+            st.pending -= 1;
+            bail!("checkpoint writer thread is gone");
+        }
+        Ok(())
+    }
+
+    /// Block until every queued write has been published; surfaces the
+    /// first write error if one occurred.
+    pub fn wait_idle(&self) -> Result<()> {
+        let mut st = self.shared.state.lock().expect("ckpt writer state");
+        while st.pending > 0 {
+            st = self.shared.idle.wait(st).expect("ckpt writer state");
+        }
+        Self::check_error(&st)
+    }
+
+    fn check_error(st: &CkptState) -> Result<()> {
+        match &st.error {
+            Some(e) => bail!("async checkpoint write failed: {e}"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Default for CkptWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for CkptWriter {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Read the magic + JSON header of a v2 checkpoint from a stream,
@@ -478,5 +671,65 @@ mod tests {
         assert_eq!(back.state.unwrap().to_bits(), p.state.unwrap().to_bits());
         assert_eq!(back.t, 7);
         assert!(back.bias_correct);
+    }
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nanogns-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn clean_stale_tmps_removes_only_tmp_files() {
+        let dir = scratch_dir("stale");
+        std::fs::write(dir.join("step00000010.ckpt"), b"keep").unwrap();
+        std::fs::write(dir.join("step00000020.ckpt.tmp"), b"stale").unwrap();
+        std::fs::write(dir.join("latest.ckpt.tmp"), b"stale").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"keep").unwrap();
+        let removed = clean_stale_tmps(&dir).unwrap();
+        assert_eq!(removed.len(), 2);
+        assert!(dir.join("step00000010.ckpt").exists());
+        assert!(dir.join("notes.txt").exists());
+        assert!(!dir.join("step00000020.ckpt.tmp").exists());
+        assert!(!dir.join("latest.ckpt.tmp").exists());
+        // Missing directory: nothing to clean, not an error.
+        assert!(clean_stale_tmps(dir.join("no-such-subdir")).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ckpt_writer_publishes_to_all_paths_and_recycles_buffers() {
+        let dir = scratch_dir("writer");
+        let w = CkptWriter::new();
+        let mut buf = w.take_buffer();
+        buf.extend_from_slice(b"checkpoint-image-bytes");
+        let step = dir.join("step00000001.ckpt");
+        let latest = dir.join("latest.ckpt");
+        w.submit(buf, vec![step.clone(), latest.clone()]).unwrap();
+        w.wait_idle().unwrap();
+        assert_eq!(std::fs::read(&step).unwrap(), b"checkpoint-image-bytes");
+        assert_eq!(std::fs::read(&latest).unwrap(), b"checkpoint-image-bytes");
+        assert!(!dir.join("step00000001.ckpt.tmp").exists());
+        // The finished write's buffer came back to the pool, emptied but
+        // with its allocation intact.
+        let recycled = w.take_buffer();
+        assert!(recycled.is_empty());
+        assert!(recycled.capacity() >= b"checkpoint-image-bytes".len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ckpt_writer_errors_are_sticky() {
+        let dir = scratch_dir("writer-err");
+        // A file where the target's parent dir should be makes create_dir_all fail.
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"file, not dir").unwrap();
+        let w = CkptWriter::new();
+        w.submit(b"bytes".to_vec(), vec![blocker.join("sub").join("x.ckpt")]).unwrap();
+        assert!(w.wait_idle().is_err());
+        // The failure sticks: later submits refuse too.
+        assert!(w.submit(b"more".to_vec(), vec![dir.join("ok.ckpt")]).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

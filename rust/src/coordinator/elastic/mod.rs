@@ -1,0 +1,23 @@
+//! Elastic process-isolated rank workers (ROADMAP item 4's fleet-shaped
+//! step beyond scoped threads).
+//!
+//! Three pieces:
+//! * [`protocol`] — the length-prefixed binary frame format and the
+//!   local-socket transport (unix sockets, TCP-loopback fallback);
+//! * [`supervisor`] — [`ElasticExecutor`], the coordinator-side engine:
+//!   spawns/monitors workers (heartbeats + per-step deadlines) and
+//!   reduces their partials through the shared fixed-order tree;
+//! * [`worker`] — the child-process entry point behind the hidden
+//!   `repro rank-worker` subcommand.
+//!
+//! The module's contract, proven by `tests/integration_elastic.rs`:
+//! process mode is bitwise identical to thread mode at the same rank
+//! count, and losing a worker mid-run degrades to the surviving ranks
+//! whose trajectories continue bitwise identical to a thread-mode run
+//! at the reduced rank count.
+
+pub mod protocol;
+pub mod supervisor;
+pub mod worker;
+
+pub use supervisor::{ElasticExecutor, RankHealth, RankOutcome};

@@ -1,0 +1,749 @@
+//! Length-prefixed binary protocol between the elastic coordinator and
+//! its rank-worker child processes.
+//!
+//! Every message is one frame: `[u32 LE payload length][payload]`, where
+//! the payload's first byte is a tag selecting the message kind. All
+//! integers are little-endian; floats travel as raw IEEE-754 bits, so a
+//! value decoded on the far side is bit-identical to the one encoded —
+//! the property that lets the coordinator's tree reduction over
+//! process-boundary partials match the in-process thread engine bitwise.
+//!
+//! The handshake is worker-initiated so accept order never matters:
+//! the worker connects and sends [`Frame::Ready`]; the coordinator
+//! replies with [`Frame::Hello`] carrying everything the worker needs to
+//! rebuild the training context (model, backend, corpus seed/size).
+//! Steady state is coordinator [`Frame::Step`] → worker
+//! [`Frame::Result`], with [`Frame::Heartbeat`] flowing worker→
+//! coordinator from a side thread the whole time.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::rng::RngState;
+
+/// Bumped on any wire-format change; both sides refuse a mismatch.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on a single frame. Generous (a full parameter set for the
+/// largest preset is far below this), but finite so a corrupt length
+/// prefix cannot trigger an unbounded allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_READY: u8 = 2;
+const TAG_STEP: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_HEARTBEAT: u8 = 5;
+const TAG_ERROR: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+/// Coordinator → worker: handshake reply with the training context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    pub proto: u32,
+    pub worker: u32,
+    pub model: String,
+    pub backend: String,
+    pub artifacts: String,
+    pub seed: u64,
+    pub corpus_bytes: u64,
+    pub heartbeat_ms: u64,
+}
+
+/// Worker → coordinator: first message after connecting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ready {
+    pub worker: u32,
+    pub pid: u32,
+}
+
+/// One logical rank's assignment within a step: which rank position to
+/// compute and the exact loader cursor to start from. Cursors are
+/// coordinator-owned: the worker reports where the cursor ended up, and
+/// the coordinator applies that only after a fully successful step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankTask {
+    pub rank: u32,
+    pub cursor: RngState,
+}
+
+/// Coordinator → worker: run one optimizer step's accumulation for the
+/// assigned rank positions against the given parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepCmd {
+    pub step_id: u64,
+    pub accum: u32,
+    pub collect_norms: bool,
+    pub tasks: Vec<RankTask>,
+    pub params: Vec<Vec<f32>>,
+}
+
+/// One rank position's partial: accumulated grads, decomposed
+/// `GnsAccumulator` state, loss sum, and the advanced loader cursor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankResult {
+    pub rank: u32,
+    pub loss: f64,
+    pub n_micro: u32,
+    pub microbatch: u64,
+    pub n_examples: u64,
+    pub perex_sum: Vec<f64>,
+    pub sqnorms: Option<Vec<f64>>,
+    pub cursor: RngState,
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Worker → coordinator: all partials for one [`StepCmd`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepResult {
+    pub step_id: u64,
+    pub worker: u32,
+    pub results: Vec<RankResult>,
+}
+
+/// Any protocol message. `Step` is large (carries parameters); everything
+/// else is small control traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello(Hello),
+    Ready(Ready),
+    Step(StepCmd),
+    Result(StepResult),
+    Heartbeat { worker: u32, seq: u64 },
+    Error { worker: u32, msg: String },
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------
+// Encoding primitives
+// ---------------------------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 4);
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 8);
+    for x in v {
+        put_f64(buf, *x);
+    }
+}
+
+fn put_rng(buf: &mut Vec<u8>, st: &RngState) {
+    for s in st.s {
+        put_u64(buf, s);
+    }
+    match st.spare {
+        Some(v) => {
+            put_u8(buf, 1);
+            put_f64(buf, v);
+        }
+        None => put_u8(buf, 0),
+    }
+}
+
+/// Bounds-checked decoding cursor over one frame payload.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn need(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated frame payload");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.need(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.need(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.need(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(n <= MAX_FRAME, "length field {n} exceeds frame bound");
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        let bytes = self.need(n)?;
+        String::from_utf8(bytes.to_vec()).context("non-utf8 string field")
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len()?;
+        let bytes = self.need(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len()?;
+        let bytes = self.need(n * 8)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn rng(&mut self) -> Result<RngState> {
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = self.u64()?;
+        }
+        let spare = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64()?),
+            other => bail!("bad RngState spare flag {other}"),
+        };
+        Ok(RngState { s, spare })
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "trailing bytes in frame payload");
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame encode/decode
+// ---------------------------------------------------------------------
+
+fn encode_step_payload(
+    buf: &mut Vec<u8>,
+    step_id: u64,
+    accum: u32,
+    collect_norms: bool,
+    tasks: &[RankTask],
+    params: &[Vec<f32>],
+) {
+    put_u8(buf, TAG_STEP);
+    put_u64(buf, step_id);
+    put_u32(buf, accum);
+    put_u8(buf, collect_norms as u8);
+    put_u64(buf, tasks.len() as u64);
+    for t in tasks {
+        put_u32(buf, t.rank);
+        put_rng(buf, &t.cursor);
+    }
+    put_u64(buf, params.len() as u64);
+    for p in params {
+        put_f32s(buf, p);
+    }
+}
+
+fn encode_payload(f: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match f {
+        Frame::Hello(h) => {
+            put_u8(&mut buf, TAG_HELLO);
+            put_u32(&mut buf, h.proto);
+            put_u32(&mut buf, h.worker);
+            put_str(&mut buf, &h.model);
+            put_str(&mut buf, &h.backend);
+            put_str(&mut buf, &h.artifacts);
+            put_u64(&mut buf, h.seed);
+            put_u64(&mut buf, h.corpus_bytes);
+            put_u64(&mut buf, h.heartbeat_ms);
+        }
+        Frame::Ready(r) => {
+            put_u8(&mut buf, TAG_READY);
+            put_u32(&mut buf, r.worker);
+            put_u32(&mut buf, r.pid);
+        }
+        Frame::Step(cmd) => {
+            encode_step_payload(
+                &mut buf,
+                cmd.step_id,
+                cmd.accum,
+                cmd.collect_norms,
+                &cmd.tasks,
+                &cmd.params,
+            );
+        }
+        Frame::Result(res) => {
+            put_u8(&mut buf, TAG_RESULT);
+            put_u64(&mut buf, res.step_id);
+            put_u32(&mut buf, res.worker);
+            put_u64(&mut buf, res.results.len() as u64);
+            for r in &res.results {
+                put_u32(&mut buf, r.rank);
+                put_f64(&mut buf, r.loss);
+                put_u32(&mut buf, r.n_micro);
+                put_u64(&mut buf, r.microbatch);
+                put_u64(&mut buf, r.n_examples);
+                put_f64s(&mut buf, &r.perex_sum);
+                match &r.sqnorms {
+                    Some(v) => {
+                        put_u8(&mut buf, 1);
+                        put_f64s(&mut buf, v);
+                    }
+                    None => put_u8(&mut buf, 0),
+                }
+                put_rng(&mut buf, &r.cursor);
+                put_u64(&mut buf, r.grads.len() as u64);
+                for g in &r.grads {
+                    put_f32s(&mut buf, g);
+                }
+            }
+        }
+        Frame::Heartbeat { worker, seq } => {
+            put_u8(&mut buf, TAG_HEARTBEAT);
+            put_u32(&mut buf, *worker);
+            put_u64(&mut buf, *seq);
+        }
+        Frame::Error { worker, msg } => {
+            put_u8(&mut buf, TAG_ERROR);
+            put_u32(&mut buf, *worker);
+            put_str(&mut buf, msg);
+        }
+        Frame::Shutdown => put_u8(&mut buf, TAG_SHUTDOWN),
+    }
+    buf
+}
+
+fn write_payload(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    ensure!(payload.len() <= MAX_FRAME, "frame payload {} exceeds bound", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Encode and write one frame.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<()> {
+    write_payload(w, &encode_payload(f))
+}
+
+/// Write a `Step` frame without cloning the parameter blocks per worker:
+/// the coordinator encodes each worker's tasks against one shared
+/// parameter snapshot.
+pub fn write_step(
+    w: &mut impl Write,
+    step_id: u64,
+    accum: u32,
+    collect_norms: bool,
+    tasks: &[RankTask],
+    params: &[Vec<f32>],
+) -> Result<()> {
+    let mut buf = Vec::new();
+    encode_step_payload(&mut buf, step_id, accum, collect_norms, tasks, params);
+    write_payload(w, &buf)
+}
+
+/// Read one frame; blocks until a full frame (or error/EOF) arrives.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading frame length")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(len >= 1, "empty frame");
+    ensure!(len <= MAX_FRAME, "frame length {len} exceeds bound");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    decode_payload(&payload)
+}
+
+fn decode_payload(payload: &[u8]) -> Result<Frame> {
+    let mut d = Dec::new(payload);
+    let frame = match d.u8()? {
+        TAG_HELLO => Frame::Hello(Hello {
+            proto: d.u32()?,
+            worker: d.u32()?,
+            model: d.str()?,
+            backend: d.str()?,
+            artifacts: d.str()?,
+            seed: d.u64()?,
+            corpus_bytes: d.u64()?,
+            heartbeat_ms: d.u64()?,
+        }),
+        TAG_READY => Frame::Ready(Ready { worker: d.u32()?, pid: d.u32()? }),
+        TAG_STEP => {
+            let step_id = d.u64()?;
+            let accum = d.u32()?;
+            let collect_norms = d.u8()? != 0;
+            let n_tasks = d.len()?;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for _ in 0..n_tasks {
+                tasks.push(RankTask { rank: d.u32()?, cursor: d.rng()? });
+            }
+            let n_params = d.len()?;
+            let mut params = Vec::with_capacity(n_params);
+            for _ in 0..n_params {
+                params.push(d.f32s()?);
+            }
+            Frame::Step(StepCmd { step_id, accum, collect_norms, tasks, params })
+        }
+        TAG_RESULT => {
+            let step_id = d.u64()?;
+            let worker = d.u32()?;
+            let n = d.len()?;
+            let mut results = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = d.u32()?;
+                let loss = d.f64()?;
+                let n_micro = d.u32()?;
+                let microbatch = d.u64()?;
+                let n_examples = d.u64()?;
+                let perex_sum = d.f64s()?;
+                let sqnorms = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.f64s()?),
+                    other => bail!("bad sqnorms flag {other}"),
+                };
+                let cursor = d.rng()?;
+                let n_grads = d.len()?;
+                let mut grads = Vec::with_capacity(n_grads);
+                for _ in 0..n_grads {
+                    grads.push(d.f32s()?);
+                }
+                results.push(RankResult {
+                    rank,
+                    loss,
+                    n_micro,
+                    microbatch,
+                    n_examples,
+                    perex_sum,
+                    sqnorms,
+                    cursor,
+                    grads,
+                });
+            }
+            Frame::Result(StepResult { step_id, worker, results })
+        }
+        TAG_HEARTBEAT => Frame::Heartbeat { worker: d.u32()?, seq: d.u64()? },
+        TAG_ERROR => Frame::Error { worker: d.u32()?, msg: d.str()? },
+        TAG_SHUTDOWN => Frame::Shutdown,
+        other => bail!("unknown frame tag {other}"),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------
+// Local socket transport
+// ---------------------------------------------------------------------
+
+/// A coordinator↔worker connection: a unix-domain socket where the
+/// platform has them, a 127.0.0.1 TCP socket otherwise. Addresses are
+/// self-describing strings (`unix:<path>` / `tcp:<sockaddr>`) so the
+/// worker subcommand needs no transport flag.
+pub enum Conn {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(std::net::TcpStream),
+}
+
+impl Conn {
+    /// Connect to a listener address produced by [`Listener::bind_local`].
+    pub fn connect(addr: &str) -> Result<Self> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let s = std::os::unix::net::UnixStream::connect(path)
+                    .with_context(|| format!("connecting unix socket {path}"))?;
+                return Ok(Conn::Unix(s));
+            }
+            #[cfg(not(unix))]
+            bail!("unix socket address {path:?} unsupported on this platform");
+        }
+        if let Some(sockaddr) = addr.strip_prefix("tcp:") {
+            let s = std::net::TcpStream::connect(sockaddr)
+                .with_context(|| format!("connecting tcp {sockaddr}"))?;
+            return Ok(Conn::Tcp(s));
+        }
+        bail!("unrecognized worker address {addr:?}")
+    }
+
+    /// Second handle onto the same socket (independent read/write halves).
+    pub fn try_clone(&self) -> Result<Self> {
+        Ok(match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone().context("cloning unix socket")?),
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone().context("cloning tcp socket")?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<std::time::Duration>) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d)?,
+            Conn::Tcp(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+
+    pub fn set_nonblocking(&self, v: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(v)?,
+            Conn::Tcp(s) => s.set_nonblocking(v)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Listening side of the transport, created by the coordinator before
+/// spawning workers. Removes its socket file on drop (unix).
+pub enum Listener {
+    #[cfg(unix)]
+    Unix { listener: std::os::unix::net::UnixListener, path: std::path::PathBuf },
+    Tcp(std::net::TcpListener),
+}
+
+impl Listener {
+    /// Bind a fresh local listener: a per-process unique unix socket in
+    /// the temp dir, falling back to an ephemeral 127.0.0.1 TCP port.
+    /// Returns the listener and the address string workers connect to.
+    pub fn bind_local() -> Result<(Self, String)> {
+        #[cfg(unix)]
+        {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            static COUNTER: AtomicU64 = AtomicU64::new(0);
+            let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir()
+                .join(format!("nanogns-elastic-{}-{n}.sock", std::process::id()));
+            let _ = std::fs::remove_file(&path);
+            if let Ok(listener) = std::os::unix::net::UnixListener::bind(&path) {
+                let addr = format!("unix:{}", path.display());
+                return Ok((Listener::Unix { listener, path }, addr));
+            }
+        }
+        let listener =
+            std::net::TcpListener::bind(("127.0.0.1", 0)).context("binding tcp listener")?;
+        let addr = format!("tcp:{}", listener.local_addr().context("tcp listener addr")?);
+        Ok((Listener::Tcp(listener), addr))
+    }
+
+    pub fn set_nonblocking(&self, v: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix { listener, .. } => listener.set_nonblocking(v)?,
+            Listener::Tcp(l) => l.set_nonblocking(v)?,
+        }
+        Ok(())
+    }
+
+    /// Accept one connection; `io::Result` so callers can poll on
+    /// `WouldBlock` while watching the child process.
+    pub fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix { listener, .. } => listener.accept().map(|(s, _)| Conn::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, f).unwrap();
+        let mut cursor = &wire[..];
+        let back = read_frame(&mut cursor).unwrap();
+        assert!(cursor.is_empty(), "frame left trailing bytes on the wire");
+        back
+    }
+
+    fn sample_cursor() -> RngState {
+        RngState { s: [1, u64::MAX, 0xdead_beef, 42], spare: Some(-0.5) }
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        for f in [
+            Frame::Ready(Ready { worker: 3, pid: 4242 }),
+            Frame::Heartbeat { worker: 1, seq: 99 },
+            Frame::Error { worker: 0, msg: "worker exploded: details".into() },
+            Frame::Shutdown,
+            Frame::Hello(Hello {
+                proto: PROTO_VERSION,
+                worker: 2,
+                model: "nano".into(),
+                backend: "reference".into(),
+                artifacts: "artifacts".into(),
+                seed: 7,
+                corpus_bytes: 1 << 18,
+                heartbeat_ms: 250,
+            }),
+        ] {
+            assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn step_and_result_roundtrip_bitwise() {
+        let step = Frame::Step(StepCmd {
+            step_id: 12,
+            accum: 4,
+            collect_norms: true,
+            tasks: vec![
+                RankTask { rank: 0, cursor: sample_cursor() },
+                RankTask { rank: 2, cursor: RngState { s: [9, 8, 7, 6], spare: None } },
+            ],
+            params: vec![vec![1.0, -0.0, f32::MIN_POSITIVE], vec![], vec![2.5; 7]],
+        });
+        assert_eq!(roundtrip(&step), step);
+
+        let result = Frame::Result(StepResult {
+            step_id: 12,
+            worker: 1,
+            results: vec![RankResult {
+                rank: 2,
+                loss: 3.25e-3,
+                n_micro: 4,
+                microbatch: 8,
+                n_examples: 32,
+                perex_sum: vec![1.0e-9, 5.5, f64::MIN_POSITIVE],
+                sqnorms: Some(vec![0.125, 7.0]),
+                cursor: sample_cursor(),
+                grads: vec![vec![0.5; 3], vec![-1.25]],
+            }],
+        });
+        let back = roundtrip(&result);
+        assert_eq!(back, result);
+        // Float payloads must be bit-preserved, not just approximately equal.
+        if let (Frame::Result(a), Frame::Result(b)) = (&back, &result) {
+            assert_eq!(a.results[0].loss.to_bits(), b.results[0].loss.to_bits());
+            assert_eq!(a.results[0].grads[0][0].to_bits(), b.results[0].grads[0][0].to_bits());
+        }
+    }
+
+    #[test]
+    fn write_step_matches_owned_encoding() {
+        let cmd = StepCmd {
+            step_id: 5,
+            accum: 2,
+            collect_norms: false,
+            tasks: vec![RankTask { rank: 1, cursor: sample_cursor() }],
+            params: vec![vec![1.0, 2.0], vec![3.0]],
+        };
+        let mut a = Vec::new();
+        write_frame(&mut a, &Frame::Step(cmd.clone())).unwrap();
+        let mut b = Vec::new();
+        write_step(&mut b, cmd.step_id, cmd.accum, cmd.collect_norms, &cmd.tasks, &cmd.params)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_truncation_oversize_and_trailing_garbage() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::Heartbeat { worker: 0, seq: 1 }).unwrap();
+        // Truncated payload: every strict prefix fails, none panic.
+        for cut in 0..wire.len() {
+            let mut cursor = &wire[..cut];
+            assert!(read_frame(&mut cursor).is_err(), "prefix of {cut} bytes parsed");
+        }
+        // Oversize length prefix is rejected before allocating.
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+        // Trailing garbage inside the declared payload is rejected.
+        let mut padded = Vec::new();
+        write_frame(&mut padded, &Frame::Shutdown).unwrap();
+        padded[0] += 1; // lengthen the declared payload by one byte
+        padded.push(0xff);
+        assert!(read_frame(&mut &padded[..]).is_err());
+        // Unknown tag is rejected.
+        let unknown = [1u8, 0, 0, 0, 200];
+        assert!(read_frame(&mut &unknown[..]).is_err());
+    }
+
+    #[test]
+    fn frames_cross_a_real_local_socket() {
+        let (listener, addr) = Listener::bind_local().unwrap();
+        let want = Frame::Ready(Ready { worker: 7, pid: 1234 });
+        let sent = want.clone();
+        let client = std::thread::spawn(move || {
+            let mut conn = Conn::connect(&addr).unwrap();
+            write_frame(&mut conn, &sent).unwrap();
+            let reply = read_frame(&mut conn).unwrap();
+            assert_eq!(reply, Frame::Shutdown);
+        });
+        let mut server_side = listener.accept().unwrap();
+        let got = read_frame(&mut server_side).unwrap();
+        assert_eq!(got, want);
+        write_frame(&mut server_side, &Frame::Shutdown).unwrap();
+        client.join().unwrap();
+    }
+}

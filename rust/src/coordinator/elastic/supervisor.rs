@@ -1,0 +1,655 @@
+//! Coordinator side of the elastic process-isolated rank engine.
+//!
+//! [`ElasticExecutor`] is the process-mode sibling of
+//! [`crate::coordinator::ParallelExecutor`]: rank workers run as
+//! supervised child processes (`repro rank-worker`), each owning a
+//! contiguous block of logical rank positions — the same block layout as
+//! the thread engine. Per step the coordinator ships parameters plus
+//! per-rank loader cursors, the workers run the accumulation loops, and
+//! the returned partials are merged locally through the *shared*
+//! fixed-order tree reduction ([`crate::coordinator::parallel::tree_reduce`]),
+//! which is what keeps process mode bitwise identical to thread mode.
+//!
+//! Failure model: loader cursors are coordinator-owned and only advanced
+//! after a fully successful step, so a failed step has **zero** training
+//! side effects. When a worker dies (crash, kill -9, heartbeat loss, or
+//! per-step deadline), [`ElasticExecutor::rank_step`] returns
+//! [`RankOutcome::Lost`] naming the rank positions that went down; the
+//! trainer reconciles by dropping those loaders (the surviving ranks'
+//! data streams are untouched) and simply retries the step on the
+//! survivors. The post-drop trajectory is therefore bitwise identical to
+//! a thread-mode run at the reduced rank count.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::protocol::{self, Conn, Frame, Hello, Listener, PROTO_VERSION, RankResult, RankTask};
+use crate::config::TrainConfig;
+use crate::coordinator::parallel::{tree_reduce, RankPartial, RankStepOut};
+use crate::data::Loader;
+use crate::gns::GnsAccumulator;
+use crate::runtime::{Backend, BackendFactory, Buffer, ModelEntry, Tensor};
+use crate::N_TYPES;
+
+/// Liveness/progress snapshot for one logical rank, surfaced through the
+/// trainer to the `serve` daemon's `/ranks` endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankHealth {
+    /// Original rank index (stable label even after reconciliation).
+    pub rank: usize,
+    pub alive: bool,
+    /// Worker process id (process mode only).
+    pub pid: Option<u32>,
+    /// Last step id this rank contributed a result to.
+    pub last_step: u64,
+    /// Milliseconds since the worker's last heartbeat (process mode only).
+    pub heartbeat_age_ms: Option<f64>,
+    /// `"thread"` or `"process"`.
+    pub mode: &'static str,
+}
+
+/// Result of one elastic step attempt.
+pub enum RankOutcome {
+    /// The step completed on every rank; cursors have been advanced.
+    Done(RankStepOut),
+    /// These rank positions died (sorted). No cursors were advanced —
+    /// drop the positions and retry the step on the survivors.
+    Lost(Vec<usize>),
+}
+
+enum Event {
+    Frame(Frame),
+    Gone(String),
+}
+
+struct WorkerHandle {
+    child: Child,
+    /// Write half; a clone lives in the reader thread.
+    conn: Conn,
+    reader: Option<JoinHandle<()>>,
+    alive: bool,
+    pid: u32,
+    /// Original rank labels (for telemetry; never remapped).
+    orig_ranks: Vec<usize>,
+    /// Current loader positions owned by this worker (remapped on
+    /// reconciliation; empty once retired).
+    positions: Vec<usize>,
+    last_step: u64,
+    last_heartbeat: Instant,
+    fail_reason: Option<String>,
+}
+
+/// Supervises rank-worker child processes and runs elastic steps.
+pub struct ElasticExecutor {
+    /// Local backend used for the tree reduction and artifact calls
+    /// (`eval`, `grad_sqnorms` go through the trainer's runner as before).
+    reduce: Box<dyn Backend>,
+    entry: ModelEntry,
+    workers: Vec<WorkerHandle>,
+    events: Receiver<(usize, Event)>,
+    step_id: u64,
+    heartbeat: Duration,
+    step_timeout: Duration,
+}
+
+fn timeout_from_secs(v: f64, default_s: f64) -> Duration {
+    let v = if v.is_finite() && v > 0.0 { v } else { default_s };
+    Duration::from_secs_f64(v)
+}
+
+impl ElasticExecutor {
+    /// Spawn one worker process per contiguous rank block (`workers`
+    /// clamped to `[1, ranks]`; `NANOGNS_RANK_WORKERS` decides the count
+    /// upstream, exactly like thread mode) and complete the handshake
+    /// with each before returning.
+    pub fn launch(
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+        workers: usize,
+    ) -> Result<Self> {
+        let ranks = cfg.ranks.max(1);
+        let workers = workers.clamp(1, ranks);
+        let reduce = factory.create_for_rank(&cfg.model, 0)?;
+        let entry = reduce.entry().clone();
+        let exe = if cfg.elastic.worker_exe.is_empty() {
+            std::env::current_exe().context("resolving rank-worker executable")?
+        } else {
+            PathBuf::from(&cfg.elastic.worker_exe)
+        };
+        let heartbeat = Duration::from_millis(cfg.elastic.heartbeat_ms.max(10));
+        let spawn_timeout = timeout_from_secs(cfg.elastic.spawn_timeout_s, 30.0);
+        let step_timeout = timeout_from_secs(cfg.elastic.step_timeout_s, 300.0);
+        let (listener, addr) = Listener::bind_local()?;
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::channel();
+
+        let mut handles: Vec<WorkerHandle> = Vec::new();
+        let per = ranks.div_ceil(workers);
+        let mut start = 0usize;
+        let mut w = 0usize;
+        while start < ranks {
+            let end = (start + per).min(ranks);
+            let block: Vec<usize> = (start..end).collect();
+            match Self::spawn_worker(
+                &exe,
+                &listener,
+                &addr,
+                w,
+                block,
+                cfg,
+                reduce.name(),
+                heartbeat,
+                spawn_timeout,
+                &tx,
+            ) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    for mut h in handles {
+                        let _ = h.child.kill();
+                        let _ = h.child.wait();
+                    }
+                    return Err(e);
+                }
+            }
+            start = end;
+            w += 1;
+        }
+        Ok(Self {
+            reduce,
+            entry,
+            workers: handles,
+            events: rx,
+            step_id: 0,
+            heartbeat,
+            step_timeout,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_worker(
+        exe: &std::path::Path,
+        listener: &Listener,
+        addr: &str,
+        w: usize,
+        block: Vec<usize>,
+        cfg: &TrainConfig,
+        backend_name: &str,
+        heartbeat: Duration,
+        spawn_timeout: Duration,
+        tx: &Sender<(usize, Event)>,
+    ) -> Result<WorkerHandle> {
+        let mut child = Command::new(exe)
+            .arg("rank-worker")
+            .arg("--connect")
+            .arg(addr)
+            .arg("--worker")
+            .arg(w.to_string())
+            .stdin(Stdio::null())
+            // Workers stay silent on stdout (the coordinator may be in
+            // `--json` mode); stderr is inherited for crash visibility.
+            .stdout(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning rank worker {w} via {}", exe.display()))?;
+        let pid = child.id();
+
+        let handshake = Self::handshake(
+            listener,
+            &mut child,
+            w,
+            cfg,
+            backend_name,
+            heartbeat,
+            spawn_timeout,
+        );
+
+        let (wconn, mut rconn) = match handshake {
+            Ok(pair) => pair,
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e);
+            }
+        };
+
+        let tx2 = tx.clone();
+        let reader = std::thread::spawn(move || loop {
+            match protocol::read_frame(&mut rconn) {
+                Ok(f) => {
+                    if tx2.send((w, Event::Frame(f))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx2.send((w, Event::Gone(format!("{e}"))));
+                    return;
+                }
+            }
+        });
+
+        Ok(WorkerHandle {
+            child,
+            conn: wconn,
+            reader: Some(reader),
+            alive: true,
+            pid,
+            orig_ranks: block.clone(),
+            positions: block,
+            last_step: 0,
+            last_heartbeat: Instant::now(),
+            fail_reason: None,
+        })
+    }
+
+    /// Accept the freshly spawned worker's connection and complete the
+    /// Ready/Hello exchange; returns the (write, read) socket halves.
+    #[allow(clippy::too_many_arguments)]
+    fn handshake(
+        listener: &Listener,
+        child: &mut Child,
+        w: usize,
+        cfg: &TrainConfig,
+        backend_name: &str,
+        heartbeat: Duration,
+        spawn_timeout: Duration,
+    ) -> Result<(Conn, Conn)> {
+        let deadline = Instant::now() + spawn_timeout;
+        let conn = loop {
+            match listener.accept() {
+                Ok(c) => break c,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Some(status) = child.try_wait()? {
+                        bail!("rank worker {w} exited during startup: {status}");
+                    }
+                    ensure!(
+                        Instant::now() < deadline,
+                        "rank worker {w} did not connect within {spawn_timeout:?}"
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            }
+        };
+        conn.set_nonblocking(false)?;
+        conn.set_read_timeout(Some(spawn_timeout))?;
+        let mut rconn = conn.try_clone()?;
+        match protocol::read_frame(&mut rconn)
+            .with_context(|| format!("handshake with rank worker {w}"))?
+        {
+            Frame::Ready(r) => {
+                ensure!(
+                    r.worker as usize == w,
+                    "worker index mismatch: spawned {w}, got Ready from {}",
+                    r.worker
+                );
+            }
+            other => bail!("rank worker {w}: expected Ready, got {other:?}"),
+        }
+        let mut wconn = conn;
+        protocol::write_frame(
+            &mut wconn,
+            &Frame::Hello(Hello {
+                proto: PROTO_VERSION,
+                worker: w as u32,
+                model: cfg.model.clone(),
+                backend: backend_name.to_string(),
+                artifacts: cfg.artifacts.clone(),
+                seed: cfg.seed,
+                corpus_bytes: cfg.corpus_bytes as u64,
+                heartbeat_ms: heartbeat.as_millis() as u64,
+            }),
+        )?;
+        wconn.set_read_timeout(None)?;
+        Ok((wconn, rconn))
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// The local reduction backend.
+    pub fn backend(&self) -> &dyn Backend {
+        self.reduce.as_ref()
+    }
+
+    /// Live worker processes.
+    pub fn workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Pids of live workers, in worker order (fault-injection tests pick
+    /// a victim from here).
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.workers.iter().filter(|w| w.alive).map(|w| w.pid).collect()
+    }
+
+    fn mark_dead(&mut self, wi: usize, reason: String) {
+        let w = &mut self.workers[wi];
+        if !w.alive {
+            return;
+        }
+        w.alive = false;
+        eprintln!(
+            "elastic: worker {wi} (pid {}, ranks {:?}) down: {reason}",
+            w.pid, w.orig_ranks
+        );
+        w.fail_reason = Some(reason);
+        let _ = w.child.kill();
+        let _ = w.child.wait();
+    }
+
+    fn handle_event(
+        &mut self,
+        wi: usize,
+        ev: Event,
+        step_id: u64,
+        pending: &mut BTreeSet<usize>,
+        results: &mut BTreeMap<usize, RankResult>,
+    ) {
+        match ev {
+            Event::Frame(Frame::Heartbeat { .. }) => {
+                self.workers[wi].last_heartbeat = Instant::now();
+            }
+            Event::Frame(Frame::Result(res)) => {
+                // Results from an aborted earlier attempt carry a stale
+                // step id and are dropped on the floor.
+                if res.step_id == step_id {
+                    for r in res.results {
+                        results.insert(r.rank as usize, r);
+                    }
+                    self.workers[wi].last_step = step_id;
+                    self.workers[wi].last_heartbeat = Instant::now();
+                    pending.remove(&wi);
+                }
+            }
+            Event::Frame(Frame::Error { msg, .. }) => {
+                self.mark_dead(wi, format!("worker reported: {msg}"));
+                pending.remove(&wi);
+            }
+            Event::Frame(_) => {}
+            Event::Gone(reason) => {
+                if self.workers[wi].alive {
+                    self.mark_dead(wi, format!("connection lost: {reason}"));
+                }
+                pending.remove(&wi);
+            }
+        }
+    }
+
+    /// Process queued reader events without blocking (heartbeats between
+    /// steps, deaths detected while the trainer was busy elsewhere).
+    fn drain_events(&mut self) {
+        let mut pending = BTreeSet::new();
+        let mut results = BTreeMap::new();
+        while let Ok((wi, ev)) = self.events.try_recv() {
+            let step_id = self.step_id;
+            self.handle_event(wi, ev, step_id, &mut pending, &mut results);
+        }
+    }
+
+    /// Positions owned by non-live workers, sorted ascending.
+    fn lost_positions(&self) -> Vec<usize> {
+        let mut lost: Vec<usize> = self
+            .workers
+            .iter()
+            .filter(|w| !w.alive)
+            .flat_map(|w| w.positions.iter().copied())
+            .collect();
+        lost.sort_unstable();
+        lost
+    }
+
+    /// Run one step attempt across all live workers. Either every rank
+    /// completes ([`RankOutcome::Done`], cursors advanced) or the lost
+    /// positions are reported with no side effects at all.
+    pub fn rank_step(
+        &mut self,
+        params: &[Buffer],
+        loaders: &mut [Loader],
+        accum: usize,
+        collect_rank_norms: bool,
+    ) -> Result<RankOutcome> {
+        let ranks = loaders.len();
+        ensure!(ranks > 0, "rank_step needs at least one rank loader");
+        ensure!(accum > 0, "rank_step needs accum >= 1");
+        self.drain_events();
+        let lost = self.lost_positions();
+        if !lost.is_empty() {
+            return Ok(RankOutcome::Lost(lost));
+        }
+        ensure!(self.workers.iter().any(|w| w.alive), "no rank workers remain");
+        let assigned: usize = self.workers.iter().map(|w| w.positions.len()).sum();
+        ensure!(
+            assigned == ranks,
+            "elastic engine tracks {assigned} rank positions but got {ranks} loaders"
+        );
+
+        self.step_id += 1;
+        let step_id = self.step_id;
+        let pdata: Vec<Vec<f32>> = params
+            .iter()
+            .map(|b| b.as_host().map(|t| t.data.clone()))
+            .collect::<Result<_>>()?;
+
+        let mut pending: BTreeSet<usize> = BTreeSet::new();
+        for wi in 0..self.workers.len() {
+            if !self.workers[wi].alive || self.workers[wi].positions.is_empty() {
+                continue;
+            }
+            let tasks: Vec<RankTask> = self.workers[wi]
+                .positions
+                .iter()
+                .map(|&p| RankTask { rank: p as u32, cursor: loaders[p].cursor() })
+                .collect();
+            match protocol::write_step(
+                &mut self.workers[wi].conn,
+                step_id,
+                accum as u32,
+                collect_rank_norms,
+                &tasks,
+                &pdata,
+            ) {
+                Ok(()) => {
+                    pending.insert(wi);
+                }
+                Err(e) => self.mark_dead(wi, format!("step send failed: {e}")),
+            }
+        }
+
+        let deadline = Instant::now() + self.step_timeout;
+        let hb_timeout = (self.heartbeat * 8).max(Duration::from_secs(2));
+        let mut results: BTreeMap<usize, RankResult> = BTreeMap::new();
+        while !pending.is_empty() {
+            let now = Instant::now();
+            if now >= deadline {
+                for wi in pending.iter().copied().collect::<Vec<_>>() {
+                    self.mark_dead(wi, format!("step {step_id} deadline exceeded"));
+                    pending.remove(&wi);
+                }
+                break;
+            }
+            let wait = (deadline - now).min(self.heartbeat.max(Duration::from_millis(50)));
+            match self.events.recv_timeout(wait) {
+                Ok((wi, ev)) => self.handle_event(wi, ev, step_id, &mut pending, &mut results),
+                Err(RecvTimeoutError::Timeout) => {
+                    let now = Instant::now();
+                    let stale: Vec<usize> = pending
+                        .iter()
+                        .copied()
+                        .filter(|&wi| {
+                            now.duration_since(self.workers[wi].last_heartbeat) > hb_timeout
+                        })
+                        .collect();
+                    for wi in stale {
+                        self.mark_dead(wi, "heartbeat timeout".to_string());
+                        pending.remove(&wi);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    for wi in pending.iter().copied().collect::<Vec<_>>() {
+                        self.mark_dead(wi, "event channel closed".to_string());
+                    }
+                    pending.clear();
+                }
+            }
+        }
+
+        let lost = self.lost_positions();
+        if !lost.is_empty() {
+            // Discard the whole attempt: no cursors move, nothing merges.
+            return Ok(RankOutcome::Lost(lost));
+        }
+
+        // Success: advance cursors, rebuild partials in rank-position
+        // order, and reduce through the shared fixed-order tree.
+        ensure!(
+            results.len() == ranks,
+            "step {step_id}: got {} rank results, want {ranks}",
+            results.len()
+        );
+        let mut partials: Vec<RankPartial> = Vec::with_capacity(ranks);
+        for p in 0..ranks {
+            let r = results
+                .remove(&p)
+                .ok_or_else(|| anyhow!("step {step_id}: no result for rank position {p}"))?;
+            ensure!(
+                r.n_micro as usize == accum,
+                "rank {p}: ran {} microbatches, expected {accum}",
+                r.n_micro
+            );
+            ensure!(
+                r.grads.len() == self.entry.params.len(),
+                "rank {p}: {} gradient tensors, expected {}",
+                r.grads.len(),
+                self.entry.params.len()
+            );
+            ensure!(
+                r.perex_sum.len() == N_TYPES,
+                "rank {p}: stats arity {} != {N_TYPES}",
+                r.perex_sum.len()
+            );
+            loaders[p].restore_cursor(r.cursor);
+            let mut grads = Vec::with_capacity(r.grads.len());
+            for (data, spec) in r.grads.into_iter().zip(&self.entry.params) {
+                let t = Tensor::new(spec.shape.clone(), data)
+                    .with_context(|| format!("rank {p}: bad gradient for {}", spec.name))?;
+                grads.push(Buffer::from_tensor(t));
+            }
+            let stats = GnsAccumulator::from_parts(
+                r.microbatch as usize,
+                r.perex_sum,
+                r.n_examples as usize,
+            );
+            let sqnorms = match r.sqnorms {
+                Some(v) => {
+                    ensure!(v.len() == N_TYPES, "rank {p}: sqnorm arity {}", v.len());
+                    let mut a = [0f64; N_TYPES];
+                    a.copy_from_slice(&v);
+                    Some(a)
+                }
+                None => None,
+            };
+            partials.push(RankPartial {
+                grads,
+                stats,
+                loss: r.loss,
+                n_micro: r.n_micro as usize,
+                sqnorms,
+            });
+        }
+        let rank_sqnorms: Option<Vec<[f64; N_TYPES]>> = collect_rank_norms
+            .then(|| partials.iter().map(|p| p.sqnorms.unwrap_or([f64::NAN; N_TYPES])).collect());
+        let root = tree_reduce(self.reduce.as_ref(), partials, |_| {})?;
+        Ok(RankOutcome::Done(RankStepOut {
+            grads: root.grads,
+            stats: root.stats,
+            loss_sum: root.loss,
+            n_micro: root.n_micro,
+            rank_sqnorms,
+        }))
+    }
+
+    /// Commit a reconciliation the trainer has applied to its loaders:
+    /// `lost` (sorted ascending) names the removed positions. Surviving
+    /// workers keep their own blocks, remapped to the compacted index
+    /// space; a live worker left without positions is retired.
+    pub fn confirm_loss(&mut self, lost: &[usize]) {
+        for w in self.workers.iter_mut() {
+            w.positions.retain(|p| !lost.contains(p));
+            for p in w.positions.iter_mut() {
+                *p -= lost.iter().filter(|&&l| l < *p).count();
+            }
+        }
+        for wi in 0..self.workers.len() {
+            if self.workers[wi].alive && self.workers[wi].positions.is_empty() {
+                let _ = protocol::write_frame(&mut self.workers[wi].conn, &Frame::Shutdown);
+                self.mark_dead(wi, "retired: no rank positions remain".to_string());
+            }
+        }
+    }
+
+    /// Per-rank liveness for `/ranks`, labeled by original rank index.
+    pub fn health(&self) -> Vec<RankHealth> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for w in &self.workers {
+            for &orig in &w.orig_ranks {
+                out.push(RankHealth {
+                    rank: orig,
+                    alive: w.alive,
+                    pid: Some(w.pid),
+                    last_step: w.last_step,
+                    heartbeat_age_ms: Some(
+                        now.duration_since(w.last_heartbeat).as_secs_f64() * 1e3,
+                    ),
+                    mode: "process",
+                });
+            }
+        }
+        out.sort_by_key(|h| h.rank);
+        out
+    }
+
+    fn shutdown_workers(&mut self) {
+        for wi in 0..self.workers.len() {
+            if self.workers[wi].alive {
+                let _ = protocol::write_frame(&mut self.workers[wi].conn, &Frame::Shutdown);
+            }
+        }
+        for w in self.workers.iter_mut() {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                match w.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                        break;
+                    }
+                }
+            }
+            w.alive = false;
+        }
+        // Children are gone, so the sockets are closed and every reader
+        // thread unblocks with EOF.
+        for w in self.workers.iter_mut() {
+            if let Some(h) = w.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for ElasticExecutor {
+    fn drop(&mut self) {
+        self.shutdown_workers();
+    }
+}

@@ -1,0 +1,211 @@
+//! Rank-worker child process: the far side of the elastic protocol,
+//! entered through the hidden `repro rank-worker` subcommand.
+//!
+//! A worker connects back to the coordinator, announces itself with
+//! `Ready`, and receives a `Hello` carrying everything needed to rebuild
+//! the training context — model name, backend name (through the
+//! [`crate::runtime::BackendFactory::create_for_rank`] seam), and the
+//! corpus seed/size. It then loops on `Step` commands: for each assigned
+//! rank position it replays exactly the thread engine's accumulation
+//! fold (zero grads → per microbatch: `next_batch`, `grad_step`,
+//! stats fold, `accumulate`), so the partial it ships back is bitwise
+//! identical to the one a scoped thread would have produced in-process.
+//!
+//! A side thread emits heartbeats at the coordinator-requested cadence
+//! for the whole lifetime of the process; compute never blocks them.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::protocol::{self, Conn, Frame, Hello, RankResult, Ready, StepCmd, StepResult};
+use crate::data::{CorpusGenerator, Loader};
+use crate::gns::GnsAccumulator;
+use crate::runtime::{Backend, BackendFactory, Buffer, ModelEntry, Tensor};
+use crate::N_TYPES;
+
+/// Build the backend factory named in the coordinator's `Hello`. Mirrors
+/// the CLI's factory selection, minus the interactive error text.
+fn factory_for(backend: &str, artifacts: &str) -> Result<Box<dyn BackendFactory>> {
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts;
+    match backend {
+        "reference" => Ok(Box::new(crate::runtime::ReferenceFactory)),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(crate::runtime::PjrtFactory::new(artifacts)?)),
+        other => bail!("rank worker: unsupported backend {other:?}"),
+    }
+}
+
+/// Entry point for `repro rank-worker --connect <addr> --worker <n>`.
+/// Returns when the coordinator sends `Shutdown` or the connection
+/// closes; protocol or compute errors are reported over the wire first.
+pub fn run_worker(connect: &str, worker: usize) -> Result<()> {
+    let conn = Conn::connect(connect)
+        .with_context(|| format!("rank worker {worker}: connecting to coordinator"))?;
+    let mut reader = conn.try_clone()?;
+    let writer = Arc::new(Mutex::new(conn));
+    {
+        let mut wlock = writer.lock().expect("writer lock");
+        protocol::write_frame(
+            &mut *wlock,
+            &Frame::Ready(Ready { worker: worker as u32, pid: std::process::id() }),
+        )?;
+    }
+    let hello = match protocol::read_frame(&mut reader)? {
+        Frame::Hello(h) => h,
+        other => bail!("rank worker {worker}: expected Hello, got {other:?}"),
+    };
+    ensure!(
+        hello.proto == protocol::PROTO_VERSION,
+        "protocol version mismatch: coordinator {} vs worker {}",
+        hello.proto,
+        protocol::PROTO_VERSION
+    );
+    ensure!(
+        hello.worker as usize == worker,
+        "coordinator addressed worker {} but this is worker {worker}",
+        hello.worker
+    );
+
+    // Heartbeats flow from a side thread for the process lifetime; the
+    // stop flag only matters for the clean-shutdown path.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_writer = Arc::clone(&writer);
+    let hb_stop = Arc::clone(&stop);
+    let hb_period = Duration::from_millis(hello.heartbeat_ms.max(10));
+    let hb = std::thread::spawn(move || {
+        let mut seq = 0u64;
+        loop {
+            std::thread::sleep(hb_period);
+            if hb_stop.load(Ordering::Relaxed) {
+                return;
+            }
+            seq += 1;
+            let mut w = match hb_writer.lock() {
+                Ok(w) => w,
+                Err(_) => return,
+            };
+            if protocol::write_frame(&mut *w, &Frame::Heartbeat { worker: worker as u32, seq })
+                .is_err()
+            {
+                return;
+            }
+        }
+    });
+
+    let run = serve_steps(&hello, worker, &mut reader, &writer);
+    stop.store(true, Ordering::Relaxed);
+    if let Err(e) = &run {
+        // Best-effort: tell the coordinator why before dying nonzero.
+        if let Ok(mut w) = writer.lock() {
+            let msg = format!("{e}");
+            let _ = protocol::write_frame(&mut *w, &Frame::Error { worker: worker as u32, msg });
+            let _ = w.flush();
+        }
+    }
+    let _ = hb.join();
+    run
+}
+
+/// The worker's steady-state loop: build the training context once, then
+/// answer `Step` commands until `Shutdown` or EOF.
+fn serve_steps(
+    hello: &Hello,
+    worker: usize,
+    reader: &mut Conn,
+    writer: &Arc<Mutex<Conn>>,
+) -> Result<()> {
+    let factory = factory_for(&hello.backend, &hello.artifacts)?;
+    let be = factory.create_for_rank(&hello.model, worker)?;
+    let entry = be.entry().clone();
+    let text = CorpusGenerator::new(hello.seed).generate(hello.corpus_bytes as usize);
+    let base = Loader::new(&text, entry.seq_len, hello.seed);
+
+    loop {
+        let cmd = match protocol::read_frame(reader) {
+            Ok(Frame::Step(cmd)) => cmd,
+            Ok(Frame::Shutdown) => return Ok(()),
+            Ok(other) => bail!("rank worker {worker}: unexpected frame {other:?}"),
+            // EOF here means the coordinator vanished without a Shutdown;
+            // exiting nonzero is fine — nobody is left supervising us.
+            Err(e) => {
+                return Err(e).context(format!("rank worker {worker}: reading command"));
+            }
+        };
+        let result = run_step(be.as_ref(), &entry, &base, cmd, worker)?;
+        let mut w = writer.lock().expect("writer lock");
+        protocol::write_frame(&mut *w, &Frame::Result(result))?;
+    }
+}
+
+/// Execute one `Step` command: per assigned rank position, the exact
+/// accumulation fold the thread engine runs, against a loader rebuilt
+/// from the coordinator-supplied cursor.
+fn run_step(
+    be: &dyn Backend,
+    entry: &ModelEntry,
+    base: &Loader,
+    cmd: StepCmd,
+    worker: usize,
+) -> Result<StepResult> {
+    ensure!(cmd.accum > 0, "step with accum = 0");
+    ensure!(
+        cmd.params.len() == entry.params.len(),
+        "step carries {} parameter tensors, model has {}",
+        cmd.params.len(),
+        entry.params.len()
+    );
+    let params: Vec<Buffer> = cmd
+        .params
+        .into_iter()
+        .zip(&entry.params)
+        .map(|(data, spec)| {
+            Tensor::new(spec.shape.clone(), data)
+                .map(Buffer::from_tensor)
+                .with_context(|| format!("bad parameter tensor {}", spec.name))
+        })
+        .collect::<Result<_>>()?;
+
+    let mb = entry.microbatch;
+    let mut results = Vec::with_capacity(cmd.tasks.len());
+    for task in &cmd.tasks {
+        let mut loader = base.clone();
+        loader.restore_cursor(task.cursor);
+        let mut acc = be.zero_grads()?;
+        let mut stats = GnsAccumulator::new(N_TYPES, mb);
+        let mut loss = 0f64;
+        for _ in 0..cmd.accum {
+            let batch = loader.next_batch(mb);
+            let out = be.grad_step(&params, &batch)?;
+            stats.add_microbatch(&out.stats);
+            acc = be.accumulate(acc, &out.grads)?;
+            loss += out.loss as f64;
+        }
+        let sqnorms = if cmd.collect_norms {
+            Some(be.grad_sqnorms(&acc)?.to_vec())
+        } else {
+            None
+        };
+        let (microbatch, perex_sum, n_examples) = stats.export_parts();
+        let grads: Vec<Vec<f32>> = acc
+            .into_iter()
+            .map(|b| b.into_host().map(|t| t.data))
+            .collect::<Result<_>>()?;
+        results.push(RankResult {
+            rank: task.rank,
+            loss,
+            n_micro: cmd.accum,
+            microbatch: microbatch as u64,
+            n_examples: n_examples as u64,
+            perex_sum,
+            sqnorms,
+            cursor: loader.cursor(),
+            grads,
+        });
+    }
+    Ok(StepResult { step_id: cmd.step_id, worker: worker as u32, results })
+}

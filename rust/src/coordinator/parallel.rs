@@ -68,13 +68,45 @@ pub struct RankStepOut {
     pub rank_sqnorms: Option<Vec<[f64; N_TYPES]>>,
 }
 
-/// One rank's partial result before the tree reduction.
-struct RankPartial {
-    grads: Vec<Buffer>,
-    stats: GnsAccumulator,
-    loss: f64,
-    n_micro: usize,
-    sqnorms: Option<[f64; N_TYPES]>,
+/// One rank's partial result before the tree reduction. Shared with the
+/// process-isolated engine (`coordinator::elastic`), which rebuilds these
+/// from wire partials and must reduce them through the *same* code path
+/// to keep thread mode and process mode bitwise interchangeable.
+pub(crate) struct RankPartial {
+    pub(crate) grads: Vec<Buffer>,
+    pub(crate) stats: GnsAccumulator,
+    pub(crate) loss: f64,
+    pub(crate) n_micro: usize,
+    pub(crate) sqnorms: Option<[f64; N_TYPES]>,
+}
+
+/// Fixed-order binary tree reduction over the rank index: pairwise
+/// rounds, odd tail passes through. Depends only on the number of
+/// partials (the rank count), never on worker layout or process
+/// placement — the bitwise-determinism keystone both engines share.
+/// `recycle` receives each consumed right-hand gradient set.
+pub(crate) fn tree_reduce(
+    be: &dyn Backend,
+    mut partials: Vec<RankPartial>,
+    mut recycle: impl FnMut(Vec<Buffer>),
+) -> Result<RankPartial> {
+    ensure!(!partials.is_empty(), "tree_reduce needs at least one partial");
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(2));
+        let mut it = partials.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                a.grads = be.accumulate(a.grads, &b.grads)?;
+                recycle(b.grads);
+                a.stats.merge(&b.stats);
+                a.loss += b.loss;
+                a.n_micro += b.n_micro;
+            }
+            next.push(a);
+        }
+        partials = next;
+    }
+    Ok(partials.pop().expect("non-empty rank set"))
 }
 
 /// Owns per-worker backend instances and runs rank loops concurrently.
@@ -282,26 +314,9 @@ impl ParallelExecutor {
         let rank_sqnorms: Option<Vec<[f64; N_TYPES]>> = collect_rank_norms
             .then(|| partials.iter().map(|p| p.sqnorms.unwrap_or([f64::NAN; N_TYPES])).collect());
 
-        // Fixed-order binary tree reduction over the rank index: pairwise
-        // rounds, odd tail passes through. Depends only on `ranks`, never
-        // on the worker layout.
+        // Fixed-order tree reduction, shared with the elastic engine.
         let be = self.backends[0].as_ref();
-        while partials.len() > 1 {
-            let mut next = Vec::with_capacity(partials.len().div_ceil(2));
-            let mut it = partials.into_iter();
-            while let Some(mut a) = it.next() {
-                if let Some(b) = it.next() {
-                    a.grads = be.accumulate(a.grads, &b.grads)?;
-                    self.recycle(b.grads);
-                    a.stats.merge(&b.stats);
-                    a.loss += b.loss;
-                    a.n_micro += b.n_micro;
-                }
-                next.push(a);
-            }
-            partials = next;
-        }
-        let root = partials.pop().expect("non-empty rank set");
+        let root = tree_reduce(be, partials, |g| self.recycle(g))?;
         Ok(RankStepOut {
             grads: root.grads,
             stats: root.stats,

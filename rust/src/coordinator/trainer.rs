@@ -17,21 +17,33 @@
 //! With `checkpoint_dir`/`checkpoint_every` set, [`Trainer::run`] writes a
 //! full-state (v2) checkpoint every N steps; [`Trainer::resume`] rebuilds
 //! a trainer from one and replays the uninterrupted trajectory bitwise.
+//! Periodic checkpoints are serialized on the training thread but
+//! *published* by [`checkpoint::CkptWriter`]'s background thread, so disk
+//! never blocks [`Trainer::step`].
+//!
+//! Under `rank_mode = process` the engine is the elastic one
+//! ([`super::elastic::ElasticExecutor`]): a rank dying mid-step surfaces
+//! as [`RankOutcome::Lost`], and [`Trainer::step`] reconciles — drop the
+//! dead positions, rewind the batch-size controller (the failed attempt
+//! must not advance hysteresis), retry on the survivors. Loader cursors
+//! only move on success, so the surviving ranks' trajectories stay
+//! bitwise identical to a thread-mode run at the reduced rank count.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::config::TrainConfig;
+use crate::config::{RankMode, TrainConfig};
 use crate::data::{CorpusGenerator, Loader};
 use crate::gns::{GnsComponents, GnsTracker};
-use crate::runtime::{Backend, BackendFactory};
+use crate::runtime::{Backend, BackendFactory, Buffer};
 use crate::schedule::GnsController;
 use crate::telemetry::{CsvLogger, TRAIN_HEADER};
 use crate::{N_TYPES, STATS_ORDER};
 
 use super::checkpoint;
+use super::elastic::{ElasticExecutor, RankHealth, RankOutcome};
 use super::parallel::ParallelExecutor;
 use super::runner::ModelRunner;
 
@@ -70,6 +82,8 @@ pub struct StepObservation<'a> {
     pub accum: usize,
     /// Total step budget of the run (`cfg.steps`).
     pub total_steps: u64,
+    /// Per-rank liveness after this step (see [`Trainer::rank_health`]).
+    pub ranks: Vec<RankHealth>,
 }
 
 /// Step-by-step consumer of a training run ([`Trainer::run_with_observer`]).
@@ -87,16 +101,69 @@ pub trait StepObserver: Sync {
     }
 }
 
+/// Rank-execution engine behind [`Trainer::step`]: scoped threads
+/// in-process, or supervised child processes (elastic). Both feed the
+/// same fixed-order tree reduction, so at equal rank count they are
+/// bitwise interchangeable; only the process engine can report
+/// [`RankOutcome::Lost`].
+enum Engine {
+    Threads(ParallelExecutor),
+    Process(ElasticExecutor),
+}
+
+impl Engine {
+    fn rank_step(
+        &mut self,
+        params: &[Buffer],
+        loaders: &mut [Loader],
+        accum: usize,
+        collect_rank_norms: bool,
+    ) -> Result<RankOutcome> {
+        match self {
+            Engine::Threads(ex) => {
+                Ok(RankOutcome::Done(ex.rank_step(params, loaders, accum, collect_rank_norms)?))
+            }
+            Engine::Process(ex) => ex.rank_step(params, loaders, accum, collect_rank_norms),
+        }
+    }
+
+    fn backend(&self) -> &dyn Backend {
+        match self {
+            Engine::Threads(ex) => ex.backend(),
+            Engine::Process(ex) => ex.backend(),
+        }
+    }
+
+    fn recycle(&self, grads: Vec<Buffer>) {
+        match self {
+            Engine::Threads(ex) => ex.recycle(grads),
+            // Process-mode gradient sets were rebuilt from wire bytes;
+            // nothing pools them.
+            Engine::Process(_) => {}
+        }
+    }
+
+    fn workers(&self) -> usize {
+        match self {
+            Engine::Threads(ex) => ex.workers(),
+            Engine::Process(ex) => ex.workers(),
+        }
+    }
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub runner: ModelRunner,
-    engine: ParallelExecutor,
+    engine: Engine,
     loaders: Vec<Loader>,
     controller: GnsController,
     pub tracker: GnsTracker,
     tokens: u64,
     /// Multiplier on the scheduled LR (Fig. 6 temperature interventions).
     pub lr_scale: f64,
+    /// Background checkpoint writer, spawned lazily by the first
+    /// [`Trainer::checkpoint_now`].
+    ckpt_writer: Option<checkpoint::CkptWriter>,
 }
 
 /// Deep copy of everything a [`Trainer`] mutates, for run forking (Fig. 6
@@ -128,13 +195,28 @@ impl Trainer {
         let mut runner = ModelRunner::new(factory, &cfg.model)?;
         runner.init(cfg.seed as i32)?;
         let ranks = cfg.ranks.max(1);
-        let engine = ParallelExecutor::with_workers(factory, &cfg.model, ranks, workers)?;
+        let engine = match cfg.rank_mode {
+            RankMode::Threads => Engine::Threads(ParallelExecutor::with_workers(
+                factory, &cfg.model, ranks, workers,
+            )?),
+            RankMode::Process => Engine::Process(ElasticExecutor::launch(factory, &cfg, workers)?),
+        };
         let text = CorpusGenerator::new(cfg.seed).generate(cfg.corpus_bytes);
         let base = Loader::new(&text, runner.entry.seq_len, cfg.seed);
         let loaders: Vec<Loader> = (0..ranks as u64).map(|r| base.for_rank(r)).collect();
         let controller = GnsController::new(cfg.batch_size.clone());
         let tracker = GnsTracker::new(&STATS_ORDER, cfg.gns_alpha);
-        Ok(Self { cfg, runner, engine, loaders, controller, tracker, tokens: 0, lr_scale: 1.0 })
+        Ok(Self {
+            cfg,
+            runner,
+            engine,
+            loaders,
+            controller,
+            tracker,
+            tokens: 0,
+            lr_scale: 1.0,
+            ckpt_writer: None,
+        })
     }
 
     /// Rebuild a trainer from a full-state (v2) checkpoint; the resumed
@@ -153,16 +235,75 @@ impl Trainer {
         self.tokens
     }
 
-    /// Rank-parallel worker threads in use.
+    /// Current live rank count (drops below `cfg.ranks` after elastic
+    /// reconciliation).
+    pub fn ranks(&self) -> usize {
+        self.loaders.len()
+    }
+
+    /// Rank-parallel workers in use (threads or live worker processes).
     pub fn rank_workers(&self) -> usize {
         self.engine.workers()
     }
 
-    /// Write a full-state (v2) checkpoint of this trainer (the
-    /// model-sized buffers are serialized in place, never cloned).
-    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+    /// Per-rank liveness for the serve daemon's `/ranks` endpoint. Thread
+    /// mode synthesizes always-alive entries (ranks share this process);
+    /// process mode reports real worker heartbeats and pids.
+    pub fn rank_health(&self) -> Vec<RankHealth> {
+        match &self.engine {
+            Engine::Process(ex) => ex.health(),
+            Engine::Threads(_) => (0..self.loaders.len())
+                .map(|rank| RankHealth {
+                    rank,
+                    alive: true,
+                    pid: None,
+                    last_step: self.runner.step,
+                    heartbeat_age_ms: None,
+                    mode: "thread",
+                })
+                .collect(),
+        }
+    }
+
+    /// Pids of live rank-worker processes (process mode only; the
+    /// fault-injection tests pick their kill victim from here).
+    pub fn elastic_worker_pids(&self) -> Option<Vec<u32>> {
+        match &self.engine {
+            Engine::Process(ex) => Some(ex.worker_pids()),
+            Engine::Threads(_) => None,
+        }
+    }
+
+    /// Drop rank positions (sorted or not; deduped here) from the run:
+    /// their loaders are removed, survivors keep their own data streams,
+    /// and the elastic engine (if any) remaps its worker assignments.
+    /// Thread mode accepts this too — the invariance tests use it to
+    /// build the reduced-rank control trajectory.
+    pub fn drop_ranks(&mut self, lost: &[usize]) -> Result<()> {
+        let mut lost = lost.to_vec();
+        lost.sort_unstable();
+        lost.dedup();
+        ensure!(!lost.is_empty(), "drop_ranks: no ranks named");
+        ensure!(
+            lost.iter().all(|&p| p < self.loaders.len()),
+            "drop_ranks: position out of range (have {} ranks)",
+            self.loaders.len()
+        );
+        ensure!(lost.len() < self.loaders.len(), "drop_ranks: cannot drop every rank");
+        for &p in lost.iter().rev() {
+            self.loaders.remove(p);
+        }
+        if let Engine::Process(ex) = &mut self.engine {
+            ex.confirm_loss(&lost);
+        }
+        Ok(())
+    }
+
+    /// Everything [`checkpoint::encode_state`] serializes, borrowed from
+    /// the live trainer (the model-sized buffer sets are never cloned).
+    fn state_view(&self) -> checkpoint::TrainStateView<'_> {
         let (m, v) = self.runner.moments();
-        let state = checkpoint::TrainStateView {
+        checkpoint::TrainStateView {
             model: &self.cfg.model,
             seed: self.cfg.seed,
             corpus_bytes: self.cfg.corpus_bytes as u64,
@@ -175,14 +316,32 @@ impl Trainer {
             params: &self.runner.params,
             m,
             v,
-        };
-        checkpoint::save_state(path, &self.runner.entry, &state)
+        }
+    }
+
+    /// Write a full-state (v2) checkpoint of this trainer, synchronously
+    /// on the calling thread.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        checkpoint::save_state(path, &self.runner.entry, &self.state_view())
+    }
+
+    /// Block until every queued async checkpoint write has been
+    /// published, surfacing the first write error if one occurred. A
+    /// trainer that never checkpointed asynchronously returns
+    /// immediately.
+    pub fn wait_checkpoints(&self) -> Result<()> {
+        match &self.ckpt_writer {
+            Some(w) => w.wait_idle(),
+            None => Ok(()),
+        }
     }
 
     /// Restore this trainer's mutable state from a v2 checkpoint. The
     /// trainer must have been built from the same config (model, ranks,
     /// seed, schedules) as the checkpointed run.
     pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        // Never read under an in-flight background write.
+        self.wait_checkpoints()?;
         let st = checkpoint::load_state(path, &self.runner.entry)?;
         ensure!(
             st.model == self.cfg.model,
@@ -222,23 +381,26 @@ impl Trainer {
         Ok(())
     }
 
-    /// Write a `step-XXXXXXXX.ckpt` full-state checkpoint under
-    /// `cfg.checkpoint_dir` and atomically refresh the `latest.ckpt`
-    /// pointer; returns the step-file path. Used by the run loop's
-    /// periodic checkpoints and by the serve daemon's graceful
-    /// checkpoint-then-exit shutdown.
-    pub fn checkpoint_now(&self) -> Result<std::path::PathBuf> {
+    /// Queue a `step-XXXXXXXX.ckpt` full-state checkpoint under
+    /// `cfg.checkpoint_dir` plus the `latest.ckpt` pointer; returns the
+    /// step-file path. The state is serialized here (into a recycled
+    /// buffer) but *published* by the background [`checkpoint::CkptWriter`]
+    /// — both files from the same image, each crash-safely (`.tmp` →
+    /// fsync → rename → dir fsync) — so the training thread never waits
+    /// on disk. [`Trainer::wait_checkpoints`] joins the outstanding
+    /// writes; the run loop does so before returning.
+    pub fn checkpoint_now(&mut self) -> Result<PathBuf> {
         ensure!(!self.cfg.checkpoint_dir.is_empty(), "no checkpoint_dir configured");
-        let step = self.runner.step;
         let dir = Path::new(&self.cfg.checkpoint_dir);
-        let path = dir.join(format!("step-{step:08}.ckpt"));
-        self.save_checkpoint(&path)?;
-        // latest.ckpt updates atomically too: a crash mid-copy must not
-        // clobber the previous good pointer.
-        let tmp = dir.join("latest.ckpt.tmp");
-        std::fs::copy(&path, &tmp)?;
-        std::fs::OpenOptions::new().write(true).open(&tmp)?.sync_all()?;
-        std::fs::rename(&tmp, dir.join("latest.ckpt"))?;
+        let path = dir.join(format!("step-{:08}.ckpt", self.runner.step));
+        let latest = dir.join("latest.ckpt");
+        if self.ckpt_writer.is_none() {
+            self.ckpt_writer = Some(checkpoint::CkptWriter::new());
+        }
+        let writer = self.ckpt_writer.as_ref().expect("just initialized");
+        let mut bytes = writer.take_buffer();
+        checkpoint::encode_state(&self.runner.entry, &self.state_view(), &mut bytes)?;
+        writer.submit(bytes, vec![path.clone(), latest])?;
         Ok(path)
     }
 
@@ -271,18 +433,40 @@ impl Trainer {
     }
 
     /// Run one optimizer step; returns its record.
+    ///
+    /// Under the elastic engine a rank dying mid-step does not fail the
+    /// step: the attempt had no side effects (cursors only advance on
+    /// success), so the trainer rewinds the batch-size controller, drops
+    /// the dead positions, and retries on the survivors.
     pub fn step(&mut self) -> Result<StepRecord> {
         let t0 = Instant::now();
         let mb = self.runner.entry.microbatch;
         let seq = self.runner.entry.seq_len;
-        let accum = self.controller.decide(self.tokens, self.tracker.gns_total(), mb);
-        let ranks = self.cfg.ranks.max(1);
+        let (out, accum) = loop {
+            // Snapshot the controller before `decide`: its hysteresis
+            // state must advance exactly once per *successful* step, or
+            // the post-drop trajectory would fork from the thread-mode
+            // control run.
+            let controller = self.controller.clone();
+            let accum = self.controller.decide(self.tokens, self.tracker.gns_total(), mb);
 
-        // Rank-parallel accumulation: every rank's `accum` microbatches
-        // run concurrently on the engine's worker backends, and the
-        // per-rank gradient/stats partials merge with the fixed-order
-        // tree reduction (bitwise identical for any worker count).
-        let out = self.engine.rank_step(&self.runner.params, &mut self.loaders, accum, false)?;
+            // Rank-parallel accumulation: every rank's `accum` microbatches
+            // run concurrently on the engine's workers, and the per-rank
+            // gradient/stats partials merge with the fixed-order tree
+            // reduction (bitwise identical for any worker count).
+            match self.engine.rank_step(&self.runner.params, &mut self.loaders, accum, false)? {
+                RankOutcome::Done(out) => break (out, accum),
+                RankOutcome::Lost(lost) => {
+                    self.controller = controller;
+                    eprintln!(
+                        "elastic: dropped rank(s) {lost:?}; retrying step on {} survivor(s)",
+                        self.loaders.len() - lost.len()
+                    );
+                    self.drop_ranks(&lost)?;
+                }
+            }
+        };
+        let ranks = self.loaders.len();
         let n_micro = out.n_micro;
         let acc = out.grads;
         let scale = 1.0 / n_micro as f64;
@@ -361,6 +545,14 @@ impl Trainer {
         &mut self,
         observer: Option<&dyn StepObserver>,
     ) -> Result<TrainOutcome> {
+        // Leftover `.ckpt.tmp` files are writes a previous process died
+        // inside; the renamed-over checkpoints are still good, the tmps
+        // are garbage.
+        if !self.cfg.checkpoint_dir.is_empty() {
+            for p in checkpoint::clean_stale_tmps(&self.cfg.checkpoint_dir)? {
+                eprintln!("checkpoint: removed stale partial write {p:?}");
+            }
+        }
         // A resumed run keeps the rows logged before the interruption,
         // drops any logged *after* the checkpoint being resumed from
         // (they will be re-executed), and appends.
@@ -395,6 +587,7 @@ impl Trainer {
                     gns: self.tracker.snapshot(),
                     accum: self.controller.last(),
                     total_steps: self.cfg.steps,
+                    ranks: self.rank_health(),
                 });
                 if obs.stop_requested() {
                     break;
@@ -404,6 +597,9 @@ impl Trainer {
         if let Some(log) = logger.as_mut() {
             log.flush()?;
         }
+        // Join outstanding background checkpoint writes before declaring
+        // the run done (and surface any write failure).
+        self.wait_checkpoints()?;
         let final_loss = records.last().map(|r| r.loss).unwrap_or(f64::NAN);
         Ok(TrainOutcome { final_loss, tokens: self.tokens, records })
     }

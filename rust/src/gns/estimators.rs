@@ -95,6 +95,19 @@ impl GnsAccumulator {
         self.n_examples += other.n_examples;
     }
 
+    /// Decompose into `(microbatch, perex_sum, n_examples)` for wire
+    /// transport. The parts are exact f64 sums, so a remote accumulator
+    /// rebuilt via [`GnsAccumulator::from_parts`] merges bitwise
+    /// identically to one that stayed in-process.
+    pub fn export_parts(&self) -> (usize, Vec<f64>, usize) {
+        (self.microbatch, self.perex_sum.clone(), self.n_examples)
+    }
+
+    /// Rebuild an accumulator from [`GnsAccumulator::export_parts`] output.
+    pub fn from_parts(microbatch: usize, perex_sum: Vec<f64>, n_examples: usize) -> Self {
+        Self { microbatch, perex_sum, n_examples }
+    }
+
     /// Mean per-example squared norm per layer type (`||G_Bsmall||^2` with
     /// B_small = 1), plus the total.
     pub fn finish(&self) -> (Vec<f64>, f64) {

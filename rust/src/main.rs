@@ -22,8 +22,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use nanogns::cli::{self, FiguresArgs, InfoArgs, InspectArgs, ServeArgs, TrainArgs};
-use nanogns::config::TrainConfig;
+use nanogns::cli::{self, FiguresArgs, InfoArgs, InspectArgs, RankWorkerArgs, ServeArgs, TrainArgs};
+use nanogns::config::{RankMode, TrainConfig};
 use nanogns::coordinator::{TrainOutcome, Trainer};
 use nanogns::figures;
 use nanogns::runtime::{BackendFactory, ReferenceFactory};
@@ -51,6 +51,10 @@ Data-parallel ranks run concurrently; NANOGNS_RANK_WORKERS caps the rank worker
 threads (results are bitwise identical for any setting). NANOGNS_THREADS sizes
 the per-backend kernel worker pool; NANOGNS_FORCE_SCALAR=1 pins every kernel to
 the scalar oracle tier (config keys `threads` / `force_scalar` do the same).
+With `--rank-mode process` ranks run in supervised child processes instead of
+threads (same bitwise results); a dead worker is reconciled away and the run
+continues on the survivors. (`repro rank-worker` is the internal child-process
+entry point — the coordinator spawns it, you don't.)
 
 FIGURES: 2..16 map to the paper's figures (8 = `cargo bench --features pjrt --bench ln_kernel`;
 11..13 need the pjrt backend), tables 1..2.
@@ -112,6 +116,9 @@ fn build_train_config(t: &TrainArgs) -> Result<TrainConfig> {
     }
     if let Some(r) = &t.resume {
         cfg.resume = r.clone();
+    }
+    if let Some(mode) = &t.rank_mode {
+        cfg.rank_mode = RankMode::parse(mode)?;
     }
     if cfg.threads > 0 && std::env::var("NANOGNS_THREADS").is_err() {
         std::env::set_var("NANOGNS_THREADS", cfg.threads.to_string());
@@ -452,6 +459,18 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Hidden subcommand: the elastic child-process entry point. Connects
+/// back to the spawning coordinator and serves rank steps until told to
+/// shut down. Never meant for interactive use, but `--help` still works.
+fn cmd_rank_worker(argv: &[String]) -> Result<()> {
+    let a = RankWorkerArgs::parse(argv)?;
+    if a.help {
+        print!("{}", cli::RANK_WORKER_USAGE);
+        return Ok(());
+    }
+    nanogns::coordinator::elastic::worker::run_worker(&a.connect, a.worker)
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -466,6 +485,7 @@ fn main() -> Result<()> {
         "figures" => cmd_figures(rest)?,
         "info" => cmd_info(rest)?,
         "inspect" => cmd_inspect(rest)?,
+        "rank-worker" => cmd_rank_worker(rest)?,
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
     Ok(())

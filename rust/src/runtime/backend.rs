@@ -160,6 +160,15 @@ pub trait BackendFactory {
     /// can override this to map ranks onto devices — e.g. the pjrt path
     /// binding `rank -> PJRT device ordinal` — without the coordinator
     /// changing.
+    ///
+    /// This seam now has two callers: the thread engine
+    /// ([`crate::coordinator::parallel`]) calls it in-process, and under
+    /// `rank_mode = process` each `repro rank-worker` child rebuilds its
+    /// factory from the coordinator's `Hello` frame and calls it in its
+    /// own address space ([`crate::coordinator::elastic`]). Both paths
+    /// must stay deterministic in `(model, rank)` alone — any ambient
+    /// state consulted here would silently break the bitwise
+    /// thread/process equivalence contract.
     fn create_for_rank(&self, model: &str, _rank: usize) -> Result<Box<dyn Backend>> {
         self.create(model)
     }

@@ -6,12 +6,39 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
 /// Upper bound on accepted request heads; anything larger is hostile
 /// or broken (our longest legitimate request line is ~60 bytes).
 const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Enforces an overall per-request deadline on top of the socket's
+/// per-read timeout. A per-read timeout alone resets on every byte, so
+/// a client trickling one byte per interval holds a worker for as long
+/// as it likes (slowloris); here each read gets only the *remaining*
+/// request budget.
+struct DeadlineStream<'a> {
+    inner: &'a TcpStream,
+    start: Instant,
+    deadline: Duration,
+}
+
+impl Read for DeadlineStream<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let elapsed = self.start.elapsed();
+        if elapsed >= self.deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request deadline exceeded",
+            ));
+        }
+        self.inner.set_read_timeout(Some(self.deadline - elapsed))?;
+        let mut s = self.inner;
+        s.read(buf)
+    }
+}
 
 /// A parsed request head: method, path (query split off), query pairs.
 #[derive(Debug)]
@@ -41,9 +68,12 @@ impl Request {
 
 /// Read and parse one request head (request line + headers). The body,
 /// if any, is drained per `Content-Length` and discarded — the daemon's
-/// only non-GET endpoint (`POST /shutdown`) takes no payload.
-pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut reader = BufReader::new(stream);
+/// only non-GET endpoint (`POST /shutdown`) takes no payload. The whole
+/// request (head + body drain) must arrive within `deadline`, however
+/// slowly the client trickles bytes.
+pub fn read_request(stream: &TcpStream, deadline: Duration) -> Result<Request> {
+    let mut reader =
+        BufReader::new(DeadlineStream { inner: stream, start: Instant::now(), deadline });
     let mut line = String::new();
     reader.read_line(&mut line).context("reading request line")?;
     ensure!(!line.is_empty(), "empty request");
@@ -208,8 +238,8 @@ mod tests {
         let mut client = TcpStream::connect(addr).unwrap();
         client.write_all(raw.as_bytes()).unwrap();
         client.flush().unwrap();
-        let (mut server_side, _) = listener.accept().unwrap();
-        read_request(&mut server_side)
+        let (server_side, _) = listener.accept().unwrap();
+        read_request(&server_side, Duration::from_secs(2))
     }
 
     #[test]
@@ -243,5 +273,52 @@ mod tests {
         assert_eq!(pct_decode("a%20b+c"), "a b c");
         assert_eq!(pct_decode("plain"), "plain");
         assert_eq!(pct_decode("bad%zz"), "bad%zz");
+    }
+
+    /// Regression: a half-sent request that then stalls must error out
+    /// within the request deadline, not hold the worker until the client
+    /// gives up.
+    #[test]
+    fn stalled_half_request_errors_within_deadline() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Valid start, no terminating blank line — then silence.
+        client.write_all(b"GET /status HTTP/1.1\r\nHost: x\r\nX-Sl").unwrap();
+        client.flush().unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let t0 = Instant::now();
+        assert!(read_request(&server_side, Duration::from_millis(300)).is_err());
+        let elapsed = t0.elapsed();
+        assert!(elapsed < Duration::from_secs(5), "deadline not enforced: {elapsed:?}");
+        drop(client);
+    }
+
+    /// Regression (slowloris): trickled bytes reset a naive per-read
+    /// timeout indefinitely; the overall deadline must still cut the
+    /// request off.
+    #[test]
+    fn trickling_client_cannot_extend_the_deadline() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let writer = std::thread::spawn(move || {
+            // One byte per 50ms: each byte arrives well inside any
+            // per-read timeout, but the full head never does.
+            for b in b"GET /health HTTP/1.1\r\nHost".iter() {
+                if client.write_all(&[*b]).is_err() {
+                    return;
+                }
+                let _ = client.flush();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        });
+        let (server_side, _) = listener.accept().unwrap();
+        let t0 = Instant::now();
+        assert!(read_request(&server_side, Duration::from_millis(400)).is_err());
+        let elapsed = t0.elapsed();
+        assert!(elapsed < Duration::from_secs(3), "trickle extended the deadline: {elapsed:?}");
+        drop(server_side);
+        writer.join().unwrap();
     }
 }

@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::trainer::{record_json, StepObservation, StepObserver, StepRecord};
+use crate::coordinator::RankHealth;
 use crate::gns::GnsSnapshot;
 use crate::telemetry::summary::Decimated;
 use crate::util::json::Value;
@@ -76,6 +77,8 @@ struct HubInner {
     gns: Option<GnsSnapshot>,
     /// Controller hysteresis anchor after the last step.
     accum: usize,
+    /// Per-rank liveness after the last step (`/ranks`).
+    ranks: Vec<RankHealth>,
     loss_curve: Decimated,
     state: RunState,
     error: Option<String>,
@@ -103,6 +106,7 @@ impl TelemetryHub {
                 last: None,
                 gns: None,
                 accum: 0,
+                ranks: Vec::new(),
                 loss_curve: Decimated::new(LOSS_CURVE_MAX),
                 state: RunState::Running,
                 error: None,
@@ -148,6 +152,7 @@ impl TelemetryHub {
         inner.last = Some(obs.record.clone());
         inner.gns = Some(obs.gns.clone());
         inner.accum = obs.accum;
+        inner.ranks = obs.ranks.clone();
         drop(inner);
         self.bump();
     }
@@ -364,6 +369,47 @@ impl TelemetryHub {
         out
     }
 
+    /// `/ranks` body: per-rank liveness as of the last published step
+    /// (worker pids, heartbeat ages, and post-reconciliation survival in
+    /// elastic process mode; synthesized always-alive entries in thread
+    /// mode).
+    pub fn body_ranks(&self) -> String {
+        let inner = self.lock_inner();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "step".into(),
+            Value::Num(inner.last.as_ref().map(|r| r.step).unwrap_or(0) as f64),
+        );
+        m.insert("configured_ranks".into(), Value::Num(self.meta.ranks as f64));
+        let mode = inner.ranks.first().map(|h| h.mode).unwrap_or("thread");
+        m.insert("mode".into(), Value::Str(mode.into()));
+        m.insert(
+            "alive".into(),
+            Value::Num(inner.ranks.iter().filter(|h| h.alive).count() as f64),
+        );
+        let arr: Vec<Value> = inner
+            .ranks
+            .iter()
+            .map(|h| {
+                let mut e = BTreeMap::new();
+                e.insert("rank".into(), Value::Num(h.rank as f64));
+                e.insert("alive".into(), Value::Bool(h.alive));
+                e.insert(
+                    "pid".into(),
+                    h.pid.map(|p| Value::Num(p as f64)).unwrap_or(Value::Null),
+                );
+                e.insert("last_step".into(), Value::Num(h.last_step as f64));
+                e.insert(
+                    "heartbeat_age_ms".into(),
+                    h.heartbeat_age_ms.map(Value::finite_or_null).unwrap_or(Value::Null),
+                );
+                Value::Obj(e)
+            })
+            .collect();
+        m.insert("ranks".into(), Value::Arr(arr));
+        Value::Obj(m).to_string()
+    }
+
     /// `/records?since=&limit=` body: assembled from the ring's
     /// pre-serialized fragments — no per-request float formatting.
     pub fn body_records(&self, since: u64, limit: usize) -> String {
@@ -386,6 +432,16 @@ impl TelemetryHub {
         out.push_str(&slice.next_since.to_string());
         out.push_str(",\"truncated\":");
         out.push_str(if slice.truncated { "true" } else { "false" });
+        // A cursor that fell off the ring would otherwise skip steps
+        // silently; `gap` makes the loss explicit and `oldest_step` says
+        // where the retained history restarts.
+        out.push_str(",\"gap\":");
+        out.push_str(if slice.gap { "true" } else { "false" });
+        out.push_str(",\"oldest_step\":");
+        match slice.oldest_step {
+            Some(s) => out.push_str(&s.to_string()),
+            None => out.push_str("null"),
+        }
         out.push_str(",\"dropped\":");
         out.push_str(&dropped.to_string());
         out.push_str(",\"ring_capacity\":");
@@ -461,6 +517,24 @@ mod tests {
             gns: tracker.snapshot(),
             accum: 2,
             total_steps: 10,
+            ranks: vec![
+                RankHealth {
+                    rank: 0,
+                    alive: true,
+                    pid: Some(4242),
+                    last_step: step,
+                    heartbeat_age_ms: Some(12.5),
+                    mode: "process",
+                },
+                RankHealth {
+                    rank: 1,
+                    alive: false,
+                    pid: None,
+                    last_step: step.saturating_sub(1),
+                    heartbeat_age_ms: None,
+                    mode: "process",
+                },
+            ],
         });
     }
 
@@ -511,6 +585,33 @@ mod tests {
         assert!(hub.stop_requested());
         hub.mark_done(RunState::Stopped, None, None);
         assert!(hub.server_should_exit());
+    }
+
+    #[test]
+    fn ranks_body_reports_liveness_and_records_flag_gaps() {
+        let hub = TelemetryHub::new(test_meta(), 4);
+        // before any step: empty rank list, thread-mode default
+        let empty = Value::parse(&hub.body_ranks()).unwrap();
+        assert_eq!(empty.get("mode").unwrap().as_str().unwrap(), "thread");
+        assert_eq!(empty.get("alive").unwrap().as_u64().unwrap(), 0);
+        publish(&hub, 1);
+        let v = Value::parse(&hub.body_ranks()).unwrap();
+        assert_eq!(v.get("step").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(v.get("mode").unwrap().as_str().unwrap(), "process");
+        assert_eq!(v.get("alive").unwrap().as_u64().unwrap(), 1);
+        let ranks = v.get("ranks").unwrap().as_arr().unwrap();
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(ranks[0].get("pid").unwrap().as_u64().unwrap(), 4242);
+        assert!(matches!(ranks[1].get("pid"), Some(Value::Null)));
+        // ring holds 4: steps 1..=6 evict 1 and 2 → cursor 1 has a gap
+        for s in 2..=6 {
+            publish(&hub, s);
+        }
+        let recs = Value::parse(&hub.body_records(1, 100)).unwrap();
+        assert!(recs.get("gap").unwrap().as_bool().unwrap());
+        assert_eq!(recs.get("oldest_step").unwrap().as_u64().unwrap(), 3);
+        let ok = Value::parse(&hub.body_records(5, 100)).unwrap();
+        assert!(!ok.get("gap").unwrap().as_bool().unwrap());
     }
 
     #[test]

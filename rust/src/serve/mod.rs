@@ -18,6 +18,7 @@
 //!    allowed to exit.
 //!
 //! Endpoints: `/health`, `/status`, `/gns/layers`, `/schedule`,
+//! `/ranks` (per-rank liveness, elastic process mode),
 //! `/records?since=&limit=`, `/metrics` (Prometheus text), and
 //! `POST /shutdown`. See README "Live telemetry".
 
@@ -88,7 +89,13 @@ pub fn train_and_publish(trainer: &mut Trainer, hub: &TelemetryHub) -> Result<Tr
             // is resumable from its exact exit point (a full run already
             // wrote its last periodic checkpoint, if configured).
             let final_ckpt = if stopped_early && !trainer.cfg.checkpoint_dir.is_empty() {
-                match trainer.checkpoint_now() {
+                // checkpoint_now only queues the write on the writer
+                // thread; block until it is durably published before
+                // advertising the path on /status.
+                match trainer.checkpoint_now().and_then(|p| {
+                    trainer.wait_checkpoints()?;
+                    Ok(p)
+                }) {
                     Ok(p) => Some(p.display().to_string()),
                     Err(e) => {
                         hub.mark_done(

@@ -26,6 +26,14 @@ pub struct RingSlice {
     pub next_since: u64,
     /// True when `limit` cut the result short (more records are ready).
     pub truncated: bool,
+    /// Oldest step still retained by the ring (None when empty). Lets a
+    /// poller see how far back it could rewind.
+    pub oldest_step: Option<u64>,
+    /// True when records between `since` and the oldest retained step
+    /// were evicted: the poller's cursor fell off the ring and the
+    /// response silently skips steps. Without this flag a slow dashboard
+    /// cannot tell a quiet run from a lossy one.
+    pub gap: bool,
 }
 
 #[derive(Debug)]
@@ -35,12 +43,15 @@ pub struct RecordRing {
     /// Records evicted over the ring's lifetime (a poller whose cursor
     /// fell behind by more than `cap` steps can detect the gap).
     dropped: u64,
+    /// Step of the most recently evicted record; a cursor below it has
+    /// missed data.
+    last_evicted_step: Option<u64>,
 }
 
 impl RecordRing {
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0, "ring capacity must be positive");
-        Self { cap, buf: VecDeque::with_capacity(cap), dropped: 0 }
+        Self { cap, buf: VecDeque::with_capacity(cap), dropped: 0, last_evicted_step: None }
     }
 
     /// Append a record. Steps must arrive strictly increasing (the
@@ -50,7 +61,9 @@ impl RecordRing {
             debug_assert!(step > last.step, "ring pushes must be monotone");
         }
         if self.buf.len() == self.cap {
-            self.buf.pop_front();
+            if let Some(evicted) = self.buf.pop_front() {
+                self.last_evicted_step = Some(evicted.step);
+            }
             self.dropped += 1;
         }
         self.buf.push_back(RingEntry { step, json });
@@ -63,7 +76,16 @@ impl RecordRing {
         let take = avail.min(limit);
         let entries: Vec<RingEntry> = self.buf.iter().skip(start).take(take).cloned().collect();
         let next_since = entries.last().map(|e| e.step).unwrap_or(since);
-        RingSlice { entries, next_since, truncated: take < avail }
+        // A cursor at exactly the last evicted step has *seen* that
+        // record: only cursors strictly below it missed data.
+        let gap = self.last_evicted_step.is_some_and(|evicted| since < evicted);
+        RingSlice {
+            entries,
+            next_since,
+            truncated: take < avail,
+            oldest_step: self.first_step(),
+            gap,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -144,5 +166,34 @@ mod tests {
         // a cursor that fell behind the ring resumes at the oldest kept
         let a = r.since(2, 100);
         assert_eq!(a.entries.first().unwrap().step, 7);
+    }
+
+    /// A cursor that fell off the ring gets `gap = true`; the boundary
+    /// cursor (exactly the last evicted step) saw everything and does
+    /// not.
+    #[test]
+    fn gap_flags_evicted_cursors_exactly() {
+        let mut r = RecordRing::new(4);
+        for s in 1..=6 {
+            r.push(s, mk(s));
+        }
+        // retained: 3..=6; evicted: 1, 2
+        assert_eq!(r.first_step(), Some(3));
+        let lost = r.since(1, 100);
+        assert!(lost.gap, "cursor 1 missed step 2");
+        assert_eq!(lost.oldest_step, Some(3));
+        assert_eq!(lost.entries.first().unwrap().step, 3);
+        // Boundary: cursor 2 already consumed the last evicted record —
+        // records 3.. are all still here, no data was missed.
+        let boundary = r.since(2, 100);
+        assert!(!boundary.gap, "cursor at last evicted step missed nothing");
+        assert_eq!(boundary.entries.first().unwrap().step, 3);
+        // Fresh ring (nothing evicted yet): never a gap, even from 0.
+        let mut fresh = RecordRing::new(8);
+        fresh.push(1, mk(1));
+        let a = fresh.since(0, 100);
+        assert!(!a.gap);
+        assert_eq!(a.oldest_step, Some(1));
+        assert!(RecordRing::new(2).since(0, 10).oldest_step.is_none());
     }
 }

@@ -27,6 +27,11 @@ const IDLE_POLL: Duration = Duration::from_millis(5);
 /// worker forever.
 const IO_TIMEOUT: Duration = Duration::from_millis(2000);
 
+/// Overall budget for receiving one full request head. Unlike
+/// `IO_TIMEOUT` (which resets on every byte and so can be ridden
+/// indefinitely by a trickling client), this bounds the whole read.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+
 /// Default and maximum `limit` for `GET /records`.
 const RECORDS_DEFAULT_LIMIT: usize = 256;
 const RECORDS_MAX_LIMIT: usize = 4096;
@@ -105,7 +110,7 @@ fn worker_loop(rx: &Arc<Mutex<mpsc::Receiver<TcpStream>>>, hub: &Arc<TelemetryHu
         };
         let Ok(mut stream) = stream else { return };
         hub.requests.fetch_add(1, Ordering::Relaxed);
-        let response = match read_request(&mut stream) {
+        let response = match read_request(&stream, REQUEST_DEADLINE) {
             Ok(req) => route(hub, &req),
             Err(e) => bad_request(&e),
         };
@@ -131,6 +136,7 @@ pub fn route(hub: &TelemetryHub, req: &Request) -> Response {
         ("GET", "/schedule") => {
             Response::json_shared(200, hub.cached("schedule", || hub.body_schedule()))
         }
+        ("GET", "/ranks") => Response::json_shared(200, hub.cached("ranks", || hub.body_ranks())),
         ("GET", "/records") => {
             let since = match req.query_num::<u64>("since", 0) {
                 Ok(v) => v,
@@ -159,7 +165,7 @@ pub fn route(hub: &TelemetryHub, req: &Request) -> Response {
         }
         ("GET", "/shutdown") => Response::error(405, "use POST /shutdown"),
         (m, p) if p == "/health" || p == "/status" || p == "/gns/layers" || p == "/schedule"
-            || p == "/records" || p == "/metrics" || p == "/shutdown" =>
+            || p == "/ranks" || p == "/records" || p == "/metrics" || p == "/shutdown" =>
         {
             Response::error(405, &format!("{m} not allowed on {p}"))
         }

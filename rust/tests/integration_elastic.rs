@@ -1,0 +1,281 @@
+//! Elastic process-mode integration tests (PR 8).
+//!
+//! Contracts enforced end-to-end, per DESIGN.md's elastic rank protocol
+//! section:
+//! * process mode (rank workers as supervised child processes) is
+//!   **bitwise identical** to thread mode at the same rank count, for
+//!   any worker count;
+//! * `kill -9` on a rank worker mid-run does not abort the run: the
+//!   coordinator reconciles (drops the dead positions, retries the step)
+//!   and the survivors' trajectory is bitwise identical to a thread-mode
+//!   run at the reduced rank count;
+//! * async (writer-thread) checkpoints are byte-identical to synchronous
+//!   ones, and a crash mid-`.tmp`-write leaves a resumable run behind.
+//!
+//! The child processes run this workspace's own `repro` binary
+//! (`CARGO_BIN_EXE_repro`) through the hidden `rank-worker` subcommand.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use nanogns::config::{RankMode, TrainConfig};
+use nanogns::coordinator::trainer::{StepObservation, StepObserver, StepRecord};
+use nanogns::coordinator::{checkpoint, Trainer};
+use nanogns::runtime::{BackendFactory, ReferenceFactory};
+use nanogns::schedule::{BatchSizeSchedule, LrSchedule};
+use nanogns::N_TYPES;
+
+/// A config exercising every piece of elastic-sensitive state: several
+/// ranks (per-rank loader cursors), a ramping batch-size schedule
+/// (controller hysteresis that must rewind on a failed attempt), and a
+/// warmup/decay LR schedule.
+fn base_cfg(steps: u64, ranks: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::quickstart("nano", steps);
+    cfg.ranks = ranks;
+    cfg.lr = LrSchedule { max_lr: 3e-3, min_lr: 3e-4, warmup_steps: 2, decay_steps: steps };
+    let tpa = {
+        let e = ReferenceFactory.describe("nano").unwrap();
+        (e.microbatch * e.seq_len) as u64
+    };
+    cfg.batch_size =
+        BatchSizeSchedule::Linear { min_accum: 1, max_accum: 3, ramp_tokens: steps * tpa };
+    cfg
+}
+
+/// `base_cfg` in elastic process mode, with the rank-worker children
+/// spawned from this workspace's freshly built `repro` binary.
+fn elastic_cfg(steps: u64, ranks: usize) -> TrainConfig {
+    let mut cfg = base_cfg(steps, ranks);
+    cfg.rank_mode = RankMode::Process;
+    cfg.elastic.worker_exe = env!("CARGO_BIN_EXE_repro").to_string();
+    cfg
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Bitwise record equality, `step_ms` excluded (wall clock).
+fn assert_records_eq(a: &StepRecord, b: &StepRecord, ctx: &str) {
+    assert_eq!(a.step, b.step, "{ctx}: step");
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.accum, b.accum, "{ctx}: accum");
+    assert_eq!(bits(a.loss), bits(b.loss), "{ctx}: loss {} vs {}", a.loss, b.loss);
+    assert_eq!(bits(a.lr), bits(b.lr), "{ctx}: lr");
+    assert_eq!(bits(a.b_big), bits(b.b_big), "{ctx}: b_big");
+    for t in 0..N_TYPES {
+        assert_eq!(bits(a.raw_g_sq[t]), bits(b.raw_g_sq[t]), "{ctx}: raw_g_sq[{t}]");
+        assert_eq!(bits(a.raw_s[t]), bits(b.raw_s[t]), "{ctx}: raw_s[{t}]");
+    }
+    assert_eq!(bits(a.raw_g_sq_total), bits(b.raw_g_sq_total), "{ctx}: raw_g_sq_total");
+    assert_eq!(bits(a.raw_s_total), bits(b.raw_s_total), "{ctx}: raw_s_total");
+    assert_eq!(bits(a.gns_layernorm), bits(b.gns_layernorm), "{ctx}: gns_layernorm");
+    assert_eq!(bits(a.gns_total), bits(b.gns_total), "{ctx}: gns_total");
+}
+
+fn run_steps(tr: &mut Trainer, n: usize) -> Vec<StepRecord> {
+    (0..n).map(|_| tr.step().unwrap()).collect()
+}
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nanogns_pr8_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[cfg(unix)]
+fn kill9(pid: u32) {
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("spawning kill");
+    assert!(status.success(), "kill -9 {pid} failed");
+}
+
+/// The tentpole property: swapping scoped threads for supervised child
+/// processes changes nothing about the numbers. Rank counts 1 and 3,
+/// worker counts 1 (all ranks on one child) and ranks (one child each).
+#[test]
+fn process_mode_is_bitwise_identical_to_thread_mode() {
+    for ranks in [1usize, 3] {
+        let mut thread_tr =
+            Trainer::with_rank_workers(&ReferenceFactory, base_cfg(3, ranks), 1).unwrap();
+        let want = run_steps(&mut thread_tr, 3);
+        let worker_counts: &[usize] = if ranks == 1 { &[1] } else { &[1, ranks] };
+        for &workers in worker_counts {
+            let mut proc_tr =
+                Trainer::with_rank_workers(&ReferenceFactory, elastic_cfg(3, ranks), workers)
+                    .unwrap();
+            assert_eq!(proc_tr.rank_workers(), workers);
+            assert!(proc_tr.elastic_worker_pids().is_some(), "process engine expected");
+            let got = run_steps(&mut proc_tr, 3);
+            for (a, b) in got.iter().zip(&want) {
+                let ctx = format!("ranks={ranks} workers={workers} step={}", b.step);
+                assert_records_eq(a, b, &ctx);
+            }
+        }
+    }
+}
+
+/// Process mode reports real per-rank liveness (pids, heartbeat ages);
+/// thread mode synthesizes always-alive entries.
+#[test]
+fn rank_health_reflects_engine_mode() {
+    let mut tr = Trainer::with_rank_workers(&ReferenceFactory, elastic_cfg(2, 2), 2).unwrap();
+    run_steps(&mut tr, 1);
+    let health = tr.rank_health();
+    assert_eq!(health.len(), 2);
+    for (i, h) in health.iter().enumerate() {
+        assert_eq!(h.rank, i);
+        assert!(h.alive);
+        assert_eq!(h.mode, "process");
+        assert!(h.pid.is_some());
+        assert!(h.heartbeat_age_ms.is_some());
+    }
+    let tr2 = Trainer::with_rank_workers(&ReferenceFactory, base_cfg(2, 2), 1).unwrap();
+    for h in tr2.rank_health() {
+        assert_eq!(h.mode, "thread");
+        assert!(h.pid.is_none());
+    }
+}
+
+/// kill -9 one rank worker between steps: the next step attempt loses
+/// the rank, the trainer reconciles, and the surviving ranks' records
+/// are bitwise identical to a thread-mode run that dropped the same
+/// rank position at the same step boundary.
+#[cfg(unix)]
+#[test]
+fn killed_worker_reconciles_bitwise_to_reduced_thread_run() {
+    let ranks = 3;
+    // Control trajectory: thread mode, same drop applied by hand.
+    let mut control = Trainer::with_rank_workers(&ReferenceFactory, base_cfg(6, ranks), 1).unwrap();
+    let want_head = run_steps(&mut control, 2);
+    control.drop_ranks(&[1]).unwrap();
+    let want_tail = run_steps(&mut control, 4);
+
+    // Elastic run: one child per rank, murder the middle one.
+    let mut tr =
+        Trainer::with_rank_workers(&ReferenceFactory, elastic_cfg(6, ranks), ranks).unwrap();
+    let head = run_steps(&mut tr, 2);
+    for (a, b) in head.iter().zip(&want_head) {
+        assert_records_eq(a, b, &format!("pre-kill step {}", b.step));
+    }
+    let pids = tr.elastic_worker_pids().unwrap();
+    assert_eq!(pids.len(), ranks);
+    kill9(pids[1]);
+    let tail = run_steps(&mut tr, 4);
+    assert_eq!(tr.ranks(), ranks - 1, "dead rank must be reconciled away");
+    for (a, b) in tail.iter().zip(&want_tail) {
+        assert_records_eq(a, b, &format!("post-kill step {}", b.step));
+    }
+}
+
+/// Kills one rank worker right after a chosen step completes, from
+/// inside the observer hook — deterministic mid-run fault injection.
+struct KillAt {
+    step: u64,
+    pid: u32,
+    fired: AtomicBool,
+}
+
+impl StepObserver for KillAt {
+    fn on_step(&self, obs: &StepObservation<'_>) {
+        if obs.record.step == self.step && !self.fired.swap(true, Ordering::SeqCst) {
+            kill9(self.pid);
+        }
+    }
+}
+
+/// The acceptance scenario: a full `run()` with checkpointing survives a
+/// worker killed mid-run, finishes its entire step budget on the
+/// survivors, and parks a loadable final checkpoint at the reduced rank
+/// count.
+#[cfg(unix)]
+#[test]
+fn run_survives_midrun_kill_and_parks_loadable_checkpoint() {
+    let dir = temp_dir("midrun_kill");
+    let steps = 6u64;
+    let mut cfg = elastic_cfg(steps, 3);
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 1;
+    let mut tr = Trainer::with_rank_workers(&ReferenceFactory, cfg, 3).unwrap();
+    let pids = tr.elastic_worker_pids().unwrap();
+    let obs = KillAt { step: 2, pid: pids[2], fired: AtomicBool::new(false) };
+    let out = tr.run_with_observer(Some(&obs)).unwrap();
+    assert!(obs.fired.load(Ordering::SeqCst), "kill never fired");
+    assert_eq!(out.records.len(), steps as usize, "every budgeted step must complete");
+    assert_eq!(tr.ranks(), 2, "run must end on the survivors");
+    assert!(out.final_loss.is_finite());
+
+    // The final checkpoint is good: readable, at the final step, with
+    // one loader cursor per *surviving* rank.
+    let entry = ReferenceFactory.describe("nano").unwrap();
+    let st = checkpoint::load_state(dir.join("latest.ckpt"), &entry).unwrap();
+    assert_eq!(st.step, steps);
+    assert_eq!(st.loaders.len(), 2);
+    // No partial writes left behind.
+    assert!(checkpoint::clean_stale_tmps(&dir).unwrap().is_empty());
+}
+
+/// Crash-mid-write recovery: truncated `.ckpt.tmp` files next to a good
+/// checkpoint are cleaned up on the next run, and resuming loads the
+/// previous good checkpoint with the uninterrupted trajectory.
+#[test]
+fn stale_tmps_are_cleaned_and_resume_uses_previous_good_checkpoint() {
+    let dir = temp_dir("crash_resume");
+    let mut cfg = base_cfg(6, 2);
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 2;
+
+    let mut full = Trainer::new(&ReferenceFactory, cfg.clone()).unwrap();
+    let out = full.run().unwrap();
+    assert_eq!(out.records.len(), 6);
+
+    // Simulate dying inside the *next* checkpoint's publish: a truncated
+    // image under the tmp name. The renamed-over checkpoints are intact.
+    let good = std::fs::read(dir.join("step-00000004.ckpt")).unwrap();
+    std::fs::write(dir.join("latest.ckpt.tmp"), &good[..good.len() / 2]).unwrap();
+    std::fs::write(dir.join("step-00000099.ckpt.tmp"), b"torn write").unwrap();
+
+    let mut resumed =
+        Trainer::resume(&ReferenceFactory, cfg, dir.join("step-00000004.ckpt")).unwrap();
+    assert_eq!(resumed.runner.step, 4);
+    let tail = resumed.run().unwrap();
+    assert_eq!(tail.records.len(), 2, "resume runs only the remaining budget");
+    for (a, b) in tail.records.iter().zip(&out.records[4..]) {
+        assert_records_eq(a, b, &format!("resumed step {}", b.step));
+    }
+    assert!(!dir.join("latest.ckpt.tmp").exists(), "stale tmp must be removed");
+    assert!(!dir.join("step-00000099.ckpt.tmp").exists(), "stale tmp must be removed");
+    // ... without touching published checkpoints.
+    assert!(dir.join("step-00000004.ckpt").exists());
+}
+
+/// The async writer publishes byte-identical images to the synchronous
+/// path, to every requested path, and double-buffers across submissions.
+#[test]
+fn async_checkpoints_are_byte_identical_to_sync_saves() {
+    let dir = temp_dir("async_bytes");
+    let mut cfg = base_cfg(5, 2);
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    let mut tr = Trainer::new(&ReferenceFactory, cfg).unwrap();
+    run_steps(&mut tr, 2);
+
+    let step_path = tr.checkpoint_now().unwrap();
+    tr.wait_checkpoints().unwrap();
+    let sync_path = dir.join("sync.ckpt");
+    tr.save_checkpoint(&sync_path).unwrap();
+    let sync_bytes = std::fs::read(&sync_path).unwrap();
+    assert_eq!(std::fs::read(&step_path).unwrap(), sync_bytes, "step file differs");
+    assert_eq!(std::fs::read(dir.join("latest.ckpt")).unwrap(), sync_bytes, "latest differs");
+
+    // Back-to-back submissions (buffer recycling + the bounded queue).
+    run_steps(&mut tr, 1);
+    let p1 = tr.checkpoint_now().unwrap();
+    run_steps(&mut tr, 1);
+    let p2 = tr.checkpoint_now().unwrap();
+    tr.wait_checkpoints().unwrap();
+    assert!(p1.exists() && p2.exists());
+    assert_ne!(p1, p2);
+    let entry = ReferenceFactory.describe("nano").unwrap();
+    assert_eq!(checkpoint::load_state(&p2, &entry).unwrap().step, 4);
+}
