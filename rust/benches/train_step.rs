@@ -22,7 +22,7 @@
 
 use std::time::Instant;
 
-use nanogns::config::TrainConfig;
+use nanogns::config::{RankMode, TrainConfig};
 use nanogns::coordinator::{ModelRunner, ParallelExecutor, Trainer};
 use nanogns::data::{CorpusGenerator, Loader};
 use nanogns::runtime::kernels::{
@@ -30,7 +30,9 @@ use nanogns::runtime::kernels::{
     weight_sqnorms, WorkerPool,
 };
 use nanogns::runtime::{ReferenceBackend, ReferenceFactory};
-use nanogns::util::benchkit::{Bench, BenchJson};
+use nanogns::schedule::BatchSizeSchedule;
+use nanogns::util::benchkit::{Bench, BenchJson, Stats};
+use nanogns::util::crc::crc32;
 use nanogns::util::rng::Rng;
 
 /// SIMD-dispatched kernel microbenches on fixed `[B·T, …]` shapes — the
@@ -157,6 +159,114 @@ fn assert_async_checkpoint_latency(samples: usize) {
         step / 1e6
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Integrity-overhead gate (PR 9): every elastic frame now carries a
+/// CRC-32 trailer and every checkpoint a per-group payload checksum, so
+/// this entry proves the integrity paths stay under 1% of a real
+/// process-mode elastic step. The comparator is measured, not assumed:
+/// a supervised-worker step on the `small` model at the large-batch end
+/// of the GNS schedule (accum 64), which is where elastic runs spend
+/// their wall clock. `NANOGNS_FAULT_PLAN` is never set here, so fault
+/// injection stays disarmed and `faultkit::armed()` is one cached
+/// atomic load on the hot path.
+fn bench_integrity(report: &mut BenchJson, target_ms: u64, samples: usize) {
+    let (ranks, workers, accum) = (2usize, 2usize, 64usize);
+    let mut cfg = TrainConfig::quickstart("small", 1 << 20);
+    cfg.ranks = ranks;
+    cfg.batch_size = BatchSizeSchedule::Fixed { accum };
+    cfg.rank_mode = RankMode::Process;
+    cfg.elastic.worker_exe = env!("CARGO_BIN_EXE_repro").to_string();
+    let mut tr = Trainer::with_rank_workers(&ReferenceFactory, cfg, workers).unwrap();
+    let step_tokens =
+        (ranks * tr.runner.entry.microbatch * tr.runner.entry.seq_len) as f64 * accum as f64;
+
+    // Warm up once (worker handshake, lazy grad buffers), then time
+    // real steps: compute + serialization + sockets + CRC, everything.
+    tr.step().unwrap();
+    let mut step_ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        tr.step().unwrap();
+        step_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    step_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let step_med = step_ns[step_ns.len() / 2];
+    let step_stats = Stats {
+        name: format!("elastic_step_r{ranks}w{workers}a{accum}"),
+        mean_ns: step_ns.iter().sum::<f64>() / step_ns.len() as f64,
+        std_ns: 0.0,
+        median_ns: step_med,
+        min_ns: step_ns[0],
+        iters: 1,
+        samples: step_ns.len(),
+    };
+    report.record(
+        &format!("integrity/elastic_step_r{ranks}w{workers}a{accum}"),
+        &step_stats,
+        Some(step_tokens),
+    );
+
+    // Bytes the frame CRCs touch per step, counted on the wall-clock
+    // path: the coordinator checksums each Step payload out (params x
+    // workers) and verifies each Result in (grads x ranks); a worker
+    // verifies its Step and checksums its Result (+2 x params — the
+    // workers run in parallel, so one worker's share bounds their wall
+    // contribution). Task metadata, rng states and sqnorms are noise
+    // next to the tensor payloads.
+    let params_bytes: usize = tr.runner.params.iter().map(|t| t.data.len() * 4).sum();
+    let frame_bytes = (workers + ranks + 2) * params_bytes;
+    let mut buf = vec![0u8; frame_bytes];
+    let mut rng = Rng::seed_from_u64(0x1C7);
+    for chunk in buf.chunks_mut(8) {
+        let v = rng.next_u64().to_le_bytes();
+        chunk.copy_from_slice(&v[..chunk.len()]);
+    }
+    let mut bench = Bench::new("integrity").with_samples(samples).with_target_ms(target_ms);
+    let frames = bench.run("crc32_step_frames", || {
+        std::hint::black_box(crc32(std::hint::black_box(&buf)));
+    });
+    report.record("integrity/crc32_step_frames", &frames, Some(frame_bytes as f64));
+
+    // The checkpoint side: the integrity chain's cost is one CRC pass
+    // over the encoded image (the per-group pre-pass in encode_state
+    // walks the same bytes once). Measure it over a real image.
+    let dir = std::env::temp_dir().join(format!("nanogns_bench_integrity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let img_path = dir.join("image.ckpt");
+    tr.save_checkpoint(&img_path).unwrap();
+    let image = std::fs::read(&img_path).unwrap();
+    let image_stats = bench.run("crc32_ckpt_image", || {
+        std::hint::black_box(crc32(std::hint::black_box(&image)));
+    });
+    report.record("integrity/crc32_ckpt_image", &image_stats, Some(image.len() as f64));
+    drop(tr);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let frame_pct = 100.0 * frames.median_ns / step_med;
+    let image_pct = 100.0 * image_stats.median_ns / step_med;
+    println!(
+        "integrity: elastic step (r{ranks} w{workers} accum {accum}) median {:.3} ms; \
+         frame CRC {:.3} ms ({frame_pct:.3}%), ckpt-image CRC {:.3} ms ({image_pct:.3}%)",
+        step_med / 1e6,
+        frames.median_ns / 1e6,
+        image_stats.median_ns / 1e6,
+    );
+    assert!(
+        frame_pct < 1.0,
+        "frame CRC cost ({:.3} ms over {frame_bytes} bytes) must stay under 1% of an elastic \
+         step ({:.3} ms), got {frame_pct:.3}%",
+        frames.median_ns / 1e6,
+        step_med / 1e6,
+    );
+    assert!(
+        image_pct < 1.0,
+        "checkpoint-image CRC cost ({:.3} ms over {} bytes) must stay under 1% of an elastic \
+         step ({:.3} ms), got {image_pct:.3}%",
+        image_stats.median_ns / 1e6,
+        image.len(),
+        step_med / 1e6,
+    );
 }
 
 fn main() {
@@ -290,6 +400,7 @@ fn main() {
     }
 
     assert_async_checkpoint_latency(samples);
+    bench_integrity(&mut report, target_ms, samples);
 
     if json_mode {
         report.write_or_exit("BENCH_train_step.json");

@@ -22,11 +22,15 @@ use anyhow::{bail, Result};
 pub const TRAIN_USAGE: &str = "\
 USAGE: repro train [--config F.json] [--model NAME] [--steps N] [--seed N]
                    [--metrics F.csv] [--ranks N] [--rank-mode threads|process]
-                   [--checkpoint-dir DIR] [--checkpoint-every N] [--resume CKPT]
-                   [--backend reference|pjrt] [--artifacts DIR] [--json]
+                   [--checkpoint-dir DIR] [--checkpoint-every N] [--keep-last N]
+                   [--resume CKPT] [--backend reference|pjrt] [--artifacts DIR]
+                   [--json]
   --rank-mode  how data-parallel ranks execute: scoped threads in this
                process (threads, default) or supervised child processes
                with crash reconciliation (process)
+  --keep-last N  retain only the newest N step checkpoints (N >= 1;
+               latest.ckpt is always kept). N >= 2 gives --resume a
+               fallback chain past a corrupt newest checkpoint.
   --json    emit a machine-readable run summary on stdout (human logs go
             to stderr)
 ";
@@ -58,9 +62,9 @@ USAGE: repro info [--backend reference|pjrt] [--artifacts DIR] [--json]
 pub const INSPECT_USAGE: &str = "\
 USAGE: repro inspect PATH [--kind checkpoint|bench|tracker] [--field NAME] [--json]
   Inspects an on-disk artifact without loading tensors or a backend:
-    checkpoint  v2 checkpoint header (step, tokens, seed, lr-scale, ...)
+    checkpoint  v3 checkpoint header (step, tokens, seed, lr-scale, ...)
     bench       BENCH_*.json / bench/baseline.json report (medians, ...)
-    tracker     GNS tracker state embedded in a v2 checkpoint
+    tracker     GNS tracker state embedded in a v3 checkpoint
   The kind is sniffed from the file when --kind is omitted. With --field,
   prints that one field; with --json, prints the full object as JSON;
   with neither, prints every field as `name = value` lines.
@@ -214,6 +218,7 @@ const TRAIN_VALUED: &[&str] = &[
     "rank-mode",
     "checkpoint-dir",
     "checkpoint-every",
+    "keep-last",
     "resume",
     "backend",
     "artifacts",
@@ -232,6 +237,8 @@ pub struct TrainArgs {
     pub rank_mode: Option<String>,
     pub checkpoint_dir: Option<String>,
     pub checkpoint_every: Option<u64>,
+    /// `--keep-last N` retention override; `None` keeps the config value.
+    pub keep_last: Option<usize>,
     pub resume: Option<String>,
     pub backend: String,
     pub artifacts: String,
@@ -251,6 +258,13 @@ impl TrainArgs {
     }
 
     fn from_parsed(p: &Parsed) -> Result<Self> {
+        let keep_last = p.opt_num::<usize>("keep-last")?;
+        if keep_last == Some(0) {
+            bail!(
+                "--keep-last 0 would retain no checkpoints; pass N >= 1, or omit \
+                 the flag to keep every checkpoint\n\n{TRAIN_USAGE}"
+            );
+        }
         Ok(Self {
             config: p.value("config").map(str::to_string),
             model: p.value_or("model", "small"),
@@ -261,6 +275,7 @@ impl TrainArgs {
             rank_mode: p.value("rank-mode").map(str::to_string),
             checkpoint_dir: p.value("checkpoint-dir").map(str::to_string),
             checkpoint_every: p.opt_num("checkpoint-every")?,
+            keep_last,
             resume: p.value("resume").map(str::to_string),
             backend: p.value_or("backend", "reference"),
             artifacts: p.value_or("artifacts", "artifacts"),
@@ -284,6 +299,7 @@ const SERVE_VALUED: &[&str] = &[
     "rank-mode",
     "checkpoint-dir",
     "checkpoint-every",
+    "keep-last",
     "resume",
     "backend",
     "artifacts",
@@ -631,6 +647,19 @@ mod tests {
         assert_eq!(a.ranks, 3);
         let a = ServeArgs::parse(&v(&["--rank-mode", "threads"])).unwrap();
         assert_eq!(a.train.rank_mode.as_deref(), Some("threads"));
+    }
+
+    #[test]
+    fn keep_last_validates() {
+        let a = TrainArgs::parse(&v(&["--keep-last", "3"])).unwrap();
+        assert_eq!(a.keep_last, Some(3));
+        let a = TrainArgs::parse(&v(&[])).unwrap();
+        assert_eq!(a.keep_last, None);
+        let err = TrainArgs::parse(&v(&["--keep-last", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--keep-last 0"), "{err}");
+        // serve shares the train flag set
+        let a = ServeArgs::parse(&v(&["--keep-last", "2"])).unwrap();
+        assert_eq!(a.train.keep_last, Some(2));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! `repro inspect run/latest.ckpt --field lr-scale` and `--field lr_scale`
 //! both work, and an unknown field errors with the full menu. No backend,
 //! manifest, or tensor payload is touched — a checkpoint inspect reads
-//! only the v2 JSON header.
+//! only the v3 JSON header (and verifies its header CRC).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -26,11 +26,11 @@ use super::args::InspectArgs;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kind {
-    /// v2 checkpoint header (`NGNSCKP2`).
+    /// v3 checkpoint header (`NGNSCKP3`).
     Checkpoint,
     /// `BENCH_*.json` / `bench/baseline.json` report.
     Bench,
-    /// GNS tracker state embedded in a v2 checkpoint.
+    /// GNS tracker state embedded in a v3 checkpoint.
     Tracker,
 }
 
@@ -60,7 +60,10 @@ impl FromStr for Kind {
 /// anything that parses as JSON is a bench report.
 pub fn sniff_kind(path: &str) -> Result<Kind> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-    if bytes.starts_with(b"NGNSCKP2") || bytes.starts_with(b"NANOGNS1") {
+    if bytes.starts_with(b"NGNSCKP3")
+        || bytes.starts_with(b"NGNSCKP2")
+        || bytes.starts_with(b"NANOGNS1")
+    {
         return Ok(Kind::Checkpoint);
     }
     let text = std::str::from_utf8(&bytes)
@@ -375,8 +378,11 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("nanogns-sniff-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let ckpt = dir.join("x.ckpt");
-        std::fs::write(&ckpt, b"NGNSCKP2rest").unwrap();
+        std::fs::write(&ckpt, b"NGNSCKP3rest").unwrap();
         assert_eq!(sniff_kind(ckpt.to_str().unwrap()).unwrap(), Kind::Checkpoint);
+        let old = dir.join("old.ckpt");
+        std::fs::write(&old, b"NGNSCKP2rest").unwrap();
+        assert_eq!(sniff_kind(old.to_str().unwrap()).unwrap(), Kind::Checkpoint);
         let bench = dir.join("BENCH_x.json");
         std::fs::write(&bench, "{}").unwrap();
         assert_eq!(sniff_kind(bench.to_str().unwrap()).unwrap(), Kind::Bench);

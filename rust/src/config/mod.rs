@@ -37,6 +37,11 @@ pub struct TrainConfig {
     pub checkpoint_dir: String,
     /// Checkpoint every N optimizer steps (0 = never).
     pub checkpoint_every: u64,
+    /// Keep only the newest N `step-*.ckpt` files after each publish
+    /// (0 = keep everything). `latest.ckpt` is always kept. Retaining
+    /// more than one gives `resume` a fallback chain when the newest
+    /// checkpoint fails integrity verification.
+    pub checkpoint_keep_last: usize,
     /// Resume from this full-state checkpoint file ("" = fresh run).
     pub resume: String,
     /// Intra-op kernel worker threads (0 = derive from `NANOGNS_THREADS`
@@ -98,6 +103,17 @@ pub struct ElasticConfig {
     /// executable). Integration tests point this at the `repro` binary,
     /// since their own test binary has no `rank-worker` subcommand.
     pub worker_exe: String,
+    /// Consecutive *failed* spawn attempts tolerated per dead worker
+    /// before it is permanently retired (0 = never respawn; dead ranks
+    /// stay dropped). Successful respawns reset the counter.
+    pub max_respawns: u32,
+    /// Backoff floor between respawn attempts, in milliseconds. Also
+    /// paces re-admission of a crash-looping worker whose spawns keep
+    /// succeeding. Must be positive.
+    pub respawn_backoff_ms: u64,
+    /// Backoff ceiling for the capped exponential respawn schedule, in
+    /// milliseconds. Must be >= the floor.
+    pub respawn_backoff_max_ms: u64,
 }
 
 impl Default for ElasticConfig {
@@ -107,12 +123,35 @@ impl Default for ElasticConfig {
             step_timeout_s: 300.0,
             spawn_timeout_s: 30.0,
             worker_exe: String::new(),
+            max_respawns: 3,
+            respawn_backoff_ms: 500,
+            respawn_backoff_max_ms: 30_000,
         }
     }
 }
 
 fn parse_elastic(v: &Value) -> Result<ElasticConfig> {
     let d = ElasticConfig::default();
+    let respawn_backoff_ms = match v.opt("respawn_backoff_ms") {
+        Some(b) => {
+            let b = b.as_u64()?;
+            anyhow::ensure!(b > 0, "elastic.respawn_backoff_ms must be positive");
+            b
+        }
+        None => d.respawn_backoff_ms,
+    };
+    let respawn_backoff_max_ms = match v.opt("respawn_backoff_max_ms") {
+        Some(b) => {
+            let b = b.as_u64()?;
+            anyhow::ensure!(
+                b >= respawn_backoff_ms,
+                "elastic.respawn_backoff_max_ms ({b}) must be >= respawn_backoff_ms \
+                 ({respawn_backoff_ms})"
+            );
+            b
+        }
+        None => d.respawn_backoff_max_ms.max(respawn_backoff_ms),
+    };
     Ok(ElasticConfig {
         heartbeat_ms: match v.opt("heartbeat_ms") {
             Some(h) => {
@@ -142,6 +181,19 @@ fn parse_elastic(v: &Value) -> Result<ElasticConfig> {
             Some(w) => w.as_str()?.to_string(),
             None => d.worker_exe,
         },
+        max_respawns: match v.opt("max_respawns") {
+            Some(m) => {
+                let m = m.as_u64()?;
+                anyhow::ensure!(
+                    m <= u32::MAX as u64,
+                    "elastic.max_respawns {m} out of range"
+                );
+                m as u32
+            }
+            None => d.max_respawns,
+        },
+        respawn_backoff_ms,
+        respawn_backoff_max_ms,
     })
 }
 
@@ -240,6 +292,18 @@ impl TrainConfig {
                 Some(c) => c.as_u64()?,
                 None => 0,
             },
+            checkpoint_keep_last: match v.opt("checkpoint_keep_last") {
+                Some(k) => {
+                    let k = k.as_usize()?;
+                    anyhow::ensure!(
+                        k > 0,
+                        "checkpoint_keep_last must be positive when given \
+                         (omit the key to keep every checkpoint)"
+                    );
+                    k
+                }
+                None => 0,
+            },
             resume: match v.opt("resume") {
                 Some(r) => r.as_str()?.to_string(),
                 None => String::new(),
@@ -283,6 +347,7 @@ impl TrainConfig {
             metrics_path: String::new(),
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
+            checkpoint_keep_last: 0,
             resume: String::new(),
             threads: 0,
             force_scalar: false,
@@ -457,6 +522,79 @@ mod tests {
             "elastic": {"heartbeat_ms": 0}
         }"#;
         assert!(TrainConfig::from_json_text(text).is_err());
+    }
+
+    #[test]
+    fn respawn_and_retention_keys_parse() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "checkpoint_keep_last": 3,
+            "elastic": {"max_respawns": 5, "respawn_backoff_ms": 100, "respawn_backoff_max_ms": 2000}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.checkpoint_keep_last, 3);
+        assert_eq!(cfg.elastic.max_respawns, 5);
+        assert_eq!(cfg.elastic.respawn_backoff_ms, 100);
+        assert_eq!(cfg.elastic.respawn_backoff_max_ms, 2000);
+
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.checkpoint_keep_last, 0);
+        assert_eq!(cfg.elastic.max_respawns, 3);
+        assert_eq!(cfg.elastic.respawn_backoff_ms, 500);
+    }
+
+    #[test]
+    fn respawn_and_retention_keys_rejected_when_degenerate() {
+        // An explicit keep_last of 0 is ambiguous (looks like "keep
+        // nothing") and is rejected; omit the key to keep everything.
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "checkpoint_keep_last": 0
+        }"#;
+        let err = TrainConfig::from_json_text(text).unwrap_err().to_string();
+        assert!(err.contains("checkpoint_keep_last"), "got: {err}");
+
+        // Backoff floor of zero would spin respawn attempts.
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "elastic": {"respawn_backoff_ms": 0}
+        }"#;
+        assert!(TrainConfig::from_json_text(text).is_err());
+
+        // Ceiling below the floor is a contradiction, not a clamp.
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "elastic": {"respawn_backoff_ms": 1000, "respawn_backoff_max_ms": 100}
+        }"#;
+        let err = TrainConfig::from_json_text(text).unwrap_err().to_string();
+        assert!(err.contains("respawn_backoff_max_ms"), "got: {err}");
+
+        // Zero/negative deadlines were already rejected; keep proving it.
+        for bad in ["\"step_timeout_s\": 0.0", "\"step_timeout_s\": -1.5", "\"spawn_timeout_s\": 0"]
+        {
+            let text = format!(
+                r#"{{
+                "model": "nano", "steps": 5, "seed": 0,
+                "lr": {{"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5}},
+                "batch_size": {{"kind": "fixed", "accum": 2}},
+                "elastic": {{{bad}}}
+            }}"#
+            );
+            assert!(TrainConfig::from_json_text(&text).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

@@ -1,24 +1,33 @@
 //! Binary checkpoints: params-only snapshots (v1) and full training
-//! state for interrupt/resume (v2).
+//! state for interrupt/resume (v3).
 //!
 //! **v1** (`NANOGNS1`): magic, param count, then per param (name-len,
 //! name, rank, dims..., f32 data). Kept for params-only export/import.
 //!
-//! **v2** (`NGNSCKP2`): magic, u32 header length, a JSON header manifest
-//! (via [`crate::util::json`]), then the raw f32 payload of every listed
-//! tensor (params, Adam m, Adam v — in manifest order). The header
-//! carries everything else a [`super::Trainer`] mutates: step/token
-//! counters, GNS tracker EMAs, batch-size controller hysteresis, LR
-//! scale, and per-rank loader cursors. All f64/u64 header scalars are
+//! **v3** (`NGNSCKP3`): magic, u32 header length, u32 CRC-32 of the
+//! header bytes, a JSON header manifest (via [`crate::util::json`]),
+//! then the raw f32 payload of every listed tensor (params, Adam m,
+//! Adam v — in manifest order). The header carries everything else a
+//! [`super::Trainer`] mutates: step/token counters, GNS tracker EMAs,
+//! batch-size controller hysteresis, LR scale, and per-rank loader
+//! cursors — plus an `integrity` section with a CRC-32 per payload
+//! group, verified streamingly on load. All f64/u64 header scalars are
 //! encoded as exact strings (`0x…` bit patterns for floats, decimal for
 //! integers) so a resumed run replays a **bitwise-identical** trajectory
 //! — JSON numbers would round u64 RNG words through f64 and silently
-//! fork the data stream. Little-endian throughout.
+//! fork the data stream. Little-endian throughout. The unchecksummed v2
+//! format (`NGNSCKP2`) is refused with a loud error rather than trusted.
 //!
 //! Publication is crash-safe (`.tmp` → fsync → rename → parent-dir
 //! fsync), and [`CkptWriter`] moves the disk work off the training
 //! thread: the trainer serializes into an idle buffer ([`encode_state`])
-//! and hands it to a double-buffered writer thread.
+//! and hands it to a double-buffered writer thread. A failed publish
+//! (ENOSPC, permissions) *degrades* the writer — the image is retained
+//! in memory with a loud warning, later publishes keep flowing, and the
+//! end-of-run [`CkptWriter::wait_idle`] makes a final synchronous
+//! attempt before surfacing the failure as a run error. Resume goes
+//! through [`load_state_chain`], which falls back down the retained
+//! `step-*.ckpt` chain to the newest checkpoint that validates.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
@@ -29,14 +38,20 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::gns::{EmaParts, TrackerState};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{Buffer, ModelEntry};
+use crate::util::crc::{crc32, Crc32};
+use crate::util::faultkit::{self, CkptFault};
 use crate::util::json::Value;
 use crate::util::rng::RngState;
 
 const MAGIC: &[u8; 8] = b"NANOGNS1";
+/// Retired full-state format without integrity checksums; refused.
 const MAGIC_V2: &[u8; 8] = b"NGNSCKP2";
-const VERSION_V2: u64 = 2;
-/// Sanity bound on the v2 header: a few KiB in practice.
+const MAGIC_V3: &[u8; 8] = b"NGNSCKP3";
+const VERSION_V3: u64 = 3;
+/// Sanity bound on the v3 header: a few KiB in practice.
 const MAX_HEADER_BYTES: usize = 1 << 24;
+/// Payload groups of a full-state checkpoint, in on-disk order.
+const GROUP_NAMES: [&str; 3] = ["params", "m", "v"];
 
 pub fn save(path: impl AsRef<Path>, entry: &ModelEntry, params: &[Buffer]) -> Result<()> {
     ensure!(params.len() == entry.params.len(), "param count mismatch");
@@ -218,15 +233,42 @@ fn rng_from_json(v: &Value) -> Result<RngState> {
     Ok(RngState { s, spare })
 }
 
-/// The `(group, tensors)` triplets a v2 checkpoint carries, in payload
+/// The `(group, tensors)` triplets a v3 checkpoint carries, in payload
 /// order.
 fn groups<'a>(st: &TrainStateView<'a>) -> [(&'static str, &'a [Buffer]); 3] {
-    [("params", st.params), ("m", st.m), ("v", st.v)]
+    [
+        (GROUP_NAMES[0], st.params),
+        (GROUP_NAMES[1], st.m),
+        (GROUP_NAMES[2], st.v),
+    ]
 }
 
-fn header_json(st: &TrainStateView<'_>, entry: &ModelEntry) -> Result<Value> {
+/// Fixed-width CRC-32 encoding for header fields (`0x` + 8 hex digits).
+fn crc_hex(c: u32) -> Value {
+    Value::Str(format!("0x{c:08x}"))
+}
+
+fn parse_crc_hex(v: &Value) -> Result<u32> {
+    let s = v.as_str()?;
+    let hex = s.strip_prefix("0x").ok_or_else(|| anyhow!("bad crc32 {s:?}"))?;
+    u32::from_str_radix(hex, 16).context("bad crc32")
+}
+
+/// The per-group payload CRC-32s out of a v3 header's `integrity`
+/// section, in [`GROUP_NAMES`] order.
+fn group_crcs_from_header(header: &Value) -> Result<[u32; 3]> {
+    let g = header.get("integrity")?.get("groups")?;
+    let mut out = [0u32; 3];
+    for (slot, name) in out.iter_mut().zip(GROUP_NAMES) {
+        *slot = parse_crc_hex(g.get(name)?)
+            .with_context(|| format!("integrity crc for group {name:?}"))?;
+    }
+    Ok(out)
+}
+
+fn header_json(st: &TrainStateView<'_>, entry: &ModelEntry, crcs: &[u32; 3]) -> Result<Value> {
     let mut top = std::collections::BTreeMap::new();
-    top.insert("version".into(), Value::Num(VERSION_V2 as f64));
+    top.insert("version".into(), Value::Num(VERSION_V3 as f64));
     top.insert("model".into(), Value::Str(st.model.to_string()));
     top.insert("seed".into(), u64_str(st.seed));
     top.insert("corpus_bytes".into(), u64_str(st.corpus_bytes));
@@ -270,19 +312,48 @@ fn header_json(st: &TrainStateView<'_>, entry: &ModelEntry) -> Result<Value> {
         }
     }
     top.insert("tensors".into(), Value::Arr(tensors));
+
+    let mut gm = std::collections::BTreeMap::new();
+    for (name, crc) in GROUP_NAMES.iter().zip(crcs) {
+        gm.insert((*name).into(), crc_hex(*crc));
+    }
+    let mut ig = std::collections::BTreeMap::new();
+    ig.insert("algo".into(), Value::Str("crc32".into()));
+    ig.insert("groups".into(), Value::Obj(gm));
+    top.insert("integrity".into(), Value::Obj(ig));
+
     Ok(Value::Obj(top))
 }
 
-/// Serialize a full v2 checkpoint image into `out` (cleared first). The
+/// Serialize a full v3 checkpoint image into `out` (cleared first). The
 /// bytes are exactly what [`publish_bytes`] expects — splitting the two
 /// lets the writer thread own the disk I/O while the training thread only
 /// pays for serialization into a recycled buffer.
 pub fn encode_state(entry: &ModelEntry, st: &TrainStateView<'_>, out: &mut Vec<u8>) -> Result<()> {
     out.clear();
-    let header = header_json(st, entry)?.to_string();
+    // Pre-pass: per-group payload CRCs go *into* the header, which lands
+    // on disk before the payload. Bytes are staged through a small stack
+    // block so the checksum runs at slice-by-8 speed.
+    let mut crcs = [0u32; 3];
+    for (slot, (group, bufs)) in crcs.iter_mut().zip(groups(st)) {
+        let mut c = Crc32::new();
+        let mut block = [0u8; 256];
+        for (spec, buf) in entry.params.iter().zip(bufs) {
+            let t = buf.as_host().with_context(|| format!("{group}/{}", spec.name))?;
+            for chunk in t.data.chunks(block.len() / 4) {
+                for (dst, v) in block.chunks_exact_mut(4).zip(chunk) {
+                    dst.copy_from_slice(&v.to_le_bytes());
+                }
+                c.update(&block[..chunk.len() * 4]);
+            }
+        }
+        *slot = c.finish();
+    }
+    let header = header_json(st, entry, &crcs)?.to_string();
     ensure!(header.len() <= MAX_HEADER_BYTES, "checkpoint header too large");
-    out.extend_from_slice(MAGIC_V2);
+    out.extend_from_slice(MAGIC_V3);
     out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(header.as_bytes()).to_le_bytes());
     out.extend_from_slice(header.as_bytes());
     for (group, bufs) in groups(st) {
         for (spec, buf) in entry.params.iter().zip(bufs) {
@@ -302,6 +373,26 @@ pub fn encode_state(entry: &ModelEntry, st: &TrainStateView<'_>, out: &mut Vec<u
 /// machine can come back with the old name pointing at nothing.
 pub fn publish_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
     let path = path.as_ref();
+    let mut bytes = bytes;
+    // Fault injection (disarmed: one cached atomic load). ENOSPC fails
+    // the publish like a full disk; a torn write publishes a truncated
+    // image — the load-time integrity chain must catch it.
+    if faultkit::armed() {
+        match faultkit::on_ckpt_write() {
+            Some(CkptFault::Enospc) => {
+                bail!("injected ENOSPC publishing {path:?} (faultkit: no space left on device)")
+            }
+            Some(CkptFault::Torn) => {
+                let half = bytes.len() / 2;
+                eprintln!(
+                    "faultkit: torn checkpoint write at {path:?} ({half} of {} bytes)",
+                    bytes.len()
+                );
+                bytes = &bytes[..half];
+            }
+            None => {}
+        }
+    }
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -357,7 +448,50 @@ pub fn clean_stale_tmps(dir: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
     Ok(removed)
 }
 
-/// Write a full-state (v2) checkpoint synchronously:
+/// Every `step-XXXXXXXX.ckpt` in `dir` as `(step, path)`, ascending by
+/// step. A missing directory is an empty chain, not an error.
+pub fn list_step_checkpoints(dir: impl AsRef<Path>) -> Result<Vec<(u64, PathBuf)>> {
+    let dir = dir.as_ref();
+    let mut steps = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(steps),
+        Err(e) => return Err(e).with_context(|| format!("scanning {dir:?}")),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let step = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.strip_prefix("step-"))
+            .and_then(|n| n.strip_suffix(".ckpt"))
+            .and_then(|n| n.parse::<u64>().ok());
+        if let Some(step) = step {
+            steps.push((step, path));
+        }
+    }
+    steps.sort();
+    Ok(steps)
+}
+
+/// `keep_last` retention: delete the oldest `step-*.ckpt` files in `dir`
+/// beyond the newest `keep`. `latest.ckpt` is never touched. Returns the
+/// removed paths, oldest first.
+pub fn prune_step_checkpoints(dir: impl AsRef<Path>, keep: usize) -> Result<Vec<PathBuf>> {
+    let mut steps = list_step_checkpoints(dir)?;
+    let mut removed = Vec::new();
+    if steps.len() > keep {
+        let excess = steps.len() - keep;
+        for (_, path) in steps.drain(..excess) {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("pruning old checkpoint {path:?}"))?;
+            removed.push(path);
+        }
+    }
+    Ok(removed)
+}
+
+/// Write a full-state (v3) checkpoint synchronously:
 /// [`encode_state`] + [`publish_bytes`] on the calling thread.
 pub fn save_state(
     path: impl AsRef<Path>,
@@ -379,11 +513,20 @@ pub fn save_state(
 /// ([`CkptWriter::take_buffer`]) and hands it off ([`CkptWriter::submit`]);
 /// a dedicated thread runs the crash-safe [`publish_bytes`] for every
 /// target path (one encode can publish both `step%08d.ckpt` and
-/// `latest.ckpt`), then recycles the buffer. With the channel bound of
-/// one, `submit` only blocks when two writes are already outstanding, so
-/// steady-state training never waits on disk. Write errors are sticky:
-/// the first failure is surfaced by every later [`CkptWriter::submit`] or
-/// [`CkptWriter::wait_idle`] call.
+/// `latest.ckpt`), applies `keep_last` retention, then recycles the
+/// buffer. With the channel bound of one, `submit` only blocks when two
+/// writes are already outstanding, so steady-state training never waits
+/// on disk.
+///
+/// A failed publish (ENOSPC, permissions, a dead mount) does **not**
+/// fail the run on the spot: the writer goes *degraded* — the image is
+/// retained in memory, a loud warning goes to stderr, and training
+/// continues. A later successful publish supersedes the retained image
+/// (it carries strictly newer state) and clears the degradation.
+/// [`CkptWriter::wait_idle`] — called at end of run — makes one final
+/// synchronous attempt to land a still-retained image and returns an
+/// error if the writer is still degraded, so a run that never recovered
+/// exits nonzero instead of silently lacking a durable checkpoint.
 pub struct CkptWriter {
     tx: Option<std::sync::mpsc::SyncSender<CkptJob>>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -393,6 +536,8 @@ pub struct CkptWriter {
 struct CkptJob {
     bytes: Vec<u8>,
     paths: Vec<PathBuf>,
+    /// `(dir, keep_last)`: prune old `step-*.ckpt` files after publishing.
+    retain: Option<(PathBuf, usize)>,
 }
 
 struct CkptShared {
@@ -404,7 +549,25 @@ struct CkptShared {
 struct CkptState {
     pending: usize,
     pool: Vec<Vec<u8>>,
-    error: Option<String>,
+    /// First unrecovered publish failure; cleared by a later success.
+    degraded: Option<String>,
+    /// The newest image that failed to publish, held for a final retry.
+    held: Option<CkptJob>,
+}
+
+/// Publish one job's image to every target path, then apply retention.
+/// A retention failure is a warning, not a degradation — the checkpoints
+/// themselves landed.
+fn publish_job(job: &CkptJob) -> std::result::Result<(), String> {
+    for path in &job.paths {
+        publish_bytes(path, &job.bytes).map_err(|e| format!("publishing {path:?} failed: {e:#}"))?;
+    }
+    if let Some((dir, keep)) = &job.retain {
+        if let Err(e) = prune_step_checkpoints(dir, *keep) {
+            eprintln!("checkpoint: WARNING: pruning old checkpoints in {dir:?} failed: {e:#}");
+        }
+    }
+    Ok(())
 }
 
 impl CkptWriter {
@@ -417,22 +580,31 @@ impl CkptWriter {
             .name("ckpt-writer".into())
             .spawn(move || {
                 for job in rx {
-                    let mut failure = None;
-                    for path in &job.paths {
-                        if let Err(e) = publish_bytes(path, &job.bytes) {
-                            failure = Some(format!("{path:?}: {e}"));
-                            break;
-                        }
-                    }
+                    let outcome = publish_job(&job);
                     let mut st = worker.state.lock().expect("ckpt writer state");
                     st.pending -= 1;
-                    if st.error.is_none() {
-                        st.error = failure;
-                    }
-                    if st.pool.len() < 2 {
-                        let mut bytes = job.bytes;
-                        bytes.clear();
-                        st.pool.push(bytes);
+                    match outcome {
+                        Ok(()) => {
+                            if st.degraded.take().is_some() {
+                                eprintln!(
+                                    "checkpoint: publish recovered; resuming durable checkpoints"
+                                );
+                            }
+                            st.held = None; // superseded by this newer image
+                            if st.pool.len() < 2 {
+                                let mut bytes = job.bytes;
+                                bytes.clear();
+                                st.pool.push(bytes);
+                            }
+                        }
+                        Err(msg) => {
+                            eprintln!(
+                                "checkpoint: WARNING: {msg}; keeping the image in memory and \
+                                 continuing (final retry at end of run)"
+                            );
+                            st.degraded = Some(msg);
+                            st.held = Some(job);
+                        }
                     }
                     worker.idle.notify_all();
                 }
@@ -449,16 +621,22 @@ impl CkptWriter {
     }
 
     /// Queue an encoded image for crash-safe publication at every path in
-    /// `paths`. Returns immediately unless two writes are already
-    /// outstanding; surfaces any earlier write failure.
-    pub fn submit(&self, bytes: Vec<u8>, paths: Vec<PathBuf>) -> Result<()> {
+    /// `paths`, with optional `(dir, keep_last)` retention afterwards.
+    /// Returns immediately unless two writes are already outstanding. A
+    /// degraded writer still accepts images — each submit is a fresh
+    /// recovery attempt.
+    pub fn submit(
+        &self,
+        bytes: Vec<u8>,
+        paths: Vec<PathBuf>,
+        retain: Option<(PathBuf, usize)>,
+    ) -> Result<()> {
         {
             let mut st = self.shared.state.lock().expect("ckpt writer state");
-            Self::check_error(&st)?;
             st.pending += 1;
         }
         let tx = self.tx.as_ref().expect("ckpt writer running");
-        if tx.send(CkptJob { bytes, paths }).is_err() {
+        if tx.send(CkptJob { bytes, paths, retain }).is_err() {
             let mut st = self.shared.state.lock().expect("ckpt writer state");
             st.pending -= 1;
             bail!("checkpoint writer thread is gone");
@@ -466,20 +644,44 @@ impl CkptWriter {
         Ok(())
     }
 
-    /// Block until every queued write has been published; surfaces the
-    /// first write error if one occurred.
-    pub fn wait_idle(&self) -> Result<()> {
-        let mut st = self.shared.state.lock().expect("ckpt writer state");
-        while st.pending > 0 {
-            st = self.shared.idle.wait(st).expect("ckpt writer state");
-        }
-        Self::check_error(&st)
+    /// The current degradation message, if the last publish failed and no
+    /// later one has succeeded (the serve daemon reports this on
+    /// `/health`).
+    pub fn degraded(&self) -> Option<String> {
+        self.shared.state.lock().expect("ckpt writer state").degraded.clone()
     }
 
-    fn check_error(st: &CkptState) -> Result<()> {
-        match &st.error {
-            Some(e) => bail!("async checkpoint write failed: {e}"),
-            None => Ok(()),
+    /// Block until every queued write has been processed. If the writer
+    /// is degraded, make one final synchronous attempt to land the
+    /// retained image; surface an error only if that also fails — the
+    /// hook that turns an unrecovered checkpoint failure into a nonzero
+    /// exit at end of run.
+    pub fn wait_idle(&self) -> Result<()> {
+        let (msg, held) = {
+            let mut st = self.shared.state.lock().expect("ckpt writer state");
+            while st.pending > 0 {
+                st = self.shared.idle.wait(st).expect("ckpt writer state");
+            }
+            match &st.degraded {
+                None => return Ok(()),
+                Some(msg) => (msg.clone(), st.held.take()),
+            }
+        };
+        let Some(job) = held else {
+            bail!("checkpoint writes degraded: {msg}");
+        };
+        let outcome = publish_job(&job);
+        let mut st = self.shared.state.lock().expect("ckpt writer state");
+        match outcome {
+            Ok(()) => {
+                eprintln!("checkpoint: degraded write recovered on final retry");
+                st.degraded = None;
+                Ok(())
+            }
+            Err(e) => {
+                st.held = Some(job);
+                bail!("checkpoint writes degraded ({msg}); final retry also failed: {e}")
+            }
         }
     }
 }
@@ -499,29 +701,42 @@ impl Drop for CkptWriter {
     }
 }
 
-/// Read the magic + JSON header of a v2 checkpoint from a stream,
-/// leaving the reader positioned at the start of the tensor payload.
+/// Read the magic + JSON header of a v3 checkpoint from a stream,
+/// verifying the header's own CRC-32, leaving the reader positioned at
+/// the start of the tensor payload.
 fn read_header_from(r: &mut impl Read) -> Result<Value> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("reading checkpoint magic")?;
     if &magic == MAGIC {
         bail!("params-only (v1) checkpoint has no header manifest");
     }
-    ensure!(&magic == MAGIC_V2, "bad checkpoint magic {magic:?}");
+    if &magic == MAGIC_V2 {
+        bail!(
+            "v2 checkpoint predates the integrity chain and is no longer trusted; \
+             re-run training to produce a v3 checkpoint"
+        );
+    }
+    ensure!(&magic == MAGIC_V3, "bad checkpoint magic {magic:?}");
     let mut buf4 = [0u8; 4];
     r.read_exact(&mut buf4).context("reading header length")?;
     let hlen = u32::from_le_bytes(buf4) as usize;
     ensure!(hlen > 0 && hlen <= MAX_HEADER_BYTES, "implausible header length {hlen}");
+    r.read_exact(&mut buf4).context("reading header checksum")?;
+    let hcrc = u32::from_le_bytes(buf4);
     let mut hbytes = vec![0u8; hlen];
     r.read_exact(&mut hbytes).context("reading header (truncated checkpoint?)")?;
+    ensure!(
+        crc32(&hbytes) == hcrc,
+        "checkpoint header crc mismatch (corrupt file?)"
+    );
     let header = Value::parse(std::str::from_utf8(&hbytes).context("header not UTF-8")?)
         .context("parsing checkpoint header JSON")?;
     let version = header.get("version")?.as_u64()?;
-    ensure!(version == VERSION_V2, "unsupported checkpoint version {version}");
+    ensure!(version == VERSION_V3, "unsupported checkpoint version {version}");
     Ok(header)
 }
 
-/// Read only the JSON header manifest of a v2 checkpoint — no tensor
+/// Read only the JSON header manifest of a v3 checkpoint — no tensor
 /// payload is touched or validated, so no model manifest is needed.
 /// This is the `repro inspect checkpoint` entry point.
 pub fn read_header(path: impl AsRef<Path>) -> Result<Value> {
@@ -531,7 +746,7 @@ pub fn read_header(path: impl AsRef<Path>) -> Result<Value> {
     read_header_from(&mut r)
 }
 
-/// Parse the GNS tracker state out of a v2 header ([`read_header`]).
+/// Parse the GNS tracker state out of a v3 header ([`read_header`]).
 pub fn tracker_from_header(header: &Value) -> Result<TrackerState> {
     let tracker_v = header.get("tracker")?;
     let tracker = TrackerState {
@@ -553,13 +768,15 @@ pub fn tracker_from_header(header: &Value) -> Result<TrackerState> {
     Ok(tracker)
 }
 
-/// Read a full-state (v2) checkpoint, validating the manifest against
-/// `entry` (tensor names, shapes, payload length).
+/// Read a full-state (v3) checkpoint, validating the manifest against
+/// `entry` (tensor names, shapes, payload length) and the per-group
+/// payload CRC-32s against the header's integrity section.
 pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainState> {
     let mut r = BufReader::new(
         std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
     );
     let header = read_header_from(&mut r)?;
+    let group_crcs = group_crcs_from_header(&header)?;
     let tracker = tracker_from_header(&header)?;
 
     let loaders = header
@@ -579,10 +796,11 @@ pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainSta
         3 * entry.params.len()
     );
     let mut grouped: [Vec<Buffer>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    let mut crc = Crc32::new();
     for (i, item) in listing.iter().enumerate() {
         let gi = i / entry.params.len();
         let spec = &entry.params[i % entry.params.len()];
-        let group = ["params", "m", "v"][gi];
+        let group = GROUP_NAMES[gi];
         ensure!(
             item.get("group")?.as_str()? == group && item.get("name")?.as_str()? == spec.name,
             "tensor {i}: expected {group}/{}, found {}/{}",
@@ -602,10 +820,19 @@ pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainSta
         let mut raw = vec![0u8; numel * 4];
         r.read_exact(&mut raw)
             .with_context(|| format!("{group}/{}: truncated tensor payload", spec.name))?;
+        crc.update(&raw);
         for (d, c) in data.iter_mut().zip(raw.chunks_exact(4)) {
             *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
         }
         grouped[gi].push(Buffer::from_tensor(Tensor::new(shape, data)?));
+        // Group boundary: the streamed payload CRC must match the header.
+        if (i + 1) % entry.params.len() == 0 {
+            let got = std::mem::replace(&mut crc, Crc32::new()).finish();
+            ensure!(
+                got == group_crcs[gi],
+                "{group}: payload crc mismatch (corrupt checkpoint?)"
+            );
+        }
     }
     let mut extra = [0u8; 1];
     ensure!(
@@ -628,6 +855,43 @@ pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainSta
         m,
         v,
     })
+}
+
+/// [`load_state`] with fallback down the retained checkpoint chain: if
+/// `path` fails to load or validate, try every sibling `step-*.ckpt`
+/// newest-first until one passes the full integrity check. Returns the
+/// loaded state, the path actually used, and `(path, reason)` for every
+/// candidate rejected on the way — callers log those loudly. Errors only
+/// when no candidate in the directory validates.
+pub fn load_state_chain(
+    path: impl AsRef<Path>,
+    entry: &ModelEntry,
+) -> Result<(TrainState, PathBuf, Vec<(PathBuf, String)>)> {
+    let path = path.as_ref();
+    let mut rejected = Vec::new();
+    match load_state(path, entry) {
+        Ok(st) => return Ok((st, path.to_path_buf(), rejected)),
+        Err(e) => rejected.push((path.to_path_buf(), format!("{e:#}"))),
+    }
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let candidates = list_step_checkpoints(&dir).unwrap_or_default();
+    for (_, cand) in candidates.into_iter().rev() {
+        if cand == path {
+            continue; // already tried as the primary
+        }
+        match load_state(&cand, entry) {
+            Ok(st) => return Ok((st, cand, rejected)),
+            Err(e) => rejected.push((cand, format!("{e:#}"))),
+        }
+    }
+    let mut msg = format!("no valid checkpoint: {} candidate(s) all failed", rejected.len());
+    for (p, why) in &rejected {
+        msg.push_str(&format!("\n  {p:?}: {why}"));
+    }
+    bail!(msg)
 }
 
 #[cfg(test)]
@@ -706,7 +970,7 @@ mod tests {
         buf.extend_from_slice(b"checkpoint-image-bytes");
         let step = dir.join("step00000001.ckpt");
         let latest = dir.join("latest.ckpt");
-        w.submit(buf, vec![step.clone(), latest.clone()]).unwrap();
+        w.submit(buf, vec![step.clone(), latest.clone()], None).unwrap();
         w.wait_idle().unwrap();
         assert_eq!(std::fs::read(&step).unwrap(), b"checkpoint-image-bytes");
         assert_eq!(std::fs::read(&latest).unwrap(), b"checkpoint-image-bytes");
@@ -720,16 +984,85 @@ mod tests {
     }
 
     #[test]
-    fn ckpt_writer_errors_are_sticky() {
-        let dir = scratch_dir("writer-err");
+    fn ckpt_writer_degrades_loudly_and_recovers_on_later_success() {
+        let dir = scratch_dir("writer-degrade");
         // A file where the target's parent dir should be makes create_dir_all fail.
         let blocker = dir.join("blocker");
         std::fs::write(&blocker, b"file, not dir").unwrap();
         let w = CkptWriter::new();
-        w.submit(b"bytes".to_vec(), vec![blocker.join("sub").join("x.ckpt")]).unwrap();
-        assert!(w.wait_idle().is_err());
-        // The failure sticks: later submits refuse too.
-        assert!(w.submit(b"more".to_vec(), vec![dir.join("ok.ckpt")]).is_err());
+        w.submit(b"image-1".to_vec(), vec![blocker.join("sub").join("x.ckpt")], None).unwrap();
+        // The writer degrades but keeps accepting work...
+        let err = w.wait_idle().unwrap_err();
+        assert!(format!("{err:#}").contains("degraded"), "{err:#}");
+        assert!(w.degraded().is_some());
+        // ...and a later successful publish clears the degradation: the
+        // run ends clean, with the *newer* image durable.
+        let good = dir.join("ok.ckpt");
+        w.submit(b"image-2".to_vec(), vec![good.clone()], None).unwrap();
+        w.wait_idle().unwrap();
+        assert!(w.degraded().is_none());
+        assert_eq!(std::fs::read(&good).unwrap(), b"image-2");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn degraded_writer_lands_retained_image_on_final_retry() {
+        let dir = scratch_dir("writer-retry");
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"file, not dir").unwrap();
+        let target = blocker.join("x.ckpt"); // parent is a file → publish fails
+        let w = CkptWriter::new();
+        w.submit(b"retained-image".to_vec(), vec![target.clone()], None).unwrap();
+        // Wait for the writer thread to process (and degrade on) the job
+        // without triggering wait_idle's final retry yet.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while w.degraded().is_none() {
+            assert!(std::time::Instant::now() < deadline, "writer never degraded");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // The obstruction clears (disk freed, mount back): the end-of-run
+        // final retry lands the retained image and the run exits clean.
+        std::fs::remove_file(&blocker).unwrap();
+        w.wait_idle().unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"retained-image");
+        assert!(w.degraded().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retention_prunes_oldest_step_checkpoints_only() {
+        let dir = scratch_dir("retain");
+        let w = CkptWriter::new();
+        for step in 1..=5u64 {
+            let p = dir.join(format!("step-{step:08}.ckpt"));
+            w.submit(
+                vec![step as u8],
+                vec![p, dir.join("latest.ckpt")],
+                Some((dir.clone(), 2)),
+            )
+            .unwrap();
+            // Serialize each publish so pruning order is deterministic.
+            w.wait_idle().unwrap();
+        }
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(names, ["latest.ckpt", "step-00000004.ckpt", "step-00000005.ckpt"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn list_step_checkpoints_sorts_and_ignores_other_files() {
+        let dir = scratch_dir("list");
+        std::fs::write(dir.join("step-00000020.ckpt"), b"b").unwrap();
+        std::fs::write(dir.join("step-00000003.ckpt"), b"a").unwrap();
+        std::fs::write(dir.join("latest.ckpt"), b"l").unwrap();
+        std::fs::write(dir.join("step-xx.ckpt"), b"junk").unwrap();
+        let steps = list_step_checkpoints(&dir).unwrap();
+        assert_eq!(steps.iter().map(|(s, _)| *s).collect::<Vec<_>>(), [3, 20]);
+        assert!(list_step_checkpoints(dir.join("missing")).unwrap().is_empty());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

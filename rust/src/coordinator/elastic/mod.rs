@@ -10,14 +10,19 @@
 //! * [`worker`] — the child-process entry point behind the hidden
 //!   `repro rank-worker` subcommand.
 //!
-//! The module's contract, proven by `tests/integration_elastic.rs`:
-//! process mode is bitwise identical to thread mode at the same rank
-//! count, and losing a worker mid-run degrades to the surviving ranks
-//! whose trajectories continue bitwise identical to a thread-mode run
-//! at the reduced rank count.
+//! The module's contract, proven by `tests/integration_elastic.rs` and
+//! `tests/integration_faults.rs`: process mode is bitwise identical to
+//! thread mode at the same rank count; losing a worker mid-run degrades
+//! to the surviving ranks whose trajectories continue bitwise identical
+//! to a thread-mode run at the reduced rank count; and a respawned
+//! worker rejoins at a step boundary, after which the trajectory is
+//! bitwise identical to a full-rank run again. Every frame carries a
+//! CRC-32 trailer, so a torn or corrupted frame surfaces as a typed
+//! protocol error (handled as a rank fault), never as silently accepted
+//! bytes.
 
 pub mod protocol;
 pub mod supervisor;
 pub mod worker;
 
-pub use supervisor::{ElasticExecutor, RankHealth, RankOutcome};
+pub use supervisor::{ElasticExecutor, RankHealth, RankOutcome, RejoinReport};

@@ -1,12 +1,20 @@
 //! Length-prefixed binary protocol between the elastic coordinator and
 //! its rank-worker child processes.
 //!
-//! Every message is one frame: `[u32 LE payload length][payload]`, where
-//! the payload's first byte is a tag selecting the message kind. All
-//! integers are little-endian; floats travel as raw IEEE-754 bits, so a
-//! value decoded on the far side is bit-identical to the one encoded —
-//! the property that lets the coordinator's tree reduction over
-//! process-boundary partials match the in-process thread engine bitwise.
+//! Every message is one frame: `[u32 LE payload length][payload][u32 LE
+//! CRC-32 of payload]`, where the payload's first byte is a tag
+//! selecting the message kind. All integers are little-endian; floats
+//! travel as raw IEEE-754 bits, so a value decoded on the far side is
+//! bit-identical to the one encoded — the property that lets the
+//! coordinator's tree reduction over process-boundary partials match the
+//! in-process thread engine bitwise.
+//!
+//! Every decode failure is a typed [`ProtoError`], never a panic: the
+//! CRC trailer catches corruption in flight, the length prefix is
+//! bounded before allocation, and structural decode errors are surfaced
+//! as malformed frames. The supervisor treats any of them as a *rank
+//! fault* — the worker is reconciled away and respawned — so one bad
+//! byte on a socket can cost at most one worker, never the run.
 //!
 //! The handshake is worker-initiated so accept order never matters:
 //! the worker connects and sends [`Frame::Ready`]; the coordinator
@@ -18,12 +26,15 @@
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::util::crc::crc32;
+use crate::util::faultkit::{self, FrameFault};
 use crate::util::rng::RngState;
 
 /// Bumped on any wire-format change; both sides refuse a mismatch.
-pub const PROTO_VERSION: u32 = 1;
+/// Version 2 added the CRC-32 frame trailer.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on a single frame. Generous (a full parameter set for the
 /// largest preset is far below this), but finite so a corrupt length
@@ -37,6 +48,53 @@ const TAG_RESULT: u8 = 4;
 const TAG_HEARTBEAT: u8 = 5;
 const TAG_ERROR: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
+
+/// Typed decode/transport failure for one frame. Every way a frame can
+/// fail to parse maps onto exactly one of these — the contract the
+/// mutation property test enforces: corrupt or truncated bytes yield a
+/// `ProtoError`, never a panic and never a silently-accepted frame.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Transport-level read failure (includes EOF mid-frame).
+    Io(std::io::Error),
+    /// Length prefix exceeds [`MAX_FRAME`] — rejected before allocating.
+    Oversize(usize),
+    /// The payload's CRC-32 does not match the wire trailer.
+    CrcMismatch { wire: u32, computed: u32 },
+    /// The payload's first byte names no known message kind.
+    UnknownTag(u8),
+    /// Structurally invalid payload (bad lengths, flags, or encoding).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "frame transport error: {e}"),
+            ProtoError::Oversize(n) => write!(f, "frame length {n} exceeds bound"),
+            ProtoError::CrcMismatch { wire, computed } => {
+                write!(f, "frame crc mismatch (wire 0x{wire:08x}, computed 0x{computed:08x})")
+            }
+            ProtoError::UnknownTag(t) => write!(f, "unknown frame tag {t}"),
+            ProtoError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProtoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
 
 /// Coordinator → worker: handshake reply with the training context.
 #[derive(Debug, Clone, PartialEq)]
@@ -169,7 +227,8 @@ fn put_rng(buf: &mut Vec<u8>, st: &RngState) {
     }
 }
 
-/// Bounds-checked decoding cursor over one frame payload.
+/// Bounds-checked decoding cursor over one frame payload. Every error is
+/// a typed [`ProtoError`]; nothing here can panic on adversarial bytes.
 struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -180,54 +239,59 @@ impl<'a> Dec<'a> {
         Self { buf, pos: 0 }
     }
 
-    fn need(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.pos + n <= self.buf.len(), "truncated frame payload");
+    fn need(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.pos.saturating_add(n) > self.buf.len() {
+            return Err(ProtoError::Malformed("truncated frame payload"));
+        }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    fn u8(&mut self) -> Result<u8, ProtoError> {
         Ok(self.need(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    fn u32(&mut self) -> Result<u32, ProtoError> {
         Ok(u32::from_le_bytes(self.need(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    fn u64(&mut self) -> Result<u64, ProtoError> {
         Ok(u64::from_le_bytes(self.need(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    fn f64(&mut self) -> Result<f64, ProtoError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
-    fn len(&mut self) -> Result<usize> {
+    fn len(&mut self) -> Result<usize, ProtoError> {
         let n = self.u64()? as usize;
-        ensure!(n <= MAX_FRAME, "length field {n} exceeds frame bound");
+        if n > MAX_FRAME {
+            return Err(ProtoError::Oversize(n));
+        }
         Ok(n)
     }
 
-    fn str(&mut self) -> Result<String> {
+    fn str(&mut self) -> Result<String, ProtoError> {
         let n = self.len()?;
         let bytes = self.need(n)?;
-        String::from_utf8(bytes.to_vec()).context("non-utf8 string field")
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ProtoError::Malformed("non-utf8 string field"))
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>> {
+    fn f32s(&mut self) -> Result<Vec<f32>, ProtoError> {
         let n = self.len()?;
         let bytes = self.need(n * 4)?;
         Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn f64s(&mut self) -> Result<Vec<f64>> {
+    fn f64s(&mut self) -> Result<Vec<f64>, ProtoError> {
         let n = self.len()?;
         let bytes = self.need(n * 8)?;
         Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn rng(&mut self) -> Result<RngState> {
+    fn rng(&mut self) -> Result<RngState, ProtoError> {
         let mut s = [0u64; 4];
         for v in &mut s {
             *v = self.u64()?;
@@ -235,13 +299,15 @@ impl<'a> Dec<'a> {
         let spare = match self.u8()? {
             0 => None,
             1 => Some(self.f64()?),
-            other => bail!("bad RngState spare flag {other}"),
+            _ => return Err(ProtoError::Malformed("bad RngState spare flag")),
         };
         Ok(RngState { s, spare })
     }
 
-    fn finish(&self) -> Result<()> {
-        ensure!(self.pos == self.buf.len(), "trailing bytes in frame payload");
+    fn finish(&self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::Malformed("trailing bytes in frame payload"));
+        }
         Ok(())
     }
 }
@@ -344,9 +410,39 @@ fn encode_payload(f: &Frame) -> Vec<u8> {
 }
 
 fn write_payload(w: &mut impl Write, payload: &[u8]) -> Result<()> {
-    ensure!(payload.len() <= MAX_FRAME, "frame payload {} exceeds bound", payload.len());
+    if payload.len() > MAX_FRAME {
+        bail!("frame payload {} exceeds bound", payload.len());
+    }
+    let crc = crc32(payload);
+    // Fault injection (disarmed: one cached atomic load). A dropped frame
+    // simply never reaches the wire; a corrupted one flips a
+    // deterministically-chosen payload byte *after* the CRC was computed,
+    // so the receiver sees a checksum mismatch — a rank fault, by design.
+    let mut flip: Option<usize> = None;
+    if faultkit::armed() {
+        match faultkit::on_frame_send() {
+            Some(FrameFault::Drop) => {
+                eprintln!("faultkit: dropping outgoing frame ({} bytes)", payload.len());
+                return Ok(());
+            }
+            Some(FrameFault::Corrupt) => {
+                let at = faultkit::corrupt_index(payload.len(), crc as u64);
+                eprintln!("faultkit: corrupting outgoing frame byte {at}");
+                flip = Some(at);
+            }
+            None => {}
+        }
+    }
     w.write_all(&(payload.len() as u32).to_le_bytes()).context("writing frame length")?;
-    w.write_all(payload).context("writing frame payload")?;
+    match flip {
+        None => w.write_all(payload).context("writing frame payload")?,
+        Some(at) => {
+            w.write_all(&payload[..at]).context("writing frame payload")?;
+            w.write_all(&[payload[at] ^ 0x20]).context("writing frame payload")?;
+            w.write_all(&payload[at + 1..]).context("writing frame payload")?;
+        }
+    }
+    w.write_all(&crc.to_le_bytes()).context("writing frame crc")?;
     w.flush().context("flushing frame")?;
     Ok(())
 }
@@ -373,18 +469,32 @@ pub fn write_step(
 }
 
 /// Read one frame; blocks until a full frame (or error/EOF) arrives.
-pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+/// The CRC-32 trailer is verified before any payload decoding, so a
+/// corrupted frame is a [`ProtoError::CrcMismatch`], not a parse of
+/// garbage bytes.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, ProtoError> {
     let mut len4 = [0u8; 4];
-    r.read_exact(&mut len4).context("reading frame length")?;
+    r.read_exact(&mut len4)?;
     let len = u32::from_le_bytes(len4) as usize;
-    ensure!(len >= 1, "empty frame");
-    ensure!(len <= MAX_FRAME, "frame length {len} exceeds bound");
+    if len < 1 {
+        return Err(ProtoError::Malformed("empty frame"));
+    }
+    if len > MAX_FRAME {
+        return Err(ProtoError::Oversize(len));
+    }
     let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("reading frame payload")?;
+    r.read_exact(&mut payload)?;
+    let mut crc4 = [0u8; 4];
+    r.read_exact(&mut crc4)?;
+    let wire = u32::from_le_bytes(crc4);
+    let computed = crc32(&payload);
+    if wire != computed {
+        return Err(ProtoError::CrcMismatch { wire, computed });
+    }
     decode_payload(&payload)
 }
 
-fn decode_payload(payload: &[u8]) -> Result<Frame> {
+fn decode_payload(payload: &[u8]) -> Result<Frame, ProtoError> {
     let mut d = Dec::new(payload);
     let frame = match d.u8()? {
         TAG_HELLO => Frame::Hello(Hello {
@@ -429,7 +539,7 @@ fn decode_payload(payload: &[u8]) -> Result<Frame> {
                 let sqnorms = match d.u8()? {
                     0 => None,
                     1 => Some(d.f64s()?),
-                    other => bail!("bad sqnorms flag {other}"),
+                    _ => return Err(ProtoError::Malformed("bad sqnorms flag")),
                 };
                 let cursor = d.rng()?;
                 let n_grads = d.len()?;
@@ -454,7 +564,7 @@ fn decode_payload(payload: &[u8]) -> Result<Frame> {
         TAG_HEARTBEAT => Frame::Heartbeat { worker: d.u32()?, seq: d.u64()? },
         TAG_ERROR => Frame::Error { worker: d.u32()?, msg: d.str()? },
         TAG_SHUTDOWN => Frame::Shutdown,
-        other => bail!("unknown frame tag {other}"),
+        other => return Err(ProtoError::UnknownTag(other)),
     };
     d.finish()?;
     Ok(frame)
@@ -493,6 +603,43 @@ impl Conn {
             return Ok(Conn::Tcp(s));
         }
         bail!("unrecognized worker address {addr:?}")
+    }
+
+    /// [`Conn::connect`] with bounded retry and exponential backoff —
+    /// transient connect failures (listener backlog pressure, a
+    /// coordinator momentarily between accepts) cost a short wait, not
+    /// the worker. The backoff doubles from `base_backoff` up to 2 s.
+    pub fn connect_retry(
+        addr: &str,
+        attempts: u32,
+        base_backoff: std::time::Duration,
+    ) -> Result<Self> {
+        let attempts = attempts.max(1);
+        let mut delay = base_backoff;
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=attempts {
+            let res = if faultkit::armed() && faultkit::on_connect_attempt() {
+                Err(anyhow::anyhow!("injected connect failure (faultkit)"))
+            } else {
+                Self::connect(addr)
+            };
+            match res {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if attempt < attempts {
+                        eprintln!(
+                            "elastic: connect attempt {attempt}/{attempts} to {addr} \
+                             failed ({e}); retrying in {delay:?}"
+                        );
+                        std::thread::sleep(delay);
+                        delay = (delay * 2).min(std::time::Duration::from_secs(2));
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("at least one attempt"))
+            .with_context(|| format!("connecting to {addr} after {attempts} attempts"))
     }
 
     /// Second handle onto the same socket (independent read/write halves).
@@ -724,9 +871,114 @@ mod tests {
         padded[0] += 1; // lengthen the declared payload by one byte
         padded.push(0xff);
         assert!(read_frame(&mut &padded[..]).is_err());
-        // Unknown tag is rejected.
-        let unknown = [1u8, 0, 0, 0, 200];
-        assert!(read_frame(&mut &unknown[..]).is_err());
+        // Unknown tag (with a *valid* CRC, so the tag check is reached).
+        let mut unknown = vec![1u8, 0, 0, 0, 200];
+        unknown.extend_from_slice(&crc32(&[200]).to_le_bytes());
+        assert!(matches!(read_frame(&mut &unknown[..]), Err(ProtoError::UnknownTag(200))));
+    }
+
+    #[test]
+    fn corrupted_payload_is_a_crc_mismatch() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::Error { worker: 3, msg: "payload".into() }).unwrap();
+        let at = 4 + 3; // a byte in the middle of the payload
+        wire[at] ^= 0x01;
+        match read_frame(&mut &wire[..]) {
+            Err(ProtoError::CrcMismatch { wire: w, computed }) => assert_ne!(w, computed),
+            other => panic!("expected CrcMismatch, got {other:?}"),
+        }
+    }
+
+    /// Satellite: property test — any random truncation or single-bit
+    /// flip of a valid frame yields a typed [`ProtoError`]. Never a
+    /// panic (a panic fails the test), never a silently-accepted frame.
+    #[test]
+    fn mutated_frames_yield_typed_errors_never_accepted() {
+        use crate::util::prop::forall;
+        let frames = [
+            Frame::Ready(Ready { worker: 1, pid: 77 }),
+            Frame::Heartbeat { worker: 0, seq: 12345 },
+            Frame::Error { worker: 2, msg: "boom".into() },
+            Frame::Shutdown,
+            Frame::Hello(Hello {
+                proto: PROTO_VERSION,
+                worker: 0,
+                model: "nano".into(),
+                backend: "reference".into(),
+                artifacts: "artifacts".into(),
+                seed: 3,
+                corpus_bytes: 1 << 16,
+                heartbeat_ms: 100,
+            }),
+            Frame::Step(StepCmd {
+                step_id: 9,
+                accum: 2,
+                collect_norms: true,
+                tasks: vec![RankTask { rank: 1, cursor: sample_cursor() }],
+                params: vec![vec![0.25; 64], vec![-1.5; 3]],
+            }),
+            Frame::Result(StepResult {
+                step_id: 9,
+                worker: 1,
+                results: vec![RankResult {
+                    rank: 1,
+                    loss: 2.0,
+                    n_micro: 2,
+                    microbatch: 4,
+                    n_examples: 8,
+                    perex_sum: vec![0.5, 0.25],
+                    sqnorms: None,
+                    cursor: sample_cursor(),
+                    grads: vec![vec![1.0; 16]],
+                }],
+            }),
+        ];
+        let wires: Vec<Vec<u8>> = frames
+            .iter()
+            .map(|f| {
+                let mut w = Vec::new();
+                write_frame(&mut w, f).unwrap();
+                w
+            })
+            .collect();
+        forall(
+            0xFA017,
+            600,
+            |r| {
+                let wi = r.range(0, wires.len());
+                let wire = &wires[wi];
+                if r.bool(0.5) {
+                    let cut = r.range(0, wire.len());
+                    (wi, wire[..cut].to_vec(), "truncation".to_string())
+                } else {
+                    let byte = r.range(0, wire.len());
+                    let bit = r.range(0, 8);
+                    let mut m = wire.clone();
+                    m[byte] ^= 1 << bit;
+                    (wi, m, format!("bit flip at {byte}:{bit}"))
+                }
+            },
+            |(wi, mutated, what)| {
+                let mut cursor = &mutated[..];
+                match read_frame(&mut cursor) {
+                    Err(_) => Ok(()), // typed error — exactly what we demand
+                    Ok(f) => Err(format!("frame {wi} accepted after {what}: {f:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn connect_retry_eventually_fails_with_context() {
+        // Nothing listens on this address; bounded retry must give up
+        // with an error naming the attempt budget, not hang.
+        let err = Conn::connect_retry(
+            "tcp:127.0.0.1:1",
+            2,
+            std::time::Duration::from_millis(1),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("after 2 attempts"), "{err:#}");
     }
 
     #[test]

@@ -19,6 +19,19 @@
 //! data streams are untouched) and simply retries the step on the
 //! survivors. The post-drop trajectory is therefore bitwise identical to
 //! a thread-mode run at the reduced rank count.
+//!
+//! Reconciliation is not the end of the story: dead workers are
+//! *respawned* with capped exponential backoff
+//! ([`ElasticExecutor::try_rejoin`], polled by the trainer at step
+//! boundaries). A respawned worker completes the same handshake as at
+//! launch and re-admits its original rank block; the trainer re-inserts
+//! the parked loaders at their label-ordered positions, so from the
+//! rejoin boundary onward the trajectory is bitwise identical to a
+//! full-rank run. Every incarnation of a worker gets a fresh generation
+//! tag, and reader-thread events carry it, so frames from a dead
+//! incarnation can never be attributed to its successor. After
+//! `max_respawns` consecutive failed spawn attempts the worker is
+//! permanently retired and the run continues on the survivors.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
@@ -50,8 +63,21 @@ pub struct RankHealth {
     pub last_step: u64,
     /// Milliseconds since the worker's last heartbeat (process mode only).
     pub heartbeat_age_ms: Option<f64>,
+    /// Successful respawns of this rank's worker over the run.
+    pub respawns: u64,
     /// `"thread"` or `"process"`.
     pub mode: &'static str,
+}
+
+/// What [`ElasticExecutor::try_rejoin`] accomplished at one step
+/// boundary, in original rank labels.
+#[derive(Debug, Default)]
+pub struct RejoinReport {
+    /// Ranks whose respawned worker completed its handshake; the trainer
+    /// re-admits their parked loaders before this step runs.
+    pub rejoined: Vec<usize>,
+    /// Ranks permanently abandoned (respawn budget exhausted).
+    pub gave_up: Vec<usize>,
 }
 
 /// Result of one elastic step attempt.
@@ -75,14 +101,32 @@ struct WorkerHandle {
     reader: Option<JoinHandle<()>>,
     alive: bool,
     pid: u32,
-    /// Original rank labels (for telemetry; never remapped).
-    orig_ranks: Vec<usize>,
+    /// Incarnation counter: every respawn bumps it, and reader-thread
+    /// events carry the generation they were read under, so frames from
+    /// a dead incarnation are never attributed to its successor.
+    gen: u64,
+    /// Original rank labels this worker represents. The set survives the
+    /// worker's death (it is the block a respawned successor re-admits)
+    /// and shrinks only when positions are deliberately dropped while
+    /// the worker lives. Parallel to `positions` on live workers.
+    origs: Vec<usize>,
     /// Current loader positions owned by this worker (remapped on
-    /// reconciliation; empty once retired).
+    /// reconciliation; empty once dead or retired).
     positions: Vec<usize>,
     last_step: u64,
     last_heartbeat: Instant,
     fail_reason: Option<String>,
+    /// Consecutive failed respawn attempts since the last success.
+    respawn_attempts: u32,
+    /// Earliest moment of the next respawn attempt (capped exponential
+    /// backoff; also paces re-admission after a successful-then-crashed
+    /// respawn).
+    next_respawn_at: Option<Instant>,
+    /// Successful respawns over the run (telemetry).
+    respawns: u64,
+    /// Permanently out: deliberately retired (no positions remain) or
+    /// respawn budget exhausted. Never respawned again.
+    retired: bool,
 }
 
 /// Supervises rank-worker child processes and runs elastic steps.
@@ -92,10 +136,23 @@ pub struct ElasticExecutor {
     reduce: Box<dyn Backend>,
     entry: ModelEntry,
     workers: Vec<WorkerHandle>,
-    events: Receiver<(usize, Event)>,
+    events: Receiver<(usize, u64, Event)>,
+    /// Cloned into every respawned worker's reader thread.
+    tx: Sender<(usize, u64, Event)>,
+    /// Rendezvous kept open for the lifetime of the run so respawned
+    /// workers connect back exactly like freshly launched ones.
+    listener: Listener,
+    addr: String,
+    exe: PathBuf,
+    /// Launch config, retained to rebuild the `Hello` for respawns.
+    cfg: TrainConfig,
     step_id: u64,
     heartbeat: Duration,
+    spawn_timeout: Duration,
     step_timeout: Duration,
+    max_respawns: u32,
+    backoff_floor: Duration,
+    backoff_cap: Duration,
 }
 
 fn timeout_from_secs(v: f64, default_s: f64) -> Duration {
@@ -141,6 +198,7 @@ impl ElasticExecutor {
                 &listener,
                 &addr,
                 w,
+                0,
                 block,
                 cfg,
                 reduce.name(),
@@ -160,14 +218,26 @@ impl ElasticExecutor {
             start = end;
             w += 1;
         }
+        let backoff_floor = Duration::from_millis(cfg.elastic.respawn_backoff_ms.max(1));
+        let backoff_cap =
+            Duration::from_millis(cfg.elastic.respawn_backoff_max_ms.max(1)).max(backoff_floor);
         Ok(Self {
             reduce,
             entry,
             workers: handles,
             events: rx,
+            tx,
+            listener,
+            addr,
+            exe,
+            cfg: cfg.clone(),
             step_id: 0,
             heartbeat,
+            spawn_timeout,
             step_timeout,
+            max_respawns: cfg.elastic.max_respawns,
+            backoff_floor,
+            backoff_cap,
         })
     }
 
@@ -177,12 +247,13 @@ impl ElasticExecutor {
         listener: &Listener,
         addr: &str,
         w: usize,
+        gen: u64,
         block: Vec<usize>,
         cfg: &TrainConfig,
         backend_name: &str,
         heartbeat: Duration,
         spawn_timeout: Duration,
-        tx: &Sender<(usize, Event)>,
+        tx: &Sender<(usize, u64, Event)>,
     ) -> Result<WorkerHandle> {
         let mut child = Command::new(exe)
             .arg("rank-worker")
@@ -221,12 +292,12 @@ impl ElasticExecutor {
         let reader = std::thread::spawn(move || loop {
             match protocol::read_frame(&mut rconn) {
                 Ok(f) => {
-                    if tx2.send((w, Event::Frame(f))).is_err() {
+                    if tx2.send((w, gen, Event::Frame(f))).is_err() {
                         return;
                     }
                 }
                 Err(e) => {
-                    let _ = tx2.send((w, Event::Gone(format!("{e}"))));
+                    let _ = tx2.send((w, gen, Event::Gone(format!("{e}"))));
                     return;
                 }
             }
@@ -238,11 +309,16 @@ impl ElasticExecutor {
             reader: Some(reader),
             alive: true,
             pid,
-            orig_ranks: block.clone(),
+            gen,
+            origs: block.clone(),
             positions: block,
             last_step: 0,
             last_heartbeat: Instant::now(),
             fail_reason: None,
+            respawn_attempts: 0,
+            next_respawn_at: None,
+            respawns: 0,
+            retired: false,
         })
     }
 
@@ -272,7 +348,18 @@ impl ElasticExecutor {
                     );
                     std::thread::sleep(Duration::from_millis(10));
                 }
-                Err(e) => return Err(e).context("accepting worker connection"),
+                Err(e) => {
+                    // Transient accept failures (EINTR, fd pressure,
+                    // connection reset before accept) are retried until
+                    // the spawn deadline, not treated as fatal.
+                    ensure!(
+                        Instant::now() < deadline,
+                        "accepting rank worker {w} connection kept failing \
+                         within {spawn_timeout:?}: {e}"
+                    );
+                    eprintln!("elastic: accept for worker {w} failed ({e}); retrying");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
             }
         };
         conn.set_nonblocking(false)?;
@@ -329,6 +416,7 @@ impl ElasticExecutor {
     }
 
     fn mark_dead(&mut self, wi: usize, reason: String) {
+        let floor = self.backoff_floor;
         let w = &mut self.workers[wi];
         if !w.alive {
             return;
@@ -336,9 +424,13 @@ impl ElasticExecutor {
         w.alive = false;
         eprintln!(
             "elastic: worker {wi} (pid {}, ranks {:?}) down: {reason}",
-            w.pid, w.orig_ranks
+            w.pid, w.origs
         );
         w.fail_reason = Some(reason);
+        // Pace the next re-admission: even when every spawn succeeds, a
+        // crash-looping worker waits at least the backoff floor between
+        // incarnations.
+        w.next_respawn_at = Some(Instant::now() + floor);
         let _ = w.child.kill();
         let _ = w.child.wait();
     }
@@ -346,11 +438,18 @@ impl ElasticExecutor {
     fn handle_event(
         &mut self,
         wi: usize,
+        gen: u64,
         ev: Event,
         step_id: u64,
         pending: &mut BTreeSet<usize>,
         results: &mut BTreeMap<usize, RankResult>,
     ) {
+        // Events from a dead incarnation's reader thread (its socket can
+        // outlive mark_dead by a beat) must never touch the respawned
+        // successor's state.
+        if gen != self.workers[wi].gen {
+            return;
+        }
         match ev {
             Event::Frame(Frame::Heartbeat { .. }) => {
                 self.workers[wi].last_heartbeat = Instant::now();
@@ -386,9 +485,9 @@ impl ElasticExecutor {
     fn drain_events(&mut self) {
         let mut pending = BTreeSet::new();
         let mut results = BTreeMap::new();
-        while let Ok((wi, ev)) = self.events.try_recv() {
+        while let Ok((wi, gen, ev)) = self.events.try_recv() {
             let step_id = self.step_id;
-            self.handle_event(wi, ev, step_id, &mut pending, &mut results);
+            self.handle_event(wi, gen, ev, step_id, &mut pending, &mut results);
         }
     }
 
@@ -475,7 +574,9 @@ impl ElasticExecutor {
             }
             let wait = (deadline - now).min(self.heartbeat.max(Duration::from_millis(50)));
             match self.events.recv_timeout(wait) {
-                Ok((wi, ev)) => self.handle_event(wi, ev, step_id, &mut pending, &mut results),
+                Ok((wi, gen, ev)) => {
+                    self.handle_event(wi, gen, ev, step_id, &mut pending, &mut results)
+                }
                 Err(RecvTimeoutError::Timeout) => {
                     let now = Instant::now();
                     let stale: Vec<usize> = pending
@@ -577,10 +678,27 @@ impl ElasticExecutor {
     /// Commit a reconciliation the trainer has applied to its loaders:
     /// `lost` (sorted ascending) names the removed positions. Surviving
     /// workers keep their own blocks, remapped to the compacted index
-    /// space; a live worker left without positions is retired.
+    /// space; a live worker left without positions is retired. Dead
+    /// workers release their positions but keep their original rank
+    /// labels — that set is the block a respawned successor re-admits.
     pub fn confirm_loss(&mut self, lost: &[usize]) {
         for w in self.workers.iter_mut() {
-            w.positions.retain(|p| !lost.contains(p));
+            if w.alive {
+                // `positions` and `origs` stay parallel on live workers:
+                // a deliberately dropped position takes its label with it
+                // (it was dropped, not crashed — nothing will rejoin it).
+                let mut i = 0;
+                while i < w.positions.len() {
+                    if lost.contains(&w.positions[i]) {
+                        w.positions.remove(i);
+                        w.origs.remove(i);
+                    } else {
+                        i += 1;
+                    }
+                }
+            } else {
+                w.positions.retain(|p| !lost.contains(p));
+            }
             for p in w.positions.iter_mut() {
                 *p -= lost.iter().filter(|&&l| l < *p).count();
             }
@@ -588,9 +706,133 @@ impl ElasticExecutor {
         for wi in 0..self.workers.len() {
             if self.workers[wi].alive && self.workers[wi].positions.is_empty() {
                 let _ = protocol::write_frame(&mut self.workers[wi].conn, &Frame::Shutdown);
+                self.workers[wi].retired = true;
                 self.mark_dead(wi, "retired: no rank positions remain".to_string());
             }
         }
+    }
+
+    /// Reassign loader positions from original rank labels: the trainer
+    /// keeps its live loaders sorted by label, so a live rank's position
+    /// is simply its label's rank among all live labels. Called after a
+    /// rejoin changes the live set.
+    fn recompute_positions(&mut self) {
+        let mut all: Vec<usize> = self
+            .workers
+            .iter()
+            .filter(|w| w.alive)
+            .flat_map(|w| w.origs.iter().copied())
+            .collect();
+        all.sort_unstable();
+        for w in self.workers.iter_mut() {
+            if w.alive {
+                w.positions = w
+                    .origs
+                    .iter()
+                    .map(|&o| all.binary_search(&o).expect("live orig label"))
+                    .collect();
+            }
+        }
+    }
+
+    /// Respawn machinery, polled by the trainer at step boundaries: give
+    /// every dead, unretired worker whose backoff has elapsed one spawn
+    /// attempt, and report which original ranks completed the handshake
+    /// (the trainer re-admits their loaders before the step runs). Spawn
+    /// failures back off exponentially from the configured floor to the
+    /// cap; after `max_respawns` consecutive failures the worker is
+    /// permanently retired.
+    pub fn try_rejoin(&mut self) -> RejoinReport {
+        self.drain_events();
+        let mut report = RejoinReport::default();
+        let now = Instant::now();
+        for wi in 0..self.workers.len() {
+            {
+                let w = &self.workers[wi];
+                // Only workers whose loss the trainer has already
+                // reconciled are eligible: confirm_loss empties a dead
+                // worker's positions and parks its loaders — the thing a
+                // rejoin re-admits. A death noticed just now (positions
+                // still assigned) must first go through a Lost step.
+                if w.alive || w.retired || w.origs.is_empty() || !w.positions.is_empty() {
+                    continue;
+                }
+                if self.max_respawns == 0 || w.respawn_attempts >= self.max_respawns {
+                    let w = &mut self.workers[wi];
+                    w.retired = true;
+                    report.gave_up.extend(w.origs.iter().copied());
+                    eprintln!(
+                        "elastic: giving up on worker {wi} (rank(s) {:?}) after {} failed \
+                         respawn attempt(s); continuing on the survivors",
+                        w.origs, w.respawn_attempts
+                    );
+                    continue;
+                }
+                if w.next_respawn_at.is_some_and(|at| now < at) {
+                    continue;
+                }
+            }
+            match self.spawn_into(wi) {
+                Ok(()) => {
+                    let w = &self.workers[wi];
+                    eprintln!(
+                        "elastic: respawned worker {wi} (pid {}, rank(s) {:?}); re-admitting \
+                         at this step boundary",
+                        w.pid, w.origs
+                    );
+                    report.rejoined.extend(w.origs.iter().copied());
+                }
+                Err(e) => {
+                    let (floor, cap) = (self.backoff_floor, self.backoff_cap);
+                    let w = &mut self.workers[wi];
+                    w.respawn_attempts += 1;
+                    let shift = (w.respawn_attempts - 1).min(16);
+                    let backoff = floor.saturating_mul(1u32 << shift).min(cap);
+                    w.next_respawn_at = Some(now + backoff);
+                    eprintln!(
+                        "elastic: respawn attempt {}/{} for worker {wi} failed: {e:#}; next \
+                         attempt in {backoff:?}",
+                        w.respawn_attempts, self.max_respawns
+                    );
+                }
+            }
+        }
+        if !report.rejoined.is_empty() {
+            self.recompute_positions();
+        }
+        report.rejoined.sort_unstable();
+        report.gave_up.sort_unstable();
+        report
+    }
+
+    /// Spawn a fresh incarnation of worker `wi` and graft it into the
+    /// slot, bumping the generation and preserving the respawn counters.
+    fn spawn_into(&mut self, wi: usize) -> Result<()> {
+        let gen = self.workers[wi].gen + 1;
+        let block = self.workers[wi].origs.clone();
+        let h = Self::spawn_worker(
+            &self.exe,
+            &self.listener,
+            &self.addr,
+            wi,
+            gen,
+            block,
+            &self.cfg,
+            self.reduce.name(),
+            self.heartbeat,
+            self.spawn_timeout,
+            &self.tx,
+        )?;
+        let w = &mut self.workers[wi];
+        // The dead incarnation's reader already unblocked on EOF (its
+        // child was killed and reaped in mark_dead).
+        if let Some(j) = w.reader.take() {
+            let _ = j.join();
+        }
+        let respawns = w.respawns + 1;
+        *w = h;
+        w.respawns = respawns;
+        Ok(())
     }
 
     /// Per-rank liveness for `/ranks`, labeled by original rank index.
@@ -598,7 +840,7 @@ impl ElasticExecutor {
         let now = Instant::now();
         let mut out = Vec::new();
         for w in &self.workers {
-            for &orig in &w.orig_ranks {
+            for &orig in &w.origs {
                 out.push(RankHealth {
                     rank: orig,
                     alive: w.alive,
@@ -607,6 +849,7 @@ impl ElasticExecutor {
                     heartbeat_age_ms: Some(
                         now.duration_since(w.last_heartbeat).as_secs_f64() * 1e3,
                     ),
+                    respawns: w.respawns,
                     mode: "process",
                 });
             }

@@ -25,6 +25,7 @@ use super::protocol::{self, Conn, Frame, Hello, RankResult, Ready, StepCmd, Step
 use crate::data::{CorpusGenerator, Loader};
 use crate::gns::GnsAccumulator;
 use crate::runtime::{Backend, BackendFactory, Buffer, ModelEntry, Tensor};
+use crate::util::faultkit::{self, StepFault};
 use crate::N_TYPES;
 
 /// Build the backend factory named in the coordinator's `Hello`. Mirrors
@@ -44,7 +45,12 @@ fn factory_for(backend: &str, artifacts: &str) -> Result<Box<dyn BackendFactory>
 /// Returns when the coordinator sends `Shutdown` or the connection
 /// closes; protocol or compute errors are reported over the wire first.
 pub fn run_worker(connect: &str, worker: usize) -> Result<()> {
-    let conn = Conn::connect(connect)
+    // Scope the (test-only) fault plan to this worker index so plans like
+    // `worker:1;worker.exit@step:3` only bite the intended victim.
+    faultkit::set_scope(worker);
+    // Transient connect failures (coordinator briefly saturated, race
+    // with a respawn) get a handful of retries before we give up.
+    let conn = Conn::connect_retry(connect, 5, Duration::from_millis(50))
         .with_context(|| format!("rank worker {worker}: connecting to coordinator"))?;
     let mut reader = conn.try_clone()?;
     let writer = Arc::new(Mutex::new(conn));
@@ -76,7 +82,10 @@ pub fn run_worker(connect: &str, worker: usize) -> Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
     let hb_writer = Arc::clone(&writer);
     let hb_stop = Arc::clone(&stop);
-    let hb_period = Duration::from_millis(hello.heartbeat_ms.max(10));
+    // `hb.delay@F` stretches the heartbeat period F× — the coordinator
+    // sees a hung-but-alive worker and must fire its heartbeat deadline.
+    let hb_period =
+        Duration::from_millis(hello.heartbeat_ms.max(10).saturating_mul(faultkit::heartbeat_factor()));
     let hb = std::thread::spawn(move || {
         let mut seq = 0u64;
         loop {
@@ -136,6 +145,17 @@ fn serve_steps(
                 return Err(e).context(format!("rank worker {worker}: reading command"));
             }
         };
+        match faultkit::on_step_command() {
+            Some(StepFault::Exit) => {
+                eprintln!("faultkit: rank worker {worker} exiting on step command (worker.exit)");
+                std::process::exit(86);
+            }
+            Some(StepFault::StallMs(ms)) => {
+                eprintln!("faultkit: rank worker {worker} stalling {ms}ms (step.stall)");
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            None => {}
+        }
         let result = run_step(be.as_ref(), &entry, &base, cmd, worker)?;
         let mut w = writer.lock().expect("writer lock");
         protocol::write_frame(&mut *w, &Frame::Result(result))?;

@@ -12,16 +12,19 @@
 //!   telemetry, checkpoint/resume;
 //! * [`elastic`] — the process-isolated sibling of [`parallel`]: rank
 //!   workers as supervised child processes over a length-prefixed local
-//!   socket protocol, with heartbeat/deadline failure detection and
-//!   drop-to-survivors reconciliation — same tree reduction, bitwise
-//!   interchangeable with thread mode;
+//!   socket protocol, with heartbeat/deadline failure detection,
+//!   drop-to-survivors reconciliation, and backoff-paced respawn/rejoin
+//!   — same tree reduction, bitwise interchangeable with thread mode;
 //! * [`ddp`] — distributed-data-parallel ranks, providing the taxonomy's
 //!   *DDP* small-batch gradient-norm estimator to compare against the
 //!   per-example method (Fig. 16);
 //! * [`checkpoint`] — binary snapshots: params-only (v1) and full
-//!   training state for bitwise-exact interrupt/resume (v2), published
-//!   crash-safely (tmp → fsync → rename → dir fsync) and written off
-//!   the training thread by a double-buffered writer.
+//!   training state for bitwise-exact interrupt/resume (v3, with a
+//!   per-section CRC-32 integrity chain and `keep_last` retention),
+//!   published crash-safely (tmp → fsync → rename → dir fsync) and
+//!   written off the training thread by a double-buffered writer that
+//!   degrades to in-memory buffering on disk failure instead of
+//!   silently sticking.
 //!
 //! Python never appears here: the default backend is pure Rust, and the
 //! `pjrt` feature executes pre-compiled artifacts from disk.
@@ -33,7 +36,7 @@ pub mod parallel;
 pub mod runner;
 pub mod trainer;
 
-pub use elastic::{ElasticExecutor, RankHealth, RankOutcome};
+pub use elastic::{ElasticExecutor, RankHealth, RankOutcome, RejoinReport};
 pub use parallel::{rank_workers, ParallelExecutor, RankStepOut};
 pub use runner::ModelRunner;
 pub use trainer::{StepObservation, StepObserver, TrainOutcome, Trainer};

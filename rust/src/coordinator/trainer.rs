@@ -15,7 +15,7 @@
 //! 5. AdamW with grad_scale = 1/(A * ranks).
 //!
 //! With `checkpoint_dir`/`checkpoint_every` set, [`Trainer::run`] writes a
-//! full-state (v2) checkpoint every N steps; [`Trainer::resume`] rebuilds
+//! full-state (v3) checkpoint every N steps; [`Trainer::resume`] rebuilds
 //! a trainer from one and replays the uninterrupted trajectory bitwise.
 //! Periodic checkpoints are serialized on the training thread but
 //! *published* by [`checkpoint::CkptWriter`]'s background thread, so disk
@@ -28,11 +28,19 @@
 //! must not advance hysteresis), retry on the survivors. Loader cursors
 //! only move on success, so the surviving ranks' trajectories stay
 //! bitwise identical to a thread-mode run at the reduced rank count.
+//!
+//! Dropped ranks are *parked*, not discarded: the supervisor respawns
+//! dead workers with capped exponential backoff, and when one completes
+//! its handshake the trainer re-admits the parked loaders at the next
+//! step boundary ([`Trainer::step`] polls [`ElasticExecutor::try_rejoin`]
+//! before deciding the batch size). From the rejoin boundary on, the
+//! trajectory is bitwise identical to a full-rank run that dropped and
+//! re-added the same positions at the same step boundaries.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::config::{RankMode, TrainConfig};
 use crate::data::{CorpusGenerator, Loader};
@@ -84,6 +92,10 @@ pub struct StepObservation<'a> {
     pub total_steps: u64,
     /// Per-rank liveness after this step (see [`Trainer::rank_health`]).
     pub ranks: Vec<RankHealth>,
+    /// Sticky checkpoint-writer degradation, if the last publish failed
+    /// and no retry has landed yet (surfaced on the serve daemon's
+    /// `/health`; the run itself exits nonzero if it never recovers).
+    pub checkpoint_error: Option<String>,
 }
 
 /// Step-by-step consumer of a training run ([`Trainer::run_with_observer`]).
@@ -156,6 +168,12 @@ pub struct Trainer {
     pub runner: ModelRunner,
     engine: Engine,
     loaders: Vec<Loader>,
+    /// Original rank label of each live loader (always sorted ascending;
+    /// rejoin inserts loaders back at their label-ordered position).
+    live_origs: Vec<usize>,
+    /// Loaders of dropped ranks, keyed by original rank label, kept so a
+    /// respawned worker resumes its exact data stream on rejoin.
+    parked: Vec<(usize, Loader)>,
     controller: GnsController,
     pub tracker: GnsTracker,
     tokens: u64,
@@ -172,6 +190,8 @@ pub struct Trainer {
 pub struct TrainerSnapshot {
     runner: crate::coordinator::runner::RunnerSnapshot,
     loaders: Vec<Loader>,
+    live_origs: Vec<usize>,
+    parked: Vec<(usize, Loader)>,
     controller: GnsController,
     tracker: GnsTracker,
     tokens: u64,
@@ -211,6 +231,8 @@ impl Trainer {
             runner,
             engine,
             loaders,
+            live_origs: (0..ranks).collect(),
+            parked: Vec::new(),
             controller,
             tracker,
             tokens: 0,
@@ -219,15 +241,18 @@ impl Trainer {
         })
     }
 
-    /// Rebuild a trainer from a full-state (v2) checkpoint; the resumed
-    /// run continues the interrupted trajectory bitwise-exactly.
+    /// Rebuild a trainer from a full-state checkpoint; the resumed run
+    /// continues the interrupted trajectory bitwise-exactly. If the named
+    /// checkpoint is corrupt or truncated, resume falls back down the
+    /// retained `step-*.ckpt` chain to the newest sibling that passes the
+    /// integrity check (see [`Trainer::load_checkpoint_chain`]).
     pub fn resume(
         factory: &dyn BackendFactory,
         cfg: TrainConfig,
         path: impl AsRef<Path>,
     ) -> Result<Self> {
         let mut tr = Self::new(factory, cfg)?;
-        tr.load_checkpoint(path)?;
+        tr.load_checkpoint_chain(path)?;
         Ok(tr)
     }
 
@@ -259,6 +284,7 @@ impl Trainer {
                     pid: None,
                     last_step: self.runner.step,
                     heartbeat_age_ms: None,
+                    respawns: 0,
                     mode: "thread",
                 })
                 .collect(),
@@ -275,10 +301,11 @@ impl Trainer {
     }
 
     /// Drop rank positions (sorted or not; deduped here) from the run:
-    /// their loaders are removed, survivors keep their own data streams,
-    /// and the elastic engine (if any) remaps its worker assignments.
-    /// Thread mode accepts this too — the invariance tests use it to
-    /// build the reduced-rank control trajectory.
+    /// their loaders are *parked* (keyed by original rank label, so a
+    /// later rejoin resumes the exact data stream), survivors keep their
+    /// own streams, and the elastic engine (if any) remaps its worker
+    /// assignments. Thread mode accepts this too — the invariance tests
+    /// use it to build the reduced-rank control trajectory.
     pub fn drop_ranks(&mut self, lost: &[usize]) -> Result<()> {
         let mut lost = lost.to_vec();
         lost.sort_unstable();
@@ -291,10 +318,50 @@ impl Trainer {
         );
         ensure!(lost.len() < self.loaders.len(), "drop_ranks: cannot drop every rank");
         for &p in lost.iter().rev() {
-            self.loaders.remove(p);
+            let loader = self.loaders.remove(p);
+            let orig = self.live_origs.remove(p);
+            self.parked.push((orig, loader));
         }
         if let Engine::Process(ex) = &mut self.engine {
             ex.confirm_loss(&lost);
+        }
+        Ok(())
+    }
+
+    /// Re-admit previously dropped ranks (named by original rank label)
+    /// at a step boundary: each parked loader is re-inserted at its
+    /// label-ordered position, so the rank layout matches a run that
+    /// never renumbered. Thread mode accepts this too — the rejoin
+    /// invariance test uses it to build the full-rank control trajectory.
+    pub fn readmit_ranks(&mut self, origs: &[usize]) -> Result<()> {
+        for &orig in origs {
+            let idx = self
+                .parked
+                .iter()
+                .position(|(o, _)| *o == orig)
+                .ok_or_else(|| anyhow!("readmit_ranks: rank {orig} is not parked"))?;
+            let (orig, loader) = self.parked.remove(idx);
+            let at = self.live_origs.iter().position(|&o| o > orig).unwrap_or(self.live_origs.len());
+            self.live_origs.insert(at, orig);
+            self.loaders.insert(at, loader);
+        }
+        Ok(())
+    }
+
+    /// Elastic only: give respawned workers a chance to rejoin at this
+    /// step boundary. The supervisor owns the respawn/backoff state;
+    /// this just mirrors a successful rejoin into the loader set.
+    fn poll_rejoin(&mut self) -> Result<()> {
+        let report = match &mut self.engine {
+            Engine::Process(ex) if !self.parked.is_empty() => ex.try_rejoin(),
+            _ => return Ok(()),
+        };
+        if !report.rejoined.is_empty() {
+            eprintln!(
+                "elastic: re-admitting rank(s) {:?} at step boundary (step {})",
+                report.rejoined, self.runner.step
+            );
+            self.readmit_ranks(&report.rejoined)?;
         }
         Ok(())
     }
@@ -319,7 +386,7 @@ impl Trainer {
         }
     }
 
-    /// Write a full-state (v2) checkpoint of this trainer, synchronously
+    /// Write a full-state (v3) checkpoint of this trainer, synchronously
     /// on the calling thread.
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
         checkpoint::save_state(path, &self.runner.entry, &self.state_view())
@@ -336,13 +403,46 @@ impl Trainer {
         }
     }
 
-    /// Restore this trainer's mutable state from a v2 checkpoint. The
-    /// trainer must have been built from the same config (model, ranks,
-    /// seed, schedules) as the checkpointed run.
+    /// Sticky checkpoint-writer degradation: `Some(reason)` while the
+    /// last background publish failed and no retry has landed (the serve
+    /// daemon's `/health` reports this; [`Trainer::wait_checkpoints`]
+    /// turns it into a hard error at end of run if it never recovers).
+    pub fn checkpoint_degraded(&self) -> Option<String> {
+        self.ckpt_writer.as_ref().and_then(|w| w.degraded())
+    }
+
+    /// Restore this trainer's mutable state from a full-state checkpoint.
+    /// The trainer must have been built from the same config (model,
+    /// ranks, seed, schedules) as the checkpointed run. Strict: a corrupt
+    /// file is an error (no fallback; see
+    /// [`Trainer::load_checkpoint_chain`]).
     pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
         // Never read under an in-flight background write.
         self.wait_checkpoints()?;
         let st = checkpoint::load_state(path, &self.runner.entry)?;
+        self.apply_state(st)
+    }
+
+    /// [`Trainer::load_checkpoint`] with fallback down the retained
+    /// checkpoint chain: if `path` fails the integrity check, every
+    /// sibling `step-*.ckpt` is tried newest-first, each rejection logged
+    /// loudly, until one validates.
+    pub fn load_checkpoint_chain(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        self.wait_checkpoints()?;
+        let path = path.as_ref();
+        let (st, used, rejected) = checkpoint::load_state_chain(path, &self.runner.entry)?;
+        for (p, why) in &rejected {
+            eprintln!("checkpoint: WARNING: skipping {p:?}: {why}");
+        }
+        if used != path {
+            eprintln!("checkpoint: fell back to {used:?} (newest checkpoint that validates)");
+        }
+        self.apply_state(st)
+    }
+
+    /// Apply a decoded [`checkpoint::TrainState`] to this trainer after
+    /// checking it belongs to this run's config.
+    fn apply_state(&mut self, st: checkpoint::TrainState) -> Result<()> {
         ensure!(
             st.model == self.cfg.model,
             "checkpoint is for model {:?}, config says {:?}",
@@ -400,7 +500,9 @@ impl Trainer {
         let writer = self.ckpt_writer.as_ref().expect("just initialized");
         let mut bytes = writer.take_buffer();
         checkpoint::encode_state(&self.runner.entry, &self.state_view(), &mut bytes)?;
-        writer.submit(bytes, vec![path.clone(), latest])?;
+        let retain = (self.cfg.checkpoint_keep_last > 0)
+            .then(|| (dir.to_path_buf(), self.cfg.checkpoint_keep_last));
+        writer.submit(bytes, vec![path.clone(), latest], retain)?;
         Ok(path)
     }
 
@@ -408,6 +510,8 @@ impl Trainer {
         TrainerSnapshot {
             runner: self.runner.snapshot(),
             loaders: self.loaders.clone(),
+            live_origs: self.live_origs.clone(),
+            parked: self.parked.clone(),
             controller: self.controller.clone(),
             tracker: self.tracker.clone(),
             tokens: self.tokens,
@@ -417,6 +521,8 @@ impl Trainer {
     pub fn restore(&mut self, s: TrainerSnapshot) {
         self.runner.restore(s.runner);
         self.loaders = s.loaders;
+        self.live_origs = s.live_origs;
+        self.parked = s.parked;
         self.controller = s.controller;
         self.tracker = s.tracker;
         self.tokens = s.tokens;
@@ -440,6 +546,10 @@ impl Trainer {
     /// the dead positions, and retries on the survivors.
     pub fn step(&mut self) -> Result<StepRecord> {
         let t0 = Instant::now();
+        // Step boundary: respawned workers (if any) rejoin here, before
+        // the controller decides this step's batch size, so the rejoined
+        // trajectory matches a full-rank run from this step onward.
+        self.poll_rejoin()?;
         let mb = self.runner.entry.microbatch;
         let seq = self.runner.entry.seq_len;
         let (out, accum) = loop {
@@ -588,6 +698,7 @@ impl Trainer {
                     accum: self.controller.last(),
                     total_steps: self.cfg.steps,
                     ranks: self.rank_health(),
+                    checkpoint_error: self.checkpoint_degraded(),
                 });
                 if obs.stop_requested() {
                     break;

@@ -114,6 +114,9 @@ fn build_train_config(t: &TrainArgs) -> Result<TrainConfig> {
     if let Some(every) = t.checkpoint_every {
         cfg.checkpoint_every = every;
     }
+    if let Some(keep) = t.keep_last {
+        cfg.checkpoint_keep_last = keep;
+    }
     if let Some(r) = &t.resume {
         cfg.resume = r.clone();
     }
@@ -472,6 +475,11 @@ fn cmd_rank_worker(argv: &[String]) -> Result<()> {
 }
 
 fn main() -> Result<()> {
+    // Arm (and validate) any NANOGNS_FAULT_PLAN up front: an invalid
+    // plan exits 2 here, before a chaos run can silently test nothing,
+    // and the "armed" banner lands once at startup instead of at the
+    // first fault site.
+    let _ = nanogns::util::faultkit::plan();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         print!("{USAGE}");

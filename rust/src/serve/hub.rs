@@ -82,6 +82,9 @@ struct HubInner {
     loss_curve: Decimated,
     state: RunState,
     error: Option<String>,
+    /// Checkpoint-writer degradation notice (disk failures survived by
+    /// falling back to in-memory buffering), surfaced on `/health`.
+    checkpoint_error: Option<String>,
     final_checkpoint: Option<String>,
 }
 
@@ -110,6 +113,7 @@ impl TelemetryHub {
                 loss_curve: Decimated::new(LOSS_CURVE_MAX),
                 state: RunState::Running,
                 error: None,
+                checkpoint_error: None,
                 final_checkpoint: None,
             }),
             version: AtomicU64::new(0),
@@ -153,6 +157,7 @@ impl TelemetryHub {
         inner.gns = Some(obs.gns.clone());
         inner.accum = obs.accum;
         inner.ranks = obs.ranks.clone();
+        inner.checkpoint_error = obs.checkpoint_error.clone();
         drop(inner);
         self.bump();
     }
@@ -214,11 +219,22 @@ impl TelemetryHub {
     pub fn body_health(&self) -> String {
         let inner = self.lock_inner();
         let mut m = BTreeMap::new();
-        m.insert("status".into(), Value::Str("ok".into()));
+        // A run limping along on the in-memory checkpoint fallback is
+        // alive but not healthy; monitors keying on "status" see it.
+        let status = if inner.checkpoint_error.is_some() { "degraded" } else { "ok" };
+        m.insert("status".into(), Value::Str(status.into()));
         m.insert("state".into(), Value::Str(inner.state.as_str().into()));
         m.insert(
             "step".into(),
             Value::Num(inner.last.as_ref().map(|r| r.step).unwrap_or(0) as f64),
+        );
+        m.insert(
+            "checkpoint_error".into(),
+            inner
+                .checkpoint_error
+                .as_ref()
+                .map(|e| Value::Str(e.clone()))
+                .unwrap_or(Value::Null),
         );
         drop(inner);
         m.insert("uptime_s".into(), Value::Num(self.started.elapsed().as_secs_f64()));
@@ -351,6 +367,24 @@ impl TelemetryHub {
             }
         }
         gauge(&mut out, "nanogns_ring_dropped", "", inner.ring.dropped() as f64);
+        gauge(
+            &mut out,
+            "nanogns_ranks_alive",
+            "",
+            inner.ranks.iter().filter(|h| h.alive).count() as f64,
+        );
+        gauge(
+            &mut out,
+            "nanogns_rank_respawns_total",
+            "",
+            inner.ranks.iter().map(|h| h.respawns).sum::<u64>() as f64,
+        );
+        gauge(
+            &mut out,
+            "nanogns_ckpt_degraded",
+            "",
+            if inner.checkpoint_error.is_some() { 1.0 } else { 0.0 },
+        );
         let state = inner.state;
         drop(inner);
         gauge(&mut out, "nanogns_uptime_seconds", "", self.started.elapsed().as_secs_f64());
@@ -387,6 +421,16 @@ impl TelemetryHub {
             "alive".into(),
             Value::Num(inner.ranks.iter().filter(|h| h.alive).count() as f64),
         );
+        m.insert(
+            "respawns_total".into(),
+            Value::Num(inner.ranks.iter().map(|h| h.respawns).sum::<u64>() as f64),
+        );
+        m.insert(
+            "fault_plan".into(),
+            crate::util::faultkit::plan()
+                .map(|p| Value::Str(p.text().to_string()))
+                .unwrap_or(Value::Null),
+        );
         let arr: Vec<Value> = inner
             .ranks
             .iter()
@@ -403,6 +447,7 @@ impl TelemetryHub {
                     "heartbeat_age_ms".into(),
                     h.heartbeat_age_ms.map(Value::finite_or_null).unwrap_or(Value::Null),
                 );
+                e.insert("respawns".into(), Value::Num(h.respawns as f64));
                 Value::Obj(e)
             })
             .collect();
@@ -508,7 +553,7 @@ mod tests {
         }
     }
 
-    fn publish(hub: &TelemetryHub, step: u64) {
+    fn publish_with(hub: &TelemetryHub, step: u64, checkpoint_error: Option<String>) {
         let r = rec(step);
         let mut tracker = crate::gns::GnsTracker::new(&crate::STATS_ORDER, 0.5);
         tracker.observe(8.0, &[1.0; crate::N_TYPES], &[3.0; crate::N_TYPES]);
@@ -524,6 +569,7 @@ mod tests {
                     pid: Some(4242),
                     last_step: step,
                     heartbeat_age_ms: Some(12.5),
+                    respawns: 2,
                     mode: "process",
                 },
                 RankHealth {
@@ -532,10 +578,16 @@ mod tests {
                     pid: None,
                     last_step: step.saturating_sub(1),
                     heartbeat_age_ms: None,
+                    respawns: 0,
                     mode: "process",
                 },
             ],
+            checkpoint_error,
         });
+    }
+
+    fn publish(hub: &TelemetryHub, step: u64) {
+        publish_with(hub, step, None);
     }
 
     #[test]
@@ -603,6 +655,8 @@ mod tests {
         assert_eq!(ranks.len(), 2);
         assert_eq!(ranks[0].get("pid").unwrap().as_u64().unwrap(), 4242);
         assert!(matches!(ranks[1].get("pid"), Some(Value::Null)));
+        assert_eq!(ranks[0].get("respawns").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(v.get("respawns_total").unwrap().as_u64().unwrap(), 2);
         // ring holds 4: steps 1..=6 evict 1 and 2 → cursor 1 has a gap
         for s in 2..=6 {
             publish(&hub, s);
@@ -619,10 +673,41 @@ mod tests {
         let hub = TelemetryHub::new(test_meta(), 8);
         publish(&hub, 3);
         let m = hub.body_metrics();
-        let needles =
-            ["nanogns_step 3", "nanogns_gns{layer=\"layernorm\"}", "nanogns_uptime_seconds"];
+        let needles = [
+            "nanogns_step 3",
+            "nanogns_gns{layer=\"layernorm\"}",
+            "nanogns_uptime_seconds",
+            "nanogns_ranks_alive 1",
+            "nanogns_rank_respawns_total 2",
+            "nanogns_ckpt_degraded 0",
+        ];
         for needle in needles {
             assert!(m.contains(needle), "missing {needle} in:\n{m}");
         }
+    }
+
+    #[test]
+    fn checkpoint_degradation_surfaces_on_health_and_metrics() {
+        let hub = TelemetryHub::new(test_meta(), 8);
+        publish(&hub, 1);
+        let h = Value::parse(&hub.body_health()).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
+        assert!(matches!(h.get("checkpoint_error"), Some(Value::Null)));
+
+        publish_with(&hub, 2, Some("checkpoint writes failing: no space".into()));
+        let h = Value::parse(&hub.body_health()).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "degraded");
+        assert!(h
+            .get("checkpoint_error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("no space"));
+        assert!(hub.body_metrics().contains("nanogns_ckpt_degraded 1"));
+
+        // recovery clears the flag
+        publish(&hub, 3);
+        let h = Value::parse(&hub.body_health()).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
     }
 }

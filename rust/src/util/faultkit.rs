@@ -1,0 +1,412 @@
+//! Deterministic, seedable fault injection for the failure-domain tests
+//! and the CI chaos matrix.
+//!
+//! Disarmed (the default — `NANOGNS_FAULT_PLAN` unset) every query is a
+//! single cached atomic load returning "no fault", so the hooks compiled
+//! into the elastic and checkpoint hot paths cost nothing measurable
+//! (the train_step bench asserts the integrity paths stay under 1% of a
+//! step). Armed, the plan drives *deterministic* faults: every rule
+//! counts its own trigger events with an atomic counter, so "the 3rd
+//! checkpoint write" or "every 13th frame" means the same thing on every
+//! run, and the corruption byte position is derived from the plan seed —
+//! never from wall-clock or OS randomness.
+//!
+//! ## Plan DSL
+//!
+//! `NANOGNS_FAULT_PLAN` is a `;`-separated list of clauses, each
+//! `site@spec` where `spec` is a comma-separated list of `key:value`
+//! items (a bare integer is the site's primary count `n`):
+//!
+//! | site            | meaning                                              |
+//! |-----------------|------------------------------------------------------|
+//! | `ckpt.enospc@N` | the Nth checkpoint publish fails like ENOSPC         |
+//! | `ckpt.torn@N`   | the Nth checkpoint publish writes a torn (truncated) payload but still renames it into place |
+//! | `frame.drop@every:K`  | drop every Kth outgoing protocol frame         |
+//! | `frame.corrupt@N`     | corrupt the Nth outgoing protocol frame        |
+//! | `hb.delay@F`    | multiply the worker heartbeat period by F            |
+//! | `worker.exit@step:N`  | exit(86) while serving the Nth step command    |
+//! | `step.stall@N,ms:M`   | sleep M ms before serving the Nth step command |
+//! | `connect.fail@N`      | fail the first N transport connect attempts    |
+//! | `seed@S`        | seed for corruption-position choices (default 0)     |
+//!
+//! Any clause may carry `worker:W` to scope it to rank-worker process
+//! `W` (the supervisor's worker slot index, which workers learn from
+//! `--worker` and register via [`set_scope`]); unscoped clauses apply in
+//! every process that inherits the environment variable, coordinator
+//! included. Example:
+//!
+//! ```text
+//! NANOGNS_FAULT_PLAN="frame.corrupt@4,worker:1;ckpt.enospc@3;seed@7"
+//! ```
+//!
+//! A malformed plan aborts the process immediately with a parse error on
+//! stderr — a chaos run that silently ignores its plan would "pass" by
+//! testing nothing.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Scope value meaning "this process is the coordinator, not a worker".
+const COORD: usize = usize::MAX;
+
+static SCOPE: AtomicUsize = AtomicUsize::new(COORD);
+static PLAN: OnceLock<Option<Plan>> = OnceLock::new();
+
+/// Checkpoint-publish faults (queried by `checkpoint::publish_bytes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptFault {
+    /// Fail the write as if the filesystem returned ENOSPC.
+    Enospc,
+    /// Write only half the payload, then publish it anyway (torn write).
+    Torn,
+}
+
+/// Outgoing-frame faults (queried by the protocol write path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFault {
+    /// Skip sending the frame entirely.
+    Drop,
+    /// Send the frame with a corrupted CRC trailer.
+    Corrupt,
+}
+
+/// Step-command faults (queried by the rank worker's serve loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepFault {
+    /// `process::exit(86)` before replying.
+    Exit,
+    /// Sleep this many milliseconds before serving the step.
+    StallMs(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SiteKind {
+    CkptEnospc,
+    CkptTorn,
+    FrameDrop,
+    FrameCorrupt,
+    HbDelay,
+    WorkerExit,
+    StepStall,
+    ConnectFail,
+}
+
+#[derive(Debug)]
+struct Rule {
+    site: SiteKind,
+    /// Primary count: the Nth event, every-Kth period, or delay factor.
+    n: u64,
+    /// Millisecond argument (`step.stall` only).
+    ms: u64,
+    /// Only fire in the process whose [`set_scope`] matches.
+    worker: Option<usize>,
+    hits: AtomicU64,
+}
+
+/// A parsed fault plan. Constructed once per process from
+/// `NANOGNS_FAULT_PLAN`; all counters live for the process lifetime.
+#[derive(Debug)]
+pub struct Plan {
+    text: String,
+    seed: u64,
+    rules: Vec<Rule>,
+}
+
+impl Plan {
+    fn parse(text: &str) -> Result<Self, String> {
+        let mut rules = Vec::new();
+        let mut seed = 0u64;
+        for clause in text.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (site, spec) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("clause {clause:?} is missing '@'"))?;
+            let mut n: Option<u64> = None;
+            let mut ms = 0u64;
+            let mut worker = None;
+            for item in spec.split(',').map(str::trim).filter(|i| !i.is_empty()) {
+                let (key, val) = match item.split_once(':') {
+                    Some((k, v)) => (k.trim(), v.trim()),
+                    None => ("", item),
+                };
+                let parsed: u64 = val
+                    .parse()
+                    .map_err(|_| format!("clause {clause:?}: {val:?} is not an integer"))?;
+                match key {
+                    // Bare integers and the site-specific count aliases
+                    // all set the primary count.
+                    "" | "every" | "step" => n = Some(parsed),
+                    "ms" => ms = parsed,
+                    "worker" => worker = Some(parsed as usize),
+                    other => return Err(format!("clause {clause:?}: unknown key {other:?}")),
+                }
+            }
+            if site.trim() == "seed" {
+                seed = n.ok_or_else(|| format!("clause {clause:?}: seed needs a value"))?;
+                continue;
+            }
+            let kind = match site.trim() {
+                "ckpt.enospc" => SiteKind::CkptEnospc,
+                "ckpt.torn" => SiteKind::CkptTorn,
+                "frame.drop" => SiteKind::FrameDrop,
+                "frame.corrupt" => SiteKind::FrameCorrupt,
+                "hb.delay" => SiteKind::HbDelay,
+                "worker.exit" => SiteKind::WorkerExit,
+                "step.stall" => SiteKind::StepStall,
+                "connect.fail" => SiteKind::ConnectFail,
+                other => return Err(format!("unknown fault site {other:?}")),
+            };
+            let n = n.ok_or_else(|| format!("clause {clause:?} needs a count"))?;
+            if n == 0 {
+                return Err(format!("clause {clause:?}: count must be >= 1"));
+            }
+            if kind == SiteKind::StepStall && ms == 0 {
+                return Err(format!("clause {clause:?}: step.stall needs ms:<delay>"));
+            }
+            rules.push(Rule { site: kind, n, ms, worker, hits: AtomicU64::new(0) });
+        }
+        Ok(Self { text: text.to_string(), seed, rules })
+    }
+
+    /// The raw plan text (surfaced on `/ranks` as the run's fault state).
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+
+    /// Iterate rules in `family` that apply in `scope`, bumping each
+    /// matching rule's hit counter, and return the first that fires.
+    /// Rules outside the family are untouched: each accessor counts only
+    /// its own event stream, so (say) frame traffic can never consume a
+    /// `ckpt.enospc` clause's "nth publish" counter.
+    fn fire<T>(
+        &self,
+        scope: usize,
+        family: &[SiteKind],
+        mut f: impl FnMut(&Rule, u64) -> Option<T>,
+    ) -> Option<T> {
+        let mut fired = None;
+        for rule in &self.rules {
+            if !family.contains(&rule.site) || rule.worker.is_some_and(|w| w != scope) {
+                continue;
+            }
+            let hit = rule.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            if fired.is_none() {
+                fired = f(rule, hit);
+            }
+        }
+        fired
+    }
+
+    fn ckpt_fault(&self, scope: usize) -> Option<CkptFault> {
+        self.fire(scope, &[SiteKind::CkptEnospc, SiteKind::CkptTorn], |r, hit| match r.site {
+            SiteKind::CkptEnospc if hit == r.n => Some(CkptFault::Enospc),
+            SiteKind::CkptTorn if hit == r.n => Some(CkptFault::Torn),
+            _ => None,
+        })
+    }
+
+    fn frame_fault(&self, scope: usize) -> Option<FrameFault> {
+        self.fire(scope, &[SiteKind::FrameDrop, SiteKind::FrameCorrupt], |r, hit| match r.site {
+            SiteKind::FrameDrop if hit % r.n == 0 => Some(FrameFault::Drop),
+            SiteKind::FrameCorrupt if hit == r.n => Some(FrameFault::Corrupt),
+            _ => None,
+        })
+    }
+
+    fn step_fault(&self, scope: usize) -> Option<StepFault> {
+        self.fire(scope, &[SiteKind::WorkerExit, SiteKind::StepStall], |r, hit| match r.site {
+            SiteKind::WorkerExit if hit == r.n => Some(StepFault::Exit),
+            SiteKind::StepStall if hit == r.n => Some(StepFault::StallMs(r.ms)),
+            _ => None,
+        })
+    }
+
+    fn connect_fails(&self, scope: usize) -> bool {
+        self.fire(scope, &[SiteKind::ConnectFail], |r, hit| match r.site {
+            SiteKind::ConnectFail if hit <= r.n => Some(()),
+            _ => None,
+        })
+        .is_some()
+    }
+
+    fn hb_factor(&self, scope: usize) -> u64 {
+        self.rules
+            .iter()
+            .filter(|r| r.site == SiteKind::HbDelay && !r.worker.is_some_and(|w| w != scope))
+            .map(|r| r.n)
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+fn init_from_env() -> Option<Plan> {
+    let text = std::env::var("NANOGNS_FAULT_PLAN").ok()?;
+    if text.trim().is_empty() {
+        return None;
+    }
+    match Plan::parse(&text) {
+        Ok(p) => {
+            eprintln!("faultkit: armed with plan {text:?}");
+            Some(p)
+        }
+        Err(e) => {
+            // A chaos run with an ignored plan would pass by testing
+            // nothing — fail the process instead.
+            eprintln!("faultkit: invalid NANOGNS_FAULT_PLAN: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The process-wide plan, or `None` when disarmed. First call parses the
+/// environment; later calls are one atomic load.
+pub fn plan() -> Option<&'static Plan> {
+    PLAN.get_or_init(init_from_env).as_ref()
+}
+
+/// Cheap hot-path guard: is any fault plan armed in this process?
+#[inline]
+pub fn armed() -> bool {
+    plan().is_some()
+}
+
+/// Register this process as rank-worker `w` so `worker:W`-scoped clauses
+/// can target it (the coordinator never calls this).
+pub fn set_scope(worker: usize) {
+    SCOPE.store(worker, Ordering::Relaxed);
+}
+
+fn scope() -> usize {
+    SCOPE.load(Ordering::Relaxed)
+}
+
+/// Should this checkpoint publish fail, and how? Counts publish attempts.
+pub fn on_ckpt_write() -> Option<CkptFault> {
+    plan()?.ckpt_fault(scope())
+}
+
+/// Should this outgoing frame be dropped or corrupted? Counts frames.
+pub fn on_frame_send() -> Option<FrameFault> {
+    plan()?.frame_fault(scope())
+}
+
+/// Should this step command stall or kill the worker? Counts commands.
+pub fn on_step_command() -> Option<StepFault> {
+    plan()?.step_fault(scope())
+}
+
+/// Should this transport connect attempt fail? Counts attempts.
+pub fn on_connect_attempt() -> bool {
+    plan().is_some_and(|p| p.connect_fails(scope()))
+}
+
+/// Multiplier for the worker heartbeat period (1 = no delay).
+pub fn heartbeat_factor() -> u64 {
+    plan().map_or(1, |p| p.hb_factor(scope()))
+}
+
+/// Deterministic corruption position in a buffer of `len` bytes, derived
+/// from the plan seed and a per-call salt (e.g. the frame counter).
+pub fn corrupt_index(len: usize, salt: u64) -> usize {
+    let seed = plan().map_or(0, |p| p.seed);
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed ^ salt.wrapping_mul(0x9E37_79B9));
+    rng.range(0, len.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_plan() {
+        let p = Plan::parse(
+            "ckpt.enospc@3; frame.drop@every:13,worker:2; hb.delay@20; \
+             worker.exit@step:5,worker:1; step.stall@2,ms:1500; connect.fail@2; seed@9",
+        )
+        .unwrap();
+        assert_eq!(p.rules.len(), 6);
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.rules[1].n, 13);
+        assert_eq!(p.rules[1].worker, Some(2));
+        assert_eq!(p.rules[4].ms, 1500);
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in [
+            "ckpt.enospc",           // missing '@'
+            "ckpt.enospc@zero",      // non-integer
+            "ckpt.enospc@0",         // zero count
+            "nosuch.site@1",         // unknown site
+            "ckpt.enospc@1,foo:2",   // unknown key
+            "step.stall@2",          // stall without ms
+            "seed@",                 // empty seed
+        ] {
+            assert!(Plan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn nth_event_semantics_are_deterministic() {
+        let p = Plan::parse("ckpt.enospc@3;ckpt.torn@5").unwrap();
+        let fired: Vec<Option<CkptFault>> = (0..6).map(|_| p.ckpt_fault(COORD)).collect();
+        assert_eq!(
+            fired,
+            vec![None, None, Some(CkptFault::Enospc), None, Some(CkptFault::Torn), None]
+        );
+    }
+
+    #[test]
+    fn every_kth_frame_drop_and_nth_corrupt() {
+        let p = Plan::parse("frame.drop@every:3;frame.corrupt@4").unwrap();
+        let fired: Vec<Option<FrameFault>> = (0..7).map(|_| p.frame_fault(COORD)).collect();
+        assert_eq!(
+            fired,
+            vec![
+                None,
+                None,
+                Some(FrameFault::Drop),
+                Some(FrameFault::Corrupt),
+                None,
+                Some(FrameFault::Drop),
+                None,
+            ]
+        );
+    }
+
+    #[test]
+    fn worker_scoping_filters_rules_and_counters() {
+        let p = Plan::parse("frame.corrupt@2,worker:1").unwrap();
+        // Coordinator-scope queries neither fire nor consume the counter.
+        assert_eq!(p.frame_fault(COORD), None);
+        assert_eq!(p.frame_fault(COORD), None);
+        assert_eq!(p.frame_fault(1), None);
+        assert_eq!(p.frame_fault(1), Some(FrameFault::Corrupt));
+        assert_eq!(p.frame_fault(1), None);
+    }
+
+    #[test]
+    fn families_keep_independent_counters() {
+        // A frame clause and a ckpt clause in one plan: frame traffic
+        // must not advance the ckpt clause's "nth publish" counter, and
+        // vice versa (process-mode runs interleave both event streams).
+        let p = Plan::parse("ckpt.enospc@2;frame.corrupt@2").unwrap();
+        assert_eq!(p.frame_fault(COORD), None);
+        assert_eq!(p.ckpt_fault(COORD), None);
+        assert_eq!(p.frame_fault(COORD), Some(FrameFault::Corrupt));
+        assert_eq!(p.ckpt_fault(COORD), Some(CkptFault::Enospc));
+    }
+
+    #[test]
+    fn step_and_connect_and_heartbeat_sites() {
+        let p = Plan::parse("step.stall@1,ms:250;worker.exit@step:2;connect.fail@2;hb.delay@8")
+            .unwrap();
+        assert_eq!(p.step_fault(COORD), Some(StepFault::StallMs(250)));
+        assert_eq!(p.step_fault(COORD), Some(StepFault::Exit));
+        assert_eq!(p.step_fault(COORD), None);
+        assert!(p.connect_fails(COORD));
+        assert!(p.connect_fails(COORD));
+        assert!(!p.connect_fails(COORD));
+        assert_eq!(p.hb_factor(COORD), 8);
+        assert_eq!(Plan::parse("ckpt.torn@1").unwrap().hb_factor(COORD), 1);
+    }
+}

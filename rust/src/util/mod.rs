@@ -6,6 +6,8 @@
 //! project needs. Each is small, tested, and deterministic.
 
 pub mod benchkit;
+pub mod crc;
+pub mod faultkit;
 pub mod json;
 pub mod prop;
 pub mod rng;

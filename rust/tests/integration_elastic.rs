@@ -9,6 +9,9 @@
 //!   coordinator reconciles (drops the dead positions, retries the step)
 //!   and the survivors' trajectory is bitwise identical to a thread-mode
 //!   run at the reduced rank count;
+//! * a killed worker is respawned and re-admitted at a step boundary,
+//!   after which the trajectory is bitwise identical to a run that
+//!   dropped and readmitted the same rank at the same boundaries;
 //! * async (writer-thread) checkpoints are byte-identical to synchronous
 //!   ones, and a crash mid-`.tmp`-write leaves a resumable run behind.
 //!
@@ -141,7 +144,9 @@ fn rank_health_reflects_engine_mode() {
 /// kill -9 one rank worker between steps: the next step attempt loses
 /// the rank, the trainer reconciles, and the surviving ranks' records
 /// are bitwise identical to a thread-mode run that dropped the same
-/// rank position at the same step boundary.
+/// rank position at the same step boundary. Respawn is disabled so the
+/// run stays at the reduced rank count (the rejoin path has its own
+/// test below).
 #[cfg(unix)]
 #[test]
 fn killed_worker_reconciles_bitwise_to_reduced_thread_run() {
@@ -153,8 +158,9 @@ fn killed_worker_reconciles_bitwise_to_reduced_thread_run() {
     let want_tail = run_steps(&mut control, 4);
 
     // Elastic run: one child per rank, murder the middle one.
-    let mut tr =
-        Trainer::with_rank_workers(&ReferenceFactory, elastic_cfg(6, ranks), ranks).unwrap();
+    let mut cfg = elastic_cfg(6, ranks);
+    cfg.elastic.max_respawns = 0;
+    let mut tr = Trainer::with_rank_workers(&ReferenceFactory, cfg, ranks).unwrap();
     let head = run_steps(&mut tr, 2);
     for (a, b) in head.iter().zip(&want_head) {
         assert_records_eq(a, b, &format!("pre-kill step {}", b.step));
@@ -188,13 +194,14 @@ impl StepObserver for KillAt {
 /// The acceptance scenario: a full `run()` with checkpointing survives a
 /// worker killed mid-run, finishes its entire step budget on the
 /// survivors, and parks a loadable final checkpoint at the reduced rank
-/// count.
+/// count. Respawn is disabled so the reduced count is the terminal state.
 #[cfg(unix)]
 #[test]
 fn run_survives_midrun_kill_and_parks_loadable_checkpoint() {
     let dir = temp_dir("midrun_kill");
     let steps = 6u64;
     let mut cfg = elastic_cfg(steps, 3);
+    cfg.elastic.max_respawns = 0;
     cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
     cfg.checkpoint_every = 1;
     let mut tr = Trainer::with_rank_workers(&ReferenceFactory, cfg, 3).unwrap();
@@ -278,4 +285,61 @@ fn async_checkpoints_are_byte_identical_to_sync_saves() {
     assert_ne!(p1, p2);
     let entry = ReferenceFactory.describe("nano").unwrap();
     assert_eq!(checkpoint::load_state(&p2, &entry).unwrap().step, 4);
+}
+
+/// The respawn/rejoin acceptance scenario: kill a worker mid-run, let
+/// the supervisor respawn it, and check the whole trajectory — reduced
+/// steps *and* post-rejoin full-rank steps — bitwise against a control
+/// run that applies the same drop/readmit transitions at the same step
+/// boundaries. The control is thread-mode `drop_ranks`/`readmit_ranks`,
+/// driven by the rank counts the elastic run actually exhibited (respawn
+/// timing is backoff-paced, so the boundary is observed, not assumed).
+#[cfg(unix)]
+#[test]
+fn killed_worker_respawns_and_rejoins_bitwise() {
+    let ranks = 3;
+    let steps = 12u64;
+    let mut cfg = elastic_cfg(steps, ranks);
+    // Near-zero backoff: the respawn happens at the first step boundary
+    // after the death is reconciled.
+    cfg.elastic.respawn_backoff_ms = 1;
+    cfg.elastic.respawn_backoff_max_ms = 1000;
+    let mut tr = Trainer::with_rank_workers(&ReferenceFactory, cfg, ranks).unwrap();
+    let head = run_steps(&mut tr, 2);
+    let pids = tr.elastic_worker_pids().unwrap();
+    kill9(pids[1]);
+    // Record the rank count each remaining step actually ran at: the
+    // reconciling step completes on the survivors (count drops), the
+    // rejoin boundary re-admits before stepping (count recovers).
+    let mut tail = Vec::new();
+    let mut counts = Vec::new();
+    for _ in 2..steps {
+        tail.push(tr.step().unwrap());
+        counts.push(tr.ranks());
+    }
+    assert!(counts.contains(&(ranks - 1)), "kill never dropped a rank: {counts:?}");
+    assert!(
+        counts.windows(2).any(|w| w[0] == ranks - 1 && w[1] == ranks),
+        "worker never rejoined: {counts:?}"
+    );
+    assert_eq!(*counts.last().unwrap(), ranks, "run must end at full rank count");
+
+    // Control: thread mode, replaying the observed transitions. The
+    // killed worker owned exactly original rank 1 (one rank per worker).
+    let mut control = Trainer::with_rank_workers(&ReferenceFactory, base_cfg(steps, ranks), 1).unwrap();
+    let want_head = run_steps(&mut control, 2);
+    for (a, b) in head.iter().zip(&want_head) {
+        assert_records_eq(a, b, &format!("pre-kill step {}", b.step));
+    }
+    let mut prev = ranks;
+    for (i, &c) in counts.iter().enumerate() {
+        if c < prev {
+            control.drop_ranks(&[1]).unwrap();
+        } else if c > prev {
+            control.readmit_ranks(&[1]).unwrap();
+        }
+        let want = control.step().unwrap();
+        assert_records_eq(&tail[i], &want, &format!("post-kill step {} (ranks {c})", want.step));
+        prev = c;
+    }
 }

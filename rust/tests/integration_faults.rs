@@ -1,0 +1,372 @@
+//! Failure-domain integration tests (PR 9): deterministic fault
+//! injection via `NANOGNS_FAULT_PLAN`, the checkpoint integrity chain,
+//! and rank respawn/rejoin under injected faults.
+//!
+//! Subprocess scenarios drive the real `repro` binary
+//! (`CARGO_BIN_EXE_repro`) with a fault plan in the child's environment:
+//! the coordinator and every rank-worker child it spawns arm the same
+//! plan (the env is inherited), and `worker:W`-scoped clauses target one
+//! child while leaving the coordinator untouched. In-process scenarios
+//! exercise the library surface directly (chain fallback past a corrupt
+//! newest checkpoint, writer degradation that must fail the run at the
+//! end).
+//!
+//! DESIGN.md's failure-domain matrix points at these tests as the
+//! proof obligations for each fault class.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use nanogns::config::TrainConfig;
+use nanogns::coordinator::{checkpoint, Trainer};
+use nanogns::runtime::{BackendFactory, ReferenceFactory};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nanogns_pr9_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the workspace's own `repro` with a controlled fault-plan
+/// environment (never inheriting one from the test runner).
+fn run_repro(args: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+    cmd.args(args);
+    cmd.env_remove("NANOGNS_FAULT_PLAN");
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("running repro")
+}
+
+fn stderr_str(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout_str(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[track_caller]
+fn assert_exit_ok(out: &Output) {
+    assert!(
+        out.status.success(),
+        "repro failed ({:?})\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        stdout_str(out),
+        stderr_str(out),
+    );
+}
+
+/// Every chaos scenario must resolve as a *typed* fault, never a panic
+/// in any process (worker stderr is inherited by the coordinator, so a
+/// child panic shows up here too).
+#[track_caller]
+fn assert_no_panic(err: &str) {
+    assert!(!err.contains("panicked"), "a process panicked:\n{err}");
+}
+
+/// Load a published checkpoint, returning `(step, loader_cursors)` —
+/// proving both that the file passes the integrity chain and what rank
+/// count the run ended at.
+fn ckpt_summary(path: &Path) -> (u64, usize) {
+    let entry = ReferenceFactory.describe("nano").unwrap();
+    let st = checkpoint::load_state(path, &entry).unwrap();
+    (st.step, st.loaders.len())
+}
+
+/// Minimal process-mode config file. The elastic supervision knobs
+/// (respawn budget, backoff pacing) intentionally have no CLI flags, so
+/// chaos runs are config-driven.
+fn write_elastic_cfg(
+    dir: &Path,
+    steps: u64,
+    ckpt_dir: &Path,
+    every: u64,
+    elastic_extra: &str,
+) -> PathBuf {
+    let path = dir.join("train.json");
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let body = format!(
+        r#"{{
+  "model": "nano", "steps": {steps}, "seed": 0,
+  "lr": {{"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": {steps}}},
+  "batch_size": {{"kind": "fixed", "accum": 2}},
+  "ranks": 2,
+  "rank_mode": "process",
+  "checkpoint_dir": {ckpt:?},
+  "checkpoint_every": {every},
+  "elastic": {{"heartbeat_ms": 50, "spawn_timeout_s": 20.0, "worker_exe": {exe:?}{elastic_extra}}}
+}}"#,
+        ckpt = ckpt_dir.to_string_lossy(),
+    );
+    std::fs::write(&path, body).unwrap();
+    path
+}
+
+/// A malformed plan must fail the process fast (exit 2) and loudly — a
+/// chaos run with a silently ignored plan would pass by testing nothing.
+#[test]
+fn invalid_fault_plan_fails_fast() {
+    let out = run_repro(
+        &["train", "--model", "nano", "--steps", "1"],
+        &[("NANOGNS_FAULT_PLAN", "nosuch.site@1")],
+    );
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr_str(&out));
+    assert!(
+        stderr_str(&out).contains("invalid NANOGNS_FAULT_PLAN"),
+        "stderr: {}",
+        stderr_str(&out)
+    );
+}
+
+/// Transient ENOSPC on one checkpoint publish: the writer degrades
+/// (keeps the image in memory, warns loudly), recovers on the next
+/// publish, and the run exits 0 with a valid final checkpoint.
+#[test]
+fn injected_enospc_degrades_then_recovers() {
+    let dir = temp_dir("enospc");
+    let ckpt = dir.join("ckpts");
+    let out = run_repro(
+        &[
+            "train",
+            "--model",
+            "nano",
+            "--steps",
+            "4",
+            "--seed",
+            "0",
+            "--checkpoint-dir",
+            ckpt.to_str().unwrap(),
+            "--checkpoint-every",
+            "1",
+        ],
+        &[("NANOGNS_FAULT_PLAN", "ckpt.enospc@3")],
+    );
+    assert_exit_ok(&out);
+    let err = stderr_str(&out);
+    assert_no_panic(&err);
+    assert!(err.contains("faultkit: armed"), "plan never armed:\n{err}");
+    assert!(err.contains("keeping the image in memory"), "never degraded:\n{err}");
+    assert!(err.contains("publish recovered"), "never recovered:\n{err}");
+    assert_eq!(ckpt_summary(&ckpt.join("latest.ckpt")), (4, 1));
+}
+
+/// A torn (truncated) write to the final `latest.ckpt` is invisible at
+/// write time by design — the load-time integrity chain must catch it:
+/// `--resume latest.ckpt` skips the torn file, falls back to the newest
+/// step checkpoint that validates, and the run continues to completion.
+#[test]
+fn torn_latest_checkpoint_resume_falls_back() {
+    let dir = temp_dir("torn_resume");
+    let ckpt = dir.join("ckpts");
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    // Publishes, in order: step-2, latest, step-4, latest — the 4th is
+    // the final `latest.ckpt`, torn in half.
+    let out = run_repro(
+        &[
+            "train", "--model", "nano", "--steps", "4", "--seed", "0", "--checkpoint-dir",
+            &ckpt_s, "--checkpoint-every", "2",
+        ],
+        &[("NANOGNS_FAULT_PLAN", "ckpt.torn@4")],
+    );
+    assert_exit_ok(&out);
+    assert!(stderr_str(&out).contains("torn checkpoint write"), "{}", stderr_str(&out));
+    let torn = std::fs::metadata(ckpt.join("latest.ckpt")).unwrap().len();
+    let good = std::fs::metadata(ckpt.join("step-00000004.ckpt")).unwrap().len();
+    assert!(torn < good, "latest.ckpt should be truncated ({torn} vs {good} bytes)");
+
+    let latest = ckpt.join("latest.ckpt");
+    let resumed = run_repro(
+        &[
+            "train", "--model", "nano", "--steps", "6", "--seed", "0", "--checkpoint-dir",
+            &ckpt_s, "--checkpoint-every", "2", "--resume", latest.to_str().unwrap(),
+        ],
+        &[],
+    );
+    assert_exit_ok(&resumed);
+    let err = stderr_str(&resumed);
+    assert_no_panic(&err);
+    assert!(err.contains("skipping"), "torn file not reported:\n{err}");
+    assert!(err.contains("fell back to"), "no chain fallback:\n{err}");
+    assert!(stdout_str(&resumed).contains("at step 4"), "{}", stdout_str(&resumed));
+    assert_eq!(ckpt_summary(&ckpt.join("latest.ckpt")), (6, 1));
+}
+
+/// Rank respawn under a crash-looping worker: worker 1 exits on its 2nd
+/// step command in *every* incarnation, and the supervisor keeps
+/// respawning and re-admitting it. The run still completes its full
+/// step budget with a valid final checkpoint and exit 0.
+#[test]
+fn injected_worker_exit_respawns_and_completes() {
+    let dir = temp_dir("worker_exit");
+    let ckpt = dir.join("ckpts");
+    let cfg = write_elastic_cfg(
+        &dir,
+        6,
+        &ckpt,
+        3,
+        r#", "respawn_backoff_ms": 1, "respawn_backoff_max_ms": 50"#,
+    );
+    let out = run_repro(
+        &["train", "--config", cfg.to_str().unwrap()],
+        &[
+            ("NANOGNS_FAULT_PLAN", "worker.exit@step:2,worker:1"),
+            ("NANOGNS_RANK_WORKERS", "2"),
+        ],
+    );
+    assert_exit_ok(&out);
+    let err = stderr_str(&out);
+    assert_no_panic(&err);
+    assert!(err.contains("down:"), "worker death never detected:\n{err}");
+    assert!(err.contains("respawned worker"), "worker never respawned:\n{err}");
+    assert!(err.contains("re-admitting"), "worker never re-admitted:\n{err}");
+    let (step, _live) = ckpt_summary(&ckpt.join("latest.ckpt"));
+    assert_eq!(step, 6, "the full step budget must complete");
+}
+
+/// A corrupted frame is a *rank fault*, never a panic: the CRC trailer
+/// catches the flipped byte, the coordinator retires the sender, and
+/// the run completes on the survivor.
+#[test]
+fn injected_frame_corruption_is_a_rank_fault_not_a_panic() {
+    let dir = temp_dir("frame_corrupt");
+    let ckpt = dir.join("ckpts");
+    let cfg = write_elastic_cfg(&dir, 5, &ckpt, 5, r#", "max_respawns": 0"#);
+    let out = run_repro(
+        &["train", "--config", cfg.to_str().unwrap()],
+        &[
+            ("NANOGNS_FAULT_PLAN", "frame.corrupt@4,worker:1"),
+            ("NANOGNS_RANK_WORKERS", "2"),
+        ],
+    );
+    assert_exit_ok(&out);
+    let err = stderr_str(&out);
+    assert_no_panic(&err);
+    assert!(err.contains("corrupting outgoing frame"), "fault never fired:\n{err}");
+    assert!(err.contains("crc mismatch"), "corruption not CRC-detected:\n{err}");
+    assert!(err.contains("down: connection lost"), "sender not retired:\n{err}");
+    assert_eq!(ckpt_summary(&ckpt.join("latest.ckpt")), (5, 1));
+}
+
+/// Transient connect failures during worker startup are absorbed by the
+/// bounded retry-with-backoff — no rank is lost, nothing respawns, and
+/// the run ends at full rank count.
+#[test]
+fn injected_connect_failures_are_retried_without_rank_loss() {
+    let dir = temp_dir("connect_fail");
+    let ckpt = dir.join("ckpts");
+    let cfg = write_elastic_cfg(&dir, 3, &ckpt, 3, "");
+    let out = run_repro(
+        &["train", "--config", cfg.to_str().unwrap()],
+        &[
+            ("NANOGNS_FAULT_PLAN", "connect.fail@2,worker:1"),
+            ("NANOGNS_RANK_WORKERS", "2"),
+        ],
+    );
+    assert_exit_ok(&out);
+    let err = stderr_str(&out);
+    assert_no_panic(&err);
+    assert!(err.contains("injected connect failure"), "fault never fired:\n{err}");
+    assert!(!err.contains("down:"), "retried connects must not cost the rank:\n{err}");
+    assert!(!err.contains("respawned worker"), "no respawn expected:\n{err}");
+    assert_eq!(ckpt_summary(&ckpt.join("latest.ckpt")), (3, 2));
+}
+
+/// A worker stalled past the step deadline (a hang, not a crash) is
+/// detected by the deadline, dropped, and the run completes on the
+/// survivor.
+#[test]
+fn injected_stall_past_step_deadline_drops_the_rank() {
+    let dir = temp_dir("step_stall");
+    let ckpt = dir.join("ckpts");
+    let cfg = write_elastic_cfg(&dir, 4, &ckpt, 4, r#", "max_respawns": 0, "step_timeout_s": 0.5"#);
+    let out = run_repro(
+        &["train", "--config", cfg.to_str().unwrap()],
+        &[
+            ("NANOGNS_FAULT_PLAN", "step.stall@2,ms:3000,worker:1"),
+            ("NANOGNS_RANK_WORKERS", "2"),
+        ],
+    );
+    assert_exit_ok(&out);
+    let err = stderr_str(&out);
+    assert_no_panic(&err);
+    assert!(err.contains("deadline exceeded"), "stall not detected:\n{err}");
+    assert!(err.contains("down:"), "stalled rank not dropped:\n{err}");
+    assert_eq!(ckpt_summary(&ckpt.join("latest.ckpt")), (4, 1));
+}
+
+/// The acceptance scenario for the integrity chain, in-process: with
+/// `keep_last = 3` retention, corrupt the *newest* step checkpoint and
+/// resume from it. The chain skips it, loads the previous good one, and
+/// the re-run trajectory is bitwise identical to the uncrashed run.
+#[test]
+fn resume_falls_back_past_corrupt_newest_checkpoint() {
+    let dir = temp_dir("chain_fallback");
+    let mut cfg = TrainConfig::quickstart("nano", 8);
+    cfg.ranks = 2;
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep_last = 3;
+    let mut full = Trainer::new(&ReferenceFactory, cfg.clone()).unwrap();
+    let want = full.run().unwrap();
+    assert_eq!(want.records.len(), 8);
+
+    // keep_last = 3 pruned step-2; 4/6/8 survive.
+    assert!(!dir.join("step-00000002.ckpt").exists(), "retention never pruned");
+    for s in ["step-00000004.ckpt", "step-00000006.ckpt", "step-00000008.ckpt"] {
+        assert!(dir.join(s).exists(), "{s} missing");
+    }
+
+    // Corrupt the newest step checkpoint (flip a payload byte; the
+    // per-section CRC must reject it).
+    let newest = dir.join("step-00000008.ckpt");
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let at = bytes.len() * 3 / 4;
+    bytes[at] ^= 0x01;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    let mut resumed = Trainer::resume(&ReferenceFactory, cfg, &newest).unwrap();
+    assert_eq!(resumed.runner.step, 6, "must fall back to step-6, not load corrupt step-8");
+    let tail = resumed.run().unwrap();
+    assert_eq!(tail.records.len(), 2);
+    for (a, b) in tail.records.iter().zip(&want.records[6..]) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "step {}: resumed loss {} vs original {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.gns_total.to_bits(), b.gns_total.to_bits(), "step {}: gns", a.step);
+    }
+}
+
+/// A checkpoint failure that never recovers must not be silent: the
+/// writer degrades during the run (training continues), and the
+/// end-of-run barrier turns the sticky condition into a hard error —
+/// which `repro train` exits nonzero on.
+#[test]
+fn persistent_checkpoint_failure_fails_the_run_loudly() {
+    let dir = temp_dir("persistent_ckpt_fail");
+    let ckpt = dir.join("ckpts");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let mut cfg = TrainConfig::quickstart("nano", 4);
+    cfg.checkpoint_dir = ckpt.to_string_lossy().into_owned();
+    let mut tr = Trainer::new(&ReferenceFactory, cfg).unwrap();
+    tr.step().unwrap();
+    // Every publish from here on fails: the checkpoint "dir" is a file.
+    std::fs::remove_dir_all(&ckpt).unwrap();
+    std::fs::write(&ckpt, b"not a directory").unwrap();
+    // Submission itself must not error (training goes on)...
+    tr.checkpoint_now().unwrap();
+    // ... but the end-of-run barrier must refuse to call this run clean.
+    let err = tr.wait_checkpoints().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checkpoint writes degraded"),
+        "got: {err:#}"
+    );
+}
