@@ -23,31 +23,20 @@ fn main() -> Result<()> {
     let entry = factory.describe(&model)?;
     let tokens_per_accum = (entry.microbatch * entry.seq_len) as u64;
 
-    let cfg = TrainConfig {
-        model: model.clone(),
-        artifacts: "artifacts".into(),
-        steps,
-        seed: 0,
-        ranks: 1,
-        lr: LrSchedule {
-            max_lr: 1e-3,
-            min_lr: 1e-4,
-            warmup_steps: steps / 20 + 1,
-            decay_steps: steps,
-        },
-        batch_size: BatchSizeSchedule::Linear {
-            min_accum: 1,
-            max_accum: 4,
-            ramp_tokens: steps * 2 * tokens_per_accum,
-        },
-        gns_alpha: 0.05,
-        corpus_bytes: 1 << 20,
-        eval_every: 0,
-        metrics_path: format!("results/e2e_{model}.csv"),
-        checkpoint_dir: String::new(),
-        checkpoint_every: 0,
-        resume: String::new(),
+    let mut cfg = TrainConfig::quickstart(&model, steps);
+    cfg.lr = LrSchedule {
+        max_lr: 1e-3,
+        min_lr: 1e-4,
+        warmup_steps: steps / 20 + 1,
+        decay_steps: steps,
     };
+    cfg.batch_size = BatchSizeSchedule::Linear {
+        min_accum: 1,
+        max_accum: 4,
+        ramp_tokens: steps * 2 * tokens_per_accum,
+    };
+    cfg.corpus_bytes = 1 << 20;
+    cfg.metrics_path = format!("results/e2e_{model}.csv");
 
     println!(
         "e2e: training {model} ({:.2}M params) for {steps} steps on {}",

@@ -23,14 +23,19 @@ pub const TRAIN_USAGE: &str = "\
 USAGE: repro train [--config F.json] [--model NAME] [--steps N] [--seed N]
                    [--metrics F.csv] [--ranks N] [--rank-mode threads|process]
                    [--checkpoint-dir DIR] [--checkpoint-every N] [--keep-last N]
-                   [--resume CKPT] [--backend reference|pjrt] [--artifacts DIR]
-                   [--json]
+                   [--resume CKPT] [--norm KIND] [--placement PLACEMENT]
+                   [--backend reference|pjrt] [--artifacts DIR] [--json]
   --rank-mode  how data-parallel ranks execute: scoped threads in this
                process (threads, default) or supervised child processes
                with crash reconciliation (process)
   --keep-last N  retain only the newest N step checkpoints (N >= 1;
                latest.ckpt is always kept). N >= 2 gives --resume a
                fallback chain past a corrupt newest checkpoint.
+  --norm       normalization kind: layernorm (default) | rmsnorm. Also
+               settable via NANOGNS_NORM or the \"norm_kind\" config key;
+               sources that disagree are an error.
+  --placement  normalization placement: preln (default) | postln | periln.
+               Also NANOGNS_PLACEMENT / \"norm_placement\" config key.
   --json    emit a machine-readable run summary on stdout (human logs go
             to stderr)
 ";
@@ -46,11 +51,14 @@ USAGE: repro serve [train flags ...] [--port N] [--bind ADDR] [--ring-capacity N
 ";
 
 pub const FIGURES_USAGE: &str = "\
-USAGE: repro figures (--fig N | --table N | --all) [--model NAME] [--steps N]
-                     [--seeds N] [--ranks N] [--backend reference|pjrt]
-                     [--artifacts DIR] [--json]
+USAGE: repro figures (--fig N | --table N | --report NAME | --all)
+                     [--model NAME] [--steps N] [--seeds N] [--ranks N]
+                     [--backend reference|pjrt] [--artifacts DIR] [--json]
   Figures 2..16 map to the paper (8 = bench-only; 11..13 need pjrt),
-  tables 1..2. Exactly one of --fig/--table/--all must be given.
+  tables 1..2. Exactly one of --fig/--table/--report/--all must be given.
+  --report predictor   train every cell of the normalization matrix
+            (norm kind x placement) and report per-layer GNS trajectories
+            plus the norm-only vs total GNS fit per cell
   --json    print the generated artifact paths as JSON on stdout
 ";
 
@@ -60,11 +68,12 @@ USAGE: repro info [--backend reference|pjrt] [--artifacts DIR] [--json]
 ";
 
 pub const INSPECT_USAGE: &str = "\
-USAGE: repro inspect PATH [--kind checkpoint|bench|tracker] [--field NAME] [--json]
+USAGE: repro inspect PATH [--kind checkpoint|bench|tracker|predictor] [--field NAME] [--json]
   Inspects an on-disk artifact without loading tensors or a backend:
-    checkpoint  v3 checkpoint header (step, tokens, seed, lr-scale, ...)
+    checkpoint  v3 checkpoint header (step, tokens, norm-kind, lr-scale, ...)
     bench       BENCH_*.json / bench/baseline.json report (medians, ...)
     tracker     GNS tracker state embedded in a v3 checkpoint
+    predictor   results/predictor_report.json (verdicts, fits per cell)
   The kind is sniffed from the file when --kind is omitted. With --field,
   prints that one field; with --json, prints the full object as JSON;
   with neither, prints every field as `name = value` lines.
@@ -220,6 +229,8 @@ const TRAIN_VALUED: &[&str] = &[
     "checkpoint-every",
     "keep-last",
     "resume",
+    "norm",
+    "placement",
     "backend",
     "artifacts",
 ];
@@ -240,6 +251,11 @@ pub struct TrainArgs {
     /// `--keep-last N` retention override; `None` keeps the config value.
     pub keep_last: Option<usize>,
     pub resume: Option<String>,
+    /// Raw `--norm` value; resolved (against env + config sources, with
+    /// conflict rejection) by `crate::norms::resolve` in the launcher.
+    pub norm: Option<String>,
+    /// Raw `--placement` value; same resolution story.
+    pub placement: Option<String>,
     pub backend: String,
     pub artifacts: String,
     pub json: bool,
@@ -277,6 +293,8 @@ impl TrainArgs {
             checkpoint_every: p.opt_num("checkpoint-every")?,
             keep_last,
             resume: p.value("resume").map(str::to_string),
+            norm: p.value("norm").map(str::to_string),
+            placement: p.value("placement").map(str::to_string),
             backend: p.value_or("backend", "reference"),
             artifacts: p.value_or("artifacts", "artifacts"),
             json: p.has("json"),
@@ -301,6 +319,8 @@ const SERVE_VALUED: &[&str] = &[
     "checkpoint-every",
     "keep-last",
     "resume",
+    "norm",
+    "placement",
     "backend",
     "artifacts",
     "port",
@@ -346,13 +366,16 @@ impl ServeArgs {
 // ---------------------------------------------------------------------------
 
 const FIGURES_VALUED: &[&str] =
-    &["fig", "table", "model", "steps", "seeds", "ranks", "backend", "artifacts"];
+    &["fig", "table", "report", "model", "steps", "seeds", "ranks", "backend", "artifacts"];
 const FIGURES_SWITCHES: &[&str] = &["all", "json", "help"];
 
 #[derive(Debug, Clone)]
 pub struct FiguresArgs {
     pub fig: Option<u32>,
     pub table: Option<u32>,
+    /// Named report ("predictor": the normalization-matrix GNS
+    /// predictor report).
+    pub report: Option<String>,
     pub all: bool,
     pub model: String,
     pub steps: u64,
@@ -376,6 +399,7 @@ impl FiguresArgs {
         let out = Self {
             fig: p.opt_num("fig")?,
             table: p.opt_num("table")?,
+            report: p.value("report").map(str::to_string),
             all: p.has("all"),
             model: p.value_or("model", "micro"),
             steps: p.num("steps", 60u64)?,
@@ -389,9 +413,13 @@ impl FiguresArgs {
         if !out.help {
             let selectors = usize::from(out.fig.is_some())
                 + usize::from(out.table.is_some())
+                + usize::from(out.report.is_some())
                 + usize::from(out.all);
             if selectors != 1 {
-                bail!("pass exactly one of --fig N, --table N, or --all\n\n{FIGURES_USAGE}");
+                bail!(
+                    "pass exactly one of --fig N, --table N, --report NAME, or --all\
+                     \n\n{FIGURES_USAGE}"
+                );
             }
         }
         Ok(out)
@@ -660,6 +688,30 @@ mod tests {
         // serve shares the train flag set
         let a = ServeArgs::parse(&v(&["--keep-last", "2"])).unwrap();
         assert_eq!(a.train.keep_last, Some(2));
+    }
+
+    #[test]
+    fn norm_and_placement_flags_pass_through() {
+        let a = TrainArgs::parse(&v(&[])).unwrap();
+        assert_eq!(a.norm, None);
+        assert_eq!(a.placement, None);
+        let a = TrainArgs::parse(&v(&["--norm", "rms", "--placement", "peri-ln"])).unwrap();
+        assert_eq!(a.norm.as_deref(), Some("rms"));
+        assert_eq!(a.placement.as_deref(), Some("peri-ln"));
+        // serve shares the train flag set
+        let a = ServeArgs::parse(&v(&["--norm", "layernorm"])).unwrap();
+        assert_eq!(a.train.norm.as_deref(), Some("layernorm"));
+        let err = TrainArgs::parse(&v(&["--nrom", "rms"])).unwrap_err().to_string();
+        assert!(err.contains("did you mean --norm?"), "{err}");
+    }
+
+    #[test]
+    fn figures_report_is_a_selector() {
+        let a = FiguresArgs::parse(&v(&["--report", "predictor"])).unwrap();
+        assert_eq!(a.report.as_deref(), Some("predictor"));
+        let err =
+            FiguresArgs::parse(&v(&["--report", "predictor", "--fig", "5"])).unwrap_err();
+        assert!(err.to_string().contains("exactly one"), "{err}");
     }
 
     #[test]

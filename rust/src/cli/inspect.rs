@@ -32,6 +32,8 @@ pub enum Kind {
     Bench,
     /// GNS tracker state embedded in a v3 checkpoint.
     Tracker,
+    /// `results/predictor_report.json` (the norm/placement matrix).
+    Predictor,
 }
 
 impl fmt::Display for Kind {
@@ -40,6 +42,7 @@ impl fmt::Display for Kind {
             Kind::Checkpoint => "checkpoint",
             Kind::Bench => "bench",
             Kind::Tracker => "tracker",
+            Kind::Predictor => "predictor",
         })
     }
 }
@@ -51,13 +54,15 @@ impl FromStr for Kind {
             "checkpoint" | "ckpt" => Ok(Kind::Checkpoint),
             "bench" | "report" => Ok(Kind::Bench),
             "tracker" | "gns" => Ok(Kind::Tracker),
-            other => bail!("unknown kind {other:?} (checkpoint|bench|tracker)"),
+            "predictor" | "matrix" => Ok(Kind::Predictor),
+            other => bail!("unknown kind {other:?} (checkpoint|bench|tracker|predictor)"),
         }
     }
 }
 
-/// Decide what a file is from its first bytes: checkpoint magic wins,
-/// anything that parses as JSON is a bench report.
+/// Decide what a file is from its first bytes: checkpoint magic wins; a
+/// JSON file stamped `"report":"predictor"` is a predictor report;
+/// anything else that parses as JSON is a bench report.
 pub fn sniff_kind(path: &str) -> Result<Kind> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
     if bytes.starts_with(b"NGNSCKP3")
@@ -68,9 +73,12 @@ pub fn sniff_kind(path: &str) -> Result<Kind> {
     }
     let text = std::str::from_utf8(&bytes)
         .map_err(|_| anyhow!("{path:?} is neither a checkpoint nor JSON"))?;
-    Value::parse(text)
-        .map(|_| Kind::Bench)
-        .map_err(|_| anyhow!("{path:?} is neither a checkpoint nor JSON"))
+    let v = Value::parse(text)
+        .map_err(|_| anyhow!("{path:?} is neither a checkpoint nor JSON"))?;
+    match v.opt("report").and_then(|r| r.as_str().ok()) {
+        Some("predictor") => Ok(Kind::Predictor),
+        _ => Ok(Kind::Bench),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -123,6 +131,8 @@ field_enum!(CheckpointField {
     Loaders => "loaders" ["cursors", "ranks"],
     Tensors => "tensors" [],
     Tracker => "tracker" ["gns"],
+    NormKind => "norm-kind" ["norm_kind", "norm"],
+    NormPlacement => "norm-placement" ["norm_placement", "placement"],
 });
 
 field_enum!(BenchField {
@@ -131,6 +141,14 @@ field_enum!(BenchField {
     Entries => "entries" ["count"],
     Medians => "medians" ["median", "median-ns", "median_ns"],
     Throughput => "throughput" ["thr"],
+});
+
+field_enum!(PredictorField {
+    Model => "model" [],
+    Steps => "steps" [],
+    Cells => "cells" ["count"],
+    Verdicts => "verdicts" ["verdict"],
+    Fits => "fits" ["fit"],
 });
 
 field_enum!(GnsField {
@@ -177,6 +195,50 @@ pub fn checkpoint_field(header: &Value, field: CheckpointField) -> Result<Value>
         CheckpointField::Loaders => Value::Num(header.get("loaders")?.as_arr()?.len() as f64),
         CheckpointField::Tensors => Value::Num(header.get("tensors")?.as_arr()?.len() as f64),
         CheckpointField::Tracker => header.get("tracker")?.clone(),
+        // Absent on pre-matrix checkpoints: decode through the same
+        // defaulting path resume uses, so inspect and resume agree.
+        CheckpointField::NormKind => {
+            Value::Str(checkpoint::variant_from_header(header)?.0.name().into())
+        }
+        CheckpointField::NormPlacement => {
+            Value::Str(checkpoint::variant_from_header(header)?.1.name().into())
+        }
+    })
+}
+
+/// One `"norm/placement"` key per matrix cell, in report order.
+fn predictor_cells(report: &Value) -> Result<Vec<(String, &Value)>> {
+    report
+        .get("cells")?
+        .as_arr()?
+        .iter()
+        .map(|c| {
+            let key =
+                format!("{}/{}", c.get("norm_kind")?.as_str()?, c.get("norm_placement")?.as_str()?);
+            Ok((key, c))
+        })
+        .collect()
+}
+
+pub fn predictor_field(report: &Value, field: PredictorField) -> Result<Value> {
+    Ok(match field {
+        PredictorField::Model => report.get("model")?.clone(),
+        PredictorField::Steps => report.get("steps")?.clone(),
+        PredictorField::Cells => Value::Num(predictor_cells(report)?.len() as f64),
+        PredictorField::Verdicts => {
+            let mut m = BTreeMap::new();
+            for (key, c) in predictor_cells(report)? {
+                m.insert(key, c.get("verdict")?.clone());
+            }
+            Value::Obj(m)
+        }
+        PredictorField::Fits => {
+            let mut m = BTreeMap::new();
+            for (key, c) in predictor_cells(report)? {
+                m.insert(key, c.get("fit")?.clone());
+            }
+            Value::Obj(m)
+        }
     })
 }
 
@@ -337,6 +399,24 @@ pub fn run(args: &InspectArgs) -> Result<String> {
                 }
             }
         }
+        Kind::Predictor => {
+            let text = std::fs::read_to_string(&args.path)
+                .with_context(|| format!("reading {:?}", args.path))?;
+            let report = Value::parse(&text)
+                .with_context(|| format!("parsing {:?} as a predictor report", args.path))?;
+            match (&args.field, args.json) {
+                (Some(f), _) => Ok(render(&predictor_field(&report, f.parse()?)?)),
+                (None, true) => Ok(report.to_string()),
+                (None, false) => {
+                    let mut out = String::new();
+                    for f in PredictorField::ALL {
+                        let v = predictor_field(&report, *f)?;
+                        out.push_str(&format!("{f} = {}\n", render(&v)));
+                    }
+                    Ok(out)
+                }
+            }
+        }
     }
 }
 
@@ -354,6 +434,9 @@ mod tests {
         }
         for f in GnsField::ALL {
             assert_eq!(f.to_string().parse::<GnsField>().unwrap(), *f);
+        }
+        for f in PredictorField::ALL {
+            assert_eq!(f.to_string().parse::<PredictorField>().unwrap(), *f);
         }
     }
 
@@ -386,6 +469,13 @@ mod tests {
         let bench = dir.join("BENCH_x.json");
         std::fs::write(&bench, "{}").unwrap();
         assert_eq!(sniff_kind(bench.to_str().unwrap()).unwrap(), Kind::Bench);
+        let pred = dir.join("predictor_report.json");
+        std::fs::write(&pred, r#"{"report":"predictor","cells":[]}"#).unwrap();
+        assert_eq!(sniff_kind(pred.to_str().unwrap()).unwrap(), Kind::Predictor);
+        // a different report stamp stays a bench report
+        let other = dir.join("other.json");
+        std::fs::write(&other, r#"{"report":"else"}"#).unwrap();
+        assert_eq!(sniff_kind(other.to_str().unwrap()).unwrap(), Kind::Bench);
         let junk = dir.join("junk.bin");
         std::fs::write(&junk, b"not json at all").unwrap();
         assert!(sniff_kind(junk.to_str().unwrap()).is_err());
@@ -414,6 +504,53 @@ mod tests {
         // report with no _meta: recorded defaults false
         let bare = Value::parse(r#"{"a":{"median_ns":1}}"#).unwrap();
         assert_eq!(bench_field(&bare, BenchField::Recorded).unwrap(), Value::Bool(false));
+    }
+
+    #[test]
+    fn predictor_fields_extract() {
+        let r = Value::parse(
+            r#"{
+                "report": "predictor", "model": "nano", "steps": 24,
+                "cells": [
+                    {"norm_kind": "layernorm", "norm_placement": "preln",
+                     "verdict": "holds", "fit": {"r2": 0.98}},
+                    {"norm_kind": "rmsnorm", "norm_placement": "periln",
+                     "verdict": "weak", "fit": {"r2": 0.4}}
+                ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(predictor_field(&r, PredictorField::Model).unwrap(), Value::Str("nano".into()));
+        assert_eq!(predictor_field(&r, PredictorField::Steps).unwrap(), Value::Num(24.0));
+        assert_eq!(predictor_field(&r, PredictorField::Cells).unwrap(), Value::Num(2.0));
+        let v = predictor_field(&r, PredictorField::Verdicts).unwrap();
+        assert_eq!(v.get("layernorm/preln").unwrap(), &Value::Str("holds".into()));
+        assert_eq!(v.get("rmsnorm/periln").unwrap(), &Value::Str("weak".into()));
+        let fits = predictor_field(&r, PredictorField::Fits).unwrap();
+        assert_eq!(fits.get("rmsnorm/periln").unwrap().get("r2").unwrap(), &Value::Num(0.4));
+        // malformed cell: missing verdict is an error, not a silent skip
+        let bad = Value::parse(
+            r#"{"cells": [{"norm_kind": "layernorm", "norm_placement": "preln"}]}"#,
+        )
+        .unwrap();
+        assert!(predictor_field(&bad, PredictorField::Verdicts).is_err());
+    }
+
+    #[test]
+    fn checkpoint_variant_fields_default_for_old_headers() {
+        // pre-matrix header: no norm keys → the defaults resume assumes
+        let header = Value::parse(r#"{"model": "nano"}"#).unwrap();
+        let k = checkpoint_field(&header, CheckpointField::NormKind).unwrap();
+        assert_eq!(k, Value::Str("layernorm".into()));
+        let p = checkpoint_field(&header, CheckpointField::NormPlacement).unwrap();
+        assert_eq!(p, Value::Str("preln".into()));
+        // stamped header round-trips the stamped names
+        let header =
+            Value::parse(r#"{"norm_kind": "rmsnorm", "norm_placement": "periln"}"#).unwrap();
+        let k = checkpoint_field(&header, CheckpointField::NormKind).unwrap();
+        assert_eq!(k, Value::Str("rmsnorm".into()));
+        let p = checkpoint_field(&header, CheckpointField::NormPlacement).unwrap();
+        assert_eq!(p, Value::Str("periln".into()));
     }
 
     fn sample_tracker() -> TrackerState {

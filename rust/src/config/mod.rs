@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::norms::{NormKind, NormPlacement};
 use crate::schedule::{BatchSizeSchedule, LrSchedule};
 use crate::util::json::Value;
 
@@ -57,6 +58,13 @@ pub struct TrainConfig {
     pub elastic: ElasticConfig,
     /// Telemetry daemon settings (`repro serve`); inert for plain `train`.
     pub serve: ServeConfig,
+    /// Normalization kind (`"norm_kind"` key). `None` = key absent; the
+    /// launcher resolves it against `--norm`/`NANOGNS_NORM` (conflicts
+    /// are rejected) and the default cell is LayerNorm.
+    pub norm_kind: Option<NormKind>,
+    /// Normalization placement (`"norm_placement"` key); same resolution
+    /// story via `--placement`/`NANOGNS_PLACEMENT`, defaulting to Pre-LN.
+    pub norm_placement: Option<NormPlacement>,
 }
 
 /// Rank-worker execution mode. Both modes are bitwise interchangeable at
@@ -328,7 +336,25 @@ impl TrainConfig {
                 Some(s) => parse_serve(s)?,
                 None => ServeConfig::default(),
             },
+            norm_kind: match v.opt("norm_kind") {
+                Some(n) => Some(n.as_str()?.parse()?),
+                None => None,
+            },
+            norm_placement: match v.opt("norm_placement") {
+                Some(p) => Some(p.as_str()?.parse()?),
+                None => None,
+            },
         })
+    }
+
+    /// The resolved normalization kind (default cell when unset).
+    pub fn norm(&self) -> NormKind {
+        self.norm_kind.unwrap_or_default()
+    }
+
+    /// The resolved normalization placement (default cell when unset).
+    pub fn placement(&self) -> NormPlacement {
+        self.norm_placement.unwrap_or_default()
     }
 
     /// A small default used by tests and the quickstart example.
@@ -354,6 +380,8 @@ impl TrainConfig {
             rank_mode: RankMode::Threads,
             elastic: ElasticConfig::default(),
             serve: ServeConfig::default(),
+            norm_kind: None,
+            norm_placement: None,
         }
     }
 }
@@ -595,6 +623,40 @@ mod tests {
             );
             assert!(TrainConfig::from_json_text(&text).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn norm_variant_keys_parse_and_default() {
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "norm_kind": "rms", "norm_placement": "peri-ln"
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.norm_kind, Some(NormKind::RmsNorm));
+        assert_eq!(cfg.norm_placement, Some(NormPlacement::PeriLn));
+        assert_eq!(cfg.norm(), NormKind::RmsNorm);
+        assert_eq!(cfg.placement(), NormPlacement::PeriLn);
+
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2}
+        }"#;
+        let cfg = TrainConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.norm_kind, None);
+        assert_eq!(cfg.norm(), NormKind::LayerNorm);
+        assert_eq!(cfg.placement(), NormPlacement::PreLn);
+
+        let text = r#"{
+            "model": "nano", "steps": 5, "seed": 0,
+            "lr": {"max_lr": 1e-3, "min_lr": 1e-4, "warmup_steps": 1, "decay_steps": 5},
+            "batch_size": {"kind": "fixed", "accum": 2},
+            "norm_kind": "rmsnrom"
+        }"#;
+        let err = TrainConfig::from_json_text(text).unwrap_err();
+        assert!(format!("{err:#}").contains("rmsnorm"), "{err:#}");
     }
 
     #[test]

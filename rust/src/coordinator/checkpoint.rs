@@ -36,6 +36,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::gns::{EmaParts, TrackerState};
+use crate::norms::{NormKind, NormPlacement};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{Buffer, ModelEntry};
 use crate::util::crc::{crc32, Crc32};
@@ -128,6 +129,12 @@ pub fn load(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<Vec<Buffer>> {
 #[derive(Debug, Clone)]
 pub struct TrainState {
     pub model: String,
+    /// Normalization variant the run was trained under. Checkpoints
+    /// predating the variant matrix decode as the historical default
+    /// (LayerNorm / Pre-LN); resuming under any *other* variant is
+    /// refused — the parameter layout and trajectory both differ.
+    pub norm_kind: NormKind,
+    pub norm_placement: NormPlacement,
     /// Run seed: the corpus and loader streams derive from it, so a
     /// resume under a different seed would silently fork the data.
     pub seed: u64,
@@ -151,6 +158,8 @@ pub struct TrainState {
 /// three model-sized tensor sets.
 pub struct TrainStateView<'a> {
     pub model: &'a str,
+    pub norm_kind: NormKind,
+    pub norm_placement: NormPlacement,
     pub seed: u64,
     pub corpus_bytes: u64,
     pub step: u64,
@@ -270,6 +279,8 @@ fn header_json(st: &TrainStateView<'_>, entry: &ModelEntry, crcs: &[u32; 3]) -> 
     let mut top = std::collections::BTreeMap::new();
     top.insert("version".into(), Value::Num(VERSION_V3 as f64));
     top.insert("model".into(), Value::Str(st.model.to_string()));
+    top.insert("norm_kind".into(), Value::Str(st.norm_kind.name().into()));
+    top.insert("norm_placement".into(), Value::Str(st.norm_placement.name().into()));
     top.insert("seed".into(), u64_str(st.seed));
     top.insert("corpus_bytes".into(), u64_str(st.corpus_bytes));
     top.insert("step".into(), u64_str(st.step));
@@ -746,6 +757,22 @@ pub fn read_header(path: impl AsRef<Path>) -> Result<Value> {
     read_header_from(&mut r)
 }
 
+/// The normalization variant recorded in a v3 header. Headers written
+/// before the variant matrix have no such keys and decode as the
+/// historical default cell (LayerNorm / Pre-LN); a present-but-garbled
+/// value is an error, never a silent default.
+pub fn variant_from_header(header: &Value) -> Result<(NormKind, NormPlacement)> {
+    let norm = match header.get("norm_kind") {
+        Ok(v) => v.as_str()?.parse().context("checkpoint norm_kind")?,
+        Err(_) => NormKind::default(),
+    };
+    let placement = match header.get("norm_placement") {
+        Ok(v) => v.as_str()?.parse().context("checkpoint norm_placement")?,
+        Err(_) => NormPlacement::default(),
+    };
+    Ok((norm, placement))
+}
+
 /// Parse the GNS tracker state out of a v3 header ([`read_header`]).
 pub fn tracker_from_header(header: &Value) -> Result<TrackerState> {
     let tracker_v = header.get("tracker")?;
@@ -840,9 +867,12 @@ pub fn load_state(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<TrainSta
         "trailing bytes after checkpoint payload (corrupt file?)"
     );
     let [params, m, v] = grouped;
+    let (norm_kind, norm_placement) = variant_from_header(&header)?;
 
     Ok(TrainState {
         model: header.get("model")?.as_str()?.to_string(),
+        norm_kind,
+        norm_placement,
         seed: parse_u64_str(header.get("seed")?)?,
         corpus_bytes: parse_u64_str(header.get("corpus_bytes")?)?,
         step: parse_u64_str(header.get("step")?)?,

@@ -29,12 +29,25 @@ use crate::util::faultkit::{self, StepFault};
 use crate::N_TYPES;
 
 /// Build the backend factory named in the coordinator's `Hello`. Mirrors
-/// the CLI's factory selection, minus the interactive error text.
+/// the CLI's factory selection, minus the interactive error text. The
+/// normalization variant rides over on NANOGNS_NORM / NANOGNS_PLACEMENT
+/// (the launcher exports the resolved values before spawning workers),
+/// so the child builds bitwise the same model as the coordinator.
 fn factory_for(backend: &str, artifacts: &str) -> Result<Box<dyn BackendFactory>> {
     #[cfg(not(feature = "pjrt"))]
     let _ = artifacts;
     match backend {
-        "reference" => Ok(Box::new(crate::runtime::ReferenceFactory)),
+        "reference" => {
+            let norm = match std::env::var("NANOGNS_NORM") {
+                Ok(v) => v.parse().context("rank worker: NANOGNS_NORM")?,
+                Err(_) => crate::norms::NormKind::default(),
+            };
+            let placement = match std::env::var("NANOGNS_PLACEMENT") {
+                Ok(v) => v.parse().context("rank worker: NANOGNS_PLACEMENT")?,
+                Err(_) => crate::norms::NormPlacement::default(),
+            };
+            Ok(Box::new(crate::runtime::ReferenceVariantFactory::new(norm, placement)))
+        }
         #[cfg(feature = "pjrt")]
         "pjrt" => Ok(Box::new(crate::runtime::PjrtFactory::new(artifacts)?)),
         other => bail!("rank worker: unsupported backend {other:?}"),

@@ -372,6 +372,8 @@ impl Trainer {
         let (m, v) = self.runner.moments();
         checkpoint::TrainStateView {
             model: &self.cfg.model,
+            norm_kind: self.cfg.norm(),
+            norm_placement: self.cfg.placement(),
             seed: self.cfg.seed,
             corpus_bytes: self.cfg.corpus_bytes as u64,
             step: self.runner.step,
@@ -448,6 +450,15 @@ impl Trainer {
             "checkpoint is for model {:?}, config says {:?}",
             st.model,
             self.cfg.model
+        );
+        ensure!(
+            st.norm_kind == self.cfg.norm() && st.norm_placement == self.cfg.placement(),
+            "checkpoint was trained as {}/{}; config says {}/{} — the parameter layout and \
+             trajectory differ across variants, resume refused",
+            st.norm_kind,
+            st.norm_placement,
+            self.cfg.norm(),
+            self.cfg.placement()
         );
         ensure!(
             st.seed == self.cfg.seed && st.corpus_bytes == self.cfg.corpus_bytes as u64,

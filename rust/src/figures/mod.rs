@@ -7,6 +7,7 @@
 pub mod costs;
 #[cfg(feature = "pjrt")]
 pub mod instability;
+pub mod predictor;
 pub mod simulation;
 pub mod training;
 

@@ -1,0 +1,349 @@
+//! `repro figures --report predictor`: the normalization/architecture
+//! matrix sweep (ROADMAP item 3).
+//!
+//! Trains every cell of [`NormKind::ALL`] × [`NormPlacement::ALL`] on the
+//! reference backend and scores the paper's central claim per cell: the
+//! norm-layer-only per-example GNS predicts the total GNS. For each cell
+//! we fit total GNS on norm-only GNS over the post-warmup window and
+//! report the OLS slope, `r²`, and the mean total/norm-only ratio, plus
+//! a per-layer-type mean-GNS summary and a downsampled trajectory. The
+//! machine-readable report lands at [`REPORT_PATH`]; a rendered verdict
+//! table goes to stdout.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::StepRecord;
+use crate::coordinator::Trainer;
+use crate::gns::ema::ema_series;
+use crate::gns::linreg;
+use crate::norms::{NormKind, NormPlacement};
+use crate::runtime::ReferenceVariantFactory;
+use crate::schedule::LrSchedule;
+use crate::util::json::Value;
+use crate::STATS_ORDER;
+
+/// Where [`report`] writes its JSON artifact.
+pub const REPORT_PATH: &str = "results/predictor_report.json";
+
+/// Offline smoothing constant for the per-layer summary (matches the
+/// Fig. 7 mid-range alpha).
+const ALPHA: f64 = 0.1;
+
+/// Max points kept in each cell's serialized trajectory.
+const TRAJ_POINTS: usize = 32;
+
+/// One scored matrix cell.
+struct Cell {
+    norm: NormKind,
+    placement: NormPlacement,
+    final_loss: f64,
+    /// OLS fit of total GNS on norm-only GNS (post-warmup window), or
+    /// `None` when the window is degenerate (too short / zero variance).
+    slope: Option<f64>,
+    intercept: Option<f64>,
+    r2: Option<f64>,
+    /// mean(total GNS) / mean(norm-only GNS) over the window.
+    ratio: Option<f64>,
+    /// Window points used by the fit.
+    n_fit: usize,
+    /// Mean per-layer-type GNS over the window, in `STATS_ORDER`.
+    per_layer: Vec<f64>,
+    /// Downsampled `(step, gns_norm_only, gns_total)` trajectory.
+    trajectory: Vec<(u64, f64, f64)>,
+}
+
+impl Cell {
+    /// "holds" / "weak" / "breaks": does the norm-only predictor track
+    /// the total GNS in this cell?
+    fn verdict(&self) -> &'static str {
+        match (self.r2, self.ratio) {
+            (Some(r2), Some(ratio)) if r2 >= 0.6 && (0.1..=10.0).contains(&ratio) => "holds",
+            (Some(r2), _) if r2 >= 0.3 => "weak",
+            _ => "breaks",
+        }
+    }
+}
+
+/// Train and score every matrix cell, write [`REPORT_PATH`], and print
+/// the verdict table. All cells share one seed and budget so the only
+/// variable across rows is the normalization variant.
+pub fn report(model: &str, steps: u64) -> Result<()> {
+    println!("Predictor report: norm/placement matrix ({model}, {steps} steps per cell)");
+    let mut cells = Vec::new();
+    for norm in NormKind::ALL {
+        for placement in NormPlacement::ALL {
+            cells.push(run_cell(model, steps, norm, placement)?);
+        }
+    }
+
+    println!(
+        "{:>10} {:>8} {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "norm", "place", "final_loss", "slope", "r2", "ratio", "verdict"
+    );
+    for c in &cells {
+        println!(
+            "{:>10} {:>8} {:>10.4} {:>8} {:>8} {:>8} {:>8}",
+            c.norm,
+            c.placement,
+            c.final_loss,
+            fmt_opt(c.slope),
+            fmt_opt(c.r2),
+            fmt_opt(c.ratio),
+            c.verdict()
+        );
+    }
+
+    let path = super::results_path("predictor_report.json")?;
+    std::fs::write(&path, report_json(model, steps, &cells).to_string())?;
+    println!("(report -> {})", path.display());
+    println!(
+        "shape check (paper): preln/layernorm holds; the norm-only predictor should keep \
+         tracking total GNS across the matrix"
+    );
+    Ok(())
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(v) => format!("{v:.3}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Train one cell and score it from its step records.
+fn run_cell(model: &str, steps: u64, norm: NormKind, placement: NormPlacement) -> Result<Cell> {
+    let factory = ReferenceVariantFactory::new(norm, placement);
+    let mut cfg = TrainConfig::quickstart(model, steps);
+    cfg.seed = 7;
+    cfg.lr = LrSchedule {
+        max_lr: 1e-3,
+        min_lr: 1e-4,
+        warmup_steps: steps / 20 + 1,
+        decay_steps: steps,
+    };
+    cfg.corpus_bytes = 1 << 19;
+    cfg.norm_kind = Some(norm);
+    cfg.norm_placement = Some(placement);
+    let mut tr = Trainer::new(&factory, cfg)?;
+    let out = tr.run()?;
+    println!("  trained {norm}/{placement}: final loss {:.4}", out.final_loss);
+    Ok(score_cell(norm, placement, out.final_loss, &out.records))
+}
+
+/// The scoring half, split from training so tests can feed synthetic
+/// records.
+fn score_cell(
+    norm: NormKind,
+    placement: NormPlacement,
+    final_loss: f64,
+    records: &[StepRecord],
+) -> Cell {
+    // Skip the estimator-seeding warmup, like the Fig. 7 analysis.
+    let skip = records.len() / 10;
+    let window = &records[skip.min(records.len())..];
+
+    let pairs: Vec<(f64, f64)> = window
+        .iter()
+        .filter(|r| r.gns_layernorm.is_finite() && r.gns_total.is_finite())
+        .map(|r| (r.gns_layernorm, r.gns_total))
+        .collect();
+    let x: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let y: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+    let fit = linreg(&x, &y);
+    let mean_x = mean(&x);
+    let mean_y = mean(&y);
+    let ratio = match (mean_x, mean_y) {
+        (Some(mx), Some(my)) if mx.abs() > 1e-300 => Some(my / mx),
+        _ => None,
+    };
+
+    // Per-layer mean GNS: re-smooth the raw components offline at a
+    // fixed alpha, take the ratio last, average the finite tail.
+    let per_layer = (0..STATS_ORDER.len())
+        .map(|t| {
+            let g: Vec<f64> = window.iter().map(|r| r.raw_g_sq[t]).collect();
+            let s: Vec<f64> = window.iter().map(|r| r.raw_s[t]).collect();
+            let gns = ratio_series(&ema_series(&s, ALPHA), &ema_series(&g, ALPHA));
+            let finite: Vec<f64> = gns.into_iter().filter(|v| v.is_finite()).collect();
+            mean(&finite).unwrap_or(f64::NAN)
+        })
+        .collect();
+
+    let stride = records.len().div_ceil(TRAJ_POINTS).max(1);
+    let trajectory = records
+        .iter()
+        .filter(|r| r.step % stride as u64 == 0 || r.step == records.len() as u64)
+        .map(|r| (r.step, r.gns_layernorm, r.gns_total))
+        .collect();
+
+    Cell {
+        norm,
+        placement,
+        final_loss,
+        slope: fit.as_ref().map(|f| f.slope),
+        intercept: fit.as_ref().map(|f| f.intercept),
+        r2: fit.as_ref().map(|f| f.r * f.r),
+        ratio,
+        n_fit: pairs.len(),
+        per_layer,
+        trajectory,
+    }
+}
+
+fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+}
+
+fn ratio_series(num: &[f64], den: &[f64]) -> Vec<f64> {
+    num.iter()
+        .zip(den)
+        .map(|(&n, &d)| if d.abs() > 1e-300 { n / d } else { f64::NAN })
+        .collect()
+}
+
+fn opt_num(v: Option<f64>) -> Value {
+    v.map(Value::finite_or_null).unwrap_or(Value::Null)
+}
+
+/// The machine-readable report. Shape (checked by CI):
+/// `{"report":"predictor","model","steps","cells":[{...}]}`.
+fn report_json(model: &str, steps: u64, cells: &[Cell]) -> Value {
+    let cell_values = cells
+        .iter()
+        .map(|c| {
+            let mut m = BTreeMap::new();
+            m.insert("norm_kind".into(), Value::Str(c.norm.name().into()));
+            m.insert("norm_placement".into(), Value::Str(c.placement.name().into()));
+            m.insert("final_loss".into(), Value::finite_or_null(c.final_loss));
+            let mut fit = BTreeMap::new();
+            fit.insert("slope".into(), opt_num(c.slope));
+            fit.insert("intercept".into(), opt_num(c.intercept));
+            fit.insert("r2".into(), opt_num(c.r2));
+            fit.insert("ratio".into(), opt_num(c.ratio));
+            fit.insert("n".into(), Value::Num(c.n_fit as f64));
+            m.insert("fit".into(), Value::Obj(fit));
+            m.insert("verdict".into(), Value::Str(c.verdict().into()));
+            let per_layer = STATS_ORDER
+                .iter()
+                .zip(&c.per_layer)
+                .map(|(name, &g)| ((*name).to_string(), Value::finite_or_null(g)))
+                .collect();
+            m.insert("per_layer_gns".into(), Value::Obj(per_layer));
+            let mut traj = BTreeMap::new();
+            traj.insert(
+                "step".into(),
+                Value::Arr(c.trajectory.iter().map(|t| Value::Num(t.0 as f64)).collect()),
+            );
+            traj.insert(
+                "gns_norm_only".into(),
+                Value::Arr(c.trajectory.iter().map(|t| Value::finite_or_null(t.1)).collect()),
+            );
+            traj.insert(
+                "gns_total".into(),
+                Value::Arr(c.trajectory.iter().map(|t| Value::finite_or_null(t.2)).collect()),
+            );
+            m.insert("trajectory".into(), Value::Obj(traj));
+            Value::Obj(m)
+        })
+        .collect();
+
+    let mut top = BTreeMap::new();
+    top.insert("report".into(), Value::Str("predictor".into()));
+    top.insert("model".into(), Value::Str(model.into()));
+    top.insert("steps".into(), Value::Num(steps as f64));
+    top.insert("alpha".into(), Value::Num(ALPHA));
+    top.insert("cells".into(), Value::Arr(cell_values));
+    Value::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::N_TYPES;
+
+    fn rec(step: u64, ln: f64, tot: f64) -> StepRecord {
+        StepRecord {
+            step,
+            tokens: step * 64,
+            loss: 2.0,
+            lr: 1e-3,
+            accum: 1,
+            b_big: 8.0,
+            raw_g_sq: [1.0; N_TYPES],
+            raw_s: [2.0; N_TYPES],
+            raw_g_sq_total: 1.0,
+            raw_s_total: 2.0,
+            gns_layernorm: ln,
+            gns_total: tot,
+            step_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn exact_linear_relation_scores_holds() {
+        // total = 2 * norm-only, exactly: slope 2, r2 1, ratio 2.
+        let records: Vec<StepRecord> =
+            (1..=40).map(|s| rec(s, s as f64 * 0.1, s as f64 * 0.2)).collect();
+        let c = score_cell(NormKind::RmsNorm, NormPlacement::PeriLn, 1.5, &records);
+        assert!((c.slope.unwrap() - 2.0).abs() < 1e-9);
+        assert!((c.r2.unwrap() - 1.0).abs() < 1e-9);
+        assert!((c.ratio.unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(c.verdict(), "holds");
+        assert_eq!(c.per_layer.len(), N_TYPES);
+        // raw s/g = 2 everywhere, so every per-layer mean GNS is 2.
+        for &g in &c.per_layer {
+            assert!((g - 2.0).abs() < 1e-9, "{g}");
+        }
+        assert!(!c.trajectory.is_empty() && c.trajectory.len() <= TRAJ_POINTS + 1);
+    }
+
+    #[test]
+    fn degenerate_windows_break_without_panicking() {
+        // All-NaN GNS: no pairs, no fit, verdict breaks.
+        let records: Vec<StepRecord> = (1..=10).map(|s| rec(s, f64::NAN, f64::NAN)).collect();
+        let c = score_cell(NormKind::LayerNorm, NormPlacement::PreLn, 2.0, &records);
+        assert_eq!(c.n_fit, 0);
+        assert!(c.slope.is_none() && c.r2.is_none() && c.ratio.is_none());
+        assert_eq!(c.verdict(), "breaks");
+        // Empty record set.
+        let c = score_cell(NormKind::LayerNorm, NormPlacement::PostLn, 2.0, &[]);
+        assert_eq!(c.verdict(), "breaks");
+        assert!(c.trajectory.is_empty());
+    }
+
+    #[test]
+    fn report_json_shape_matches_contract() {
+        let records: Vec<StepRecord> =
+            (1..=20).map(|s| rec(s, s as f64, s as f64 * 1.5)).collect();
+        let cells = vec![
+            score_cell(NormKind::LayerNorm, NormPlacement::PreLn, 2.0, &records),
+            score_cell(NormKind::RmsNorm, NormPlacement::PeriLn, 2.1, &records),
+        ];
+        let v = report_json("nano", 20, &cells);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back.get("report").unwrap().as_str().unwrap(), "predictor");
+        assert_eq!(back.get("steps").unwrap().as_u64().unwrap(), 20);
+        let cells = back.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        let c0 = &cells[0];
+        assert_eq!(c0.get("norm_kind").unwrap().as_str().unwrap(), "layernorm");
+        assert_eq!(c0.get("norm_placement").unwrap().as_str().unwrap(), "preln");
+        assert_eq!(c0.get("verdict").unwrap().as_str().unwrap(), "holds");
+        let fit = c0.get("fit").unwrap();
+        assert!((fit.get("slope").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
+        assert!(fit.get("n").unwrap().as_u64().unwrap() > 0);
+        let pl = c0.get("per_layer_gns").unwrap().as_obj().unwrap();
+        assert_eq!(pl.len(), crate::STATS_ORDER.len());
+        let traj = c0.get("trajectory").unwrap();
+        let steps = traj.get("step").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), traj.get("gns_total").unwrap().as_arr().unwrap().len());
+    }
+}

@@ -20,29 +20,16 @@ use crate::telemetry::{CsvLogger, TRAIN_HEADER};
 use crate::{N_TYPES, STATS_ORDER};
 
 fn base_cfg(model: &str, steps: u64, seed: u64) -> TrainConfig {
-    TrainConfig {
-        model: model.into(),
-        artifacts: "artifacts".into(),
-        steps,
-        seed,
-        ranks: 1,
-        lr: LrSchedule {
-            max_lr: 1e-3,
-            min_lr: 1e-4,
-            warmup_steps: steps / 20 + 1,
-            decay_steps: steps,
-        },
-        batch_size: BatchSizeSchedule::Fixed { accum: 2 },
-        gns_alpha: 0.05,
-        corpus_bytes: 1 << 19,
-        eval_every: 0,
-        metrics_path: String::new(),
-        checkpoint_dir: String::new(),
-        checkpoint_every: 0,
-        resume: String::new(),
-        threads: 0,
-        force_scalar: false,
-    }
+    let mut cfg = TrainConfig::quickstart(model, steps);
+    cfg.seed = seed;
+    cfg.lr = LrSchedule {
+        max_lr: 1e-3,
+        min_lr: 1e-4,
+        warmup_steps: steps / 20 + 1,
+        decay_steps: steps,
+    };
+    cfg.corpus_bytes = 1 << 19;
+    cfg
 }
 
 fn write_records(name: &str, records: &[StepRecord]) -> Result<std::path::PathBuf> {

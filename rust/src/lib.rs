@@ -28,6 +28,7 @@ pub mod costmodel;
 pub mod data;
 pub mod figures;
 pub mod gns;
+pub mod norms;
 pub mod runtime;
 pub mod schedule;
 pub mod serve;

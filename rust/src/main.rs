@@ -26,7 +26,8 @@ use nanogns::cli::{self, FiguresArgs, InfoArgs, InspectArgs, RankWorkerArgs, Ser
 use nanogns::config::{RankMode, TrainConfig};
 use nanogns::coordinator::{TrainOutcome, Trainer};
 use nanogns::figures;
-use nanogns::runtime::{BackendFactory, ReferenceFactory};
+use nanogns::norms::{self, NormKind, NormPlacement};
+use nanogns::runtime::{BackendFactory, ReferenceFactory, ReferenceVariantFactory};
 use nanogns::serve::{self, Server, TelemetryHub};
 use nanogns::util::json::Value;
 
@@ -36,9 +37,9 @@ repro — GNS-instrumented training coordinator (nanoGNS-rs)
 USAGE:
   repro train    [--config F.json] [--model NAME] [--steps N] [...] [--json]
   repro serve    [train flags ...] [--port N] [--bind ADDR] [--ring-capacity N]
-  repro figures  (--fig N | --table N | --all) [...] [--json]
+  repro figures  (--fig N | --table N | --report predictor | --all) [...] [--json]
   repro info     [--json]
-  repro inspect  PATH [--kind checkpoint|bench|tracker] [--field NAME] [--json]
+  repro inspect  PATH [--kind checkpoint|bench|tracker|predictor] [--field NAME] [--json]
   repro help
 
 Run `repro <subcommand> --help` for the full per-command flag list.
@@ -56,8 +57,14 @@ threads (same bitwise results); a dead worker is reconciled away and the run
 continues on the survivors. (`repro rank-worker` is the internal child-process
 entry point — the coordinator spawns it, you don't.)
 
+The reference backend trains a normalization/architecture matrix: --norm
+{layernorm|rmsnorm} x --placement {preln|postln|periln} (env NANOGNS_NORM /
+NANOGNS_PLACEMENT, config keys `norm_kind` / `norm_placement`; sources that
+disagree are an error). `repro figures --report predictor` sweeps the matrix
+and scores the norm-only GNS predictor per cell.
+
 FIGURES: 2..16 map to the paper's figures (8 = `cargo bench --features pjrt --bench ln_kernel`;
-11..13 need the pjrt backend), tables 1..2.
+11..13 need the pjrt backend), tables 1..2, reports: predictor.
 ";
 
 #[allow(unused_variables)]
@@ -72,6 +79,23 @@ fn make_factory(backend: &str, artifacts: &str) -> Result<Box<dyn BackendFactory
         }
         other => bail!("unknown backend {other:?} (reference|pjrt)\n{USAGE}"),
     }
+}
+
+/// Train/serve factory selection: like [`make_factory`], but the
+/// reference backend is built at the resolved normalization variant.
+/// Other backends only implement the default cell, so an explicit
+/// variant request on them is an error rather than a silent ignore.
+fn make_variant_factory(backend: &str, cfg: &TrainConfig) -> Result<Box<dyn BackendFactory>> {
+    if backend == "reference" {
+        return Ok(Box::new(ReferenceVariantFactory::new(cfg.norm(), cfg.placement())));
+    }
+    if cfg.norm_kind.is_some() || cfg.norm_placement.is_some() {
+        bail!(
+            "norm/placement variants are only supported on the reference backend \
+             (got --backend {backend})"
+        );
+    }
+    make_factory(backend, &cfg.artifacts)
 }
 
 /// Figs. 11–13 run on raw teacher–student artifacts, pjrt only.
@@ -122,6 +146,37 @@ fn build_train_config(t: &TrainArgs) -> Result<TrainConfig> {
     }
     if let Some(mode) = &t.rank_mode {
         cfg.rank_mode = RankMode::parse(mode)?;
+    }
+    // Normalization variant: flag, env var, and config key must agree
+    // whenever more than one is present (`norms::resolve` rejects
+    // conflicts with a typed error naming both sources).
+    let env_norm = std::env::var("NANOGNS_NORM").ok();
+    cfg.norm_kind = norms::resolve::<NormKind>(
+        "norm kind",
+        &[
+            ("--norm", t.norm.as_deref()),
+            ("NANOGNS_NORM", env_norm.as_deref()),
+            ("config key \"norm_kind\"", cfg.norm_kind.map(|k| k.name())),
+        ],
+    )?;
+    let env_placement = std::env::var("NANOGNS_PLACEMENT").ok();
+    cfg.norm_placement = norms::resolve::<NormPlacement>(
+        "norm placement",
+        &[
+            ("--placement", t.placement.as_deref()),
+            ("NANOGNS_PLACEMENT", env_placement.as_deref()),
+            ("config key \"norm_placement\"", cfg.norm_placement.map(|p| p.name())),
+        ],
+    )?;
+    // Process-mode rank workers rebuild the factory from the
+    // environment, so the resolved variant must ride along. (The value
+    // written back is the one `resolve` agreed on, so overwriting the
+    // env var never changes its meaning.)
+    if let Some(k) = cfg.norm_kind {
+        std::env::set_var("NANOGNS_NORM", k.name());
+    }
+    if let Some(p) = cfg.norm_placement {
+        std::env::set_var("NANOGNS_PLACEMENT", p.name());
     }
     if cfg.threads > 0 && std::env::var("NANOGNS_THREADS").is_err() {
         std::env::set_var("NANOGNS_THREADS", cfg.threads.to_string());
@@ -245,7 +300,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         Box::new(|s| println!("{s}"))
     };
     let cfg = build_train_config(&a)?;
-    let factory = make_factory(&a.backend, &cfg.artifacts)?;
+    let factory = make_variant_factory(&a.backend, &cfg)?;
     let mut tr = build_trainer(factory.as_ref(), cfg, say.as_ref())?;
     let out = tr.run()?;
     if let Some(line) = final_line(&out) {
@@ -274,7 +329,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         cfg.serve.ring_capacity = rc;
     }
     let serve_cfg = cfg.serve.clone();
-    let factory = make_factory(&a.train.backend, &cfg.artifacts)?;
+    let factory = make_variant_factory(&a.train.backend, &cfg)?;
     let say: Box<dyn Fn(String)> = Box::new(|s| println!("{s}"));
     let mut tr = build_trainer(factory.as_ref(), cfg, say.as_ref())?;
 
@@ -355,7 +410,19 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
 
     // Figure ids that actually ran, for the --json artifact listing.
     let mut ran: Vec<u32> = Vec::new();
-    if a.all {
+    let mut report_outputs: Vec<&'static str> = Vec::new();
+    if let Some(r) = &a.report {
+        match r.as_str() {
+            "predictor" => {
+                if a.backend != "reference" {
+                    bail!("--report predictor sweeps the norm matrix on the reference backend only");
+                }
+                figures::predictor::report(&a.model, a.steps)?;
+                report_outputs.push(figures::predictor::REPORT_PATH);
+            }
+            other => bail!("unknown report {other:?} (available: predictor)"),
+        }
+    } else if a.all {
         for t in 1..=2 {
             run_table(t)?;
             println!();
@@ -386,7 +453,8 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
     if a.json {
         let outputs: Vec<Value> = ran
             .iter()
-            .flat_map(|n| fig_outputs(*n))
+            .flat_map(|n| fig_outputs(*n).iter().copied())
+            .chain(report_outputs.iter().copied())
             .filter(|p| std::path::Path::new(p).exists())
             .map(|p| Value::Str(p.to_string()))
             .collect();

@@ -1,0 +1,307 @@
+//! Typed normalization-variant selection: [`NormKind`] × [`NormPlacement`].
+//!
+//! The normalization/architecture matrix (ROADMAP item 3) is addressed
+//! everywhere — config keys, `NANOGNS_NORM`/`NANOGNS_PLACEMENT` env vars,
+//! `--norm`/`--placement` flags, checkpoint headers, the serve surface,
+//! the predictor report — through these two enums. Both follow the
+//! field-selection idiom from `cli::inspect`: canonical lowercase names
+//! via `Display`, forgiving aliases via `FromStr`, and a Levenshtein
+//! did-you-mean on bad values.
+//!
+//! Selection sources are resolved by [`resolve`]: a value may arrive from
+//! any one source (flag, env, config key), and *agreeing* duplicates are
+//! fine, but two sources that disagree are rejected with a typed
+//! [`ConflictError`] instead of silently preferring one layering.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::Result;
+
+/// Which normalization layer the model's norm sites use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NormKind {
+    /// Mean-centered LayerNorm with learnable `γ`/`β` (the paper's config).
+    #[default]
+    LayerNorm,
+    /// RMSNorm: `y = γ ⊙ x / rms(x)` — no centering, no `β`.
+    RmsNorm,
+}
+
+/// Where the normalization layers sit relative to each residual block.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NormPlacement {
+    /// `x += Module(Norm(x))`, plus a final norm (GPT-2 style; default).
+    #[default]
+    PreLn,
+    /// `x = Norm(x + Module(x))` (original transformer).
+    PostLn,
+    /// `x += NormOut(Module(NormIn(x)))` — norms on both module input and
+    /// output (arXiv:2502.02732).
+    PeriLn,
+}
+
+impl NormKind {
+    /// Every kind, in matrix order (stable across releases: report cells
+    /// and CI matrix entries index into this).
+    pub const ALL: [NormKind; 2] = [NormKind::LayerNorm, NormKind::RmsNorm];
+
+    /// Canonical lowercase name (config/JSON/report spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            NormKind::LayerNorm => "layernorm",
+            NormKind::RmsNorm => "rmsnorm",
+        }
+    }
+
+    fn aliases(self) -> &'static [&'static str] {
+        match self {
+            NormKind::LayerNorm => &["layernorm", "ln", "layer-norm"],
+            NormKind::RmsNorm => &["rmsnorm", "rms", "rms-norm"],
+        }
+    }
+}
+
+impl NormPlacement {
+    /// Every placement, in matrix order.
+    pub const ALL: [NormPlacement; 3] =
+        [NormPlacement::PreLn, NormPlacement::PostLn, NormPlacement::PeriLn];
+
+    /// Canonical lowercase name (config/JSON/report spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            NormPlacement::PreLn => "preln",
+            NormPlacement::PostLn => "postln",
+            NormPlacement::PeriLn => "periln",
+        }
+    }
+
+    fn aliases(self) -> &'static [&'static str] {
+        match self {
+            NormPlacement::PreLn => &["preln", "pre", "pre-ln"],
+            NormPlacement::PostLn => &["postln", "post", "post-ln"],
+            NormPlacement::PeriLn => &["periln", "peri", "peri-ln"],
+        }
+    }
+}
+
+impl fmt::Display for NormKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl fmt::Display for NormPlacement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shared parse body: exact alias match, else a did-you-mean error.
+fn parse_with<T: Copy>(
+    what: &str,
+    s: &str,
+    all: &[T],
+    aliases: impl Fn(T) -> &'static [&'static str],
+    names: &str,
+) -> Result<T, anyhow::Error> {
+    let needle = s.trim().to_ascii_lowercase();
+    for &v in all {
+        if aliases(v).iter().any(|a| *a == needle) {
+            return Ok(v);
+        }
+    }
+    let mut candidates: Vec<&'static str> = Vec::new();
+    for &v in all {
+        candidates.extend_from_slice(aliases(v));
+    }
+    match suggest(&needle, &candidates) {
+        Some(hint) => Err(anyhow::anyhow!(
+            "unknown {what} {s:?} (one of: {names}; did you mean {hint:?}?)"
+        )),
+        None => Err(anyhow::anyhow!("unknown {what} {s:?} (one of: {names})")),
+    }
+}
+
+impl FromStr for NormKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        parse_with("norm kind", s, &Self::ALL, NormKind::aliases, "layernorm, rmsnorm")
+    }
+}
+
+impl FromStr for NormPlacement {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        parse_with(
+            "norm placement",
+            s,
+            &Self::ALL,
+            NormPlacement::aliases,
+            "preln, postln, periln",
+        )
+    }
+}
+
+/// Edit distance for the did-you-mean hint (same metric as the CLI's
+/// unknown-flag suggestions).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + sub);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+fn suggest<'a>(input: &str, options: &[&'a str]) -> Option<&'a str> {
+    options
+        .iter()
+        .map(|&o| (levenshtein(input, o), o))
+        .filter(|&(d, _)| d <= 2 && d < input.len())
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, o)| o)
+}
+
+/// Two selection sources disagreed about the same setting. Carried
+/// through `anyhow` so callers can `downcast_ref::<ConflictError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConflictError {
+    /// What was being selected ("norm kind" / "norm placement").
+    pub what: String,
+    /// `(source label, raw value)` for each disagreeing source.
+    pub sources: Vec<(String, String)>,
+}
+
+impl fmt::Display for ConflictError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "conflicting {} settings: ", self.what)?;
+        for (i, (src, val)) in self.sources.iter().enumerate() {
+            if i > 0 {
+                f.write_str(" vs ")?;
+            }
+            write!(f, "{src}={val:?}")?;
+        }
+        f.write_str(" — make the sources agree or drop all but one")
+    }
+}
+
+impl std::error::Error for ConflictError {}
+
+/// Resolve one setting offered by several sources (`(label, value)`
+/// pairs, e.g. `("--norm", Some("rms"))`, `("NANOGNS_NORM", None)`,
+/// `("config key \"norm_kind\"", Some("layernorm"))`).
+///
+/// * no source present → `Ok(None)` (caller keeps its default);
+/// * any number of sources that parse to the *same* variant → that value;
+/// * sources parsing to different variants → [`ConflictError`];
+/// * an unparseable value → the did-you-mean parse error.
+pub fn resolve<T>(what: &str, sources: &[(&str, Option<&str>)]) -> Result<Option<T>>
+where
+    T: FromStr<Err = anyhow::Error> + PartialEq + Copy + fmt::Display,
+{
+    let mut picked: Option<(&str, &str, T)> = None;
+    for &(label, raw) in sources {
+        let Some(raw) = raw else { continue };
+        let value: T = raw.parse().map_err(|e: anyhow::Error| e.context(label.to_string()))?;
+        match picked {
+            None => picked = Some((label, raw, value)),
+            Some((plabel, praw, pvalue)) => {
+                if pvalue != value {
+                    return Err(ConflictError {
+                        what: what.to_string(),
+                        sources: vec![
+                            (plabel.to_string(), praw.to_string()),
+                            (label.to_string(), raw.to_string()),
+                        ],
+                    }
+                    .into());
+                }
+            }
+        }
+    }
+    Ok(picked.map(|(_, _, v)| v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_round_trip() {
+        for k in NormKind::ALL {
+            assert_eq!(k.name().parse::<NormKind>().unwrap(), k);
+            assert_eq!(format!("{k}").parse::<NormKind>().unwrap(), k);
+        }
+        for p in NormPlacement::ALL {
+            assert_eq!(p.name().parse::<NormPlacement>().unwrap(), p);
+            assert_eq!(format!("{p}").parse::<NormPlacement>().unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_are_accepted() {
+        assert_eq!("RMS".parse::<NormKind>().unwrap(), NormKind::RmsNorm);
+        assert_eq!("layer-norm".parse::<NormKind>().unwrap(), NormKind::LayerNorm);
+        assert_eq!(" pre-ln ".parse::<NormPlacement>().unwrap(), NormPlacement::PreLn);
+        assert_eq!("peri".parse::<NormPlacement>().unwrap(), NormPlacement::PeriLn);
+    }
+
+    #[test]
+    fn bad_values_get_did_you_mean() {
+        let e = "rmsnrom".parse::<NormKind>().unwrap_err().to_string();
+        assert!(e.contains("did you mean"), "{e}");
+        assert!(e.contains("rmsnorm"), "{e}");
+        let e = "perlin".parse::<NormPlacement>().unwrap_err().to_string();
+        assert!(e.contains("periln"), "{e}");
+        // nothing close: menu only, no bogus hint
+        let e = "zzz".parse::<NormKind>().unwrap_err().to_string();
+        assert!(!e.contains("did you mean"), "{e}");
+        assert!(e.contains("layernorm, rmsnorm"), "{e}");
+    }
+
+    #[test]
+    fn resolve_prefers_agreement_and_rejects_conflict() {
+        // no source → None
+        let r: Option<NormKind> =
+            resolve("norm kind", &[("--norm", None), ("NANOGNS_NORM", None)]).unwrap();
+        assert!(r.is_none());
+        // one source
+        let r: Option<NormKind> = resolve("norm kind", &[("--norm", Some("rms"))]).unwrap();
+        assert_eq!(r, Some(NormKind::RmsNorm));
+        // agreeing duplicates (different aliases) are fine
+        let r: Option<NormKind> = resolve(
+            "norm kind",
+            &[("--norm", Some("rms")), ("config key \"norm_kind\"", Some("rmsnorm"))],
+        )
+        .unwrap();
+        assert_eq!(r, Some(NormKind::RmsNorm));
+        // conflicting sources: typed error naming both
+        let err = resolve::<NormKind>(
+            "norm kind",
+            &[("--norm", Some("rmsnorm")), ("config key \"norm_kind\"", Some("layernorm"))],
+        )
+        .unwrap_err();
+        let conflict = err.downcast_ref::<ConflictError>().expect("typed ConflictError");
+        assert_eq!(conflict.sources.len(), 2);
+        let msg = err.to_string();
+        assert!(msg.contains("--norm") && msg.contains("norm_kind"), "{msg}");
+    }
+
+    #[test]
+    fn resolve_reports_parse_errors_with_source() {
+        let err =
+            resolve::<NormPlacement>("norm placement", &[("NANOGNS_PLACEMENT", Some("nope"))])
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("NANOGNS_PLACEMENT"), "{msg}");
+        assert!(msg.contains("unknown norm placement"), "{msg}");
+    }
+}

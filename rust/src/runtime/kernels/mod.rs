@@ -18,6 +18,10 @@
 //!   per-example weight gradient (Eqs. 4–5 inputs);
 //! * [`layernorm`] — the §3 fused LayerNorm backward that emits
 //!   per-example `||dγ_b||² + ||dβ_b||²` inside the same reduction pass;
+//! * [`rmsnorm`] — the RMSNorm member of the same kernel family: the
+//!   LayerNorm backward at `m1 = 0` with no `β`, emitting per-example
+//!   `||dγ_b||²` from the same fused pass (normalization-matrix cells
+//!   with `NormKind::RmsNorm`);
 //! * [`threads`] — the persistent [`WorkerPool`]: parked workers, one
 //!   spawn per pool lifetime (counted by [`total_threads_spawned`]),
 //!   allocation-free dispatch, and outputs that are always disjoint row
@@ -34,11 +38,13 @@
 pub mod gram;
 pub mod layernorm;
 pub mod matmul;
+pub mod rmsnorm;
 pub mod simd;
 pub mod threads;
 
 pub use gram::{bias_sqnorms_acc, weight_sqnorms};
 pub use layernorm::{ln_bwd_fused, ln_fwd};
+pub use rmsnorm::{rms_bwd_fused, rms_fwd};
 pub use matmul::{dot, matmul_at_b_acc, matmul_xw_t, matmul_xwt, transpose, transpose_par};
 pub use simd::{tier, Tier};
 pub use threads::{

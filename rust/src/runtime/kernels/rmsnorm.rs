@@ -1,0 +1,295 @@
+//! Batched RMSNorm forward and its §3-style fused backward.
+//!
+//! RMSNorm (`y = γ ⊙ x·r`, `r = 1/√(mean(x²)+ε)`) is LayerNorm without
+//! the mean subtraction and without `β`. Its backward is the LayerNorm
+//! backward at `m1 = 0`:
+//!
+//! `dx = r · (dy⊙γ − x̂ · m2)`, `m2 = (1/d) Σ_j (dy_j γ_j) x̂_j`,
+//! `dγ = Σ rows dy ⊙ x̂`.
+//!
+//! As in `ln_bwd_fused`, the per-example `dγ_b = Σ_t dy_t ⊙ x̂_t` vectors
+//! are exactly the partial sums the batch `dγ` reduction forms anyway, so
+//! emitting per-example `||dγ_b||²` (the only norm-layer term — there is
+//! no `β`) is free. `Option`-gating the emission gives the same norms-off
+//! bitwise-identical baseline the overhead bench measures.
+//!
+//! Thread-determinism contract matches `layernorm`: workers own disjoint
+//! example blocks; the `dγ` reduction and norm emission run on the
+//! calling thread in fixed example order after the join.
+
+use super::simd;
+use super::threads::{par_row_blocks2, WorkerPool};
+
+/// Row-wise RMSNorm over `rows` rows of width `d`. Writes the output,
+/// the normalized activations `xhat = x·r` and the per-row reciprocal
+/// RMS `rstd` (both needed by the backward). Serial over rows, SIMD
+/// within each row: `O(rows·d)`.
+pub fn rms_fwd(
+    x: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+    out: &mut [f32],
+    xhat: &mut [f32],
+    rstd: &mut [f32],
+) {
+    assert!(x.len() >= rows * d && out.len() >= rows * d && xhat.len() >= rows * d);
+    assert!(rstd.len() >= rows && gamma.len() >= d);
+    let tier = simd::tier();
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        // Σ x² is the squared-deviation sum around a zero mean.
+        let ms = simd::sq_dev_sum(tier, row, 0.0) / d as f32;
+        let rs = 1.0 / (ms + eps).sqrt();
+        rstd[r] = rs;
+        simd::rms_fwd_row(
+            tier,
+            row,
+            &gamma[..d],
+            rs,
+            &mut xhat[r * d..(r + 1) * d],
+            &mut out[r * d..(r + 1) * d],
+        );
+    }
+}
+
+/// Fused RMSNorm backward over a `[bsz, t, d]` batch.
+///
+/// Computes `dx`, accumulates the batch `dgamma`, and — when `per_ex_sq`
+/// is `Some` — writes each example's `||dγ_b||²` into `per_ex_sq[b]`.
+/// Passing `None` skips only the norm emission; the `dγ` accumulation
+/// order is unchanged, keeping gradients bitwise identical (the
+/// norms-off backward the overhead bench compares against). `scratch`
+/// needs `bsz * d` elements (per-example `dγ_b`).
+#[allow(clippy::too_many_arguments)]
+pub fn rms_bwd_fused(
+    pool: &WorkerPool,
+    dout: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    gamma: &[f32],
+    bsz: usize,
+    t: usize,
+    d: usize,
+    dx: &mut [f32],
+    scratch: &mut [f32],
+    dgamma: &mut [f32],
+    per_ex_sq: Option<&mut [f64]>,
+) {
+    let m = bsz * t;
+    assert!(dout.len() >= m * d && xhat.len() >= m * d && rstd.len() >= m);
+    assert!(dx.len() >= m * d && scratch.len() >= bsz * d);
+    assert!(dgamma.len() >= d);
+    if let Some(pes) = per_ex_sq.as_deref() {
+        assert!(pes.len() >= bsz);
+    }
+    let tier = simd::tier();
+    par_row_blocks2(pool, bsz, t * d, dx, d, scratch, |b0, b1, dxb, scb| {
+        for b in b0..b1 {
+            let slg = &mut scb[(b - b0) * d..(b - b0 + 1) * d];
+            slg.fill(0.0);
+            for ti in 0..t {
+                let r = b * t + ti;
+                let dyr = &dout[r * d..(r + 1) * d];
+                let xhr = &xhat[r * d..(r + 1) * d];
+                let s2 = simd::rms_bwd_row_acc(tier, dyr, xhr, &gamma[..d], slg);
+                let m2 = s2 / d as f32;
+                let rs = rstd[r];
+                let dxr = &mut dxb[((b - b0) * t + ti) * d..((b - b0) * t + ti + 1) * d];
+                simd::ln_dx_row(tier, dyr, xhr, &gamma[..d], rs, 0.0, m2, dxr);
+            }
+        }
+    });
+    // Batch reduction + norm emission, fixed example order (deterministic).
+    match per_ex_sq {
+        Some(pes) => {
+            for b in 0..bsz {
+                let slg = &scratch[b * d..(b + 1) * d];
+                let mut sq = 0f64;
+                for j in 0..d {
+                    dgamma[j] += slg[j];
+                    sq += slg[j] as f64 * slg[j] as f64;
+                }
+                pes[b] = sq;
+            }
+        }
+        None => {
+            for b in 0..bsz {
+                let slg = &scratch[b * d..(b + 1) * d];
+                for j in 0..d {
+                    dgamma[j] += slg[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const EPS: f32 = 1e-5;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Reference per-row backward (the definitional RMSNorm gradient).
+    fn naive_bwd(
+        dout: &[f32],
+        xhat: &[f32],
+        rstd: &[f32],
+        g: &[f32],
+        rows: usize,
+        d: usize,
+        dg: &mut [f32],
+    ) -> Vec<f32> {
+        let mut dx = vec![0f32; rows * d];
+        for r in 0..rows {
+            let mut m2 = 0f32;
+            for j in 0..d {
+                let dy = dout[r * d + j];
+                let xh = xhat[r * d + j];
+                dg[j] += dy * xh;
+                m2 += dy * g[j] * xh;
+            }
+            m2 /= d as f32;
+            for j in 0..d {
+                let dxh = dout[r * d + j] * g[j];
+                dx[r * d + j] = rstd[r] * (dxh - xhat[r * d + j] * m2);
+            }
+        }
+        dx
+    }
+
+    #[test]
+    fn forward_matches_f64_reference() {
+        let mut rng = Rng::seed_from_u64(31);
+        for (rows, d) in [(1, 1), (3, 5), (2, 8), (4, 17)] {
+            let x = randv(&mut rng, rows * d);
+            let gamma: Vec<f32> = (0..d).map(|j| 1.0 + 0.1 * j as f32).collect();
+            let (mut out, mut xhat, mut rstd) =
+                (vec![0f32; rows * d], vec![0f32; rows * d], vec![0f32; rows]);
+            rms_fwd(&x, &gamma, rows, d, EPS, &mut out, &mut xhat, &mut rstd);
+            for r in 0..rows {
+                let ms: f64 =
+                    x[r * d..(r + 1) * d].iter().map(|&v| v as f64 * v as f64).sum::<f64>()
+                        / d as f64;
+                let rr = 1.0 / (ms + EPS as f64).sqrt();
+                assert!(
+                    ((rstd[r] as f64) - rr).abs() <= 1e-5 * rr,
+                    "rstd[{r}]: {} vs {rr}",
+                    rstd[r]
+                );
+                for j in 0..d {
+                    let want = x[r * d + j] as f64 * rr * gamma[j] as f64;
+                    assert!(
+                        ((out[r * d + j] as f64) - want).abs() <= 1e-5 * want.abs().max(1e-6),
+                        "out[{r},{j}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_backward_matches_reference_and_emits_norms() {
+        let mut rng = Rng::seed_from_u64(32);
+        let pool = WorkerPool::new(2);
+        // shapes include sub-lane and cross-lane tails
+        for (bsz, t, d) in [(1, 1, 4), (2, 3, 8), (4, 5, 6), (3, 2, 17)] {
+            let rows = bsz * t;
+            let x = randv(&mut rng, rows * d);
+            let gamma: Vec<f32> = (0..d).map(|j| 1.0 + 0.1 * j as f32).collect();
+            let (mut out, mut xhat, mut rstd) =
+                (vec![0f32; rows * d], vec![0f32; rows * d], vec![0f32; rows]);
+            rms_fwd(&x, &gamma, rows, d, EPS, &mut out, &mut xhat, &mut rstd);
+            let dout = randv(&mut rng, rows * d);
+
+            let mut dg_ref = vec![0f32; d];
+            let dx_ref = naive_bwd(&dout, &xhat, &rstd, &gamma, rows, d, &mut dg_ref);
+
+            let mut dx = vec![0f32; rows * d];
+            let mut scratch = vec![0f32; bsz * d];
+            let mut dg = vec![0f32; d];
+            let mut sq = vec![0f64; bsz];
+            rms_bwd_fused(
+                &pool, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch, &mut dg,
+                Some(&mut sq),
+            );
+            for (a, b) in dx.iter().zip(&dx_ref) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-3));
+            }
+            for j in 0..d {
+                assert!((dg[j] - dg_ref[j]).abs() <= 1e-4 * dg_ref[j].abs().max(1e-3));
+            }
+            // per-example norms: recompute ||dγ_b||² from scratch sums
+            for b in 0..bsz {
+                let mut want = 0f64;
+                for j in 0..d {
+                    let mut dgj = 0f64;
+                    for ti in 0..t {
+                        let r = b * t + ti;
+                        dgj += dout[r * d + j] as f64 * xhat[r * d + j] as f64;
+                    }
+                    want += dgj * dgj;
+                }
+                assert!(
+                    (sq[b] - want).abs() <= 1e-4 * want.max(1e-9),
+                    "bsz={bsz} t={t} d={d} b={b}: {} vs {want}",
+                    sq[b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_backward_is_worker_invariant() {
+        let mut rng = Rng::seed_from_u64(33);
+        let (bsz, t, d) = (5, 3, 8);
+        let rows = bsz * t;
+        let xhat = randv(&mut rng, rows * d);
+        let rstd: Vec<f32> = (0..rows).map(|_| 1.0 + rng.f64() as f32).collect();
+        let gamma = randv(&mut rng, d);
+        let dout = randv(&mut rng, rows * d);
+        let run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let mut dx = vec![0f32; rows * d];
+            let mut scratch = vec![0f32; bsz * d];
+            let mut dg = vec![0f32; d];
+            let mut sq = vec![0f64; bsz];
+            rms_bwd_fused(
+                &pool, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch, &mut dg,
+                Some(&mut sq),
+            );
+            (dx, dg, sq)
+        };
+        assert_eq!(run(1), run(3));
+    }
+
+    #[test]
+    fn norms_off_backward_keeps_gradients_bitwise() {
+        let mut rng = Rng::seed_from_u64(34);
+        let pool = WorkerPool::new(3);
+        let (bsz, t, d) = (4, 2, 12);
+        let rows = bsz * t;
+        let xhat = randv(&mut rng, rows * d);
+        let rstd: Vec<f32> = (0..rows).map(|_| 1.0 + rng.f64() as f32).collect();
+        let gamma = randv(&mut rng, d);
+        let dout = randv(&mut rng, rows * d);
+        let run = |pes: bool| {
+            let mut dx = vec![0f32; rows * d];
+            let mut scratch = vec![0f32; bsz * d];
+            let mut dg = vec![0f32; d];
+            let mut sq = vec![0f64; bsz];
+            rms_bwd_fused(
+                &pool, &dout, &xhat, &rstd, &gamma, bsz, t, d, &mut dx, &mut scratch, &mut dg,
+                if pes { Some(&mut sq) } else { None },
+            );
+            (dx, dg)
+        };
+        assert_eq!(run(true), run(false), "norm emission must not perturb gradients");
+    }
+}

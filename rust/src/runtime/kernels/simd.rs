@@ -203,6 +203,32 @@ fn ln_dx_row_scalar(
     }
 }
 
+#[inline]
+fn rms_fwd_row_scalar(row: &[f32], gamma: &[f32], r: f32, xhat: &mut [f32], out: &mut [f32]) {
+    let d = row.len();
+    for j in 0..d {
+        let xh = row[j] * r;
+        xhat[j] = xh;
+        out[j] = gamma[j] * xh;
+    }
+}
+
+/// Accumulates `slg[j] += dy·xh` and returns the raw `Σ (dy·γ)·xh` — the
+/// caller divides by `d`. RMSNorm has no `β` and no mean term, so this is
+/// [`ln_bwd_row_acc_scalar`] minus the `slb`/`m1` work.
+#[inline]
+fn rms_bwd_row_acc_scalar(dy: &[f32], xh: &[f32], gamma: &[f32], slg: &mut [f32]) -> f32 {
+    let d = dy.len();
+    let mut m2 = 0f32;
+    for j in 0..d {
+        let dyj = dy[j];
+        let xhj = xh[j];
+        slg[j] += dyj * xhj;
+        m2 += (dyj * gamma[j]) * xhj;
+    }
+    m2
+}
+
 // ---------------------------------------------------------------------------
 // AVX2 + FMA (x86_64)
 // ---------------------------------------------------------------------------
@@ -474,6 +500,64 @@ mod avx2 {
             i += 1;
         }
     }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rms_fwd_row(
+        row: &[f32],
+        gamma: &[f32],
+        r: f32,
+        xhat: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = row.len();
+        let rp = row.as_ptr();
+        let gp = gamma.as_ptr();
+        let xhp = xhat.as_mut_ptr();
+        let op = out.as_mut_ptr();
+        let vr = _mm256_set1_ps(r);
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let xh = _mm256_mul_ps(_mm256_loadu_ps(rp.add(i)), vr);
+            _mm256_storeu_ps(xhp.add(i), xh);
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(_mm256_loadu_ps(gp.add(i)), xh));
+            i += 8;
+        }
+        while i < d {
+            let xh = *rp.add(i) * r;
+            *xhp.add(i) = xh;
+            *op.add(i) = *gp.add(i) * xh;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn rms_bwd_row_acc(dy: &[f32], xh: &[f32], gamma: &[f32], slg: &mut [f32]) -> f32 {
+        let d = dy.len();
+        let dp = dy.as_ptr();
+        let xp = xh.as_ptr();
+        let gp = gamma.as_ptr();
+        let sgp = slg.as_mut_ptr();
+        let mut m2 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let vdy = _mm256_loadu_ps(dp.add(i));
+            let vxh = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(sgp.add(i), _mm256_fmadd_ps(vdy, vxh, _mm256_loadu_ps(sgp.add(i))));
+            let dxh = _mm256_mul_ps(vdy, _mm256_loadu_ps(gp.add(i)));
+            m2 = _mm256_fmadd_ps(dxh, vxh, m2);
+            i += 8;
+        }
+        let mut s2 = hsum8(m2);
+        while i < d {
+            let dyj = *dp.add(i);
+            let xhj = *xp.add(i);
+            *sgp.add(i) = dyj.mul_add(xhj, *sgp.add(i));
+            let dxh = dyj * *gp.add(i);
+            s2 = dxh.mul_add(xhj, s2);
+            i += 1;
+        }
+        s2
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -717,6 +801,64 @@ mod neon {
             i += 1;
         }
     }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rms_fwd_row(
+        row: &[f32],
+        gamma: &[f32],
+        r: f32,
+        xhat: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = row.len();
+        let rp = row.as_ptr();
+        let gp = gamma.as_ptr();
+        let xhp = xhat.as_mut_ptr();
+        let op = out.as_mut_ptr();
+        let vr = vdupq_n_f32(r);
+        let mut i = 0usize;
+        while i + 4 <= d {
+            let xh = vmulq_f32(vld1q_f32(rp.add(i)), vr);
+            vst1q_f32(xhp.add(i), xh);
+            vst1q_f32(op.add(i), vmulq_f32(vld1q_f32(gp.add(i)), xh));
+            i += 4;
+        }
+        while i < d {
+            let xh = *rp.add(i) * r;
+            *xhp.add(i) = xh;
+            *op.add(i) = *gp.add(i) * xh;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rms_bwd_row_acc(dy: &[f32], xh: &[f32], gamma: &[f32], slg: &mut [f32]) -> f32 {
+        let d = dy.len();
+        let dp = dy.as_ptr();
+        let xp = xh.as_ptr();
+        let gp = gamma.as_ptr();
+        let sgp = slg.as_mut_ptr();
+        let mut m2 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= d {
+            let vdy = vld1q_f32(dp.add(i));
+            let vxh = vld1q_f32(xp.add(i));
+            vst1q_f32(sgp.add(i), vfmaq_f32(vld1q_f32(sgp.add(i)), vdy, vxh));
+            let dxh = vmulq_f32(vdy, vld1q_f32(gp.add(i)));
+            m2 = vfmaq_f32(m2, dxh, vxh);
+            i += 4;
+        }
+        let mut s2 = vaddvq_f32(m2);
+        while i < d {
+            let dyj = *dp.add(i);
+            let xhj = *xp.add(i);
+            *sgp.add(i) = dyj.mul_add(xhj, *sgp.add(i));
+            let dxh = dyj * *gp.add(i);
+            s2 = dxh.mul_add(xhj, s2);
+            i += 1;
+        }
+        s2
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -885,6 +1027,46 @@ pub fn ln_dx_row(
         #[cfg(target_arch = "aarch64")]
         Tier::Neon => unsafe { neon::ln_dx_row(dy, xh, gamma, rs, m1, m2, dx) },
         _ => ln_dx_row_scalar(dy, xh, gamma, rs, m1, m2, dx),
+    }
+}
+
+/// RMSNorm forward for one row: writes `xhat = x·r` and `γ·xhat`, where
+/// `r = 1/√(mean(x²)+eps)` was computed by the caller (via
+/// [`sq_dev_sum`] at `mean = 0`).
+#[inline]
+pub fn rms_fwd_row(
+    t: Tier,
+    row: &[f32],
+    gamma: &[f32],
+    r: f32,
+    xhat: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert!(xhat.len() >= row.len() && out.len() >= row.len());
+    debug_assert!(gamma.len() >= row.len());
+    match t {
+        Tier::Scalar => rms_fwd_row_scalar(row, gamma, r, xhat, out),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::rms_fwd_row(row, gamma, r, xhat, out) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::rms_fwd_row(row, gamma, r, xhat, out) },
+        _ => rms_fwd_row_scalar(row, gamma, r, xhat, out),
+    }
+}
+
+/// RMSNorm backward pass 1 for one row: accumulates the per-example `dγ`
+/// partial sums and returns the raw `Σ (dy·γ)·xhat`. The `dx` pass
+/// reuses [`ln_dx_row`] with `m1 = 0` (RMSNorm has no mean term).
+#[inline]
+pub fn rms_bwd_row_acc(t: Tier, dy: &[f32], xh: &[f32], gamma: &[f32], slg: &mut [f32]) -> f32 {
+    debug_assert!(xh.len() >= dy.len() && gamma.len() >= dy.len() && slg.len() >= dy.len());
+    match t {
+        Tier::Scalar => rms_bwd_row_acc_scalar(dy, xh, gamma, slg),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { avx2::rms_bwd_row_acc(dy, xh, gamma, slg) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::rms_bwd_row_acc(dy, xh, gamma, slg) },
+        _ => rms_bwd_row_acc_scalar(dy, xh, gamma, slg),
     }
 }
 
@@ -1057,6 +1239,60 @@ mod tests {
                     }
                 }
                 assert!(rel_close(s1 as f64, s1_ref as f64, 1e-3), "s1 tier={} d={d}", t.name());
+                assert!(rel_close(s2 as f64, s2_ref as f64, 1e-3), "s2 tier={} d={d}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn rms_rows_all_tiers_match_scalar_oracle() {
+        let mut rng = Rng::seed_from_u64(27);
+        for d in LENS {
+            if d == 0 {
+                continue;
+            }
+            let row = randv(&mut rng, d);
+            let gamma: Vec<f32> = (0..d).map(|j| 1.0 + 0.05 * j as f32).collect();
+            let dy = randv(&mut rng, d);
+            // r = 1/sqrt(mean(x²)+eps): sq_dev_sum at mean=0 is Σ x².
+            let r = 1.0 / (sq_dev_sum_scalar(&row, 0.0) / d as f32 + 1e-5).sqrt();
+
+            let mut xh_ref = vec![0f32; d];
+            let mut out_ref = vec![0f32; d];
+            rms_fwd_row_scalar(&row, &gamma, r, &mut xh_ref, &mut out_ref);
+            let mut slg_ref = vec![0.1f32; d];
+            let s2_ref = rms_bwd_row_acc_scalar(&dy, &xh_ref, &gamma, &mut slg_ref);
+            let mut dx_ref = vec![0f32; d];
+            ln_dx_row_scalar(&dy, &xh_ref, &gamma, r, 0.0, s2_ref / d as f32, &mut dx_ref);
+            // f64 reference for the same row (independent check of the math)
+            for j in 0..d {
+                let want = row[j] as f64 * r as f64 * gamma[j] as f64;
+                assert!(rel_close(out_ref[j] as f64, want, 1e-5), "fwd d={d} j={j}");
+            }
+
+            for t in tiers() {
+                let mut xh = vec![0f32; d];
+                let mut out = vec![0f32; d];
+                rms_fwd_row(t, &row, &gamma, r, &mut xh, &mut out);
+                let mut slg = vec![0.1f32; d];
+                let s2 = rms_bwd_row_acc(t, &dy, &xh, &gamma, &mut slg);
+                let mut dx = vec![0f32; d];
+                ln_dx_row(t, &dy, &xh, &gamma, r, 0.0, s2 / d as f32, &mut dx);
+                let checks: [(&str, &[f32], &[f32], f64); 4] = [
+                    ("xh", &xh, &xh_ref, 1e-5),
+                    ("out", &out, &out_ref, 1e-5),
+                    ("slg", &slg, &slg_ref, 1e-4),
+                    ("dx", &dx, &dx_ref, 1e-3),
+                ];
+                for (what, got, want, tol) in checks {
+                    for j in 0..d {
+                        assert!(
+                            rel_close(got[j] as f64, want[j] as f64, tol),
+                            "{what} tier={} d={d} j={j}",
+                            t.name()
+                        );
+                    }
+                }
                 assert!(rel_close(s2 as f64, s2_ref as f64, 1e-3), "s2 tier={} d={d}", t.name());
             }
         }

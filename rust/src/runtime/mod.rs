@@ -20,7 +20,7 @@ pub mod tensor;
 
 pub use backend::{Backend, BackendFactory, Buffer, GradOut};
 pub use manifest::{AdamHypers, LnBenchEntry, Manifest, ModelEntry, ParamSpec};
-pub use reference::{ReferenceBackend, ReferenceFactory, RefModelConfig};
+pub use reference::{ReferenceBackend, ReferenceFactory, ReferenceVariantFactory, RefModelConfig};
 pub use tensor::Tensor;
 
 #[cfg(feature = "pjrt")]

@@ -51,12 +51,13 @@ use std::sync::Mutex;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::data::Batch;
+use crate::norms::{NormKind, NormPlacement};
 use crate::runtime::backend::{Backend, BackendFactory, Buffer, GradOut};
 use crate::runtime::kernels::matmul::dot as vdot;
 use crate::runtime::kernels::{
     bias_sqnorms_acc, default_workers, ln_bwd_fused, ln_fwd, matmul_at_b_acc, matmul_xw_t,
-    matmul_xwt, par_row_blocks, par_row_blocks2, transpose, transpose_par, weight_sqnorms,
-    WorkerPool,
+    matmul_xwt, par_row_blocks, par_row_blocks2, rms_bwd_fused, rms_fwd, transpose, transpose_par,
+    weight_sqnorms, WorkerPool,
 };
 use crate::runtime::manifest::{AdamHypers, ModelEntry, ParamSpec};
 use crate::runtime::tensor::Tensor;
@@ -65,7 +66,10 @@ use crate::{N_TYPES, STATS_ORDER};
 
 const LN_EPS: f32 = 1e-5;
 
-/// Shape of a reference-backend model.
+/// Shape of a reference-backend model, plus its cell of the
+/// normalization matrix ([`NormKind`] × [`NormPlacement`]). The default
+/// cell (LayerNorm + Pre-LN) reproduces the paper's architecture and the
+/// historical parameter layout bit-for-bit.
 #[derive(Debug, Clone, Copy)]
 pub struct RefModelConfig {
     pub d_model: usize,
@@ -74,10 +78,21 @@ pub struct RefModelConfig {
     pub seq_len: usize,
     pub vocab: usize,
     pub microbatch: usize,
+    pub norm: NormKind,
+    pub placement: NormPlacement,
 }
 
 const fn preset(d: usize, l: usize, h: usize, t: usize) -> RefModelConfig {
-    RefModelConfig { d_model: d, n_layers: l, n_heads: h, seq_len: t, vocab: 256, microbatch: 4 }
+    RefModelConfig {
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        seq_len: t,
+        vocab: 256,
+        microbatch: 4,
+        norm: NormKind::LayerNorm,
+        placement: NormPlacement::PreLn,
+    }
 }
 
 /// Built-in model configs, mirroring the artifact manifest's names.
@@ -89,7 +104,20 @@ pub const PRESETS: [(&str, RefModelConfig); 5] = [
     ("sweep161", preset(48, 2, 4, 48)),
 ];
 
-// Per-block parameter offsets from the block base index (2 + 12*i).
+/// Look up a preset config by name (default matrix cell).
+pub fn preset_cfg(name: &str) -> Result<RefModelConfig> {
+    PRESETS.iter().find(|(n, _)| *n == name).map(|(_, c)| *c).ok_or_else(|| {
+        anyhow!("unknown reference model {name:?} (have: {:?})", PRESETS.map(|(n, _)| n))
+    })
+}
+
+// Per-block parameter offsets from the block base index
+// (2 + per_block(cfg)*i). The first 12 slots are identical for every
+// matrix cell; Peri-LN appends the two output norms at 12..16. Under
+// RMSNorm the `.b` slots are kept as frozen zero dummies (never read or
+// written by the kernels; init zeroes them and their gradients stay
+// exactly zero) so the layout — and every offset below — is uniform
+// across kinds. See `build_entry`.
 const LN1_G: usize = 0;
 const LN1_B: usize = 1;
 const W_QKV: usize = 2;
@@ -102,6 +130,19 @@ const W_FC: usize = 8;
 const B_FC: usize = 9;
 const W_PROJ: usize = 10;
 const B_PROJ: usize = 11;
+// Peri-LN output norms (present only when placement == PeriLn).
+const LNO1_G: usize = 12;
+const LNO1_B: usize = 13;
+const LNO2_G: usize = 14;
+const LNO2_B: usize = 15;
+
+/// Parameters per transformer block for a config's placement.
+fn per_block(cfg: &RefModelConfig) -> usize {
+    match cfg.placement {
+        NormPlacement::PeriLn => 16,
+        NormPlacement::PreLn | NormPlacement::PostLn => 12,
+    }
+}
 
 fn spec(name: &str, shape: Vec<usize>, ltype: &str, decay: bool) -> ParamSpec {
     ParamSpec {
@@ -113,6 +154,15 @@ fn spec(name: &str, shape: Vec<usize>, ltype: &str, decay: bool) -> ParamSpec {
     }
 }
 
+/// Parameter manifest for one matrix cell.
+///
+/// All norm sites keep a `.g`/`.b` pair regardless of [`NormKind`]:
+/// under RMSNorm the `.b` tensors are frozen zero dummies (init zeroes
+/// them, the RMS kernels never touch them, so their gradients — and
+/// their per-example norm contribution — are exactly zero and AdamW
+/// leaves them at zero). This keeps parameter indices, checkpoints and
+/// the stats plumbing uniform across the whole matrix. Peri-LN appends
+/// the learnable output norms `h{i}.lno1.*` / `h{i}.lno2.*`.
 fn build_entry(cfg: &RefModelConfig) -> ModelEntry {
     let d = cfg.d_model;
     let mut params = vec![
@@ -132,10 +182,17 @@ fn build_entry(cfg: &RefModelConfig) -> ModelEntry {
         params.push(spec(&format!("h{i}.mlp.b_fc"), vec![4 * d], "mlp", false));
         params.push(spec(&format!("h{i}.mlp.w_proj"), vec![4 * d, d], "mlp", true));
         params.push(spec(&format!("h{i}.mlp.b_proj"), vec![d], "mlp", false));
+        if cfg.placement == NormPlacement::PeriLn {
+            params.push(spec(&format!("h{i}.lno1.g"), vec![d], "layernorm", false));
+            params.push(spec(&format!("h{i}.lno1.b"), vec![d], "layernorm", false));
+            params.push(spec(&format!("h{i}.lno2.g"), vec![d], "layernorm", false));
+            params.push(spec(&format!("h{i}.lno2.b"), vec![d], "layernorm", false));
+        }
     }
     params.push(spec("lnf.g", vec![d], "layernorm", false));
     params.push(spec("lnf.b", vec![d], "layernorm", false));
     params.push(spec("lm_head.w", vec![d, cfg.vocab], "lm_head", true));
+    debug_assert_eq!(params.len(), 2 + per_block(cfg) * cfg.n_layers + 3);
     let n_params = params.iter().map(|p| p.numel() as u64).sum();
     ModelEntry {
         d_model: d,
@@ -285,6 +342,55 @@ fn layernorm_bwd(
     dx
 }
 
+/// Per-row RMSNorm (serial oracle); returns (out, xhat, rstd). No mean
+/// subtraction, no `β`: `y = γ ⊙ x·r`, `r = 1/√(mean(x²)+ε)`.
+fn rmsnorm_fwd(x: &[f32], g: &[f32], t: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut out = vec![0f32; t * d];
+    let mut xhat = vec![0f32; t * d];
+    let mut rstd = vec![0f32; t];
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + LN_EPS).sqrt();
+        rstd[ti] = r;
+        for j in 0..d {
+            let xh = row[j] * r;
+            xhat[ti * d + j] = xh;
+            out[ti * d + j] = g[j] * xh;
+        }
+    }
+    (out, xhat, rstd)
+}
+
+/// Backward of [`rmsnorm_fwd`] (the LayerNorm backward at `m1 = 0` with
+/// no `β`): accumulates `dg`, returns `dx`.
+fn rmsnorm_bwd(
+    dout: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    t: usize,
+    d: usize,
+    dg: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0f32; t * d];
+    for ti in 0..t {
+        let mut m2 = 0f32; // mean(dxhat * xhat)
+        for j in 0..d {
+            let dy = dout[ti * d + j];
+            let xh = xhat[ti * d + j];
+            dg[j] += dy * xh;
+            m2 += dy * g[j] * xh;
+        }
+        m2 /= d as f32;
+        for j in 0..d {
+            let dxh = dout[ti * d + j] * g[j];
+            dx[ti * d + j] = rstd[ti] * (dxh - xhat[ti * d + j] * m2);
+        }
+    }
+    dx
+}
+
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
 const GELU_A: f32 = 0.044715;
 
@@ -297,6 +403,96 @@ fn gelu_grad(v: f32) -> f32 {
     let th = u.tanh();
     let sech2 = 1.0 - th * th;
     0.5 * (1.0 + th) + 0.5 * v * sech2 * GELU_C * (1.0 + 3.0 * GELU_A * v * v)
+}
+
+/// Serial causal multi-head attention forward for one example (the
+/// oracle-path mirror of [`attention_forward`]); returns `(att_p,
+/// att_out)`.
+fn attn_fwd_serial(
+    qkv: &[f32],
+    t: usize,
+    d: usize,
+    heads: usize,
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let hd = d / heads;
+    let mut att_p = vec![0f32; heads * t * t];
+    let mut att_out = vec![0f32; t * d];
+    for h in 0..heads {
+        let q_off = h * hd;
+        let k_off = d + h * hd;
+        let v_off = 2 * d + h * hd;
+        for ti in 0..t {
+            let q_row = &qkv[ti * 3 * d + q_off..ti * 3 * d + q_off + hd];
+            let mut row = vec![0f32; ti + 1];
+            let mut maxv = f32::NEG_INFINITY;
+            for s in 0..=ti {
+                let k_row = &qkv[s * 3 * d + k_off..s * 3 * d + k_off + hd];
+                let sc = scale * dot(q_row, k_row);
+                row[s] = sc;
+                maxv = maxv.max(sc);
+            }
+            let mut sum = 0f32;
+            for r in row.iter_mut() {
+                *r = (*r - maxv).exp();
+                sum += *r;
+            }
+            for (s, r) in row.iter().enumerate() {
+                let pv = r / sum;
+                att_p[h * t * t + ti * t + s] = pv;
+                let v_row = &qkv[s * 3 * d + v_off..s * 3 * d + v_off + hd];
+                for j in 0..hd {
+                    att_out[ti * d + q_off + j] += pv * v_row[j];
+                }
+            }
+        }
+    }
+    (att_p, att_out)
+}
+
+/// Serial attention backward (scores + values) for one example (the
+/// oracle-path mirror of [`attention_backward`]); returns `dqkv`.
+fn attn_bwd_serial(
+    qkv: &[f32],
+    att_p: &[f32],
+    datt_out: &[f32],
+    t: usize,
+    d: usize,
+    heads: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let hd = d / heads;
+    let mut dqkv = vec![0f32; t * 3 * d];
+    for h in 0..heads {
+        let q_off = h * hd;
+        let k_off = d + h * hd;
+        let v_off = 2 * d + h * hd;
+        let ph = &att_p[h * t * t..(h + 1) * t * t];
+        for ti in 0..t {
+            let dout_row = &datt_out[ti * d + q_off..ti * d + q_off + hd];
+            let mut dp = vec![0f32; ti + 1];
+            for s in 0..=ti {
+                let v_row = &qkv[s * 3 * d + v_off..s * 3 * d + v_off + hd];
+                dp[s] = dot(dout_row, v_row);
+                let pv = ph[ti * t + s];
+                for j in 0..hd {
+                    dqkv[s * 3 * d + v_off + j] += pv * dout_row[j];
+                }
+            }
+            let dsum: f32 = (0..=ti).map(|s| dp[s] * ph[ti * t + s]).sum();
+            for s in 0..=ti {
+                let ds = ph[ti * t + s] * (dp[s] - dsum) * scale;
+                if ds == 0.0 {
+                    continue;
+                }
+                for j in 0..hd {
+                    dqkv[ti * 3 * d + q_off + j] += ds * qkv[s * 3 * d + k_off + j];
+                    dqkv[s * 3 * d + k_off + j] += ds * qkv[ti * 3 * d + q_off + j];
+                }
+            }
+        }
+    }
+    dqkv
 }
 
 // ---------------------------------------------------------------------------
@@ -333,6 +529,15 @@ pub fn workspace_bytes(cfg: &RefModelConfig, bsz: usize) -> u64 {
         .saturating_mul(16)
         .saturating_add(m.saturating_mul(2))
         .saturating_add(b.saturating_mul(h).saturating_mul(t).saturating_mul(t));
+    // placement extras: Post-LN caches the block input ([m,d]); Peri-LN
+    // caches the two output-norm xhat/rstd pairs (2×([m,d]+[m]))
+    let per_block = match cfg.placement {
+        NormPlacement::PreLn => per_block,
+        NormPlacement::PostLn => per_block.saturating_add(md),
+        NormPlacement::PeriLn => {
+            per_block.saturating_add(md.saturating_add(m).saturating_mul(2))
+        }
+    };
     let f32s = md
         .saturating_mul(12) // x, dx, tmp1, tmp2, delta[m,4d], xt[4d,m]
         .saturating_add(d.saturating_mul(4).saturating_mul(d).max(d.saturating_mul(v))) // wt
@@ -362,6 +567,14 @@ struct BlockWs {
     ln2_out: Vec<f32>,
     fc_pre: Vec<f32>,
     fc_act: Vec<f32>,
+    /// Block input, cached only under Post-LN (it feeds the QKV
+    /// projection, whose backward needs it); empty otherwise.
+    blk_in: Vec<f32>,
+    /// Output-norm caches, allocated only under Peri-LN; empty otherwise.
+    lno1_xhat: Vec<f32>,
+    lno1_rstd: Vec<f32>,
+    lno2_xhat: Vec<f32>,
+    lno2_rstd: Vec<f32>,
 }
 
 struct Workspace {
@@ -393,6 +606,9 @@ impl Workspace {
         let v = cfg.vocab;
         let h = cfg.n_heads;
         let m = bsz * t;
+        let postln = cfg.placement == NormPlacement::PostLn;
+        let periln = cfg.placement == NormPlacement::PeriLn;
+        let opt = |on: bool, n: usize| if on { vec![0.0; n] } else { Vec::new() };
         let blocks = (0..cfg.n_layers)
             .map(|_| BlockWs {
                 ln1_xhat: vec![0.0; m * d],
@@ -406,6 +622,11 @@ impl Workspace {
                 ln2_out: vec![0.0; m * d],
                 fc_pre: vec![0.0; m * 4 * d],
                 fc_act: vec![0.0; m * 4 * d],
+                blk_in: opt(postln, m * d),
+                lno1_xhat: opt(periln, m * d),
+                lno1_rstd: opt(periln, m),
+                lno2_xhat: opt(periln, m * d),
+                lno2_rstd: opt(periln, m),
             })
             .collect();
         let ws = Self {
@@ -455,6 +676,11 @@ impl Workspace {
                     + b.ln2_out.len()
                     + b.fc_pre.len()
                     + b.fc_act.len()
+                    + b.blk_in.len()
+                    + b.lno1_xhat.len()
+                    + b.lno1_rstd.len()
+                    + b.lno2_xhat.len()
+                    + b.lno2_rstd.len()
             })
             .sum();
         let f32s = self.x.len()
@@ -693,6 +919,13 @@ struct BlockCache {
     ln2_out: Vec<f32>,
     fc_pre: Vec<f32>,
     fc_act: Vec<f32>,
+    /// Block input (cached only under Post-LN); empty otherwise.
+    blk_in: Vec<f32>,
+    /// Output-norm caches (Peri-LN only); empty otherwise.
+    lno1_xhat: Vec<f32>,
+    lno1_rstd: Vec<f32>,
+    lno2_xhat: Vec<f32>,
+    lno2_rstd: Vec<f32>,
 }
 
 struct Caches {
@@ -780,17 +1013,7 @@ impl ReferenceBackend {
     }
 
     pub fn from_preset(name: &str) -> Result<Self> {
-        let cfg = PRESETS
-            .iter()
-            .find(|(n, _)| *n == name)
-            .map(|(_, c)| *c)
-            .ok_or_else(|| {
-                anyhow!(
-                    "unknown reference model {name:?} (have: {:?})",
-                    PRESETS.map(|(n, _)| n)
-                )
-            })?;
-        Self::new(cfg)
+        Self::new(preset_cfg(name)?)
     }
 
     pub fn config(&self) -> &RefModelConfig {
@@ -798,11 +1021,130 @@ impl ReferenceBackend {
     }
 
     fn block_base(&self, i: usize) -> usize {
-        2 + 12 * i
+        2 + per_block(&self.cfg) * i
     }
 
     fn lnf_g_idx(&self) -> usize {
-        2 + 12 * self.cfg.n_layers
+        2 + per_block(&self.cfg) * self.cfg.n_layers
+    }
+
+    /// Forward through one norm site (γ at `ps[g]`, β — LayerNorm only —
+    /// at `ps[g + 1]`), dispatching on the config's [`NormKind`].
+    fn norm_fwd(
+        &self,
+        ps: &[&[f32]],
+        g: usize,
+        x: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        xhat: &mut [f32],
+        rstd: &mut [f32],
+    ) {
+        let d = self.cfg.d_model;
+        match self.cfg.norm {
+            NormKind::LayerNorm => ln_fwd(x, ps[g], ps[g + 1], rows, d, LN_EPS, out, xhat, rstd),
+            NormKind::RmsNorm => rms_fwd(x, ps[g], rows, d, LN_EPS, out, xhat, rstd),
+        }
+    }
+
+    /// Fused backward through one norm site: writes `dx`, accumulates the
+    /// site's parameter gradients into `grads`, and (with stats on) folds
+    /// the per-example `||dγ_b||²(+||dβ_b||²)` norms into `stats` — the
+    /// §3 simultaneous emission, for whichever kind this config runs.
+    fn norm_bwd(
+        &self,
+        ps: &[&[f32]],
+        g: usize,
+        dout: &[f32],
+        xhat: &[f32],
+        rstd: &[f32],
+        bsz: usize,
+        t: usize,
+        dx: &mut [f32],
+        ex_scratch: &mut [f32],
+        grads: &mut [Vec<f32>],
+        per_ex: &mut [f64],
+        stats: &mut [f64; N_TYPES],
+        with_stats: bool,
+    ) {
+        let d = self.cfg.d_model;
+        let nw = &self.pool;
+        match self.cfg.norm {
+            NormKind::LayerNorm => {
+                let (dg, db) = two_mut(grads, g, g + 1);
+                ln_bwd_fused(
+                    nw,
+                    dout,
+                    xhat,
+                    rstd,
+                    ps[g],
+                    bsz,
+                    t,
+                    d,
+                    dx,
+                    ex_scratch,
+                    dg,
+                    db,
+                    if with_stats { Some(&mut per_ex[..]) } else { None },
+                );
+            }
+            NormKind::RmsNorm => {
+                rms_bwd_fused(
+                    nw,
+                    dout,
+                    xhat,
+                    rstd,
+                    ps[g],
+                    bsz,
+                    t,
+                    d,
+                    dx,
+                    ex_scratch,
+                    &mut grads[g],
+                    if with_stats { Some(&mut per_ex[..]) } else { None },
+                );
+            }
+        }
+        if with_stats {
+            add_stats(stats, self.ltype_idx[g], per_ex, bsz);
+        }
+    }
+
+    /// Serial (oracle-path) forward through one norm site.
+    fn norm_fwd_serial(
+        &self,
+        ps: &[&[f32]],
+        g: usize,
+        x: &[f32],
+        t: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d = self.cfg.d_model;
+        match self.cfg.norm {
+            NormKind::LayerNorm => layernorm_fwd(x, ps[g], ps[g + 1], t, d),
+            NormKind::RmsNorm => rmsnorm_fwd(x, ps[g], t, d),
+        }
+    }
+
+    /// Serial (oracle-path) backward through one norm site; accumulates
+    /// the site's gradients into `eg` and returns `dx`.
+    fn norm_bwd_serial(
+        &self,
+        ps: &[&[f32]],
+        g: usize,
+        dout: &[f32],
+        xhat: &[f32],
+        rstd: &[f32],
+        t: usize,
+        eg: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        match self.cfg.norm {
+            NormKind::LayerNorm => {
+                let (dg, db) = two_mut(eg, g, g + 1);
+                layernorm_bwd(dout, xhat, rstd, ps[g], t, d, dg, db)
+            }
+            NormKind::RmsNorm => rmsnorm_bwd(dout, xhat, rstd, ps[g], t, d, &mut eg[g]),
+        }
     }
 
     fn host_params<'a>(&self, params: &'a [Buffer]) -> Result<Vec<&'a [f32]>> {
@@ -842,75 +1184,179 @@ impl ReferenceBackend {
         let mut blocks = Vec::with_capacity(self.cfg.n_layers);
         for i in 0..self.cfg.n_layers {
             let base = self.block_base(i);
-            let (ln1_out, ln1_xhat, ln1_rstd) =
-                layernorm_fwd(&x, ps[base + LN1_G], ps[base + LN1_B], t, d);
-            let qkv = linear_fwd(&ln1_out, ps[base + W_QKV], Some(ps[base + B_QKV]), t, d, 3 * d);
-
-            // Causal multi-head attention.
-            let mut att_p = vec![0f32; heads * t * t];
-            let mut att_out = vec![0f32; t * d];
-            for h in 0..heads {
-                let q_off = h * hd;
-                let k_off = d + h * hd;
-                let v_off = 2 * d + h * hd;
-                for ti in 0..t {
-                    let q_row = &qkv[ti * 3 * d + q_off..ti * 3 * d + q_off + hd];
-                    let mut row = vec![0f32; ti + 1];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for s in 0..=ti {
-                        let k_row = &qkv[s * 3 * d + k_off..s * 3 * d + k_off + hd];
-                        let sc = scale * dot(q_row, k_row);
-                        row[s] = sc;
-                        maxv = maxv.max(sc);
+            let cache = match self.cfg.placement {
+                // x += Attn(Norm1(x)); x += MLP(Norm2(x))
+                NormPlacement::PreLn => {
+                    let (ln1_out, ln1_xhat, ln1_rstd) =
+                        self.norm_fwd_serial(ps, base + LN1_G, &x, t);
+                    let qkv = linear_fwd(
+                        &ln1_out,
+                        ps[base + W_QKV],
+                        Some(ps[base + B_QKV]),
+                        t,
+                        d,
+                        3 * d,
+                    );
+                    let (att_p, att_out) = attn_fwd_serial(&qkv, t, d, heads, scale);
+                    let o = linear_fwd(&att_out, ps[base + W_O], Some(ps[base + B_O]), t, d, d);
+                    for (xv, ov) in x.iter_mut().zip(&o) {
+                        *xv += *ov;
                     }
-                    let mut sum = 0f32;
-                    for r in row.iter_mut() {
-                        *r = (*r - maxv).exp();
-                        sum += *r;
+                    let (ln2_out, ln2_xhat, ln2_rstd) =
+                        self.norm_fwd_serial(ps, base + LN2_G, &x, t);
+                    let fc_pre =
+                        linear_fwd(&ln2_out, ps[base + W_FC], Some(ps[base + B_FC]), t, d, 4 * d);
+                    let fc_act: Vec<f32> = fc_pre.iter().map(|&u| gelu(u)).collect();
+                    let p = linear_fwd(
+                        &fc_act,
+                        ps[base + W_PROJ],
+                        Some(ps[base + B_PROJ]),
+                        t,
+                        4 * d,
+                        d,
+                    );
+                    for (xv, pv) in x.iter_mut().zip(&p) {
+                        *xv += *pv;
                     }
-                    for (s, r) in row.iter().enumerate() {
-                        let pv = r / sum;
-                        att_p[h * t * t + ti * t + s] = pv;
-                        let v_row = &qkv[s * 3 * d + v_off..s * 3 * d + v_off + hd];
-                        for j in 0..hd {
-                            att_out[ti * d + q_off + j] += pv * v_row[j];
-                        }
+                    BlockCache {
+                        ln1_xhat,
+                        ln1_rstd,
+                        ln1_out,
+                        qkv,
+                        att_p,
+                        att_out,
+                        ln2_xhat,
+                        ln2_rstd,
+                        ln2_out,
+                        fc_pre,
+                        fc_act,
+                        blk_in: Vec::new(),
+                        lno1_xhat: Vec::new(),
+                        lno1_rstd: Vec::new(),
+                        lno2_xhat: Vec::new(),
+                        lno2_rstd: Vec::new(),
                     }
                 }
-            }
-
-            let o = linear_fwd(&att_out, ps[base + W_O], Some(ps[base + B_O]), t, d, d);
-            for (xv, ov) in x.iter_mut().zip(&o) {
-                *xv += *ov;
-            }
-
-            let (ln2_out, ln2_xhat, ln2_rstd) =
-                layernorm_fwd(&x, ps[base + LN2_G], ps[base + LN2_B], t, d);
-            let fc_pre =
-                linear_fwd(&ln2_out, ps[base + W_FC], Some(ps[base + B_FC]), t, d, 4 * d);
-            let fc_act: Vec<f32> = fc_pre.iter().map(|&u| gelu(u)).collect();
-            let p = linear_fwd(&fc_act, ps[base + W_PROJ], Some(ps[base + B_PROJ]), t, 4 * d, d);
-            for (xv, pv) in x.iter_mut().zip(&p) {
-                *xv += *pv;
-            }
-
-            blocks.push(BlockCache {
-                ln1_xhat,
-                ln1_rstd,
-                ln1_out,
-                qkv,
-                att_p,
-                att_out,
-                ln2_xhat,
-                ln2_rstd,
-                ln2_out,
-                fc_pre,
-                fc_act,
-            });
+                // x = Norm1(x + Attn(x)); x = Norm2(x + MLP(x))
+                NormPlacement::PostLn => {
+                    let blk_in = x.clone();
+                    let qkv = linear_fwd(
+                        &blk_in,
+                        ps[base + W_QKV],
+                        Some(ps[base + B_QKV]),
+                        t,
+                        d,
+                        3 * d,
+                    );
+                    let (att_p, att_out) = attn_fwd_serial(&qkv, t, d, heads, scale);
+                    let o = linear_fwd(&att_out, ps[base + W_O], Some(ps[base + B_O]), t, d, d);
+                    for (xv, ov) in x.iter_mut().zip(&o) {
+                        *xv += *ov;
+                    }
+                    // x = s1 → norm1 replaces the stream; ln1_out doubles
+                    // as the MLP input x_mid.
+                    let (ln1_out, ln1_xhat, ln1_rstd) =
+                        self.norm_fwd_serial(ps, base + LN1_G, &x, t);
+                    x.copy_from_slice(&ln1_out);
+                    let fc_pre =
+                        linear_fwd(&ln1_out, ps[base + W_FC], Some(ps[base + B_FC]), t, d, 4 * d);
+                    let fc_act: Vec<f32> = fc_pre.iter().map(|&u| gelu(u)).collect();
+                    let p = linear_fwd(
+                        &fc_act,
+                        ps[base + W_PROJ],
+                        Some(ps[base + B_PROJ]),
+                        t,
+                        4 * d,
+                        d,
+                    );
+                    for (xv, pv) in x.iter_mut().zip(&p) {
+                        *xv += *pv;
+                    }
+                    // x = s2 → norm2 replaces the stream again.
+                    let (ln2_out, ln2_xhat, ln2_rstd) =
+                        self.norm_fwd_serial(ps, base + LN2_G, &x, t);
+                    x.copy_from_slice(&ln2_out);
+                    BlockCache {
+                        ln1_xhat,
+                        ln1_rstd,
+                        ln1_out,
+                        qkv,
+                        att_p,
+                        att_out,
+                        ln2_xhat,
+                        ln2_rstd,
+                        ln2_out,
+                        fc_pre,
+                        fc_act,
+                        blk_in,
+                        lno1_xhat: Vec::new(),
+                        lno1_rstd: Vec::new(),
+                        lno2_xhat: Vec::new(),
+                        lno2_rstd: Vec::new(),
+                    }
+                }
+                // x += NormO1(Attn(Norm1(x))); x += NormO2(MLP(Norm2(x)))
+                NormPlacement::PeriLn => {
+                    let (ln1_out, ln1_xhat, ln1_rstd) =
+                        self.norm_fwd_serial(ps, base + LN1_G, &x, t);
+                    let qkv = linear_fwd(
+                        &ln1_out,
+                        ps[base + W_QKV],
+                        Some(ps[base + B_QKV]),
+                        t,
+                        d,
+                        3 * d,
+                    );
+                    let (att_p, att_out) = attn_fwd_serial(&qkv, t, d, heads, scale);
+                    let o = linear_fwd(&att_out, ps[base + W_O], Some(ps[base + B_O]), t, d, d);
+                    let (o_n, lno1_xhat, lno1_rstd) =
+                        self.norm_fwd_serial(ps, base + LNO1_G, &o, t);
+                    for (xv, ov) in x.iter_mut().zip(&o_n) {
+                        *xv += *ov;
+                    }
+                    let (ln2_out, ln2_xhat, ln2_rstd) =
+                        self.norm_fwd_serial(ps, base + LN2_G, &x, t);
+                    let fc_pre =
+                        linear_fwd(&ln2_out, ps[base + W_FC], Some(ps[base + B_FC]), t, d, 4 * d);
+                    let fc_act: Vec<f32> = fc_pre.iter().map(|&u| gelu(u)).collect();
+                    let p = linear_fwd(
+                        &fc_act,
+                        ps[base + W_PROJ],
+                        Some(ps[base + B_PROJ]),
+                        t,
+                        4 * d,
+                        d,
+                    );
+                    let (p_n, lno2_xhat, lno2_rstd) =
+                        self.norm_fwd_serial(ps, base + LNO2_G, &p, t);
+                    for (xv, pv) in x.iter_mut().zip(&p_n) {
+                        *xv += *pv;
+                    }
+                    BlockCache {
+                        ln1_xhat,
+                        ln1_rstd,
+                        ln1_out,
+                        qkv,
+                        att_p,
+                        att_out,
+                        ln2_xhat,
+                        ln2_rstd,
+                        ln2_out,
+                        fc_pre,
+                        fc_act,
+                        blk_in: Vec::new(),
+                        lno1_xhat,
+                        lno1_rstd,
+                        lno2_xhat,
+                        lno2_rstd,
+                    }
+                }
+            };
+            blocks.push(cache);
         }
 
         let gi = self.lnf_g_idx();
-        let (lnf_out, lnf_xhat, lnf_rstd) = layernorm_fwd(&x, ps[gi], ps[gi + 1], t, d);
+        let (lnf_out, lnf_xhat, lnf_rstd) = self.norm_fwd_serial(ps, gi, &x, t);
         let logits = linear_fwd(&lnf_out, ps[gi + 2], None, t, d, v);
 
         // Softmax cross-entropy, mean over tokens.
@@ -968,91 +1414,192 @@ impl ReferenceBackend {
         let dlnf_out =
             linear_bwd(&caches.lnf_out, ps[gi + 2], &dlogits, t, d, v, &mut eg[gi + 2], None);
 
-        // Final LayerNorm.
-        let (dgf, dbf) = two_mut(eg, gi, gi + 1);
-        let mut dx = layernorm_bwd(
+        // Final norm.
+        let mut dx = self.norm_bwd_serial(
+            ps,
+            gi,
             &dlnf_out,
             &caches.lnf_xhat,
             &caches.lnf_rstd,
-            ps[gi],
             t,
-            d,
-            dgf,
-            dbf,
+            eg,
         );
 
         for i in (0..self.cfg.n_layers).rev() {
             let base = self.block_base(i);
             let c = &caches.blocks[i];
-
-            // MLP branch: x_out = x_mid + proj(gelu(fc(ln2(x_mid)))).
-            let dfc_act = {
-                let (dw, db) = two_mut(eg, base + W_PROJ, base + B_PROJ);
-                linear_bwd(&c.fc_act, ps[base + W_PROJ], &dx, t, 4 * d, d, dw, Some(db))
-            };
-            let mut dfc_pre = dfc_act;
-            for (g, &u) in dfc_pre.iter_mut().zip(&c.fc_pre) {
-                *g *= gelu_grad(u);
-            }
-            let dln2_out = {
-                let (dw, db) = two_mut(eg, base + W_FC, base + B_FC);
-                linear_bwd(&c.ln2_out, ps[base + W_FC], &dfc_pre, t, d, 4 * d, dw, Some(db))
-            };
-            let dx_ln2 = {
-                let (dg, db) = two_mut(eg, base + LN2_G, base + LN2_B);
-                layernorm_bwd(&dln2_out, &c.ln2_xhat, &c.ln2_rstd, ps[base + LN2_G], t, d, dg, db)
-            };
-            for (a, b) in dx.iter_mut().zip(&dx_ln2) {
-                *a += *b;
-            }
-
-            // Attention branch: x_mid = x_in + w_o(att(ln1(x_in))).
-            let datt_out = {
-                let (dw, db) = two_mut(eg, base + W_O, base + B_O);
-                linear_bwd(&c.att_out, ps[base + W_O], &dx, t, d, d, dw, Some(db))
-            };
-
-            let mut dqkv = vec![0f32; t * 3 * d];
-            for h in 0..heads {
-                let q_off = h * hd;
-                let k_off = d + h * hd;
-                let v_off = 2 * d + h * hd;
-                let ph = &c.att_p[h * t * t..(h + 1) * t * t];
-                for ti in 0..t {
-                    let dout_row = &datt_out[ti * d + q_off..ti * d + q_off + hd];
-                    let mut dp = vec![0f32; ti + 1];
-                    for s in 0..=ti {
-                        let v_row = &c.qkv[s * 3 * d + v_off..s * 3 * d + v_off + hd];
-                        dp[s] = dot(dout_row, v_row);
-                        let pv = ph[ti * t + s];
-                        for j in 0..hd {
-                            dqkv[s * 3 * d + v_off + j] += pv * dout_row[j];
-                        }
+            match self.cfg.placement {
+                NormPlacement::PreLn => {
+                    // MLP branch: x_out = x_mid + proj(gelu(fc(ln2(x_mid)))).
+                    let dfc_act = {
+                        let (dw, db) = two_mut(eg, base + W_PROJ, base + B_PROJ);
+                        linear_bwd(&c.fc_act, ps[base + W_PROJ], &dx, t, 4 * d, d, dw, Some(db))
+                    };
+                    let mut dfc_pre = dfc_act;
+                    for (g, &u) in dfc_pre.iter_mut().zip(&c.fc_pre) {
+                        *g *= gelu_grad(u);
                     }
-                    let dsum: f32 = (0..=ti).map(|s| dp[s] * ph[ti * t + s]).sum();
-                    for s in 0..=ti {
-                        let ds = ph[ti * t + s] * (dp[s] - dsum) * scale;
-                        if ds == 0.0 {
-                            continue;
-                        }
-                        for j in 0..hd {
-                            dqkv[ti * 3 * d + q_off + j] += ds * c.qkv[s * 3 * d + k_off + j];
-                            dqkv[s * 3 * d + k_off + j] += ds * c.qkv[ti * 3 * d + q_off + j];
-                        }
+                    let dln2_out = {
+                        let (dw, db) = two_mut(eg, base + W_FC, base + B_FC);
+                        linear_bwd(&c.ln2_out, ps[base + W_FC], &dfc_pre, t, d, 4 * d, dw, Some(db))
+                    };
+                    let dx_ln2 = self.norm_bwd_serial(
+                        ps,
+                        base + LN2_G,
+                        &dln2_out,
+                        &c.ln2_xhat,
+                        &c.ln2_rstd,
+                        t,
+                        eg,
+                    );
+                    for (a, b) in dx.iter_mut().zip(&dx_ln2) {
+                        *a += *b;
+                    }
+
+                    // Attention branch: x_mid = x_in + w_o(att(ln1(x_in))).
+                    let datt_out = {
+                        let (dw, db) = two_mut(eg, base + W_O, base + B_O);
+                        linear_bwd(&c.att_out, ps[base + W_O], &dx, t, d, d, dw, Some(db))
+                    };
+                    let dqkv = attn_bwd_serial(&c.qkv, &c.att_p, &datt_out, t, d, heads, scale);
+                    let dln1_out = {
+                        let (dw, db) = two_mut(eg, base + W_QKV, base + B_QKV);
+                        linear_bwd(&c.ln1_out, ps[base + W_QKV], &dqkv, t, d, 3 * d, dw, Some(db))
+                    };
+                    let dx_ln1 = self.norm_bwd_serial(
+                        ps,
+                        base + LN1_G,
+                        &dln1_out,
+                        &c.ln1_xhat,
+                        &c.ln1_rstd,
+                        t,
+                        eg,
+                    );
+                    for (a, b) in dx.iter_mut().zip(&dx_ln1) {
+                        *a += *b;
                     }
                 }
-            }
+                NormPlacement::PostLn => {
+                    // x_out = norm2(s2): the norm backward REPLACES the
+                    // stream gradient (no residual passthrough here).
+                    let ds2 = self.norm_bwd_serial(
+                        ps,
+                        base + LN2_G,
+                        &dx,
+                        &c.ln2_xhat,
+                        &c.ln2_rstd,
+                        t,
+                        eg,
+                    );
+                    // s2 = x_mid + proj(gelu(fc(x_mid))), x_mid = ln1_out.
+                    let dfc_act = {
+                        let (dw, db) = two_mut(eg, base + W_PROJ, base + B_PROJ);
+                        linear_bwd(&c.fc_act, ps[base + W_PROJ], &ds2, t, 4 * d, d, dw, Some(db))
+                    };
+                    let mut dfc_pre = dfc_act;
+                    for (g, &u) in dfc_pre.iter_mut().zip(&c.fc_pre) {
+                        *g *= gelu_grad(u);
+                    }
+                    let mut dx_mid = {
+                        let (dw, db) = two_mut(eg, base + W_FC, base + B_FC);
+                        linear_bwd(&c.ln1_out, ps[base + W_FC], &dfc_pre, t, d, 4 * d, dw, Some(db))
+                    };
+                    for (a, b) in dx_mid.iter_mut().zip(&ds2) {
+                        *a += *b;
+                    }
+                    // x_mid = norm1(s1): replace again.
+                    let ds1 = self.norm_bwd_serial(
+                        ps,
+                        base + LN1_G,
+                        &dx_mid,
+                        &c.ln1_xhat,
+                        &c.ln1_rstd,
+                        t,
+                        eg,
+                    );
+                    // s1 = x_in + w_o(att(qkv(x_in))).
+                    let datt_out = {
+                        let (dw, db) = two_mut(eg, base + W_O, base + B_O);
+                        linear_bwd(&c.att_out, ps[base + W_O], &ds1, t, d, d, dw, Some(db))
+                    };
+                    let dqkv = attn_bwd_serial(&c.qkv, &c.att_p, &datt_out, t, d, heads, scale);
+                    let mut dx_in = {
+                        let (dw, db) = two_mut(eg, base + W_QKV, base + B_QKV);
+                        linear_bwd(&c.blk_in, ps[base + W_QKV], &dqkv, t, d, 3 * d, dw, Some(db))
+                    };
+                    for (a, b) in dx_in.iter_mut().zip(&ds1) {
+                        *a += *b;
+                    }
+                    dx = dx_in;
+                }
+                NormPlacement::PeriLn => {
+                    // x_out = x_mid + lno2(proj_out): residual carries dx.
+                    let dproj = self.norm_bwd_serial(
+                        ps,
+                        base + LNO2_G,
+                        &dx,
+                        &c.lno2_xhat,
+                        &c.lno2_rstd,
+                        t,
+                        eg,
+                    );
+                    let dfc_act = {
+                        let (dw, db) = two_mut(eg, base + W_PROJ, base + B_PROJ);
+                        linear_bwd(&c.fc_act, ps[base + W_PROJ], &dproj, t, 4 * d, d, dw, Some(db))
+                    };
+                    let mut dfc_pre = dfc_act;
+                    for (g, &u) in dfc_pre.iter_mut().zip(&c.fc_pre) {
+                        *g *= gelu_grad(u);
+                    }
+                    let dln2_out = {
+                        let (dw, db) = two_mut(eg, base + W_FC, base + B_FC);
+                        linear_bwd(&c.ln2_out, ps[base + W_FC], &dfc_pre, t, d, 4 * d, dw, Some(db))
+                    };
+                    let dx_ln2 = self.norm_bwd_serial(
+                        ps,
+                        base + LN2_G,
+                        &dln2_out,
+                        &c.ln2_xhat,
+                        &c.ln2_rstd,
+                        t,
+                        eg,
+                    );
+                    for (a, b) in dx.iter_mut().zip(&dx_ln2) {
+                        *a += *b;
+                    }
 
-            let dln1_out = {
-                let (dw, db) = two_mut(eg, base + W_QKV, base + B_QKV);
-                linear_bwd(&c.ln1_out, ps[base + W_QKV], &dqkv, t, d, 3 * d, dw, Some(db))
-            };
-            let dx_ln1 = {
-                let (dg, db) = two_mut(eg, base + LN1_G, base + LN1_B);
-                layernorm_bwd(&dln1_out, &c.ln1_xhat, &c.ln1_rstd, ps[base + LN1_G], t, d, dg, db)
-            };
-            for (a, b) in dx.iter_mut().zip(&dx_ln1) {
-                *a += *b;
+                    // x_mid = x_in + lno1(w_o(att(qkv(ln1(x_in))))).
+                    let do_out = self.norm_bwd_serial(
+                        ps,
+                        base + LNO1_G,
+                        &dx,
+                        &c.lno1_xhat,
+                        &c.lno1_rstd,
+                        t,
+                        eg,
+                    );
+                    let datt_out = {
+                        let (dw, db) = two_mut(eg, base + W_O, base + B_O);
+                        linear_bwd(&c.att_out, ps[base + W_O], &do_out, t, d, d, dw, Some(db))
+                    };
+                    let dqkv = attn_bwd_serial(&c.qkv, &c.att_p, &datt_out, t, d, heads, scale);
+                    let dln1_out = {
+                        let (dw, db) = two_mut(eg, base + W_QKV, base + B_QKV);
+                        linear_bwd(&c.ln1_out, ps[base + W_QKV], &dqkv, t, d, 3 * d, dw, Some(db))
+                    };
+                    let dx_ln1 = self.norm_bwd_serial(
+                        ps,
+                        base + LN1_G,
+                        &dln1_out,
+                        &c.ln1_xhat,
+                        &c.ln1_rstd,
+                        t,
+                        eg,
+                    );
+                    for (a, b) in dx.iter_mut().zip(&dx_ln1) {
+                        *a += *b;
+                    }
+                }
             }
         }
 
@@ -1132,8 +1679,19 @@ impl ReferenceBackend {
         let nw = &self.pool;
         let gi = self.lnf_g_idx();
 
-        let Workspace { x, delta, wt, probs, lnf_xhat, lnf_rstd, lnf_out, ex_losses, blocks, .. } =
-            ws;
+        let Workspace {
+            x,
+            tmp1,
+            delta,
+            wt,
+            probs,
+            lnf_xhat,
+            lnf_rstd,
+            lnf_out,
+            ex_losses,
+            blocks,
+            ..
+        } = ws;
 
         // Embedding: wte[id] + wpe[pos], flattened to [B·T, d].
         for r in 0..m {
@@ -1149,54 +1707,223 @@ impl ReferenceBackend {
 
         for (i, blk) in blocks.iter_mut().enumerate() {
             let base = self.block_base(i);
-            ln_fwd(
-                x,
-                ps[base + LN1_G],
-                ps[base + LN1_B],
-                m,
-                d,
-                LN_EPS,
-                &mut blk.ln1_out,
-                &mut blk.ln1_xhat,
-                &mut blk.ln1_rstd,
-            );
-            transpose(ps[base + W_QKV], d, 3 * d, wt);
-            matmul_xwt(nw, &blk.ln1_out, wt, Some(ps[base + B_QKV]), m, d, 3 * d, &mut blk.qkv);
-            attention_forward(
-                nw,
-                &blk.qkv,
-                bsz,
-                t,
-                d,
-                heads,
-                scale,
-                &mut blk.att_p,
-                &mut blk.att_out,
-            );
-            transpose(ps[base + W_O], d, d, wt);
-            matmul_xwt(nw, &blk.att_out, wt, Some(ps[base + B_O]), m, d, d, delta);
-            add_into(&mut x[..m * d], &delta[..m * d]);
+            match self.cfg.placement {
+                // x += Attn(Norm1(x)); x += MLP(Norm2(x))
+                NormPlacement::PreLn => {
+                    self.norm_fwd(
+                        ps,
+                        base + LN1_G,
+                        x,
+                        m,
+                        &mut blk.ln1_out,
+                        &mut blk.ln1_xhat,
+                        &mut blk.ln1_rstd,
+                    );
+                    transpose(ps[base + W_QKV], d, 3 * d, wt);
+                    matmul_xwt(
+                        nw,
+                        &blk.ln1_out,
+                        wt,
+                        Some(ps[base + B_QKV]),
+                        m,
+                        d,
+                        3 * d,
+                        &mut blk.qkv,
+                    );
+                    attention_forward(
+                        nw,
+                        &blk.qkv,
+                        bsz,
+                        t,
+                        d,
+                        heads,
+                        scale,
+                        &mut blk.att_p,
+                        &mut blk.att_out,
+                    );
+                    transpose(ps[base + W_O], d, d, wt);
+                    matmul_xwt(nw, &blk.att_out, wt, Some(ps[base + B_O]), m, d, d, delta);
+                    add_into(&mut x[..m * d], &delta[..m * d]);
 
-            ln_fwd(
-                x,
-                ps[base + LN2_G],
-                ps[base + LN2_B],
-                m,
-                d,
-                LN_EPS,
-                &mut blk.ln2_out,
-                &mut blk.ln2_xhat,
-                &mut blk.ln2_rstd,
-            );
-            transpose(ps[base + W_FC], d, 4 * d, wt);
-            matmul_xwt(nw, &blk.ln2_out, wt, Some(ps[base + B_FC]), m, d, 4 * d, &mut blk.fc_pre);
-            gelu_batched(nw, &blk.fc_pre, m, 4 * d, &mut blk.fc_act);
-            transpose(ps[base + W_PROJ], 4 * d, d, wt);
-            matmul_xwt(nw, &blk.fc_act, wt, Some(ps[base + B_PROJ]), m, 4 * d, d, delta);
-            add_into(&mut x[..m * d], &delta[..m * d]);
+                    self.norm_fwd(
+                        ps,
+                        base + LN2_G,
+                        x,
+                        m,
+                        &mut blk.ln2_out,
+                        &mut blk.ln2_xhat,
+                        &mut blk.ln2_rstd,
+                    );
+                    transpose(ps[base + W_FC], d, 4 * d, wt);
+                    matmul_xwt(
+                        nw,
+                        &blk.ln2_out,
+                        wt,
+                        Some(ps[base + B_FC]),
+                        m,
+                        d,
+                        4 * d,
+                        &mut blk.fc_pre,
+                    );
+                    gelu_batched(nw, &blk.fc_pre, m, 4 * d, &mut blk.fc_act);
+                    transpose(ps[base + W_PROJ], 4 * d, d, wt);
+                    matmul_xwt(nw, &blk.fc_act, wt, Some(ps[base + B_PROJ]), m, 4 * d, d, delta);
+                    add_into(&mut x[..m * d], &delta[..m * d]);
+                }
+                // x = Norm1(x + Attn(x)); x = Norm2(x + MLP(x))
+                NormPlacement::PostLn => {
+                    blk.blk_in[..m * d].copy_from_slice(&x[..m * d]);
+                    transpose(ps[base + W_QKV], d, 3 * d, wt);
+                    matmul_xwt(
+                        nw,
+                        &blk.blk_in,
+                        wt,
+                        Some(ps[base + B_QKV]),
+                        m,
+                        d,
+                        3 * d,
+                        &mut blk.qkv,
+                    );
+                    attention_forward(
+                        nw,
+                        &blk.qkv,
+                        bsz,
+                        t,
+                        d,
+                        heads,
+                        scale,
+                        &mut blk.att_p,
+                        &mut blk.att_out,
+                    );
+                    transpose(ps[base + W_O], d, d, wt);
+                    matmul_xwt(nw, &blk.att_out, wt, Some(ps[base + B_O]), m, d, d, delta);
+                    add_into(&mut x[..m * d], &delta[..m * d]);
+                    // x = s1 → norm1 replaces the stream (ln1_out doubles
+                    // as the MLP input x_mid).
+                    self.norm_fwd(
+                        ps,
+                        base + LN1_G,
+                        x,
+                        m,
+                        &mut blk.ln1_out,
+                        &mut blk.ln1_xhat,
+                        &mut blk.ln1_rstd,
+                    );
+                    x[..m * d].copy_from_slice(&blk.ln1_out[..m * d]);
+
+                    transpose(ps[base + W_FC], d, 4 * d, wt);
+                    matmul_xwt(
+                        nw,
+                        &blk.ln1_out,
+                        wt,
+                        Some(ps[base + B_FC]),
+                        m,
+                        d,
+                        4 * d,
+                        &mut blk.fc_pre,
+                    );
+                    gelu_batched(nw, &blk.fc_pre, m, 4 * d, &mut blk.fc_act);
+                    transpose(ps[base + W_PROJ], 4 * d, d, wt);
+                    matmul_xwt(nw, &blk.fc_act, wt, Some(ps[base + B_PROJ]), m, 4 * d, d, delta);
+                    add_into(&mut x[..m * d], &delta[..m * d]);
+                    // x = s2 → norm2 replaces the stream again.
+                    self.norm_fwd(
+                        ps,
+                        base + LN2_G,
+                        x,
+                        m,
+                        &mut blk.ln2_out,
+                        &mut blk.ln2_xhat,
+                        &mut blk.ln2_rstd,
+                    );
+                    x[..m * d].copy_from_slice(&blk.ln2_out[..m * d]);
+                }
+                // x += NormO1(Attn(Norm1(x))); x += NormO2(MLP(Norm2(x)))
+                NormPlacement::PeriLn => {
+                    self.norm_fwd(
+                        ps,
+                        base + LN1_G,
+                        x,
+                        m,
+                        &mut blk.ln1_out,
+                        &mut blk.ln1_xhat,
+                        &mut blk.ln1_rstd,
+                    );
+                    transpose(ps[base + W_QKV], d, 3 * d, wt);
+                    matmul_xwt(
+                        nw,
+                        &blk.ln1_out,
+                        wt,
+                        Some(ps[base + B_QKV]),
+                        m,
+                        d,
+                        3 * d,
+                        &mut blk.qkv,
+                    );
+                    attention_forward(
+                        nw,
+                        &blk.qkv,
+                        bsz,
+                        t,
+                        d,
+                        heads,
+                        scale,
+                        &mut blk.att_p,
+                        &mut blk.att_out,
+                    );
+                    transpose(ps[base + W_O], d, d, wt);
+                    matmul_xwt(nw, &blk.att_out, wt, Some(ps[base + B_O]), m, d, d, delta);
+                    // delta = pre-norm attention output o → lno1 → tmp1.
+                    self.norm_fwd(
+                        ps,
+                        base + LNO1_G,
+                        delta,
+                        m,
+                        tmp1,
+                        &mut blk.lno1_xhat,
+                        &mut blk.lno1_rstd,
+                    );
+                    add_into(&mut x[..m * d], &tmp1[..m * d]);
+
+                    self.norm_fwd(
+                        ps,
+                        base + LN2_G,
+                        x,
+                        m,
+                        &mut blk.ln2_out,
+                        &mut blk.ln2_xhat,
+                        &mut blk.ln2_rstd,
+                    );
+                    transpose(ps[base + W_FC], d, 4 * d, wt);
+                    matmul_xwt(
+                        nw,
+                        &blk.ln2_out,
+                        wt,
+                        Some(ps[base + B_FC]),
+                        m,
+                        d,
+                        4 * d,
+                        &mut blk.fc_pre,
+                    );
+                    gelu_batched(nw, &blk.fc_pre, m, 4 * d, &mut blk.fc_act);
+                    transpose(ps[base + W_PROJ], 4 * d, d, wt);
+                    matmul_xwt(nw, &blk.fc_act, wt, Some(ps[base + B_PROJ]), m, 4 * d, d, delta);
+                    // delta = pre-norm MLP output p → lno2 → tmp1.
+                    self.norm_fwd(
+                        ps,
+                        base + LNO2_G,
+                        delta,
+                        m,
+                        tmp1,
+                        &mut blk.lno2_xhat,
+                        &mut blk.lno2_rstd,
+                    );
+                    add_into(&mut x[..m * d], &tmp1[..m * d]);
+                }
+            }
         }
 
-        ln_fwd(x, ps[gi], ps[gi + 1], m, d, LN_EPS, lnf_out, lnf_xhat, lnf_rstd);
+        self.norm_fwd(ps, gi, x, m, lnf_out, lnf_xhat, lnf_rstd);
         transpose(ps[gi + 2], d, v, wt);
         matmul_xwt(nw, lnf_out, wt, None, m, d, v, probs);
         softmax_ce(nw, &batch.targets, bsz, t, v, probs, ex_losses);
@@ -1276,163 +2003,426 @@ impl ReferenceBackend {
         matmul_at_b_acc(nw, xt, probs, m, d, v, &mut grads[gi + 2]);
         matmul_xw_t(nw, probs, ps[gi + 2], m, d, v, tmp1);
 
-        // Final LayerNorm: fused backward emits the per-example norms.
-        {
-            let (dg, db) = two_mut(grads, gi, gi + 1);
-            ln_bwd_fused(
-                nw,
-                tmp1,
-                lnf_xhat,
-                lnf_rstd,
-                ps[gi],
-                bsz,
-                t,
-                d,
-                dx,
-                ex_scratch,
-                dg,
-                db,
-                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-            );
-        }
-        if with_stats {
-            add_stats(stats, self.ltype_idx[gi], per_ex, bsz);
-        }
+        // Final norm: fused backward emits the per-example norms.
+        self.norm_bwd(
+            ps, gi, tmp1, lnf_xhat, lnf_rstd, bsz, t, dx, ex_scratch, grads, per_ex, stats,
+            with_stats,
+        );
 
         for i in (0..self.cfg.n_layers).rev() {
             let base = self.block_base(i);
             let blk = &blocks[i];
+            match self.cfg.placement {
+                NormPlacement::PreLn => {
+                    // MLP branch: x_out = x_mid + proj(gelu(fc(ln2(x_mid)))).
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.fc_act, dx, bsz, t, 4 * d, d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_PROJ], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        dx,
+                        bsz,
+                        t,
+                        d,
+                        &mut grads[base + B_PROJ],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_PROJ], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.fc_act, m, 4 * d, xt);
+                    matmul_at_b_acc(nw, xt, dx, m, 4 * d, d, &mut grads[base + W_PROJ]);
+                    matmul_xw_t(nw, dx, ps[base + W_PROJ], m, 4 * d, d, delta);
+                    gelu_bwd_batched(nw, &blk.fc_pre, m, 4 * d, delta);
 
-            // MLP branch: x_out = x_mid + proj(gelu(fc(ln2(x_mid)))).
-            if with_stats {
-                weight_sqnorms(nw, &blk.fc_act, dx, bsz, t, 4 * d, d, per_ex);
-                add_stats(stats, self.ltype_idx[base + W_PROJ], per_ex, bsz);
-            }
-            bias_sqnorms_acc(
-                dx,
-                bsz,
-                t,
-                d,
-                &mut grads[base + B_PROJ],
-                bias_scratch,
-                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-            );
-            if with_stats {
-                add_stats(stats, self.ltype_idx[base + B_PROJ], per_ex, bsz);
-            }
-            transpose_par(nw, &blk.fc_act, m, 4 * d, xt);
-            matmul_at_b_acc(nw, xt, dx, m, 4 * d, d, &mut grads[base + W_PROJ]);
-            matmul_xw_t(nw, dx, ps[base + W_PROJ], m, 4 * d, d, delta);
-            gelu_bwd_batched(nw, &blk.fc_pre, m, 4 * d, delta);
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.ln2_out, delta, bsz, t, d, 4 * d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_FC], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        delta,
+                        bsz,
+                        t,
+                        4 * d,
+                        &mut grads[base + B_FC],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_FC], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.ln2_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, delta, m, d, 4 * d, &mut grads[base + W_FC]);
+                    matmul_xw_t(nw, delta, ps[base + W_FC], m, d, 4 * d, tmp1);
 
-            if with_stats {
-                weight_sqnorms(nw, &blk.ln2_out, delta, bsz, t, d, 4 * d, per_ex);
-                add_stats(stats, self.ltype_idx[base + W_FC], per_ex, bsz);
-            }
-            bias_sqnorms_acc(
-                delta,
-                bsz,
-                t,
-                4 * d,
-                &mut grads[base + B_FC],
-                bias_scratch,
-                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-            );
-            if with_stats {
-                add_stats(stats, self.ltype_idx[base + B_FC], per_ex, bsz);
-            }
-            transpose_par(nw, &blk.ln2_out, m, d, xt);
-            matmul_at_b_acc(nw, xt, delta, m, d, 4 * d, &mut grads[base + W_FC]);
-            matmul_xw_t(nw, delta, ps[base + W_FC], m, d, 4 * d, tmp1);
+                    self.norm_bwd(
+                        ps,
+                        base + LN2_G,
+                        tmp1,
+                        &blk.ln2_xhat,
+                        &blk.ln2_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+                    add_into(&mut dx[..m * d], &tmp2[..m * d]);
 
-            {
-                let (dg, db) = two_mut(grads, base + LN2_G, base + LN2_B);
-                ln_bwd_fused(
-                    nw,
-                    tmp1,
-                    &blk.ln2_xhat,
-                    &blk.ln2_rstd,
-                    ps[base + LN2_G],
-                    bsz,
-                    t,
-                    d,
-                    tmp2,
-                    ex_scratch,
-                    dg,
-                    db,
-                    if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-                );
-            }
-            if with_stats {
-                add_stats(stats, self.ltype_idx[base + LN2_G], per_ex, bsz);
-            }
-            add_into(&mut dx[..m * d], &tmp2[..m * d]);
+                    // Attention branch: x_mid = x_in + w_o(att(ln1(x_in))).
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.att_out, dx, bsz, t, d, d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_O], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        dx,
+                        bsz,
+                        t,
+                        d,
+                        &mut grads[base + B_O],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_O], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.att_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, dx, m, d, d, &mut grads[base + W_O]);
+                    matmul_xw_t(nw, dx, ps[base + W_O], m, d, d, tmp1);
 
-            // Attention branch: x_mid = x_in + w_o(att(ln1(x_in))).
-            if with_stats {
-                weight_sqnorms(nw, &blk.att_out, dx, bsz, t, d, d, per_ex);
-                add_stats(stats, self.ltype_idx[base + W_O], per_ex, bsz);
-            }
-            bias_sqnorms_acc(
-                dx,
-                bsz,
-                t,
-                d,
-                &mut grads[base + B_O],
-                bias_scratch,
-                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-            );
-            if with_stats {
-                add_stats(stats, self.ltype_idx[base + B_O], per_ex, bsz);
-            }
-            transpose_par(nw, &blk.att_out, m, d, xt);
-            matmul_at_b_acc(nw, xt, dx, m, d, d, &mut grads[base + W_O]);
-            matmul_xw_t(nw, dx, ps[base + W_O], m, d, d, tmp1);
+                    attention_backward(
+                        nw, &blk.qkv, &blk.att_p, tmp1, bsz, t, d, heads, scale, delta,
+                    );
 
-            attention_backward(nw, &blk.qkv, &blk.att_p, tmp1, bsz, t, d, heads, scale, delta);
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.ln1_out, delta, bsz, t, d, 3 * d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_QKV], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        delta,
+                        bsz,
+                        t,
+                        3 * d,
+                        &mut grads[base + B_QKV],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_QKV], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.ln1_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, delta, m, d, 3 * d, &mut grads[base + W_QKV]);
+                    matmul_xw_t(nw, delta, ps[base + W_QKV], m, d, 3 * d, tmp1);
 
-            if with_stats {
-                weight_sqnorms(nw, &blk.ln1_out, delta, bsz, t, d, 3 * d, per_ex);
-                add_stats(stats, self.ltype_idx[base + W_QKV], per_ex, bsz);
-            }
-            bias_sqnorms_acc(
-                delta,
-                bsz,
-                t,
-                3 * d,
-                &mut grads[base + B_QKV],
-                bias_scratch,
-                if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-            );
-            if with_stats {
-                add_stats(stats, self.ltype_idx[base + B_QKV], per_ex, bsz);
-            }
-            transpose_par(nw, &blk.ln1_out, m, d, xt);
-            matmul_at_b_acc(nw, xt, delta, m, d, 3 * d, &mut grads[base + W_QKV]);
-            matmul_xw_t(nw, delta, ps[base + W_QKV], m, d, 3 * d, tmp1);
+                    self.norm_bwd(
+                        ps,
+                        base + LN1_G,
+                        tmp1,
+                        &blk.ln1_xhat,
+                        &blk.ln1_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+                    add_into(&mut dx[..m * d], &tmp2[..m * d]);
+                }
+                NormPlacement::PostLn => {
+                    // x_out = norm2(s2): the norm backward REPLACES the
+                    // stream gradient — no residual passes around a
+                    // Post-LN norm.
+                    self.norm_bwd(
+                        ps,
+                        base + LN2_G,
+                        dx,
+                        &blk.ln2_xhat,
+                        &blk.ln2_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+                    dx[..m * d].copy_from_slice(&tmp2[..m * d]);
 
-            {
-                let (dg, db) = two_mut(grads, base + LN1_G, base + LN1_B);
-                ln_bwd_fused(
-                    nw,
-                    tmp1,
-                    &blk.ln1_xhat,
-                    &blk.ln1_rstd,
-                    ps[base + LN1_G],
-                    bsz,
-                    t,
-                    d,
-                    tmp2,
-                    ex_scratch,
-                    dg,
-                    db,
-                    if with_stats { Some(per_ex.as_mut_slice()) } else { None },
-                );
+                    // s2 = x_mid + proj(gelu(fc(x_mid))), x_mid = ln1_out.
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.fc_act, dx, bsz, t, 4 * d, d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_PROJ], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        dx,
+                        bsz,
+                        t,
+                        d,
+                        &mut grads[base + B_PROJ],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_PROJ], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.fc_act, m, 4 * d, xt);
+                    matmul_at_b_acc(nw, xt, dx, m, 4 * d, d, &mut grads[base + W_PROJ]);
+                    matmul_xw_t(nw, dx, ps[base + W_PROJ], m, 4 * d, d, delta);
+                    gelu_bwd_batched(nw, &blk.fc_pre, m, 4 * d, delta);
+
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.ln1_out, delta, bsz, t, d, 4 * d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_FC], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        delta,
+                        bsz,
+                        t,
+                        4 * d,
+                        &mut grads[base + B_FC],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_FC], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.ln1_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, delta, m, d, 4 * d, &mut grads[base + W_FC]);
+                    matmul_xw_t(nw, delta, ps[base + W_FC], m, d, 4 * d, tmp1);
+                    // d(x_mid) = residual ds2 + MLP path.
+                    add_into(&mut dx[..m * d], &tmp1[..m * d]);
+
+                    // x_mid = norm1(s1): replace again.
+                    self.norm_bwd(
+                        ps,
+                        base + LN1_G,
+                        dx,
+                        &blk.ln1_xhat,
+                        &blk.ln1_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+                    dx[..m * d].copy_from_slice(&tmp2[..m * d]);
+
+                    // s1 = x_in + w_o(att(qkv(x_in))).
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.att_out, dx, bsz, t, d, d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_O], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        dx,
+                        bsz,
+                        t,
+                        d,
+                        &mut grads[base + B_O],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_O], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.att_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, dx, m, d, d, &mut grads[base + W_O]);
+                    matmul_xw_t(nw, dx, ps[base + W_O], m, d, d, tmp1);
+
+                    attention_backward(
+                        nw, &blk.qkv, &blk.att_p, tmp1, bsz, t, d, heads, scale, delta,
+                    );
+
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.blk_in, delta, bsz, t, d, 3 * d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_QKV], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        delta,
+                        bsz,
+                        t,
+                        3 * d,
+                        &mut grads[base + B_QKV],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_QKV], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.blk_in, m, d, xt);
+                    matmul_at_b_acc(nw, xt, delta, m, d, 3 * d, &mut grads[base + W_QKV]);
+                    matmul_xw_t(nw, delta, ps[base + W_QKV], m, d, 3 * d, tmp1);
+                    // d(x_in) = residual ds1 + attention path.
+                    add_into(&mut dx[..m * d], &tmp1[..m * d]);
+                }
+                NormPlacement::PeriLn => {
+                    // x_out = x_mid + lno2(p): residual carries dx
+                    // through; tmp2 = d(p), the pre-norm MLP output grad.
+                    self.norm_bwd(
+                        ps,
+                        base + LNO2_G,
+                        dx,
+                        &blk.lno2_xhat,
+                        &blk.lno2_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+
+                    // p = proj(gelu(fc(ln2(x_mid)))).
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.fc_act, tmp2, bsz, t, 4 * d, d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_PROJ], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        tmp2,
+                        bsz,
+                        t,
+                        d,
+                        &mut grads[base + B_PROJ],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_PROJ], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.fc_act, m, 4 * d, xt);
+                    matmul_at_b_acc(nw, xt, tmp2, m, 4 * d, d, &mut grads[base + W_PROJ]);
+                    matmul_xw_t(nw, tmp2, ps[base + W_PROJ], m, 4 * d, d, delta);
+                    gelu_bwd_batched(nw, &blk.fc_pre, m, 4 * d, delta);
+
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.ln2_out, delta, bsz, t, d, 4 * d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_FC], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        delta,
+                        bsz,
+                        t,
+                        4 * d,
+                        &mut grads[base + B_FC],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_FC], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.ln2_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, delta, m, d, 4 * d, &mut grads[base + W_FC]);
+                    matmul_xw_t(nw, delta, ps[base + W_FC], m, d, 4 * d, tmp1);
+
+                    self.norm_bwd(
+                        ps,
+                        base + LN2_G,
+                        tmp1,
+                        &blk.ln2_xhat,
+                        &blk.ln2_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+                    add_into(&mut dx[..m * d], &tmp2[..m * d]);
+
+                    // x_mid = x_in + lno1(o): tmp2 = d(o), the pre-norm
+                    // attention output grad.
+                    self.norm_bwd(
+                        ps,
+                        base + LNO1_G,
+                        dx,
+                        &blk.lno1_xhat,
+                        &blk.lno1_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.att_out, tmp2, bsz, t, d, d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_O], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        tmp2,
+                        bsz,
+                        t,
+                        d,
+                        &mut grads[base + B_O],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_O], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.att_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, tmp2, m, d, d, &mut grads[base + W_O]);
+                    matmul_xw_t(nw, tmp2, ps[base + W_O], m, d, d, tmp1);
+
+                    attention_backward(
+                        nw, &blk.qkv, &blk.att_p, tmp1, bsz, t, d, heads, scale, delta,
+                    );
+
+                    if with_stats {
+                        weight_sqnorms(nw, &blk.ln1_out, delta, bsz, t, d, 3 * d, per_ex);
+                        add_stats(stats, self.ltype_idx[base + W_QKV], per_ex, bsz);
+                    }
+                    bias_sqnorms_acc(
+                        delta,
+                        bsz,
+                        t,
+                        3 * d,
+                        &mut grads[base + B_QKV],
+                        bias_scratch,
+                        if with_stats { Some(per_ex.as_mut_slice()) } else { None },
+                    );
+                    if with_stats {
+                        add_stats(stats, self.ltype_idx[base + B_QKV], per_ex, bsz);
+                    }
+                    transpose_par(nw, &blk.ln1_out, m, d, xt);
+                    matmul_at_b_acc(nw, xt, delta, m, d, 3 * d, &mut grads[base + W_QKV]);
+                    matmul_xw_t(nw, delta, ps[base + W_QKV], m, d, 3 * d, tmp1);
+
+                    self.norm_bwd(
+                        ps,
+                        base + LN1_G,
+                        tmp1,
+                        &blk.ln1_xhat,
+                        &blk.ln1_rstd,
+                        bsz,
+                        t,
+                        tmp2,
+                        ex_scratch,
+                        grads,
+                        per_ex,
+                        stats,
+                        with_stats,
+                    );
+                    add_into(&mut dx[..m * d], &tmp2[..m * d]);
+                }
             }
-            if with_stats {
-                add_stats(stats, self.ltype_idx[base + LN1_G], per_ex, bsz);
-            }
-            add_into(&mut dx[..m * d], &tmp2[..m * d]);
         }
 
         // Embedding: per-example norms need token-id grouping for wte
@@ -1749,6 +2739,46 @@ impl BackendFactory for ReferenceFactory {
     }
 }
 
+/// Factory over the built-in [`PRESETS`] with an explicit normalization
+/// matrix cell applied to every model it creates. `default()` is the
+/// LayerNorm + Pre-LN cell, i.e. exactly [`ReferenceFactory`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReferenceVariantFactory {
+    pub norm: NormKind,
+    pub placement: NormPlacement,
+}
+
+impl ReferenceVariantFactory {
+    pub fn new(norm: NormKind, placement: NormPlacement) -> Self {
+        Self { norm, placement }
+    }
+
+    fn cfg(&self, model: &str) -> Result<RefModelConfig> {
+        let mut cfg = preset_cfg(model)?;
+        cfg.norm = self.norm;
+        cfg.placement = self.placement;
+        Ok(cfg)
+    }
+}
+
+impl BackendFactory for ReferenceVariantFactory {
+    fn create(&self, model: &str) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(ReferenceBackend::new(self.cfg(model)?)?))
+    }
+
+    fn describe(&self, model: &str) -> Result<ModelEntry> {
+        Ok(ReferenceBackend::new(self.cfg(model)?)?.entry().clone())
+    }
+
+    fn models(&self) -> Vec<String> {
+        PRESETS.iter().map(|(n, _)| n.to_string()).collect()
+    }
+
+    fn platform(&self) -> String {
+        "reference-cpu".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1761,7 +2791,20 @@ mod tests {
             seq_len: 6,
             vocab: 11,
             microbatch,
+            norm: NormKind::LayerNorm,
+            placement: NormPlacement::PreLn,
         }
+    }
+
+    /// All six cells of the normalization matrix at the tiny shape.
+    fn matrix_cells(microbatch: usize) -> Vec<RefModelConfig> {
+        let mut out = Vec::new();
+        for norm in NormKind::ALL {
+            for placement in NormPlacement::ALL {
+                out.push(RefModelConfig { norm, placement, ..tiny_cfg(microbatch) });
+            }
+        }
+        out
     }
 
     fn tiny_batch(bsz: usize, t: usize, vocab: usize, seed: u64) -> Batch {
@@ -1953,7 +2996,7 @@ mod tests {
         use crate::util::prop::forall;
         forall(
             2024,
-            10,
+            12,
             |r| {
                 let heads = 1 + r.range(0, 2); // 1..=2
                 let hd = 2 + r.range(0, 3); // 2..=4
@@ -1965,6 +3008,8 @@ mod tests {
                     seq_len: [1, 2, 5, 9][r.range(0, 4)],
                     vocab: 5 + r.range(0, 13),
                     microbatch: 1 + r.range(0, 3),
+                    norm: NormKind::ALL[r.range(0, NormKind::ALL.len())],
+                    placement: NormPlacement::ALL[r.range(0, NormPlacement::ALL.len())],
                 };
                 let seed = r.next_u64();
                 (cfg, seed)
@@ -2056,6 +3101,8 @@ mod tests {
             seq_len: 4096,
             vocab: 50304,
             microbatch: 64,
+            norm: NormKind::LayerNorm,
+            placement: NormPlacement::PreLn,
         };
         assert!(ReferenceBackend::new(huge).is_err());
         assert!(workspace_bytes(&huge, 64) > workspace_bytes(&cfg, 2));
@@ -2104,5 +3151,118 @@ mod tests {
         }
         let after = be.eval(&params, &batch).unwrap();
         assert!(after < before, "{after} !< {before}");
+    }
+
+    /// Tentpole: the parameter layout per matrix cell. Peri-LN appends
+    /// the two output norms per block; RMSNorm keeps the `.b` slots as
+    /// frozen dummies so offsets stay uniform across kinds.
+    #[test]
+    fn matrix_cell_layouts_are_consistent() {
+        for cfg in matrix_cells(2) {
+            let be = ReferenceBackend::new(cfg).unwrap();
+            let e = be.entry();
+            assert_eq!(
+                e.params.len(),
+                2 + per_block(&cfg) * cfg.n_layers + 3,
+                "{}/{}",
+                cfg.norm,
+                cfg.placement
+            );
+            let has_lno = e.params.iter().any(|p| p.name.contains(".lno1."));
+            assert_eq!(has_lno, cfg.placement == NormPlacement::PeriLn, "{}", cfg.placement);
+            let total: u64 = e.params.iter().map(|p| p.numel() as u64).sum();
+            assert_eq!(total, e.n_params, "{}/{}", cfg.norm, cfg.placement);
+        }
+    }
+
+    /// Tentpole: analytic gradients against central finite differences in
+    /// EVERY cell of the normalization matrix. The fused batched path and
+    /// the per-example oracle share no code with `eval`'s loss beyond the
+    /// forward, so this pins the placement-specific backward dataflow.
+    #[test]
+    fn matrix_cells_match_finite_differences() {
+        for cfg in matrix_cells(2) {
+            let tag = format!("{}/{}", cfg.norm, cfg.placement);
+            let be = ReferenceBackend::new(cfg).unwrap();
+            let params = be.init(5).unwrap();
+            let batch = tiny_batch(2, 6, 11, 9);
+            let out = be.grad_step(&params, &batch).unwrap();
+            let h = 1e-2f32;
+            let mut checked = 0usize;
+            for (i, g) in out.grads.iter().enumerate() {
+                let gt = g.as_host().unwrap();
+                let (j, &ana) = gt
+                    .data
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap();
+                let name = &be.entry().params[i].name;
+                if cfg.norm == NormKind::RmsNorm && name.ends_with(".b") && name.contains("ln") {
+                    // dummy β: gradient must stay exactly zero
+                    assert!(gt.data.iter().all(|&x| x == 0.0), "{tag}: {name}");
+                    continue;
+                }
+                if ana.abs() < 1e-3 {
+                    continue;
+                }
+                let lp = be.eval(&perturbed(&params, i, j, h), &batch).unwrap();
+                let lm = be.eval(&perturbed(&params, i, j, -h), &batch).unwrap();
+                let num = (lp - lm) / (2.0 * h);
+                let tol = 0.1 * ana.abs().max(num.abs()) + 2e-3;
+                assert!(
+                    (num - ana).abs() <= tol,
+                    "{tag}: param {name} ({i}): numeric {num} vs analytic {ana}"
+                );
+                checked += 1;
+            }
+            assert!(checked >= 5, "{tag}: only {checked} tensors had a testable coordinate");
+        }
+    }
+
+    /// Tentpole + satellite: every matrix cell is bitwise invariant to
+    /// the worker count, and its fused stats match the retained
+    /// per-example oracle.
+    #[test]
+    fn matrix_cells_are_worker_invariant_and_match_oracle() {
+        for cfg in matrix_cells(3) {
+            let tag = format!("{}/{}", cfg.norm, cfg.placement);
+            let base = ReferenceBackend::with_threads(cfg, 1).unwrap();
+            let params = base.init(8).unwrap();
+            let batch = tiny_batch(3, 6, 11, 13);
+            let a = base.grad_step(&params, &batch).unwrap();
+            for w in [2, 5] {
+                let be = ReferenceBackend::with_threads(cfg, w).unwrap();
+                let b = be.grad_step(&params, &batch).unwrap();
+                assert_eq!(a.loss, b.loss, "{tag} workers={w}");
+                assert_eq!(a.stats, b.stats, "{tag} workers={w}");
+                for (x, y) in a.grads.iter().zip(&b.grads) {
+                    assert_eq!(x.as_host().unwrap(), y.as_host().unwrap(), "{tag} workers={w}");
+                }
+            }
+            let oracle = base.grad_step_per_example(&params, &batch).unwrap();
+            for (ty, (f, o)) in STATS_ORDER.iter().zip(a.stats.iter().zip(oracle.stats)) {
+                assert!(
+                    ((*f as f64) - o as f64).abs() <= 1e-4 * (o as f64).abs().max(1e-10),
+                    "{tag} stats[{ty}]: fused {f} vs oracle {o}"
+                );
+            }
+            assert!((a.loss - oracle.loss).abs() <= 1e-5 * oracle.loss.abs().max(1e-6), "{tag}");
+        }
+    }
+
+    /// The variant factory applies its cell to every preset; the default
+    /// cell describes the same entry as the plain factory.
+    #[test]
+    fn variant_factory_applies_cell() {
+        let f = ReferenceVariantFactory::new(NormKind::RmsNorm, NormPlacement::PeriLn);
+        let e = f.describe("nano").unwrap();
+        assert!(e.params.iter().any(|p| p.name.contains(".lno1.")));
+        let default = ReferenceVariantFactory::default().describe("nano").unwrap();
+        let plain = ReferenceFactory.describe("nano").unwrap();
+        assert_eq!(default.params.len(), plain.params.len());
+        assert_eq!(default.n_params, plain.n_params);
+        assert_eq!(f.platform(), "reference-cpu");
+        assert!(f.models().contains(&"nano".to_string()));
     }
 }

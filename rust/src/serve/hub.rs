@@ -15,14 +15,15 @@
 //!   directly, but the ring stores records already serialized — the
 //!   read assembles byte fragments only.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::trainer::{record_json, StepObservation, StepObserver, StepRecord};
 use crate::coordinator::RankHealth;
-use crate::gns::GnsSnapshot;
+use crate::gns::{linreg, GnsSnapshot};
+use crate::norms::{NormKind, NormPlacement};
 use crate::telemetry::summary::Decimated;
 use crate::util::json::Value;
 
@@ -59,6 +60,11 @@ impl RunState {
 pub struct HubMeta {
     pub model: String,
     pub platform: String,
+    /// Normalization variant of the served run (`/status`,
+    /// `/gns/layers`, `/gns/predictor` all report it, so a dashboard
+    /// polling several matrix cells can tell them apart).
+    pub norm_kind: NormKind,
+    pub norm_placement: NormPlacement,
     pub total_steps: u64,
     pub n_params: u64,
     pub ranks: usize,
@@ -80,6 +86,11 @@ struct HubInner {
     /// Per-rank liveness after the last step (`/ranks`).
     ranks: Vec<RankHealth>,
     loss_curve: Decimated,
+    /// Per-step (norm-only GNS, total GNS) pairs for the live predictor
+    /// fit, ring-bounded like the record ring. Only finite pairs enter
+    /// (the first steps report NaN while the EMAs warm up).
+    predictor: VecDeque<(f64, f64)>,
+    predictor_cap: usize,
     state: RunState,
     error: Option<String>,
     /// Checkpoint-writer degradation notice (disk failures survived by
@@ -111,6 +122,8 @@ impl TelemetryHub {
                 accum: 0,
                 ranks: Vec::new(),
                 loss_curve: Decimated::new(LOSS_CURVE_MAX),
+                predictor: VecDeque::new(),
+                predictor_cap: ring_capacity.max(2),
                 state: RunState::Running,
                 error: None,
                 checkpoint_error: None,
@@ -153,6 +166,13 @@ impl TelemetryHub {
         let mut inner = self.lock_inner();
         inner.ring.push(obs.record.step, json);
         inner.loss_curve.push(obs.record.step as f64, obs.record.loss);
+        let (ln, tot) = (obs.record.gns_layernorm, obs.record.gns_total);
+        if ln.is_finite() && tot.is_finite() {
+            if inner.predictor.len() == inner.predictor_cap {
+                inner.predictor.pop_front();
+            }
+            inner.predictor.push_back((ln, tot));
+        }
         inner.last = Some(obs.record.clone());
         inner.gns = Some(obs.gns.clone());
         inner.accum = obs.accum;
@@ -246,6 +266,8 @@ impl TelemetryHub {
         let mut m = BTreeMap::new();
         m.insert("model".into(), Value::Str(self.meta.model.clone()));
         m.insert("platform".into(), Value::Str(self.meta.platform.clone()));
+        m.insert("norm_kind".into(), Value::Str(self.meta.norm_kind.name().into()));
+        m.insert("norm_placement".into(), Value::Str(self.meta.norm_placement.name().into()));
         m.insert("state".into(), Value::Str(inner.state.as_str().into()));
         m.insert("total_steps".into(), Value::Num(self.meta.total_steps as f64));
         m.insert("n_params".into(), Value::Num(self.meta.n_params as f64));
@@ -300,6 +322,8 @@ impl TelemetryHub {
             "step".into(),
             Value::Num(inner.last.as_ref().map(|r| r.step).unwrap_or(0) as f64),
         );
+        m.insert("norm_kind".into(), Value::Str(self.meta.norm_kind.name().into()));
+        m.insert("norm_placement".into(), Value::Str(self.meta.norm_placement.name().into()));
         match inner.gns.as_ref() {
             None => {
                 m.insert("per_layer".into(), Value::Obj(BTreeMap::new()));
@@ -314,6 +338,53 @@ impl TelemetryHub {
                 m.insert("total".into(), type_snapshot_json(&snap.total));
             }
         }
+        Value::Obj(m).to_string()
+    }
+
+    /// `/gns/predictor` body: the live norm-only-vs-total GNS fit over
+    /// the ring-bounded pair history — OLS of total on norm-only GNS
+    /// (slope/intercept/R²) plus the ratio of means, the same quantities
+    /// `repro figures --report predictor` scores offline per matrix
+    /// cell. `fit` is null until two finite pairs with x-variance exist.
+    pub fn body_gns_predictor(&self) -> String {
+        let inner = self.lock_inner();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "step".into(),
+            Value::Num(inner.last.as_ref().map(|r| r.step).unwrap_or(0) as f64),
+        );
+        m.insert("norm_kind".into(), Value::Str(self.meta.norm_kind.name().into()));
+        m.insert("norm_placement".into(), Value::Str(self.meta.norm_placement.name().into()));
+        m.insert(
+            "gns_layernorm".into(),
+            inner
+                .last
+                .as_ref()
+                .map(|r| Value::finite_or_null(r.gns_layernorm))
+                .unwrap_or(Value::Null),
+        );
+        m.insert(
+            "gns_total".into(),
+            inner
+                .last
+                .as_ref()
+                .map(|r| Value::finite_or_null(r.gns_total))
+                .unwrap_or(Value::Null),
+        );
+        let (x, y): (Vec<f64>, Vec<f64>) = inner.predictor.iter().copied().unzip();
+        drop(inner);
+        m.insert("points".into(), Value::Num(x.len() as f64));
+        let fit = linreg(&x, &y).map(|reg| {
+            let mx = x.iter().sum::<f64>() / x.len() as f64;
+            let my = y.iter().sum::<f64>() / y.len() as f64;
+            let mut f = BTreeMap::new();
+            f.insert("slope".into(), Value::finite_or_null(reg.slope));
+            f.insert("intercept".into(), Value::finite_or_null(reg.intercept));
+            f.insert("r2".into(), Value::finite_or_null(reg.r * reg.r));
+            f.insert("ratio".into(), Value::finite_or_null(my / mx));
+            Value::Obj(f)
+        });
+        m.insert("fit".into(), fit.unwrap_or(Value::Null));
         Value::Obj(m).to_string()
     }
 
@@ -524,6 +595,8 @@ mod tests {
         HubMeta {
             model: "nano".into(),
             platform: "test".into(),
+            norm_kind: NormKind::default(),
+            norm_placement: NormPlacement::default(),
             total_steps: 10,
             n_params: 123,
             ranks: 1,
@@ -615,6 +688,58 @@ mod tests {
         assert_eq!(st.get("state").unwrap().as_str().unwrap(), "finished");
     }
 
+    /// Publish like [`publish`], but with explicit (norm-only, total)
+    /// GNS values so the predictor fit has a known line to recover.
+    fn publish_gns(hub: &TelemetryHub, step: u64, ln: f64, tot: f64) {
+        let mut r = rec(step);
+        r.gns_layernorm = ln;
+        r.gns_total = tot;
+        let mut tracker = crate::gns::GnsTracker::new(&crate::STATS_ORDER, 0.5);
+        tracker.observe(8.0, &[1.0; crate::N_TYPES], &[3.0; crate::N_TYPES]);
+        hub.publish(&StepObservation {
+            record: &r,
+            gns: tracker.snapshot(),
+            accum: 2,
+            total_steps: 10,
+            ranks: Vec::new(),
+            checkpoint_error: None,
+        });
+    }
+
+    #[test]
+    fn predictor_body_recovers_the_fit_and_reports_the_variant() {
+        let hub = TelemetryHub::new(test_meta(), 8);
+        // No data yet: valid JSON, null fit, zero points.
+        let empty = Value::parse(&hub.body_gns_predictor()).unwrap();
+        assert_eq!(empty.get("points").unwrap().as_u64().unwrap(), 0);
+        assert!(matches!(empty.opt("fit"), Some(Value::Null)));
+        assert_eq!(empty.get("norm_kind").unwrap().as_str().unwrap(), "layernorm");
+        assert_eq!(empty.get("norm_placement").unwrap().as_str().unwrap(), "preln");
+        // NaN pairs (EMA warm-up) never enter the fit window.
+        publish_gns(&hub, 1, f64::NAN, 3.0);
+        // total = 2.5 * norm_only exactly → slope 2.5, r2 1.
+        for (i, ln) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            publish_gns(&hub, 2 + i as u64, *ln, 2.5 * ln);
+        }
+        let v = Value::parse(&hub.body_gns_predictor()).unwrap();
+        assert_eq!(v.get("points").unwrap().as_u64().unwrap(), 4);
+        let fit = v.get("fit").unwrap();
+        assert!((fit.get("slope").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert!((fit.get("r2").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((fit.get("ratio").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(v.get("step").unwrap().as_u64().unwrap(), 5);
+    }
+
+    #[test]
+    fn predictor_window_is_ring_bounded() {
+        let hub = TelemetryHub::new(test_meta(), 4);
+        for s in 1..=10u64 {
+            publish_gns(&hub, s, s as f64, 2.0 * s as f64);
+        }
+        let v = Value::parse(&hub.body_gns_predictor()).unwrap();
+        assert_eq!(v.get("points").unwrap().as_u64().unwrap(), 4);
+    }
+
     #[test]
     fn cache_serves_same_arc_until_version_bump() {
         let hub = TelemetryHub::new(test_meta(), 8);
@@ -654,7 +779,7 @@ mod tests {
         let ranks = v.get("ranks").unwrap().as_arr().unwrap();
         assert_eq!(ranks.len(), 2);
         assert_eq!(ranks[0].get("pid").unwrap().as_u64().unwrap(), 4242);
-        assert!(matches!(ranks[1].get("pid"), Some(Value::Null)));
+        assert!(matches!(ranks[1].opt("pid"), Some(Value::Null)));
         assert_eq!(ranks[0].get("respawns").unwrap().as_u64().unwrap(), 2);
         assert_eq!(v.get("respawns_total").unwrap().as_u64().unwrap(), 2);
         // ring holds 4: steps 1..=6 evict 1 and 2 → cursor 1 has a gap
@@ -692,7 +817,7 @@ mod tests {
         publish(&hub, 1);
         let h = Value::parse(&hub.body_health()).unwrap();
         assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
-        assert!(matches!(h.get("checkpoint_error"), Some(Value::Null)));
+        assert!(matches!(h.opt("checkpoint_error"), Some(Value::Null)));
 
         publish_with(&hub, 2, Some("checkpoint writes failing: no space".into()));
         let h = Value::parse(&hub.body_health()).unwrap();

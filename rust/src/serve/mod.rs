@@ -17,10 +17,11 @@
 //!    final checkpoint (when configured) before the accept loop is
 //!    allowed to exit.
 //!
-//! Endpoints: `/health`, `/status`, `/gns/layers`, `/schedule`,
-//! `/ranks` (per-rank liveness, elastic process mode),
-//! `/records?since=&limit=`, `/metrics` (Prometheus text), and
-//! `POST /shutdown`. See README "Live telemetry".
+//! Endpoints: `/health`, `/status`, `/gns/layers`, `/gns/predictor`
+//! (live norm-only vs total GNS fit), `/schedule`, `/ranks` (per-rank
+//! liveness, elastic process mode), `/records?since=&limit=`,
+//! `/metrics` (Prometheus text), and `POST /shutdown`. See README
+//! "Live telemetry".
 
 pub mod http;
 pub mod hub;
@@ -43,6 +44,8 @@ pub fn hub_meta(trainer: &Trainer, bench_dir: &std::path::Path) -> HubMeta {
     HubMeta {
         model: trainer.cfg.model.clone(),
         platform: trainer.runner.backend_name().to_string(),
+        norm_kind: trainer.cfg.norm(),
+        norm_placement: trainer.cfg.placement(),
         total_steps: trainer.cfg.steps,
         n_params: trainer.runner.entry.n_params,
         ranks: trainer.cfg.ranks.max(1),

@@ -133,6 +133,9 @@ pub fn route(hub: &TelemetryHub, req: &Request) -> Response {
         ("GET", "/gns/layers") => {
             Response::json_shared(200, hub.cached("gns_layers", || hub.body_gns_layers()))
         }
+        ("GET", "/gns/predictor") => {
+            Response::json_shared(200, hub.cached("gns_predictor", || hub.body_gns_predictor()))
+        }
         ("GET", "/schedule") => {
             Response::json_shared(200, hub.cached("schedule", || hub.body_schedule()))
         }
@@ -164,8 +167,9 @@ pub fn route(hub: &TelemetryHub, req: &Request) -> Response {
             Response::json(200, crate::util::json::Value::Obj(m).to_string())
         }
         ("GET", "/shutdown") => Response::error(405, "use POST /shutdown"),
-        (m, p) if p == "/health" || p == "/status" || p == "/gns/layers" || p == "/schedule"
-            || p == "/ranks" || p == "/records" || p == "/metrics" || p == "/shutdown" =>
+        (m, p) if p == "/health" || p == "/status" || p == "/gns/layers"
+            || p == "/gns/predictor" || p == "/schedule" || p == "/ranks" || p == "/records"
+            || p == "/metrics" || p == "/shutdown" =>
         {
             Response::error(405, &format!("{m} not allowed on {p}"))
         }

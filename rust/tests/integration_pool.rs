@@ -10,6 +10,7 @@
 use std::sync::Mutex;
 
 use nanogns::data::{CorpusGenerator, Loader};
+use nanogns::norms::{NormKind, NormPlacement};
 use nanogns::runtime::kernels::{total_threads_spawned, WorkerPool};
 use nanogns::runtime::{Backend, RefModelConfig, ReferenceBackend};
 
@@ -23,6 +24,8 @@ fn tiny_cfg() -> RefModelConfig {
         seq_len: 6,
         vocab: 11,
         microbatch: 2,
+        norm: NormKind::LayerNorm,
+        placement: NormPlacement::PreLn,
     }
 }
 

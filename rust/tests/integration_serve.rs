@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use nanogns::config::TrainConfig;
 use nanogns::coordinator::Trainer;
+use nanogns::norms::{NormKind, NormPlacement};
 use nanogns::runtime::ReferenceFactory;
 use nanogns::serve::{self, HubMeta, RunState, Server, TelemetryHub};
 use nanogns::util::json::Value;
@@ -120,6 +121,19 @@ fn concurrent_pollers_see_every_step_exactly_once() {
     let st = Value::parse(&body).unwrap();
     assert_eq!(st.get("state").unwrap().as_str().unwrap(), "finished");
     assert_eq!(st.get("last").unwrap().get("step").unwrap().as_u64().unwrap(), STEPS);
+    assert_eq!(st.get("norm_kind").unwrap().as_str().unwrap(), "layernorm");
+    assert_eq!(st.get("norm_placement").unwrap().as_str().unwrap(), "preln");
+
+    // The live predictor endpoint reports the variant and (once the GNS
+    // EMAs have warmed up and produced finite pairs) a fit window.
+    let (code, body) = get(addr, "/gns/predictor");
+    assert_eq!(code, 200);
+    let pred = Value::parse(&body).unwrap();
+    assert_eq!(pred.get("norm_kind").unwrap().as_str().unwrap(), "layernorm");
+    assert_eq!(pred.get("norm_placement").unwrap().as_str().unwrap(), "preln");
+    assert_eq!(pred.get("step").unwrap().as_u64().unwrap(), STEPS);
+    pred.get("points").unwrap().as_u64().unwrap();
+    pred.get("fit").unwrap(); // present (object or null), always valid JSON
 
     let (code, body) = post(addr, "/shutdown");
     assert_eq!(code, 200);
@@ -208,8 +222,15 @@ fn metrics_csv_identical_under_32_poller_load() {
     let mut cfg = TrainConfig::quickstart("nano", STEPS);
     cfg.metrics_path = served_csv.to_string_lossy().into_owned();
     let (mut tr, hub, addr, server) = boot(cfg, 64);
-    const PATHS: [&str; 6] =
-        ["/records?since=0", "/status", "/gns/layers", "/metrics", "/schedule", "/health"];
+    const PATHS: [&str; 7] = [
+        "/records?since=0",
+        "/status",
+        "/gns/layers",
+        "/gns/predictor",
+        "/metrics",
+        "/schedule",
+        "/health",
+    ];
     let stop = Arc::new(AtomicBool::new(false));
     let pollers: Vec<_> = (0..32usize)
         .map(|i| {
@@ -250,6 +271,8 @@ fn router_rejects_unknown_paths_methods_and_bad_queries() {
         HubMeta {
             model: "nano".into(),
             platform: "test".into(),
+            norm_kind: NormKind::default(),
+            norm_placement: NormPlacement::default(),
             total_steps: 1,
             n_params: 1,
             ranks: 1,
